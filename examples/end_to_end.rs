@@ -1,0 +1,147 @@
+//! End-to-end system driver: exercises all three layers on a realistic
+//! small workload and reports the paper's headline metrics.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+//!
+//! 1. generates an rcv1-profile sparse dataset (10,000 samples, d=8,192),
+//! 2. builds the 10-node ER(0.4) network of §7,
+//! 3. verifies the L1/L2 AOT artifacts (Pallas kernels lowered to HLO,
+//!    loaded through PJRT) against the pure-Rust operators,
+//! 4. pre-solves the ridge optimum, runs DSBA and DSBA-s to 15 effective
+//!    passes, logging the convergence + communication curves,
+//! 5. repeats on logistic regression and AUC maximization.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::coordinator::Experiment;
+use dsba::metrics::format_table;
+use dsba::prelude::*;
+use dsba::runtime::XlaRuntime;
+use std::sync::Arc;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // ---- workload ----
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(10_000)
+        .with_dim(8_192)
+        .with_regression(true)
+        .generate(2024);
+    let part = ds.partition(10);
+    // lambda = 1e-3 (vs the paper's 1/(10 Q)) so the CI-scale run reaches
+    // deep tolerance within 15 passes; the figure benches keep the paper
+    // value and compare method *orderings* instead of absolute depth
+    let lambda = 1e-3;
+    println!(
+        "[data] Q = {}, d = {}, rho = {:.2e}, q/node = {}, lambda = {:.2e}",
+        part.total_samples(),
+        part.dim,
+        ds.density(),
+        part.q,
+        lambda
+    );
+    let topo = Topology::erdos_renyi(10, 0.4, 42);
+    let mix = dsba::graph::MixingMatrix::laplacian(&topo, 1.0);
+    println!(
+        "[graph] ER(10, 0.4): diameter {}, max degree {}, gamma {:.4}, kappa_g {:.1}",
+        topo.diameter,
+        topo.max_degree(),
+        mix.gamma,
+        mix.kappa_g
+    );
+
+    // ---- layer check: XLA artifacts vs pure-Rust operators ----
+    let ridge = Arc::new(RidgeProblem::new(part, lambda));
+    match XlaRuntime::load_default() {
+        Ok(rt) => {
+            let mut rng = Rng::new(1);
+            let z: Vec<f64> = (0..ridge.dim()).map(|_| 0.1 * rng.normal()).collect();
+            let shard = &ridge.partition().shards[0];
+            let y = &ridge.partition().labels[0];
+            let t = std::time::Instant::now();
+            let xla = rt.full_op_ridge(shard, &z, y).expect("XLA exec");
+            let xla_ms = t.elapsed().as_secs_f64() * 1e3;
+            let mut rust = vec![0.0; ridge.dim()];
+            let t = std::time::Instant::now();
+            ridge.full_raw_mean(0, &z, &mut rust);
+            let rust_ms = t.elapsed().as_secs_f64() * 1e3;
+            let err = xla
+                .iter()
+                .zip(&rust)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            println!(
+                "[xla] full-shard operator via PJRT: max |xla - rust| = {err:.2e} \
+                 (xla {xla_ms:.1} ms dense-padded, rust {rust_ms:.3} ms sparse)"
+            );
+            assert!(err < 1e-6, "artifact mismatch");
+        }
+        Err(e) => println!("[xla] SKIPPED ({e})"),
+    }
+
+    // ---- ridge: DSBA vs DSBA-s vs DSA ----
+    println!("\n[ridge] pre-solving optimum...");
+    let z_star = dsba::coordinator::solve_optimum(ridge.as_ref(), 1e-10);
+    println!(
+        "[ridge] optimum residual {:.2e}",
+        ridge.global_residual(&z_star)
+    );
+    for (kind, alpha) in [
+        (AlgorithmKind::Dsba, 2.0),
+        (AlgorithmKind::DsbaSparse, 2.0),
+        (AlgorithmKind::Dsa, 0.3),
+    ] {
+        let mut exp = Experiment::from_arc(ridge.clone(), topo.clone(), kind)
+            .with_step_size(alpha)
+            .with_passes(15.0)
+            .with_record_points(6)
+            .with_z_star(z_star.clone());
+        let trace = exp.run();
+        println!("--- {} ---\n{}", kind.name(), format_table(&trace.rows));
+    }
+
+    // ---- logistic ----
+    let ds_log = SyntheticSpec::rcv1_like()
+        .with_samples(4_000)
+        .with_dim(4_096)
+        .generate(2025);
+    let part_log = ds_log.partition(10);
+    let lam_log = 1e-3;
+    let mut exp = Experiment::new(
+        LogisticProblem::new(part_log, lam_log),
+        topo.clone(),
+        AlgorithmKind::Dsba,
+    )
+    .with_step_size(2.0)
+    .with_passes(15.0)
+    .with_record_points(6);
+    let trace = exp.run();
+    println!("--- logistic / DSBA ---\n{}", format_table(&trace.rows));
+    assert!(trace.last_suboptimality() < 1e-5, "logistic did not converge");
+
+    // ---- AUC ----
+    let ds_auc = SyntheticSpec::sector_like()
+        .with_samples(3_000)
+        .with_dim(4_096)
+        .generate(2026);
+    let part_auc = ds_auc.partition(10);
+    let lam_auc = 1.0 / (10.0 * part_auc.total_samples() as f64);
+    let mut exp = Experiment::new(
+        AucProblem::new(part_auc, lam_auc),
+        topo,
+        AlgorithmKind::Dsba,
+    )
+    .with_step_size(0.5)
+    .with_passes(10.0)
+    .with_record_points(6);
+    let trace = exp.run();
+    println!("--- AUC / DSBA ---\n{}", format_table(&trace.rows));
+    assert!(trace.last_auc() > 0.75, "AUC too low: {}", trace.last_auc());
+
+    println!(
+        "end_to_end OK in {:.1} s (all layers composed: data -> graph -> \
+         XLA artifacts -> DSBA/DSBA-s/DSA -> metrics)",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,61 @@
+//! Regenerate the paper's figures from the command line:
+//!
+//!     cargo run --release --example figures -- [1|2|3] [--fast]
+//!
+//! Figure 1: ridge regression; Figure 2: logistic regression;
+//! Figure 3: l2-relaxed AUC maximization (DSBA / DSA / EXTRA only —
+//! SSDA does not apply to the saddle operator and DLM diverges, §7.3).
+//! Each run prints suboptimality (or AUC) against both effective passes
+//! and C_max DOUBLEs — the two x-axes of every panel — and writes
+//! results/figN.json.
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::config::ProblemKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.iter().find(|a| !a.starts_with("--")).cloned();
+    let fast = args.iter().any(|a| a == "--fast");
+    let run = |n: &str| {
+        let (title, problem, methods): (_, _, Option<Vec<AlgorithmKind>>) = match n {
+            "1" => ("Figure 1: Ridge Regression", ProblemKind::Ridge, None),
+            "2" => ("Figure 2: Logistic Regression", ProblemKind::Logistic, None),
+            "3" => (
+                "Figure 3: AUC maximization",
+                ProblemKind::Auc,
+                Some(vec![
+                    AlgorithmKind::Dsba,
+                    AlgorithmKind::Dsa,
+                    AlgorithmKind::Extra,
+                ]),
+            ),
+            other => {
+                eprintln!("unknown figure {other}");
+                std::process::exit(2);
+            }
+        };
+        let mut spec = FigureSpec::defaults(problem);
+        spec.title = title;
+        if let Some(m) = methods {
+            spec.methods = m;
+        }
+        if fast {
+            spec.samples = 300;
+            spec.dim = 1024;
+            spec.passes = 8.0;
+            spec.datasets = vec!["rcv1-like"];
+        }
+        let runs = spec.run();
+        summarize(&runs, problem == ProblemKind::Auc);
+        write_results(&format!("fig{n}"), &runs);
+    };
+    match which.as_deref() {
+        Some(n) => run(n),
+        None => {
+            for n in ["1", "2", "3"] {
+                run(n);
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! The §5.1 sparse-communication scheme in action: DSBA vs DSBA-s on the
+//! same seeds produce bit-identical learning curves while moving an order
+//! of magnitude less data on sparse datasets.
+//!
+//!     cargo run --release --example sparse_comm_demo
+
+use dsba::algorithms::{AlgoParams, Algorithm, Dsba, DsbaSparse};
+use dsba::comm::{CommCostModel, Network};
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use std::sync::Arc;
+
+fn main() {
+    let topo = Topology::erdos_renyi(10, 0.4, 42);
+    println!("graph: diameter {} max degree {}", topo.diameter, topo.max_degree());
+    println!(
+        "\n{:>9} | {:>13} | {:>13} | {:>8} | {:>10}",
+        "rho", "dense dbl/it", "sparse dbl/it", "ratio", "drift"
+    );
+    for rho in [0.001, 0.005, 0.02, 0.1, 0.3] {
+        let ds = SyntheticSpec::rcv1_like()
+            .with_samples(500)
+            .with_dim(4_096)
+            .with_density(rho)
+            .with_regression(true)
+            .generate(3);
+        let part = ds.partition(10);
+        let lambda = 1.0 / (10.0 * part.total_samples() as f64);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, lambda));
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(1.0, p.dim(), 99);
+        let mut dense = Dsba::new(p.clone(), mix.clone(), topo.clone(), &params);
+        let mut sparse = DsbaSparse::new(p.clone(), mix, topo.clone(), &params);
+        let mut net_d = Network::new(topo.clone(), CommCostModel::default());
+        let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+        let rounds = 200;
+        let mut drift: f64 = 0.0;
+        for _ in 0..rounds {
+            dense.step(&mut net_d);
+            sparse.step(&mut net_s);
+        }
+        for n in 0..10 {
+            drift = drift.max(dsba::linalg::dist2_sq(
+                &dense.iterates()[n],
+                &sparse.iterates()[n],
+            ));
+        }
+        let d_per = net_d.max_received() / rounds as f64;
+        let s_per = net_s.max_received() / rounds as f64;
+        println!(
+            "{rho:>9.3} | {d_per:>13.0} | {s_per:>13.0} | {:>8.3} | {drift:>10.1e}",
+            s_per / d_per
+        );
+        assert!(drift < 1e-16, "DSBA-s must replicate DSBA exactly");
+    }
+    println!("\n(identical iterates; sparse wins while rho << Delta(G)/N, as Table 1 predicts)");
+    println!("sparse_comm_demo OK");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas → HLO text artifacts.
+
+Nothing in this package is imported at runtime; the Rust binary consumes
+only ``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+"""

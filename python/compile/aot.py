@@ -1,0 +1,79 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts + manifest.json.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+the published ``xla`` crate links xla_extension 0.5.1, which rejects the
+64-bit instruction ids jax>=0.5 writes into serialized HloModuleProto
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+A no-op rebuild is handled by the Makefile via file timestamps.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model          # noqa: E402
+from .shapes import manifest  # noqa: E402
+
+_DTYPES = {"f64": jnp.float64, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry):
+    fn = getattr(model, entry.fn)
+    specs = [jax.ShapeDtypeStruct(tuple(s), _DTYPES[dt]) for s, dt in entry.args]
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (debugging)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    man = {"format": "hlo-text", "dtype": "f64", "entries": []}
+    entries = manifest()
+    if args.only:
+        entries = [e for e in entries if args.only in e.name]
+    for i, e in enumerate(entries):
+        lowered = lower_entry(e)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{e.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = [
+            {"shape": list(a.shape), "dtype": str(a.dtype)}
+            for a in jax.tree_util.tree_leaves(lowered.out_info)
+        ]
+        man["entries"].append({
+            "name": e.name,
+            "fn": e.fn,
+            "file": f"{e.name}.hlo.txt",
+            "args": [{"shape": list(s), "dtype": dt} for s, dt in e.args],
+            "outputs": out_avals,
+        })
+        print(f"[{i + 1}/{len(entries)}] {e.name}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"wrote {len(man['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the DSBA reproduction.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are written f64 end-to-end so the Rust core and the AOT
+artifacts agree to <=1e-10.
+
+Kernels:
+  - ``matvec_act``  : fused ``g = act(A @ z, y)`` — the coefficient kernel.
+  - ``atg``         : ``A^T @ g`` accumulation (transposed matvec).
+  - ``mix_step``    : fused gossip mixing ``Wt @ (2 Z - Z_prev)``.
+  - ``auc_coefs``   : per-sample AUC saddle-operator scalar coefficients.
+"""
+
+from .coef import matvec_act
+from .atg import atg
+from .mixing import mix_step
+from .auc import auc_coefs
+
+__all__ = ["matvec_act", "atg", "mix_step", "auc_coefs"]

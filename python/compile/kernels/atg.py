@@ -1,0 +1,51 @@
+"""Transposed-matvec accumulation kernel: ``A^T @ g`` (unnormalized).
+
+Second half of a full local-operator evaluation: given the scalar
+coefficients ``g`` from :mod:`coef`, the node's full operator output is
+``B_n(z) = (A^T g) / q`` (+ the l2 term added by the caller).  We emit the
+*unnormalized* sum so that shape-bucket padding (zero rows with ``g = 0``)
+is exactly neutral and the Rust side divides by the true ``q``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_dims
+
+
+def _kernel(n_q_blocks: int):
+    def kernel(a_ref, g_ref, o_ref):
+        j = pl.program_id(1)  # q-block index (reduction dim)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += g_ref[...] @ a_ref[...]
+
+    return kernel
+
+
+def atg(a, g):
+    """``A^T @ g`` as a Pallas kernel.
+
+    Args:
+      a: ``(q, d)`` shard.
+      g: ``(q,)`` coefficients.
+    Returns:
+      ``(d,)`` unnormalized operator direction ``sum_i g_i a_i``.
+    """
+    q, d = a.shape
+    bq, bd, nq, nd = grid_dims(q, d)
+    return pl.pallas_call(
+        _kernel(nq),
+        grid=(nd, nq),
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j: (j, i)),
+            pl.BlockSpec((bq,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), a.dtype),
+        interpret=True,
+    )(a, g)

@@ -1,0 +1,91 @@
+"""AUC saddle-operator coefficient kernel (paper eqs. (75)/(76)).
+
+For the l2-relaxed AUC maximization the augmented variable is
+``z = [w; a; b; theta]`` and the per-sample operator output is fully
+described by FOUR scalars once the margin ``m_i = a_i^T w`` is known:
+
+  positive sample (y=+1):
+    c1 = 2(1-p)((m - a) - (1+theta))    # coefficient on a_i in the w-block
+    c2 = -2(1-p)(m - a)                 # d/da component
+    c3 = 0                              # d/db component
+    c4 = 2p(1-p)theta + 2(1-p)m         # -d/dtheta component
+  negative sample (y=-1):
+    c1 = 2p((m - b) + (1+theta))
+    c2 = 0
+    c3 = -2p(m - b)
+    c4 = 2p(1-p)theta - 2p m
+
+Zero-padded rows (y=0) produce all-zero coefficients.  This is exactly the
+"O(q) scalar SAGA table" trick of (Schmidt et al., 2017) that the paper's
+storage analysis (§5.1) relies on, lifted to the saddle operator.
+
+The kernel fuses the matvec with the coefficient epilogue: grid
+(q-blocks, d-blocks), margins accumulated in the first output column, the
+four columns materialized on the last d-block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_dims
+
+
+def _kernel(n_d_blocks: int):
+    def kernel(a_ref, y_ref, w_ref, s_ref, o_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # accumulate margins in column 0
+        o_ref[:, 0] += a_ref[...] @ w_ref[...]
+
+        @pl.when(j == n_d_blocks - 1)
+        def _fin():
+            a_sc, b_sc, theta, p = s_ref[0], s_ref[1], s_ref[2], s_ref[3]
+            m = o_ref[:, 0]
+            y = y_ref[...]
+            pos = (y > 0.0).astype(m.dtype)
+            neg = (y < 0.0).astype(m.dtype)
+            c1 = pos * 2.0 * (1.0 - p) * ((m - a_sc) - (1.0 + theta)) + \
+                 neg * 2.0 * p * ((m - b_sc) + (1.0 + theta))
+            c2 = pos * (-2.0) * (1.0 - p) * (m - a_sc)
+            c3 = neg * (-2.0) * p * (m - b_sc)
+            c4 = (pos + neg) * 2.0 * p * (1.0 - p) * theta + \
+                 pos * 2.0 * (1.0 - p) * m - neg * 2.0 * p * m
+            o_ref[:, 0] = c1
+            o_ref[:, 1] = c2
+            o_ref[:, 2] = c3
+            o_ref[:, 3] = c4
+
+    return kernel
+
+
+def auc_coefs(a, y, w, scalars):
+    """Per-sample AUC operator coefficients as a Pallas kernel.
+
+    Args:
+      a: ``(q, d)`` shard.
+      y: ``(q,)`` labels in {-1, 0(=pad), +1}.
+      w: ``(d,)`` linear part of the augmented iterate.
+      scalars: ``(4,)`` packed ``[a, b, theta, p]``.
+    Returns:
+      ``(q, 4)`` coefficient matrix ``[c1 c2 c3 c4]``.
+    """
+    q, d = a.shape
+    bq, bd, nq, nd = grid_dims(q, d)
+    return pl.pallas_call(
+        _kernel(nd),
+        grid=(nq, nd),
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, 4), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, 4), a.dtype),
+        interpret=True,
+    )(a, y, w, scalars)

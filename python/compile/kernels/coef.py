@@ -1,0 +1,81 @@
+"""Fused coefficient kernel: ``g = act(A @ z, y)``.
+
+This is the paper's per-pass compute hot-spot for linear predictors
+(§7.1/§7.2): every operator evaluation is ``B_{n,i}(z) = g_i * a_i`` with a
+*scalar* coefficient ``g_i`` that only depends on the margin
+``m_i = a_i^T z``.  Batched over a node's whole shard this is one matvec
+plus an elementwise epilogue, which we fuse so ``A`` is read from HBM once.
+
+Activations:
+  - ``"ridge"``    : ``g = m - y``                     (ridge residual)
+  - ``"logistic"`` : ``g = -y / (1 + exp(y * m))``     (logistic grad coef)
+  - ``"identity"`` : ``g = m``                         (raw scores / metrics)
+
+Zero-padded rows (``a_i = 0, y_i = 0``) produce ``g_i = 0`` for every
+activation, so the Rust runtime can pad shards up to the artifact's shape
+bucket and divide by the *true* q afterwards.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_dims
+
+ACTIVATIONS = ("ridge", "logistic", "identity")
+
+
+def _epilogue(act: str, m, y):
+    if act == "ridge":
+        return m - y
+    if act == "logistic":
+        # -y / (1 + exp(y m)); stable for both signs of (y m) because the
+        # exp argument is clipped by the sigmoid identity below.
+        return -y * jax.nn.sigmoid(-y * m)
+    if act == "identity":
+        return m
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _kernel(act: str, n_d_blocks: int):
+    def kernel(a_ref, z_ref, y_ref, o_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += a_ref[...] @ z_ref[...]
+
+        @pl.when(j == n_d_blocks - 1)
+        def _fin():
+            o_ref[...] = _epilogue(act, o_ref[...], y_ref[...])
+
+    return kernel
+
+
+def matvec_act(a, z, y, act: str = "ridge"):
+    """``act(A @ z, y)`` as a Pallas kernel.
+
+    Args:
+      a: ``(q, d)`` shard of feature rows.
+      z: ``(d,)`` iterate.
+      y: ``(q,)`` labels/targets (ignored by ``"identity"``).
+      act: one of ``ACTIVATIONS``.
+    Returns:
+      ``(q,)`` coefficient vector ``g``.
+    """
+    q, d = a.shape
+    bq, bd, nq, nd = grid_dims(q, d)
+    return pl.pallas_call(
+        _kernel(act, nd),
+        grid=(nq, nd),
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), a.dtype),
+        interpret=True,
+    )(a, z, y)

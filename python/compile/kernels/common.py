@@ -1,0 +1,47 @@
+"""Shared helpers for the Pallas kernels (block sizing, dtype policy)."""
+
+import jax
+
+# The whole stack is f64: the Rust L3 core does its algorithm math in f64
+# (the paper's convergence plots go down to 1e-12 suboptimality, which f32
+# cannot resolve), so the AOT artifacts must match.
+jax.config.update("jax_enable_x64", True)
+
+# Target block sizes.
+#
+# Two regimes (see DESIGN.md §Hardware-Adaptation and §Perf):
+#  * TPU (compile-only target): (256, 512) f64 tiles — one A tile plus the
+#    z/g slices is ~1 MiB, comfortably double-bufferable in ~16 MiB VMEM,
+#    and the 256-wide rows keep the MXU systolic array saturated.
+#  * CPU interpret mode (what actually executes here): every grid step of
+#    the lowered while-loop round-trips the full output buffer through
+#    dynamic-update-slice, so SMALL grids win by orders of magnitude
+#    (measured 43 s -> 0.9 s on the (1024, 16384) bucket; EXPERIMENTS.md
+#    §Perf). We therefore default to large blocks / tiny grids and expose
+#    DSBA_BLOCK_{Q,D} to regenerate TPU-shaped artifacts.
+import os
+
+TARGET_BQ = int(os.environ.get("DSBA_BLOCK_Q", "1024"))
+TARGET_BD = int(os.environ.get("DSBA_BLOCK_D", "8192"))
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Pallas BlockSpecs require the array extent to be an exact multiple of
+    the block extent; callers pad to the shape buckets in ``shapes.py``
+    (powers of two), so this normally returns ``target`` itself.
+    """
+    if n <= target:
+        return n
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return n  # unreachable: 1 always divides n
+
+
+def grid_dims(q: int, d: int, bq: int = TARGET_BQ, bd: int = TARGET_BD):
+    """(block_q, block_d, n_q_blocks, n_d_blocks) for a (q, d) operand."""
+    bq = pick_block(q, bq)
+    bd = pick_block(d, bd)
+    return bq, bd, q // bq, d // bd

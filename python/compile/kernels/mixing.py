@@ -1,0 +1,43 @@
+"""Fused gossip-mixing kernel: ``Wt @ (2 Z - Z_prev)``.
+
+The dense half of the DSBA / EXTRA update (24):
+``Z^{t+1} = 2 Wt Z^t - Wt Z^{t-1} - alpha * (...)`` — the two matmuls share
+the mixing matrix, so we fuse them into one ``Wt @ (2 Z - Z_prev)`` pass:
+the (N, bd) tiles of Z and Z_prev are combined in registers and hit the
+(MXU-shaped) matmul once.  N is the node count (tiny, <= 64), d is blocked.
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+from .common import pick_block
+
+
+def _kernel(w_ref, z_ref, zp_ref, o_ref):
+    o_ref[...] = w_ref[...] @ (2.0 * z_ref[...] - zp_ref[...])
+
+
+def mix_step(w, z, z_prev, bd_target: int = 8192):
+    """``W @ (2 Z - Z_prev)`` as a Pallas kernel.
+
+    Args:
+      w: ``(N, N)`` mixing matrix (``Wt`` in the paper).
+      z: ``(N, d)`` current stacked iterates.
+      z_prev: ``(N, d)`` previous stacked iterates.
+    Returns:
+      ``(N, d)`` mixed matrix.
+    """
+    n, d = z.shape
+    bd = pick_block(d, bd_target)
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+            pl.BlockSpec((n, bd), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), z.dtype),
+        interpret=True,
+    )(w, z, z_prev)

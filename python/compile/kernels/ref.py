@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against, and (transitively, through python/tests/test_model.py) the
+semantics the Rust runtime assumes of the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matvec_act_ref(a, z, y, act: str = "ridge"):
+    m = a @ z
+    if act == "ridge":
+        return m - y
+    if act == "logistic":
+        return -y * jax.nn.sigmoid(-y * m)
+    if act == "identity":
+        return m
+    raise ValueError(act)
+
+
+def atg_ref(a, g):
+    return a.T @ g
+
+
+def mix_step_ref(w, z, z_prev):
+    return w @ (2.0 * z - z_prev)
+
+
+def auc_coefs_ref(a, y, w, scalars):
+    a_sc, b_sc, theta, p = scalars
+    m = a @ w
+    pos = (y > 0.0).astype(m.dtype)
+    neg = (y < 0.0).astype(m.dtype)
+    c1 = pos * 2.0 * (1.0 - p) * ((m - a_sc) - (1.0 + theta)) + \
+         neg * 2.0 * p * ((m - b_sc) + (1.0 + theta))
+    c2 = pos * (-2.0) * (1.0 - p) * (m - a_sc)
+    c3 = neg * (-2.0) * p * (m - b_sc)
+    c4 = (pos + neg) * 2.0 * p * (1.0 - p) * theta + \
+         pos * 2.0 * (1.0 - p) * m - neg * 2.0 * p * m
+    return jnp.stack([c1, c2, c3, c4], axis=1)
+
+
+# ---- composed (L2-level) references ----------------------------------
+
+def full_op_ridge_ref(a, y, z):
+    """Unnormalized ridge operator direction: A^T (A z - y)."""
+    return a.T @ (a @ z - y)
+
+
+def full_op_logistic_ref(a, y, z):
+    g = matvec_act_ref(a, z, y, "logistic")
+    return a.T @ g
+
+
+def auc_full_op_ref(a, y, z_aug, p):
+    """Unnormalized mean AUC operator over the shard.
+
+    z_aug = [w (d); a; b; theta].  Returns (d+3,) = [sum c1_i a_i;
+    sum c2; sum c3; sum c4].
+    """
+    d = a.shape[1]
+    w, scalars = z_aug[:d], jnp.concatenate([z_aug[d:], jnp.array([p], z_aug.dtype)])
+    c = auc_coefs_ref(a, y, w, scalars)
+    w_part = a.T @ c[:, 0]
+    return jnp.concatenate([w_part, jnp.sum(c[:, 1:], axis=0)])

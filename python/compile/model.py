@@ -1,0 +1,91 @@
+"""Layer-2 JAX compute graphs (calling the Layer-1 Pallas kernels).
+
+Each public function here becomes one family of AOT artifacts (one HLO per
+shape bucket, see ``shapes.py``).  All outputs over shards are
+*unnormalized sums* so zero-padding to a shape bucket is neutral; the Rust
+runtime divides by the true ``q`` and adds the l2 term.
+
+Semantics are pinned by ``kernels/ref.py`` and the pytest suite.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matvec_act, atg, mix_step, auc_coefs
+
+jax.config.update("jax_enable_x64", True)
+
+
+# --- coefficient families (SAGA table init / per-pass batched eval) -----
+
+def coefs_ridge(a, z, y):
+    """(q,) ridge residual coefficients ``g_i = a_i^T z - y_i``."""
+    return (matvec_act(a, z, y, "ridge"),)
+
+
+def coefs_logistic(a, z, y):
+    """(q,) logistic gradient coefficients ``-y_i sigmoid(-y_i m_i)``."""
+    return (matvec_act(a, z, y, "logistic"),)
+
+
+def scores(a, z):
+    """(q,) raw margins ``A z`` (metrics: AUC ranking, residuals)."""
+    y = jnp.zeros(a.shape[0], a.dtype)
+    return (matvec_act(a, z, y, "identity"),)
+
+
+# --- full local operator evaluations (deterministic baselines) ----------
+
+def full_op_ridge(a, z, y):
+    """(d,) unnormalized ``A^T (A z - y)``."""
+    return (atg(a, matvec_act(a, z, y, "ridge")),)
+
+
+def full_op_logistic(a, z, y):
+    """(d,) unnormalized ``A^T g_logistic``."""
+    return (atg(a, matvec_act(a, z, y, "logistic")),)
+
+
+# --- AUC saddle operator (eqs. 75/76) ------------------------------------
+
+def auc_coef_table(a, y, w, scalars):
+    """(q, 4) per-sample AUC operator coefficients; scalars=[a,b,theta,p]."""
+    return (auc_coefs(a, y, w, scalars),)
+
+
+def auc_full_op(a, y, z_aug, p):
+    """(d+3,) unnormalized mean AUC operator over the shard.
+
+    ``z_aug = [w; a; b; theta]``, ``p`` a () scalar (positive ratio).
+    """
+    d = a.shape[1]
+    w = z_aug[:d]
+    scalars = jnp.concatenate([z_aug[d:], p[None]])
+    c = auc_coefs(a, y, w, scalars)
+    w_part = atg(a, c[:, 0])
+    return (jnp.concatenate([w_part, jnp.sum(c[:, 1:], axis=0)]),)
+
+
+# --- dense gossip mixing (update (24) dense half) ------------------------
+
+def mix(w, z, z_prev):
+    """(N, d) fused ``W (2Z - Z_prev)``."""
+    return (mix_step(w, z, z_prev),)
+
+
+# --- objective evaluation (metrics path) ---------------------------------
+
+def obj_ridge(a, z, y):
+    """() unnormalized ``0.5 ||A z - y||^2``."""
+    r = matvec_act(a, z, y, "ridge")
+    return (0.5 * jnp.sum(r * r),)
+
+
+def obj_logistic(a, z, y):
+    """() unnormalized ``sum log(1 + exp(-y m))`` (softplus-stable).
+
+    Masked by ``|y|`` so zero-padded rows (y=0, which would contribute
+    ``softplus(0) = log 2`` each) stay neutral.
+    """
+    m = matvec_act(a, z, jnp.zeros(a.shape[0], a.dtype), "identity")
+    return (jnp.sum(jnp.abs(y) * jax.nn.softplus(-y * m)),)

@@ -1,0 +1,67 @@
+"""Artifact shape manifest.
+
+AOT compilation fixes shapes, so we emit each L2 function at a small set of
+(q, d) *buckets*; the Rust runtime zero-pads a shard up to the smallest
+bucket that fits (all exported functions are padding-neutral by
+construction) and slices the result back.
+
+Buckets are chosen to cover the three dataset profiles of §7 scaled to CI
+size (see rust/src/data):  small unit-test instances, rcv1-like mid-size,
+and sector/news20-like wide shards.  Every extent is a multiple of the
+Pallas block targets so BlockSpecs tile exactly.
+"""
+
+from dataclasses import dataclass, field
+
+
+QD_BUCKETS = [
+    (256, 1024),
+    (512, 4096),
+    (256, 8192),   # rcv1-profile shard at N=10 (added in the perf pass:
+                   # avoids 8x padding waste through the 1024x16384 bucket)
+    (1024, 16384),
+]
+
+# mixing: N nodes (padded to 16) x d buckets
+MIX_BUCKETS = [
+    (16, 1024),
+    (16, 4096),
+    (16, 16384),
+]
+
+F64 = "f64"
+
+
+@dataclass
+class Entry:
+    """One AOT artifact: function + concrete arg shapes."""
+    name: str          # artifact stem, e.g. coefs_ridge_q256_d1024
+    fn: str            # function name in model.py
+    args: list = field(default_factory=list)  # [(shape tuple, dtype), ...]
+
+
+def manifest():
+    entries = []
+    for q, d in QD_BUCKETS:
+        tag = f"q{q}_d{d}"
+        qd = ((q, d), F64)
+        v_d = ((d,), F64)
+        v_q = ((q,), F64)
+        entries += [
+            Entry(f"coefs_ridge_{tag}", "coefs_ridge", [qd, v_d, v_q]),
+            Entry(f"coefs_logistic_{tag}", "coefs_logistic", [qd, v_d, v_q]),
+            Entry(f"scores_{tag}", "scores", [qd, v_d]),
+            Entry(f"full_op_ridge_{tag}", "full_op_ridge", [qd, v_d, v_q]),
+            Entry(f"full_op_logistic_{tag}", "full_op_logistic", [qd, v_d, v_q]),
+            Entry(f"auc_coef_table_{tag}", "auc_coef_table",
+                  [qd, v_q, v_d, ((4,), F64)]),
+            Entry(f"auc_full_op_{tag}", "auc_full_op",
+                  [qd, v_q, ((d + 3,), F64), ((), F64)]),
+            Entry(f"obj_ridge_{tag}", "obj_ridge", [qd, v_d, v_q]),
+            Entry(f"obj_logistic_{tag}", "obj_logistic", [qd, v_d, v_q]),
+        ]
+    for n, d in MIX_BUCKETS:
+        entries.append(
+            Entry(f"mix_n{n}_d{d}", "mix",
+                  [((n, n), F64), ((n, d), F64), ((n, d), F64)]))
+    return entries

@@ -1,0 +1,152 @@
+"""Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes (block-aligned and ragged-divisor), dtypes and
+seeds; every kernel must match ref to tight f64 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec_act, atg, mix_step, auc_coefs
+from compile.kernels import ref
+from compile.kernels.coef import ACTIVATIONS
+
+jax.config.update("jax_enable_x64", True)
+
+DIMS_Q = st.sampled_from([1, 2, 3, 8, 24, 256, 300])
+DIMS_D = st.sampled_from([1, 2, 5, 16, 512, 640, 1024])
+DTYPES = st.sampled_from([jnp.float64, jnp.float32])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=1e-10, atol=1e-10) if dtype == jnp.float64 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestMatvecAct:
+    @settings(max_examples=25, deadline=None)
+    @given(q=DIMS_Q, d=DIMS_D, dtype=DTYPES, seed=SEEDS,
+           act=st.sampled_from(ACTIVATIONS))
+    def test_matches_ref(self, q, d, dtype, seed, act):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        a = _rand(k1, (q, d), dtype)
+        z = _rand(k2, (d,), dtype)
+        y = jnp.sign(_rand(k3, (q,), dtype)) if act == "logistic" \
+            else _rand(k3, (q,), dtype)
+        got = matvec_act(a, z, y, act)
+        want = ref.matvec_act_ref(a, z, y, act)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_zero_pad_rows_are_neutral(self):
+        key = jax.random.PRNGKey(0)
+        a = _rand(key, (8, 16), jnp.float64)
+        z = _rand(jax.random.PRNGKey(1), (16,), jnp.float64)
+        y = jnp.sign(_rand(jax.random.PRNGKey(2), (8,), jnp.float64))
+        a_pad = jnp.concatenate([a, jnp.zeros((8, 16))])
+        y_pad = jnp.concatenate([y, jnp.zeros(8)])
+        for act in ACTIVATIONS:
+            g = matvec_act(a_pad, z, y_pad, act)
+            np.testing.assert_allclose(g[8:], 0.0, atol=1e-14)
+            np.testing.assert_allclose(
+                g[:8], ref.matvec_act_ref(a, z, y, act), rtol=1e-12)
+
+    def test_unknown_activation_raises(self):
+        with pytest.raises(ValueError):
+            matvec_act(jnp.zeros((2, 2)), jnp.zeros(2), jnp.zeros(2), "huh")
+
+    def test_logistic_extreme_margins_stable(self):
+        # huge |margin| must not overflow exp
+        a = jnp.array([[1000.0], [-1000.0]])
+        z = jnp.array([1.0])
+        y = jnp.array([1.0, 1.0])
+        g = matvec_act(a, z, y, "logistic")
+        assert np.all(np.isfinite(np.asarray(g)))
+        np.testing.assert_allclose(g[0], 0.0, atol=1e-12)
+        np.testing.assert_allclose(g[1], -1.0, rtol=1e-12)
+
+
+class TestAtg:
+    @settings(max_examples=25, deadline=None)
+    @given(q=DIMS_Q, d=DIMS_D, dtype=DTYPES, seed=SEEDS)
+    def test_matches_ref(self, q, d, dtype, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = _rand(k1, (q, d), dtype)
+        g = _rand(k2, (q,), dtype)
+        np.testing.assert_allclose(atg(a, g), ref.atg_ref(a, g), **_tol(dtype))
+
+    def test_linear_in_g(self):
+        key = jax.random.PRNGKey(7)
+        a = _rand(key, (32, 48), jnp.float64)
+        g1 = _rand(jax.random.PRNGKey(8), (32,), jnp.float64)
+        g2 = _rand(jax.random.PRNGKey(9), (32,), jnp.float64)
+        lhs = atg(a, 2.0 * g1 - 3.0 * g2)
+        rhs = 2.0 * atg(a, g1) - 3.0 * atg(a, g2)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-10, atol=1e-10)
+
+
+class TestMixStep:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([1, 2, 4, 10, 16]), d=DIMS_D,
+           dtype=DTYPES, seed=SEEDS)
+    def test_matches_ref(self, n, d, dtype, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = _rand(k1, (n, n), dtype)
+        z = _rand(k2, (n, d), dtype)
+        zp = _rand(k3, (n, d), dtype)
+        np.testing.assert_allclose(
+            mix_step(w, z, zp), ref.mix_step_ref(w, z, zp), **_tol(dtype))
+
+    def test_identity_mixing_is_extrapolation(self):
+        n, d = 4, 32
+        z = _rand(jax.random.PRNGKey(0), (n, d), jnp.float64)
+        zp = _rand(jax.random.PRNGKey(1), (n, d), jnp.float64)
+        got = mix_step(jnp.eye(n), z, zp)
+        np.testing.assert_allclose(got, 2 * z - zp, rtol=1e-14)
+
+
+class TestAucCoefs:
+    @settings(max_examples=25, deadline=None)
+    @given(q=DIMS_Q, d=DIMS_D, dtype=DTYPES, seed=SEEDS,
+           p=st.floats(min_value=0.05, max_value=0.95))
+    def test_matches_ref(self, q, d, dtype, seed, p):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+        a = _rand(keys[0], (q, d), dtype)
+        y = jnp.sign(_rand(keys[1], (q,), dtype))
+        w = _rand(keys[2], (d,), dtype)
+        scalars = jnp.array(
+            [0.3, -0.2, 0.1, p], dtype=dtype)
+        got = auc_coefs(a, y, w, scalars)
+        want = ref.auc_coefs_ref(a, y, w, scalars)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_pad_labels_zero_out(self):
+        q, d = 8, 16
+        a = _rand(jax.random.PRNGKey(3), (q, d), jnp.float64)
+        w = _rand(jax.random.PRNGKey(4), (d,), jnp.float64)
+        y = jnp.zeros(q)
+        scalars = jnp.array([0.5, 0.5, 0.5, 0.3])
+        c = auc_coefs(a, y, w, scalars)
+        # pad rows must contribute 0 to every block of the operator
+        np.testing.assert_allclose(c, 0.0, atol=1e-14)
+
+    def test_positive_sample_has_zero_b_component(self):
+        q, d = 4, 8
+        a = _rand(jax.random.PRNGKey(5), (q, d), jnp.float64)
+        w = _rand(jax.random.PRNGKey(6), (d,), jnp.float64)
+        c = auc_coefs(a, jnp.ones(q), w, jnp.array([0.1, 0.2, 0.3, 0.4]))
+        np.testing.assert_allclose(c[:, 2], 0.0, atol=1e-14)
+
+    def test_negative_sample_has_zero_a_component(self):
+        q, d = 4, 8
+        a = _rand(jax.random.PRNGKey(5), (q, d), jnp.float64)
+        w = _rand(jax.random.PRNGKey(6), (d,), jnp.float64)
+        c = auc_coefs(a, -jnp.ones(q), w, jnp.array([0.1, 0.2, 0.3, 0.4]))
+        np.testing.assert_allclose(c[:, 1], 0.0, atol=1e-14)

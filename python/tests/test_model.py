@@ -1,0 +1,104 @@
+"""L2 model graphs vs composed references + padding-neutrality.
+
+These pin the exact semantics the Rust runtime (rust/src/runtime) assumes
+of every artifact family: unnormalized sums, pad-neutral, 1-tuple outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mk(seed, q=24, d=40):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.normal(keys[0], (q, d), dtype=jnp.float64)
+    z = jax.random.normal(keys[1], (d,), dtype=jnp.float64)
+    y = jnp.sign(jax.random.normal(keys[2], (q,), dtype=jnp.float64))
+    return a, z, y
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS)
+def test_full_op_ridge(seed):
+    a, z, y = _mk(seed)
+    (got,) = model.full_op_ridge(a, z, y)
+    np.testing.assert_allclose(
+        got, ref.full_op_ridge_ref(a, y, z), rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS)
+def test_full_op_logistic(seed):
+    a, z, y = _mk(seed)
+    (got,) = model.full_op_logistic(a, z, y)
+    np.testing.assert_allclose(
+        got, ref.full_op_logistic_ref(a, y, z), rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, p=st.floats(min_value=0.1, max_value=0.9))
+def test_auc_full_op(seed, p):
+    a, _, y = _mk(seed)
+    d = a.shape[1]
+    z_aug = jax.random.normal(jax.random.PRNGKey(seed + 1), (d + 3,),
+                              dtype=jnp.float64)
+    (got,) = model.auc_full_op(a, y, z_aug, jnp.float64(p))
+    want = ref.auc_full_op_ref(a, y, z_aug, p)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_objectives():
+    a, z, y = _mk(0)
+    (o_r,) = model.obj_ridge(a, z, y)
+    np.testing.assert_allclose(
+        o_r, 0.5 * jnp.sum((a @ z - y) ** 2), rtol=1e-12)
+    (o_l,) = model.obj_logistic(a, z, y)
+    np.testing.assert_allclose(
+        o_l, jnp.sum(jnp.log1p(jnp.exp(-y * (a @ z)))), rtol=1e-10)
+
+
+def test_padding_neutrality_everywhere():
+    """Zero rows (and zero labels) leave every exported sum unchanged —
+    the contract the Rust shape-bucket padding relies on."""
+    a, z, y = _mk(42, q=16, d=24)
+    ap = jnp.concatenate([a, jnp.zeros((16, 24))])
+    yp = jnp.concatenate([y, jnp.zeros(16)])
+
+    for fn, args, args_p in [
+        (model.full_op_ridge, (a, z, y), (ap, z, yp)),
+        (model.full_op_logistic, (a, z, y), (ap, z, yp)),
+        (model.coefs_ridge, (a, z, y), (ap, z, yp)),
+        (model.obj_ridge, (a, z, y), (ap, z, yp)),
+        (model.obj_logistic, (a, z, y), (ap, z, yp)),
+    ]:
+        (base,) = fn(*args)
+        (pad,) = fn(*args_p)
+        if pad.ndim == 1 and pad.shape[0] == 32:  # per-sample outputs
+            np.testing.assert_allclose(pad[:16], base, rtol=1e-12, atol=1e-12)
+            np.testing.assert_allclose(pad[16:], 0.0, atol=1e-14)
+        else:
+            np.testing.assert_allclose(pad, base, rtol=1e-12, atol=1e-12)
+
+    z_aug = jnp.concatenate([z, jnp.array([0.1, -0.2, 0.3])])
+    (base,) = model.auc_full_op(a, y, z_aug, jnp.float64(0.4))
+    (pad,) = model.auc_full_op(ap, yp, z_aug, jnp.float64(0.4))
+    np.testing.assert_allclose(pad, base, rtol=1e-12, atol=1e-12)
+
+
+def test_padding_d_dimension():
+    """Zero-padding feature columns embeds the problem losslessly."""
+    a, z, y = _mk(11, q=16, d=24)
+    ap = jnp.concatenate([a, jnp.zeros((16, 8))], axis=1)
+    zp = jnp.concatenate([z, jnp.zeros(8)])
+    (base,) = model.full_op_ridge(a, z, y)
+    (pad,) = model.full_op_ridge(ap, zp, y)
+    np.testing.assert_allclose(pad[:24], base, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(pad[24:], 0.0, atol=1e-14)

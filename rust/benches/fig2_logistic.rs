@@ -1,0 +1,22 @@
+//! Figure 2 — Logistic Regression: same grid as Figure 1 with the
+//! 1-D-Newton resolvent (appendix §9.6) on the DSBA side.
+//!
+//!     cargo bench --bench fig2_logistic [-- fast]
+
+use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::config::ProblemKind;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    let mut spec = FigureSpec::defaults(ProblemKind::Logistic);
+    spec.title = "Figure 2: Logistic Regression";
+    if fast {
+        spec.datasets = vec!["rcv1-like"];
+        spec.passes = 8.0;
+        spec.samples = 300;
+        spec.dim = 1024;
+    }
+    let runs = spec.run();
+    summarize(&runs, false);
+    write_results("fig2_logistic", &runs);
+}

@@ -1,0 +1,33 @@
+//! Figure 3 — l2-relaxed AUC maximization: AUC vs passes and vs C_max
+//! DOUBLEs. Per §7.3 only DSBA / DSA / EXTRA are compared (SSDA does not
+//! apply to the saddle operator; DLM does not converge on it).
+//!
+//!     cargo bench --bench fig3_auc [-- fast]
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::config::ProblemKind;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    let mut spec = FigureSpec::defaults(ProblemKind::Auc);
+    spec.title = "Figure 3: AUC maximization";
+    spec.methods = vec![
+        AlgorithmKind::Dsba,
+        AlgorithmKind::Dsa,
+        AlgorithmKind::Extra,
+    ];
+    if fast {
+        spec.datasets = vec!["sector-like"];
+        spec.passes = 6.0;
+        spec.samples = 300;
+        spec.dim = 1024;
+    }
+    let runs = spec.run();
+    summarize(&runs, true);
+    write_results("fig3_auc", &runs);
+
+    for (ds, m, t) in &runs {
+        println!("[{ds}] {} final AUC {:.4}", m.name(), t.last_auc());
+    }
+}

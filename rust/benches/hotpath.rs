@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks (the §Perf working set): per-iteration cost
+//! of each algorithm, the sparse primitives underneath them, and the XLA
+//! artifact execution path. Self-contained timing harness (criterion is
+//! not vendored) via util::timer::measure.
+//!
+//!     cargo bench --bench hotpath
+
+use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
+use dsba::bench_harness::header;
+use dsba::comm::{CommCostModel, Network};
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use dsba::util::timer::measure;
+use std::sync::Arc;
+
+fn main() {
+    let nodes = 10;
+    let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(2_000)
+        .with_dim(8_192)
+        .with_regression(true)
+        .generate(3);
+    let part = ds.partition_seeded(nodes, 2);
+    let rho = part.max_shard_density();
+    let d = part.dim;
+    println!("workload: N={nodes}, q={}, d={d}, rho={rho:.2e}", part.q);
+
+    header("sparse primitives");
+    let shard = part.shards[0].clone();
+    let mut z = vec![0.5; d];
+    let st = measure(
+        || {
+            for i in 0..64 {
+                std::hint::black_box(shard.row_dot(i, &z));
+            }
+        },
+        0.3,
+        20,
+    );
+    println!("row_dot x64 (nnz~{:.0}): {}", rho * d as f64, st.display());
+    let st = measure(
+        || {
+            for i in 0..64 {
+                shard.row_axpy(i, 1e-9, &mut z);
+            }
+        },
+        0.3,
+        20,
+    );
+    println!("row_axpy x64: {}", st.display());
+    let st = measure(
+        || {
+            std::hint::black_box(shard.matvec(&z));
+        },
+        0.3,
+        10,
+    );
+    println!("full shard matvec (q={}): {}", shard.rows, st.display());
+
+    header("per-round cost by algorithm (one synchronous network round)");
+    for (kind, alpha) in [
+        (AlgorithmKind::Dsba, 1.0),
+        (AlgorithmKind::DsbaSparse, 1.0),
+        (AlgorithmKind::Dsa, 0.3),
+        (AlgorithmKind::Extra, 0.4),
+        (AlgorithmKind::Dlm, 0.0),
+        (AlgorithmKind::Dgd, 0.3),
+    ] {
+        let part = ds.partition_seeded(nodes, 2);
+        let problem: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, 0.01));
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(alpha, problem.dim(), 7);
+        let mut alg = build(kind, problem, &mix, &topo, &params);
+        let mut net = Network::new(topo.clone(), CommCostModel::default());
+        // warm up past the t=0 special case and relay pipeline fill
+        for _ in 0..topo.diameter + 2 {
+            alg.step(&mut net);
+        }
+        let st = measure(|| alg.step(&mut net), 0.5, 10);
+        println!("{:>9}: {}", kind.name(), st.display());
+    }
+
+    header("XLA artifact path (PJRT CPU, dense-padded shard)");
+    match dsba::runtime::XlaRuntime::load_default() {
+        Ok(rt) => {
+            let shard = &part.shards[0];
+            let y = &part.labels[0];
+            let zz = vec![0.1; d];
+            // first call compiles; time it separately
+            let t = std::time::Instant::now();
+            let _ = rt.full_op_ridge(shard, &zz, y).unwrap();
+            println!("first call (compile + exec): {:.1} ms", t.elapsed().as_secs_f64() * 1e3);
+            let st = measure(
+                || {
+                    std::hint::black_box(rt.full_op_ridge(shard, &zz, y).unwrap());
+                },
+                1.0,
+                5,
+            );
+            println!("full_op_ridge steady-state: {}", st.display());
+            let st = measure(
+                || {
+                    std::hint::black_box(rt.coefs_ridge(shard, &zz, y).unwrap());
+                },
+                1.0,
+                5,
+            );
+            println!("coefs_ridge steady-state: {}", st.display());
+        }
+        Err(e) => println!("skipped ({e})"),
+    }
+}

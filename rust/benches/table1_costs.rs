@@ -1,0 +1,136 @@
+//! Table 1 — empirical validation of the convergence-rate and cost
+//! entries:
+//!   (a) iterations-to-epsilon scaling in kappa (vary lambda),
+//!       kappa_g (vary topology), and q (vary shard size);
+//!   (b) measured per-iteration communication DOUBLEs per method vs the
+//!       O(Delta d) / O(N rho d) columns.
+//!
+//!     cargo bench --bench table1_costs [-- fast]
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::bench_harness::header;
+use dsba::comm::{CommCostModel, Network};
+use dsba::coordinator::Experiment;
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use std::sync::Arc;
+
+fn passes_to_tol(
+    ds: &dsba::data::Dataset,
+    topo: &Topology,
+    nodes: usize,
+    lambda: f64,
+    kind: AlgorithmKind,
+    alpha: f64,
+    tol: f64,
+    max_passes: f64,
+) -> f64 {
+    let part = ds.partition_seeded(nodes, 2);
+    let problem = RidgeProblem::new(part, lambda);
+    let z_star = dsba::coordinator::solve_optimum(&problem, tol * 1e-3);
+    let mut exp = Experiment::new(problem, topo.clone(), kind)
+        .with_step_size(alpha)
+        .with_passes(max_passes)
+        .with_record_points(400)
+        .with_z_star(z_star);
+    let trace = exp.run();
+    trace.passes_to_tol(tol).unwrap_or(f64::NAN)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    let (samples, reps) = if fast { (240, 1) } else { (480, 1) };
+    let tol = 1e-9;
+    let nodes = 8;
+
+    header("Table 1(a): passes-to-1e-9 vs condition number kappa (DSBA vs DSA vs EXTRA)");
+    println!("{:>10} {:>8} {:>8} {:>8}", "lambda", "DSBA", "DSA", "EXTRA");
+    let ds = SyntheticSpec::tiny()
+        .with_samples(samples)
+        .with_regression(true)
+        .generate(5);
+    let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+    for lambda in [0.1, 0.01, 0.001] {
+        let mut row = format!("{lambda:>10.0e}");
+        for (kind, alpha) in [
+            (AlgorithmKind::Dsba, 1.0),
+            (AlgorithmKind::Dsa, 0.25),
+            (AlgorithmKind::Extra, 0.45),
+        ] {
+            let mut total = 0.0;
+            for _ in 0..reps {
+                total +=
+                    passes_to_tol(&ds, &topo, nodes, lambda, kind, alpha, tol, 4000.0);
+            }
+            row += &format!(" {:>8.1}", total / reps as f64);
+        }
+        println!("{row}");
+    }
+    println!("(expected: EXTRA's kappa^2 rate degrades fastest as lambda shrinks)");
+
+    header("Table 1(a): passes-to-1e-9 vs graph condition number kappa_g (DSBA)");
+    println!("{:>10} {:>10} {:>8}", "topology", "kappa_g", "DSBA");
+    for (name, topo) in [
+        ("complete", Topology::complete(nodes)),
+        ("er(0.4)", Topology::erdos_renyi(nodes, 0.4, 42)),
+        ("grid", Topology::grid2d(nodes)),
+        ("ring", Topology::ring(nodes)),
+    ] {
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let p = passes_to_tol(&ds, &topo, nodes, 0.05, AlgorithmKind::Dsba, 1.0, tol, 4000.0);
+        println!("{name:>10} {:>10.1} {p:>8.1}", mix.kappa_g);
+    }
+
+    header("Table 1(a): passes-to-1e-9 vs local sample count q (DSBA)");
+    println!("{:>6} {:>8}", "q", "DSBA");
+    for q_total in [nodes * 20, nodes * 60, nodes * 120] {
+        let ds = SyntheticSpec::tiny()
+            .with_samples(q_total)
+            .with_regression(true)
+            .generate(6);
+        let p = passes_to_tol(&ds, &topo, nodes, 0.05, AlgorithmKind::Dsba, 1.0, tol, 4000.0);
+        println!("{:>6} {p:>8.1}", q_total / nodes);
+    }
+
+    header("Table 1(b): measured communication DOUBLEs per iteration");
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(400)
+        .with_dim(4096)
+        .with_regression(true)
+        .generate(7);
+    let part = ds.partition_seeded(nodes, 2);
+    let rho = part.max_shard_density();
+    let d = part.dim;
+    let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+    let delta_g = topo.max_degree();
+    println!(
+        "d = {d}, rho = {rho:.2e}, Delta(G) = {delta_g}, N = {nodes} \
+         => dense bound Delta*d = {}, sparse bound ~2*N*rho*d = {:.0}",
+        delta_g * d,
+        2.0 * nodes as f64 * rho * d as f64
+    );
+    println!("{:>9} {:>14} {:>18}", "method", "dbl/iter", "vs dense bound");
+    for kind in [
+        AlgorithmKind::Dsba,
+        AlgorithmKind::DsbaSparse,
+        AlgorithmKind::Dsa,
+        AlgorithmKind::Extra,
+    ] {
+        let part = ds.partition_seeded(nodes, 2);
+        let problem: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, 0.01));
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = dsba::algorithms::AlgoParams::new(0.5, problem.dim(), 3);
+        let mut alg = dsba::algorithms::build(kind, problem, &mix, &topo, &params);
+        let mut net = Network::new(topo.clone(), CommCostModel::values_only());
+        let rounds = 60;
+        for _ in 0..rounds {
+            alg.step(&mut net);
+        }
+        let per_iter = net.max_received() / rounds as f64;
+        println!(
+            "{:>9} {per_iter:>14.0} {:>17.2}x",
+            kind.name(),
+            per_iter / (delta_g * d) as f64
+        );
+    }
+}

@@ -1,0 +1,437 @@
+//! DSBA-s: DSBA with the §5.1 sparse communication scheme.
+//!
+//! Nodes never exchange dense iterates.  Each node transmits only its
+//! sparse update `delta_n^t = B_{n,i}(z^{t+1}) - phi_{n,i}` (support of a
+//! single data row, + the 3-scalar tail for AUC) through the BFS relay of
+//! [`crate::comm::RelayProtocol`], and *reconstructs* delayed copies of
+//! every other node's iterate by replaying the delta-closed recursion
+//! (28):
+//!
+//! `(1 + alpha lambda) z_m^{tau+1} = sum_k w~_{mk} (2 z_k^tau -
+//!  z_k^{tau-1}) + alpha ((q-1)/q delta_m^{tau-1} - delta_m^tau)
+//!  + alpha lambda z_m^tau`
+//!
+//! A node at distance `xi_m` can reconstruct `z_m` up to time
+//! `t + 1 - xi_m` at wall round `t` (the wavefront invariant proved in the
+//! paper's §5.1 induction); in particular neighbors are available at time
+//! `t`, which is exactly what the `psi_n^t` computation (29) needs.  The
+//! reconstruction advances every remote node by one step per round, in
+//! decreasing-distance order, using a 3-deep history ring per remote node.
+//!
+//! The only dense traffic is a one-time flood of the initial table means
+//! `phibar_m^0` (accounted on the first round), needed for the `tau = 0`
+//! base case of the replay — the `O(Nd)` per-node storage the paper's
+//! §5.1 complexity analysis allows.
+//!
+//! Equivalence with dense [`super::Dsba`] (identical iterate sequences
+//! under identical seeds) is enforced by `rust/tests/sparse_comm.rs`.
+
+use super::{AlgoParams, Algorithm, NodeSaga};
+use crate::comm::{Network, RelayDelta, RelayProtocol};
+use crate::graph::{MixingMatrix, Topology};
+use crate::linalg::SparseVec;
+use crate::operators::Problem;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// 3-deep time-indexed history of one remote node's reconstructed rows.
+#[derive(Clone)]
+struct ReplayBuf {
+    newest: i64,
+    rows: [Vec<f64>; 3],
+}
+
+impl ReplayBuf {
+    fn new(z0: &[f64]) -> ReplayBuf {
+        ReplayBuf { newest: 0, rows: [z0.to_vec(), z0.to_vec(), z0.to_vec()] }
+    }
+
+    #[inline]
+    fn slot(time: i64) -> usize {
+        (time.rem_euclid(3)) as usize
+    }
+
+    #[inline]
+    fn row(&self, time: i64) -> &[f64] {
+        debug_assert!(
+            time <= self.newest && time >= self.newest - 2 && time >= 0,
+            "replay read outside window: t={time}, newest={}",
+            self.newest
+        );
+        &self.rows[Self::slot(time)]
+    }
+
+    fn advance_into(&mut self, time: i64) -> &mut Vec<f64> {
+        debug_assert_eq!(time, self.newest + 1, "non-contiguous replay");
+        self.newest = time;
+        &mut self.rows[Self::slot(time)]
+    }
+}
+
+/// A received sparse delta (feature block + dense tail).
+#[derive(Clone)]
+struct ArchivedDelta {
+    vec: SparseVec,
+    tail: Vec<f64>,
+}
+
+impl ArchivedDelta {
+    #[inline]
+    fn axpy(&self, scale: f64, out: &mut [f64], d_feat: usize) {
+        self.vec.axpy_into(scale, out);
+        for (k, t) in self.tail.iter().enumerate() {
+            out[d_feat + k] += scale * t;
+        }
+    }
+}
+
+/// Per-node view of the network (what §5.1 calls the node's "memory").
+struct NodeView {
+    /// reconstructed rows for every node (own entry holds exact rows)
+    replay: Vec<ReplayBuf>,
+    /// two-deep delta archive per source: archive[m][t % 2]
+    archive: Vec<[Option<(i64, ArchivedDelta)>; 2]>,
+    /// initial table means of all nodes (one-time flood)
+    phibar0: Vec<Vec<f64>>,
+    /// remote nodes in decreasing-distance order
+    order: Vec<usize>,
+}
+
+pub struct DsbaSparse {
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    alpha: f64,
+    views: Vec<NodeView>,
+    saga: Vec<NodeSaga>,
+    delta_prev: Vec<(usize, Vec<f64>)>,
+    /// own iterates (z^t, z^{t-1}) — mirrors of replay[n][n] kept for the
+    /// Algorithm::iterates() interface
+    z: Vec<Vec<f64>>,
+    z_prev: Vec<Vec<f64>>,
+    relay: RelayProtocol,
+    /// deltas produced last round, to inject this round
+    fresh: Vec<Option<RelayDelta>>,
+    rngs: Vec<Rng>,
+    t: usize,
+    evals: u64,
+    psi: Vec<f64>,
+    coefs_new: Vec<f64>,
+}
+
+impl DsbaSparse {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        mix: MixingMatrix,
+        topo: Topology,
+        params: &AlgoParams,
+    ) -> DsbaSparse {
+        let n = problem.nodes();
+        let dim = problem.dim();
+        assert_eq!(params.z0.len(), dim);
+        let saga: Vec<NodeSaga> =
+            (0..n).map(|nd| NodeSaga::init(problem.as_ref(), nd, &params.z0)).collect();
+        // one-time flood payload: every node learns every phibar_m^0
+        let phibar0: Vec<Vec<f64>> = saga.iter().map(|s| s.phibar.clone()).collect();
+        let views = (0..n)
+            .map(|nd| {
+                let mut order: Vec<usize> = (0..n).filter(|&m| m != nd).collect();
+                order.sort_by_key(|&m| std::cmp::Reverse(topo.dist[nd][m]));
+                NodeView {
+                    replay: (0..n).map(|_| ReplayBuf::new(&params.z0)).collect(),
+                    archive: vec![[None, None]; n],
+                    phibar0: phibar0.clone(),
+                    order,
+                }
+            })
+            .collect();
+        let w = problem.coef_width();
+        let mut root = Rng::new(params.seed);
+        let rngs = (0..n).map(|nd| root.fork(nd as u64)).collect();
+        let relay = RelayProtocol::new(&topo);
+        DsbaSparse {
+            alpha: params.alpha,
+            views,
+            saga,
+            delta_prev: vec![(0, vec![0.0; w]); n],
+            z: vec![params.z0.clone(); n],
+            z_prev: vec![params.z0.clone(); n],
+            relay,
+            fresh: vec![None; n],
+            rngs,
+            t: 0,
+            evals: 0,
+            psi: vec![0.0; dim],
+            coefs_new: vec![0.0; w],
+            problem,
+            mix,
+            topo,
+        }
+    }
+
+    /// Build the communicated sparse delta from a coefficient diff:
+    /// feature block = dcoefs[0] * a_{n,i}, tail = dcoefs[1..].
+    fn make_delta(&self, n: usize, i: usize, dcoefs: &[f64]) -> ArchivedDelta {
+        let row = self.problem.partition().shards[n].row_sparse(i);
+        ArchivedDelta { vec: row.scaled(dcoefs[0]), tail: dcoefs[1..].to_vec() }
+    }
+
+    /// Replay node `m` one step forward inside `view`: reconstruct
+    /// `z_m^{target}` from archived deltas and neighbor history.
+    fn advance_replay(&self, view: &mut NodeView, m: usize, target: i64) {
+        let p = self.problem.as_ref();
+        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q() as f64);
+        let d_feat = p.feature_dim();
+        let dim = p.dim();
+        let scale = 1.0 / (1.0 + alpha * lam);
+        // write into the ring slot being retired (time target-3): it is
+        // dead, and all reads below touch times target-1/target-2 of m or
+        // other nodes' buffers, so no aliasing. Avoids an O(d) alloc per
+        // (node, remote) pair per round (see EXPERIMENTS.md §Perf).
+        let mut new_row = std::mem::take(
+            &mut view.replay[m].rows[ReplayBuf::slot(target)],
+        );
+        new_row.fill(0.0);
+        debug_assert_eq!(new_row.len(), dim);
+        if target == 1 {
+            // base case: (1+al) z_m^1 = z^0 - alpha (delta_m^0 + phibar_m^0)
+            let (t0, d0) = view.archive[m][0]
+                .as_ref()
+                .map(|(t, d)| (*t, d))
+                .expect("delta_m^0 must have arrived before replay start");
+            assert_eq!(t0, 0, "expected delta at time 0");
+            new_row.copy_from_slice(view.replay[m].row(0)); // z^0
+            d0.axpy(-alpha, &mut new_row, d_feat);
+            crate::linalg::axpy(-alpha, &view.phibar0[m], &mut new_row);
+            crate::linalg::scale(&mut new_row, scale);
+        } else {
+            let tau = target - 1;
+            // mixing over m's neighborhood at times (tau, tau-1)
+            let mix_term = |k: usize, out: &mut [f64]| {
+                let w = self.mix.wt[(m, k)];
+                if w == 0.0 {
+                    return;
+                }
+                let zk = view.replay[k].row(tau);
+                let zkp = view.replay[k].row(tau - 1);
+                for idx in 0..dim {
+                    out[idx] += w * (2.0 * zk[idx] - zkp[idx]);
+                }
+            };
+            mix_term(m, &mut new_row);
+            for &k in self.topo.neighbors(m) {
+                mix_term(k, &mut new_row);
+            }
+            // + alpha ((q-1)/q delta_m^{tau-1} - delta_m^tau) + alpha lam z_m^tau
+            let get = |time: i64| -> &ArchivedDelta {
+                let (tt, d) = view.archive[m][(time.rem_euclid(2)) as usize]
+                    .as_ref()
+                    .map(|(t, d)| (*t, d))
+                    .unwrap_or_else(|| panic!("missing delta_{m}^{time}"));
+                assert_eq!(tt, time, "archive slot holds wrong time");
+                d
+            };
+            get(tau).axpy(-alpha, &mut new_row, d_feat);
+            if tau >= 1 {
+                get(tau - 1).axpy(alpha * (q - 1.0) / q, &mut new_row, d_feat);
+            }
+            if lam != 0.0 {
+                crate::linalg::axpy(alpha * lam, view.replay[m].row(tau), &mut new_row);
+            }
+            crate::linalg::scale(&mut new_row, scale);
+        }
+        *view.replay[m].advance_into(target) = new_row;
+    }
+}
+
+impl Algorithm for DsbaSparse {
+    fn step(&mut self, net: &mut Network) {
+        let p = self.problem.clone();
+        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q());
+        let dim = p.dim();
+        let t = self.t as i64;
+
+        // one-time flood of phibar^0 along the relay trees (dense, N-1
+        // vectors received per node) — the O(Nd) setup cost of §5.1
+        if self.t == 0 {
+            for src in 0..p.nodes() {
+                // walk the BFS tree: every non-src node receives once
+                for node in 0..p.nodes() {
+                    if node == src {
+                        continue;
+                    }
+                    let parent = self.topo.designated_parent(src, node).unwrap();
+                    net.send_dense(parent, node, dim);
+                }
+            }
+        }
+
+        // 1. relay round: inject deltas produced last iteration; the inbox
+        //    delivers delta_s^{t - xi_s} to each node
+        let fresh = std::mem::replace(&mut self.fresh, vec![None; p.nodes()]);
+        let inboxes = self.relay.round(fresh, net);
+        for (n, inbox) in inboxes.into_iter().enumerate() {
+            for d in inbox {
+                let src = d.src as usize;
+                let time = d.t as i64;
+                self.views[n].archive[src][(time.rem_euclid(2)) as usize] =
+                    Some((time, ArchivedDelta { vec: d.vec, tail: d.tail }));
+            }
+        }
+
+        // 2-4. per node: advance replay wavefront, compute psi, backward
+        let mut new_fresh: Vec<Option<RelayDelta>> = vec![None; p.nodes()];
+        for n in 0..p.nodes() {
+            let mut view = std::mem::replace(
+                &mut self.views[n],
+                NodeView {
+                    replay: Vec::new(),
+                    archive: Vec::new(),
+                    phibar0: Vec::new(),
+                    order: Vec::new(),
+                },
+            );
+            // advance remote nodes farthest-first
+            for idx in 0..view.order.len() {
+                let m = view.order[idx];
+                let target = t + 1 - self.topo.dist[n][m] as i64;
+                if target >= 1 {
+                    debug_assert_eq!(view.replay[m].newest, target - 1);
+                    self.advance_replay(&mut view, m, target);
+                }
+            }
+
+            // psi_n^t from reconstructed neighbor rows
+            let i = self.rngs[n].below(q);
+            let psi = &mut self.psi;
+            if self.t == 0 {
+                // consensus start: sum_m w z^0 = z^0
+                psi.copy_from_slice(view.replay[n].row(0));
+                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
+                crate::linalg::axpy(-alpha, &self.saga[n].phibar, psi);
+            } else {
+                psi.fill(0.0);
+                let mix_term = |m: usize, out: &mut [f64]| {
+                    let w = self.mix.wt[(n, m)];
+                    if w == 0.0 {
+                        return;
+                    }
+                    let zm = view.replay[m].row(t);
+                    let zmp = view.replay[m].row(t - 1);
+                    for k in 0..dim {
+                        out[k] += w * (2.0 * zm[k] - zmp[k]);
+                    }
+                };
+                mix_term(n, psi);
+                for &m in self.topo.neighbors(n) {
+                    mix_term(m, psi);
+                }
+                let (i_prev, ref dprev) = self.delta_prev[n];
+                p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, psi);
+                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
+                if lam != 0.0 {
+                    crate::linalg::axpy(alpha * lam, view.replay[n].row(t), psi);
+                }
+            }
+            // backward step; own row advances to time t+1
+            let mut z_new = vec![0.0; dim];
+            p.backward(n, i, alpha, psi, &mut z_new, &mut self.coefs_new);
+            self.evals += 1;
+            let (ip, dp) = &mut self.delta_prev[n];
+            *ip = i;
+            self.saga[n].update(p.as_ref(), n, i, &self.coefs_new, dp);
+            // own archive + fresh outgoing delta (delta_n^t)
+            let arch = self.make_delta(n, i, &self.delta_prev[n].1.clone());
+            view.archive[n][(t.rem_euclid(2)) as usize] = Some((t, arch.clone()));
+            new_fresh[n] = Some(RelayDelta {
+                src: n as u32,
+                t: t as u32,
+                vec: arch.vec.clone(),
+                tail: arch.tail.clone(),
+            });
+            self.z_prev[n].copy_from_slice(view.replay[n].row(t));
+            *view.replay[n].advance_into(t + 1) = z_new.clone();
+            self.z[n] = z_new;
+            self.views[n] = view;
+        }
+        self.fresh = new_fresh;
+        self.t += 1;
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        &self.z
+    }
+
+    fn passes(&self) -> f64 {
+        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+    }
+
+    fn iteration(&self) -> usize {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "DSBA-s"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommCostModel;
+    use crate::data::SyntheticSpec;
+    use crate::operators::RidgeProblem;
+
+    /// The §5.1 headline: DSBA-s produces *identical* iterates to dense
+    /// DSBA under the same seed, while transmitting only sparse deltas.
+    #[test]
+    fn matches_dense_dsba_exactly_ridge() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(51);
+        let part = ds.partition_seeded(5, 3);
+        let topo = Topology::erdos_renyi(5, 0.5, 7);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, 0.05));
+        let params = AlgoParams::new(0.5, p.dim(), 13);
+        let mut dense = super::super::Dsba::new(p.clone(), mix.clone(), topo.clone(), &params);
+        let mut sparse = DsbaSparse::new(p.clone(), mix, topo.clone(), &params);
+        let mut net1 = Network::new(topo.clone(), CommCostModel::default());
+        let mut net2 = Network::new(topo, CommCostModel::default());
+        for round in 0..120 {
+            dense.step(&mut net1);
+            sparse.step(&mut net2);
+            for n in 0..5 {
+                let d = crate::linalg::dist2_sq(&dense.iterates()[n], &sparse.iterates()[n]);
+                assert!(d < 1e-18, "round {round} node {n}: drift {d:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn communication_is_sparse() {
+        let ds = SyntheticSpec::rcv1_like()
+            .with_samples(200)
+            .with_dim(2048)
+            .generate(5);
+        let part = ds.partition_seeded(5, 3);
+        let topo = Topology::erdos_renyi(5, 0.5, 7);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, 0.05));
+        let params = AlgoParams::new(0.5, p.dim(), 13);
+        let mut dense = super::super::Dsba::new(p.clone(), mix.clone(), topo.clone(), &params);
+        let mut sparse = DsbaSparse::new(p.clone(), mix, topo.clone(), &params);
+        let mut net1 = Network::new(topo.clone(), CommCostModel::default());
+        let mut net2 = Network::new(topo, CommCostModel::default());
+        for _ in 0..50 {
+            dense.step(&mut net1);
+            sparse.step(&mut net2);
+        }
+        // steady-state: sparse traffic must be far below dense traffic
+        // (one-time phibar flood amortizes away)
+        assert!(
+            net2.max_received() < net1.max_received() / 3.0,
+            "sparse {} vs dense {}",
+            net2.max_received(),
+            net1.max_received()
+        );
+    }
+}

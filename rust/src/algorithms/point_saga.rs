@@ -1,0 +1,146 @@
+//! Point-SAGA (Defazio, 2016) — the single-node degenerate case of DSBA
+//! (Remark 5.1). Used both as a baseline and as the centralized optimum
+//! pre-solver for non-quadratic problems.
+//!
+//! Update: `psi^t = z^t + alpha (phi_{i_t} - phibar^t)`,
+//!         `z^{t+1} = J_{alpha (B_{i_t} + lambda I)}(psi^t)`.
+
+use super::{AlgoParams, Algorithm, NodeSaga};
+use crate::comm::Network;
+use crate::operators::Problem;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct PointSaga {
+    problem: Arc<dyn Problem>,
+    alpha: f64,
+    z: Vec<Vec<f64>>, // single row
+    saga: NodeSaga,
+    rng: Rng,
+    t: usize,
+    psi: Vec<f64>,
+    z_next: Vec<f64>,
+    coefs: Vec<f64>,
+    delta: Vec<f64>,
+}
+
+impl PointSaga {
+    pub fn new(problem: Arc<dyn Problem>, params: &AlgoParams) -> PointSaga {
+        assert_eq!(
+            problem.nodes(),
+            1,
+            "Point-SAGA is a single-node method; pool the partition first"
+        );
+        let dim = problem.dim();
+        let saga = NodeSaga::init(problem.as_ref(), 0, &params.z0);
+        let w = problem.coef_width();
+        // fork(0) — identical sample path to node 0 of the decentralized
+        // methods under the same seed (Remark 5.1 equivalence tests)
+        let rng = Rng::new(params.seed).fork(0);
+        PointSaga {
+            alpha: params.alpha,
+            z: vec![params.z0.clone()],
+            saga,
+            rng,
+            t: 0,
+            psi: vec![0.0; dim],
+            z_next: vec![0.0; dim],
+            coefs: vec![0.0; w],
+            delta: vec![0.0; w],
+            problem,
+        }
+    }
+
+    /// Run until the global residual drops below `tol` (optimum pre-solve).
+    /// Returns the final iterate and the number of iterations used.
+    pub fn solve_to_residual(
+        &mut self,
+        tol: f64,
+        check_every: usize,
+        max_iters: usize,
+    ) -> (Vec<f64>, usize) {
+        let mut net = Network::new(
+            crate::graph::Topology::from_edges(1, &[]),
+            crate::comm::CommCostModel::default(),
+        );
+        let mut it = 0;
+        while it < max_iters {
+            for _ in 0..check_every {
+                self.step(&mut net);
+                it += 1;
+            }
+            if self.problem.global_residual(&self.z[0]) < tol {
+                break;
+            }
+        }
+        (self.z[0].clone(), it)
+    }
+}
+
+impl Algorithm for PointSaga {
+    fn step(&mut self, _net: &mut Network) {
+        let p = self.problem.as_ref();
+        let i = self.rng.below(p.q());
+        // psi = z + alpha (phi_i - phibar)
+        self.psi.copy_from_slice(&self.z[0]);
+        p.scatter(0, i, self.saga.coef(i), self.alpha, &mut self.psi);
+        crate::linalg::axpy(-self.alpha, &self.saga.phibar, &mut self.psi);
+        p.backward(0, i, self.alpha, &self.psi, &mut self.z_next, &mut self.coefs);
+        self.saga.update(p, 0, i, &self.coefs, &mut self.delta);
+        std::mem::swap(&mut self.z[0], &mut self.z_next);
+        self.t += 1;
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        &self.z
+    }
+
+    fn passes(&self) -> f64 {
+        self.t as f64 / self.problem.q() as f64
+    }
+
+    fn iteration(&self) -> usize {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "Point-SAGA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::operators::{LogisticProblem, Problem, RidgeProblem};
+
+    #[test]
+    fn solves_ridge_to_high_accuracy() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(2);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(ds.partition(1), 0.05));
+        let params = AlgoParams::new(0.5, p.dim(), 3);
+        let mut ps = PointSaga::new(p.clone(), &params);
+        let (z, iters) = ps.solve_to_residual(1e-11, 200, 500_000);
+        assert!(iters < 500_000);
+        assert!(p.global_residual(&z) < 1e-11);
+    }
+
+    #[test]
+    fn solves_logistic() {
+        let ds = SyntheticSpec::tiny().generate(3);
+        let p: Arc<dyn Problem> = Arc::new(LogisticProblem::new(ds.partition(1), 0.05));
+        let params = AlgoParams::new(1.0, p.dim(), 4);
+        let mut ps = PointSaga::new(p.clone(), &params);
+        let (z, _) = ps.solve_to_residual(1e-10, 500, 500_000);
+        assert!(p.global_residual(&z) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "single-node")]
+    fn rejects_multinode_problem() {
+        let ds = SyntheticSpec::tiny().generate(4);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(ds.partition(2), 0.1));
+        let params = AlgoParams::new(0.5, p.dim(), 5);
+        let _ = PointSaga::new(p, &params);
+    }
+}

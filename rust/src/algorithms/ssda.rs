@@ -1,0 +1,220 @@
+//! SSDA (Scaman et al., 2017): Nesterov-accelerated gradient ascent on
+//! the dual of the consensus problem.
+//!
+//! With gossip operator `K = (I - W)/2` (PSD, `ker K = span{1}`), the
+//! dual iteration is
+//!   `theta_n^t  = grad f_n^*(x_n^t)`      (conjugate-gradient oracle)
+//!   `y^{t+1}    = x^t - eta * Theta^t K`  (one neighbor exchange)
+//!   `x^{t+1}    = y^{t+1} + momentum (y^{t+1} - y^t)`
+//! Primal estimates are the `theta_n` themselves.  Theory constants:
+//! `eta = mu_f / lambda_max(K)` and momentum from the dual condition
+//! number `kappa_dual = (L_f / mu_f) (lambda_max(K) / gamma(K))`; the
+//! paper tunes step sizes, so `params.alpha` scales `eta`.
+//!
+//! The conjugate oracle `grad f*(v) = argmin_u f(u) - <v, u>` is computed
+//! by solving `B_n(u) + lambda u = v` with AGD (closed-form-free but
+//! exact to `inner_tol`); for ridge this is an SPD solve identical to CG.
+
+use super::{AlgoParams, Algorithm};
+use crate::comm::Network;
+use crate::graph::{MixingMatrix, Topology};
+use crate::linalg::power_iteration;
+use crate::operators::Problem;
+use crate::solvers::agd_minimize;
+use std::sync::Arc;
+
+pub struct Ssda {
+    problem: Arc<dyn Problem>,
+    topo: Topology,
+    /// true when the operator field is affine (ridge) -> CG oracle
+    linear_field: bool,
+    /// K = (I - W)/2
+    k_op: crate::linalg::DenseMatrix,
+    eta: f64,
+    momentum: f64,
+    inner_tol: f64,
+    /// dual iterates
+    x: Vec<Vec<f64>>,
+    y_prev: Vec<Vec<f64>>,
+    /// primal estimates theta_n (reported iterates)
+    theta: Vec<Vec<f64>>,
+    t: usize,
+    evals: std::cell::Cell<u64>,
+}
+
+impl Ssda {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        mix: MixingMatrix,
+        topo: Topology,
+        params: &AlgoParams,
+    ) -> Ssda {
+        let n = problem.nodes();
+        let dim = problem.dim();
+        let mut k_op = crate::linalg::DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k_op[(i, j)] =
+                    0.5 * ((if i == j { 1.0 } else { 0.0 }) - mix.w[(i, j)]);
+            }
+        }
+        let lmax = power_iteration(&k_op, 300).max(1e-12);
+        let gamma = mix.gamma; // smallest nonzero eig of K
+        let (l_f, mu_f) = problem.l_mu();
+        // theory step scaled by the tuned multiplier
+        let eta = params.alpha * mu_f / lmax;
+        let kappa_dual = (l_f / mu_f) * (lmax / gamma);
+        let r = 1.0 / kappa_dual.max(1.0);
+        let momentum = params
+            .ssda_momentum
+            .unwrap_or((1.0 - r.sqrt()) / (1.0 + r.sqrt()));
+        // probe linearity of the field (ridge vs logistic/auc): push far
+        // along one data row; bounded coefficients mean non-affine
+        let linear_field = {
+            let dim2 = problem.dim();
+            let z0 = vec![0.0; dim2];
+            let mut big = vec![0.0; dim2];
+            problem.partition().shards[0].row_sparse(0).axpy_into(1e6, &mut big);
+            let mut c0 = vec![0.0; problem.coef_width()];
+            let mut c1 = vec![0.0; problem.coef_width()];
+            problem.coefs(0, 0, &z0, &mut c0);
+            problem.coefs(0, 0, &big, &mut c1);
+            problem.coef_width() == 1 && (c1[0] - c0[0]).abs() > 10.0
+        };
+        Ssda {
+            linear_field,
+            eta,
+            momentum,
+            inner_tol: params.inner_tol,
+            x: vec![vec![0.0; dim]; n],
+            y_prev: vec![vec![0.0; dim]; n],
+            theta: vec![params.z0.clone(); n],
+            t: 0,
+            evals: std::cell::Cell::new(0),
+            k_op,
+            problem,
+            topo: topo.clone(),
+        }
+    }
+
+    /// grad f_n^*(v): solve B_n(u) + lambda u = v.
+    ///
+    /// Cost accounting follows Table 1's convention for SSDA
+    /// (`O(rho q d + q tau)` per iteration): one oracle call is priced as
+    /// one pass over the shard, independent of the inner solver's
+    /// iteration count — the same convention under which the paper's
+    /// Figure 1/2 SSDA curves are plotted.
+    fn conjugate_oracle(&self, n: usize, v: &[f64], warm: &[f64]) -> Vec<f64> {
+        let p = self.problem.clone();
+        self.evals.set(self.evals.get() + p.q() as u64);
+        if self.linear_field {
+            // ridge: the field is affine, solve by CG (exact in <= rank
+            // iterations). matvec(u) = B_n(u) + lambda u - (B_n(0))
+            let dim = p.dim();
+            let mut b0 = vec![0.0; dim];
+            p.full_raw_mean(n, &vec![0.0; dim], &mut b0);
+            let lam = p.lambda();
+            let op = (dim, |u: &[f64], out: &mut [f64]| {
+                p.full_raw_mean(n, u, out);
+                for k in 0..u.len() {
+                    out[k] += lam * u[k] - b0[k];
+                }
+            });
+            let rhs: Vec<f64> = v.iter().zip(&b0).map(|(vk, bk)| vk - bk).collect();
+            let (u, _, _) = crate::solvers::cg_solve(&op, &rhs, self.inner_tol, 4 * p.q() + 50);
+            return u;
+        }
+        let grad = |u: &[f64], g: &mut [f64]| {
+            p.full_operator(n, u, g);
+            for (gk, vk) in g.iter_mut().zip(v) {
+                *gk -= vk;
+            }
+        };
+        let (l, mu) = self.problem.l_mu();
+        let (u, _) = agd_minimize(grad, warm, l, mu, self.inner_tol, 50_000);
+        u
+    }
+}
+
+impl Algorithm for Ssda {
+    fn step(&mut self, net: &mut Network) {
+        let p = self.problem.as_ref();
+        let n_nodes = p.nodes();
+        let dim = p.dim();
+        // conjugate oracles (local)
+        for n in 0..n_nodes {
+            let warm = self.theta[n].clone();
+            self.theta[n] = self.conjugate_oracle(n, &self.x[n], &warm);
+        }
+        // exchange theta (dense)
+        net.round_dense_exchange(dim);
+        // y^{t+1} = x - eta Theta K ; x^{t+1} = y + m (y - y_prev)
+        for n in 0..n_nodes {
+            let mut y_new = self.x[n].clone();
+            // (Theta K)_n = sum_m K[n,m] theta_m — K is graph-sparse
+            let touch = |m: usize, y_new: &mut [f64]| {
+                let km = self.k_op[(n, m)];
+                if km != 0.0 {
+                    crate::linalg::axpy(-self.eta * km, &self.theta[m], y_new);
+                }
+            };
+            touch(n, &mut y_new);
+            for &m in self.topo.neighbors(n) {
+                touch(m, &mut y_new);
+            }
+            for k in 0..dim {
+                let yv = y_new[k];
+                self.x[n][k] = yv + self.momentum * (yv - self.y_prev[n][k]);
+                self.y_prev[n][k] = yv;
+            }
+        }
+        self.t += 1;
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        &self.theta
+    }
+
+    fn passes(&self) -> f64 {
+        self.evals.get() as f64 / (self.problem.nodes() * self.problem.q()) as f64
+    }
+
+    fn iteration(&self) -> usize {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "SSDA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommCostModel;
+    use crate::data::SyntheticSpec;
+    use crate::operators::RidgeProblem;
+
+    #[test]
+    fn converges_on_ridge() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(41);
+        let p: Arc<dyn Problem> =
+            Arc::new(RidgeProblem::new(ds.partition_seeded(4, 3), 0.1));
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let mut params = AlgoParams::new(1.0, p.dim(), 1);
+        params.inner_tol = 1e-12;
+        let mut alg = Ssda::new(p.clone(), mix, topo.clone(), &params);
+        let mut net = Network::new(topo, CommCostModel::default());
+        for _ in 0..400 {
+            alg.step(&mut net);
+        }
+        let r = p.global_residual(&alg.iterates()[0]);
+        assert!(r < 1e-6, "residual {r}");
+        // consensus across primal estimates
+        let z0 = &alg.iterates()[0];
+        for z in alg.iterates() {
+            assert!(crate::linalg::dist2_sq(z, z0) < 1e-10);
+        }
+    }
+}

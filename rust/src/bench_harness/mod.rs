@@ -1,0 +1,181 @@
+//! Benchmark harness shared by `rust/benches/*`: runs configured method
+//! grids and prints the series the paper's figures/tables report, plus a
+//! small timing harness (criterion is not vendored; the benches are
+//! `harness = false` binaries built on this module).
+
+use crate::algorithms::AlgorithmKind;
+use crate::config::{ExperimentConfig, ProblemKind};
+use crate::coordinator::Trace;
+use crate::metrics::format_table;
+use crate::util::json::Json;
+
+/// Print a bench section header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Step sizes per (problem, method): the paper tunes per-method; these
+/// are the tuned values for the synthetic profiles (see EXPERIMENTS.md).
+pub fn tuned_alpha(problem: ProblemKind, method: AlgorithmKind) -> f64 {
+    use AlgorithmKind::*;
+    match (problem, method) {
+        (ProblemKind::Ridge, Dsba | DsbaSparse) => 2.0,
+        (ProblemKind::Ridge, Dsa) => 0.3,
+        (ProblemKind::Ridge, Extra) => 0.45,
+        (ProblemKind::Ridge, PExtra) => 2.0,
+        (ProblemKind::Ridge, Dlm) => 0.0, // uses dlm_c / dlm_rho
+        (ProblemKind::Ridge, Ssda) => 0.9,
+        (ProblemKind::Ridge, Dgd) => 0.4,
+        (ProblemKind::Ridge, PointSaga) => 2.0,
+        (ProblemKind::Logistic, Dsba | DsbaSparse) => 2.0,
+        (ProblemKind::Logistic, Dsa) => 1.0,
+        (ProblemKind::Logistic, Extra) => 1.8,
+        (ProblemKind::Logistic, PExtra) => 4.0,
+        (ProblemKind::Logistic, Dlm) => 0.0,
+        (ProblemKind::Logistic, Ssda) => 0.9,
+        (ProblemKind::Logistic, Dgd) => 1.5,
+        (ProblemKind::Logistic, PointSaga) => 2.0,
+        (ProblemKind::Auc, Dsba | DsbaSparse) => 0.5,
+        (ProblemKind::Auc, Dsa) => 0.05,
+        (ProblemKind::Auc, Extra) => 0.05,
+        (ProblemKind::Auc, _) => 0.05,
+    }
+}
+
+/// One figure run: a (dataset, method-list) grid at fixed passes.
+pub struct FigureSpec {
+    pub title: &'static str,
+    pub problem: ProblemKind,
+    pub datasets: Vec<&'static str>,
+    pub methods: Vec<AlgorithmKind>,
+    pub passes: f64,
+    pub samples: usize,
+    pub dim: usize,
+    pub nodes: usize,
+    pub seed: u64,
+}
+
+impl FigureSpec {
+    /// CI-scale defaults shared by the three figures.
+    pub fn defaults(problem: ProblemKind) -> FigureSpec {
+        FigureSpec {
+            title: "",
+            problem,
+            datasets: vec!["news20-like", "rcv1-like", "sector-like"],
+            methods: vec![
+                AlgorithmKind::Dsba,
+                AlgorithmKind::Dsa,
+                AlgorithmKind::Extra,
+                AlgorithmKind::Ssda,
+                AlgorithmKind::Dlm,
+            ],
+            passes: 20.0,
+            samples: 600,
+            dim: 2048,
+            nodes: 10,
+            seed: 42,
+        }
+    }
+
+    /// Run the full grid, printing each series and returning
+    /// (dataset, method, trace) triples.
+    pub fn run(&self) -> Vec<(String, AlgorithmKind, Trace)> {
+        let mut out = Vec::new();
+        for ds in &self.datasets {
+            header(&format!("{} / {}", self.title, ds));
+            // share the optimum across methods on the same dataset
+            let mut z_star: Option<Vec<f64>> = None;
+            for &m in &self.methods {
+                let mut cfg = ExperimentConfig {
+                    problem: self.problem,
+                    dataset: ds.to_string(),
+                    samples: self.samples,
+                    dim: self.dim,
+                    nodes: self.nodes,
+                    algorithm: m,
+                    alpha: tuned_alpha(self.problem, m),
+                    passes: self.passes,
+                    seed: self.seed,
+                    record_points: 25,
+                    ..Default::default()
+                };
+                if m == AlgorithmKind::Dlm {
+                    cfg.alpha = 0.0;
+                }
+                let mut exp = match cfg.build() {
+                    Ok(e) => e,
+                    Err(err) => {
+                        println!("  {}: skipped ({err})", m.name());
+                        continue;
+                    }
+                };
+                exp = exp.with_params(|p| {
+                    p.dlm_c = 0.4;
+                    p.dlm_rho = 1.5;
+                    p.inner_tol = 1e-11;
+                });
+                if let Some(z) = &z_star {
+                    exp = exp.with_z_star(z.clone());
+                }
+                let trace = exp.run();
+                if z_star.is_none() {
+                    z_star = Some(trace.z_star.clone());
+                }
+                println!("--- {} ---", m.name());
+                println!("{}", format_table(&trace.rows));
+                out.push((ds.to_string(), m, trace));
+            }
+        }
+        out
+    }
+}
+
+/// Write figure results to `results/<name>.json` for external plotting.
+pub fn write_results(name: &str, runs: &[(String, AlgorithmKind, Trace)]) {
+    let arr: Vec<Json> = runs
+        .iter()
+        .map(|(ds, m, t)| {
+            Json::from_pairs(vec![
+                ("dataset", Json::Str(ds.clone())),
+                ("method", Json::Str(m.name().into())),
+                (
+                    "series",
+                    Json::Arr(t.rows.iter().map(|r| r.to_json()).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::from_pairs(vec![("figure", Json::Str(name.into())), ("runs", Json::Arr(arr))]);
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}.json");
+    if std::fs::write(&path, doc.to_string()).is_ok() {
+        println!("[wrote {path}]");
+    }
+}
+
+/// Summarize winners: lowest suboptimality (or highest AUC) per dataset.
+pub fn summarize(runs: &[(String, AlgorithmKind, Trace)], auc: bool) {
+    header("summary");
+    let mut datasets: Vec<&String> = runs.iter().map(|(d, _, _)| d).collect();
+    datasets.dedup();
+    for ds in datasets {
+        let best = runs
+            .iter()
+            .filter(|(d, _, _)| d == ds)
+            .min_by(|a, b| {
+                let ka = if auc { -a.2.last_auc() } else { a.2.last_suboptimality() };
+                let kb = if auc { -b.2.last_auc() } else { b.2.last_suboptimality() };
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .unwrap();
+        if auc {
+            println!("{ds}: best final AUC = {} ({:.4})", best.1.name(), best.2.last_auc());
+        } else {
+            println!(
+                "{ds}: best final suboptimality = {} ({:.3e})",
+                best.1.name(),
+                best.2.last_suboptimality()
+            );
+        }
+    }
+}

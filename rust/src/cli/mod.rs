@@ -1,0 +1,285 @@
+//! Command-line launcher (`dsba <subcommand>`), hand-rolled since clap is
+//! not in the vendor set.
+//!
+//! Subcommands:
+//!   run       --config <file.json> | inline flags     run one experiment
+//!   figure    <1|2|3>                                  regenerate a figure
+//!   info      --dataset <name> --nodes <n> ...         print problem stats
+//!   artifacts                                          check XLA artifacts
+//!   help
+
+use crate::algorithms::AlgorithmKind;
+use crate::bench_harness::FigureSpec;
+use crate::config::{ExperimentConfig, ProblemKind};
+use crate::graph::TopologyKind;
+use crate::metrics::format_table;
+
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = dispatch(&args);
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> i32 {
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "dsba — decentralized stochastic backward aggregation (ICML 2018 reproduction)
+
+USAGE:
+  dsba run [--config FILE] [--problem ridge|logistic|auc] [--dataset NAME]
+           [--algorithm NAME] [--alpha X] [--passes X] [--nodes N]
+           [--topology KIND] [--samples N] [--dim N] [--seed N]
+  dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
+  dsba info [--dataset NAME] [--nodes N]   dataset & graph statistics
+  dsba artifacts          verify the XLA artifact directory
+  dsba help"
+    );
+}
+
+/// Tiny flag parser: --key value pairs.
+fn flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut map = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let f = flags(args);
+    let mut cfg = if let Some(path) = f.get("config") {
+        match std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|s| ExperimentConfig::from_json(&s))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = f.get("problem") {
+        match ProblemKind::parse(v) {
+            Some(p) => cfg.problem = p,
+            None => {
+                eprintln!("bad --problem {v}");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = f.get("dataset") {
+        cfg.dataset = v.clone();
+    }
+    if let Some(v) = f.get("algorithm") {
+        match AlgorithmKind::parse(v) {
+            Some(a) => cfg.algorithm = a,
+            None => {
+                eprintln!("bad --algorithm {v}");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = f.get("topology") {
+        match TopologyKind::parse(v) {
+            Some(t) => cfg.topology = t,
+            None => {
+                eprintln!("bad --topology {v}");
+                return 2;
+            }
+        }
+    }
+    macro_rules! num {
+        ($key:expr, $field:expr, $ty:ty) => {
+            if let Some(v) = f.get($key) {
+                match v.parse::<$ty>() {
+                    Ok(x) => $field = x,
+                    Err(_) => {
+                        eprintln!("bad --{} {v}", $key);
+                        return 2;
+                    }
+                }
+            }
+        };
+    }
+    num!("alpha", cfg.alpha, f64);
+    num!("passes", cfg.passes, f64);
+    num!("nodes", cfg.nodes, usize);
+    num!("samples", cfg.samples, usize);
+    num!("dim", cfg.dim, usize);
+    num!("seed", cfg.seed, u64);
+    num!("lambda", cfg.lambda, f64);
+
+    println!("config: {}", cfg.to_json().to_string());
+    let mut exp = match cfg.build() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("build error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "graph: kappa_g = {:.2}, diameter = {}, max degree = {}",
+        exp.mix.kappa_g,
+        exp.topo.diameter,
+        exp.topo.max_degree()
+    );
+    let trace = exp.run();
+    println!("{}", format_table(&trace.rows));
+    println!(
+        "final: suboptimality {:.3e}, comm {:.3e} doubles",
+        trace.last_suboptimality(),
+        trace.final_comm()
+    );
+    0
+}
+
+fn cmd_figure(args: &[String]) -> i32 {
+    let which = args.first().map(String::as_str).unwrap_or("1");
+    let (title, problem, methods) = match which {
+        "1" => ("Figure 1: Ridge Regression", ProblemKind::Ridge, None),
+        "2" => ("Figure 2: Logistic Regression", ProblemKind::Logistic, None),
+        "3" => (
+            "Figure 3: AUC maximization",
+            ProblemKind::Auc,
+            Some(vec![AlgorithmKind::Dsba, AlgorithmKind::Dsa, AlgorithmKind::Extra]),
+        ),
+        _ => {
+            eprintln!("figure must be 1, 2 or 3");
+            return 2;
+        }
+    };
+    let mut spec = FigureSpec::defaults(problem);
+    spec.title = title;
+    if let Some(m) = methods {
+        spec.methods = m;
+    }
+    let runs = spec.run();
+    crate::bench_harness::summarize(&runs, problem == ProblemKind::Auc);
+    0
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let f = flags(args);
+    let mut cfg = ExperimentConfig::default();
+    if let Some(v) = f.get("dataset") {
+        cfg.dataset = v.clone();
+    }
+    if let Some(v) = f.get("nodes").and_then(|v| v.parse().ok()) {
+        cfg.nodes = v;
+    }
+    match cfg.build_dataset() {
+        Ok(ds) => {
+            let part = ds.partition(cfg.nodes);
+            println!(
+                "dataset {}: Q = {}, d = {}, rho = {:.3e}, positive ratio = {:.3}",
+                ds.name,
+                ds.samples(),
+                ds.dim(),
+                ds.density(),
+                ds.positive_ratio()
+            );
+            println!(
+                "partition: N = {}, q = {}, max shard rho = {:.3e}",
+                part.nodes(),
+                part.q,
+                part.max_shard_density()
+            );
+            let topo = crate::graph::Topology::generate(
+                cfg.topology,
+                cfg.nodes,
+                cfg.edge_prob,
+                cfg.seed ^ 0x109,
+            );
+            let mix = crate::graph::MixingMatrix::laplacian(&topo, 1.0);
+            println!(
+                "graph {}: diameter = {}, max degree = {}, gamma = {:.4}, kappa_g = {:.2}",
+                cfg.topology.name(),
+                topo.diameter,
+                topo.max_degree(),
+                mix.gamma,
+                mix.kappa_g
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts() -> i32 {
+    match crate::runtime::XlaRuntime::load_default() {
+        Ok(rt) => {
+            let m = rt.manifest();
+            println!(
+                "artifacts OK: {} entries, functions: {:?}",
+                m.entries.len(),
+                m.fn_names()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("artifacts check failed: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parser_handles_pairs_and_bools() {
+        let args: Vec<String> = ["--alpha", "0.5", "--verbose", "--nodes", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = flags(&args);
+        assert_eq!(f.get("alpha").unwrap(), "0.5");
+        assert_eq!(f.get("verbose").unwrap(), "true");
+        assert_eq!(f.get("nodes").unwrap(), "4");
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert_eq!(dispatch(&["bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(dispatch(&["help".to_string()]), 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Byte/DOUBLE accounting for the simulated network.
+
+use crate::graph::Topology;
+
+/// How transmitted payloads are priced in DOUBLEs.
+#[derive(Clone, Copy, Debug)]
+pub struct CommCostModel {
+    /// cost of one dense f64 value
+    pub dense_double: f64,
+    /// cost of one sparse (index, value) pair — the paper counts DOUBLEs,
+    /// so an index is priced as one DOUBLE-equivalent by default (2.0 per
+    /// nnz total); set to 1.0 to count values only.
+    pub sparse_pair: f64,
+    /// fixed per-message header cost
+    pub header: f64,
+}
+
+impl Default for CommCostModel {
+    fn default() -> Self {
+        CommCostModel { dense_double: 1.0, sparse_pair: 2.0, header: 2.0 }
+    }
+}
+
+impl CommCostModel {
+    /// Count payload values only (the most charitable sparse accounting,
+    /// matching the paper's O(rho d) statement).
+    pub fn values_only() -> Self {
+        CommCostModel { dense_double: 1.0, sparse_pair: 1.0, header: 0.0 }
+    }
+
+    pub fn dense_cost(&self, len: usize) -> f64 {
+        self.header + self.dense_double * len as f64
+    }
+
+    pub fn sparse_cost(&self, nnz: usize, tail: usize) -> f64 {
+        self.header + self.sparse_pair * nnz as f64 + self.dense_double * tail as f64
+    }
+}
+
+/// Per-node received-DOUBLE counters over a topology.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub topo: Topology,
+    pub cost: CommCostModel,
+    /// DOUBLEs received by each node so far (C_n^t)
+    received: Vec<f64>,
+    /// DOUBLEs sent by each node so far
+    sent: Vec<f64>,
+    /// messages delivered
+    messages: u64,
+}
+
+impl Network {
+    pub fn new(topo: Topology, cost: CommCostModel) -> Network {
+        let n = topo.n;
+        Network { topo, cost, received: vec![0.0; n], sent: vec![0.0; n], messages: 0 }
+    }
+
+    fn assert_edge(&self, from: usize, to: usize) {
+        debug_assert!(
+            self.topo.neighbors(from).contains(&to),
+            "({from},{to}) is not an edge — decentralized algorithms may \
+             only use neighbor links"
+        );
+    }
+
+    /// Account a dense vector of `len` doubles on edge (from, to).
+    pub fn send_dense(&mut self, from: usize, to: usize, len: usize) {
+        self.assert_edge(from, to);
+        let c = self.cost.dense_cost(len);
+        self.received[to] += c;
+        self.sent[from] += c;
+        self.messages += 1;
+    }
+
+    /// Account a sparse vector (nnz index/value pairs + dense tail).
+    pub fn send_sparse(&mut self, from: usize, to: usize, nnz: usize, tail: usize) {
+        self.assert_edge(from, to);
+        let c = self.cost.sparse_cost(nnz, tail);
+        self.received[to] += c;
+        self.sent[from] += c;
+        self.messages += 1;
+    }
+
+    /// Dense broadcast to all neighbors (the per-round exchange of every
+    /// dense-communication method).
+    pub fn broadcast_dense(&mut self, from: usize, len: usize) {
+        for i in 0..self.topo.neighbors(from).len() {
+            let to = self.topo.neighbors(from)[i];
+            let c = self.cost.dense_cost(len);
+            self.received[to] += c;
+            self.sent[from] += c;
+            self.messages += 1;
+        }
+    }
+
+    /// All nodes exchange dense iterates with all neighbors: the standard
+    /// round of EXTRA / DSA / dense DSBA. One call = one round.
+    pub fn round_dense_exchange(&mut self, len: usize) {
+        for n in 0..self.topo.n {
+            self.broadcast_dense(n, len);
+        }
+    }
+
+    /// `C_n^t` for one node.
+    pub fn received_by(&self, n: usize) -> f64 {
+        self.received[n]
+    }
+
+    /// The paper's `C_max^t = max_n C_n^t`.
+    pub fn max_received(&self) -> f64 {
+        self.received.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total doubles moved (sum over receivers).
+    pub fn total_received(&self) -> f64 {
+        self.received.iter().sum()
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_round_costs_degree_times_d() {
+        let topo = Topology::star(5); // center degree 4, leaves degree 1
+        let mut net = Network::new(topo, CommCostModel::values_only());
+        net.round_dense_exchange(100);
+        // center receives from 4 leaves
+        assert_eq!(net.received_by(0), 400.0);
+        // each leaf receives only from the center
+        assert_eq!(net.received_by(3), 100.0);
+        assert_eq!(net.max_received(), 400.0);
+    }
+
+    #[test]
+    fn sparse_cheaper_than_dense_when_sparse() {
+        let cost = CommCostModel::default();
+        assert!(cost.sparse_cost(10, 0) < cost.dense_cost(1000));
+        // crossover: with pair cost 2, sparse wins iff nnz < d/2 (mod header)
+        assert!(cost.sparse_cost(600, 0) > cost.dense_cost(1000));
+    }
+
+    #[test]
+    #[should_panic(expected = "not an edge")]
+    #[cfg(debug_assertions)]
+    fn non_edge_send_panics_in_debug() {
+        let topo = Topology::path(4); // 0-1-2-3
+        let mut net = Network::new(topo, CommCostModel::default());
+        net.send_dense(0, 3, 10);
+    }
+
+    #[test]
+    fn accounting_is_symmetric_in_total() {
+        let topo = Topology::ring(6);
+        let mut net = Network::new(topo, CommCostModel::default());
+        net.round_dense_exchange(50);
+        let sent: f64 = (0..6).map(|n| net.sent[n]).sum();
+        assert_eq!(sent, net.total_received());
+        assert_eq!(net.messages(), 12); // 6 nodes x 2 neighbors
+    }
+}

@@ -1,0 +1,265 @@
+//! Experiment configuration: JSON-serializable description of a full run
+//! (dataset profile, topology, problem, method, hyper-parameters) plus
+//! presets for every figure of the paper.
+
+use crate::algorithms::AlgorithmKind;
+use crate::comm::CommCostModel;
+use crate::coordinator::Experiment;
+use crate::data::{load_libsvm, Dataset, SyntheticSpec};
+use crate::graph::{Topology, TopologyKind};
+use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
+use crate::util::json::{parse, Json};
+use std::sync::Arc;
+
+/// Which learning problem of §7 to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    Ridge,
+    Logistic,
+    Auc,
+}
+
+impl ProblemKind {
+    pub fn parse(s: &str) -> Option<ProblemKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "ridge" => ProblemKind::Ridge,
+            "logistic" => ProblemKind::Logistic,
+            "auc" => ProblemKind::Auc,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemKind::Ridge => "ridge",
+            ProblemKind::Logistic => "logistic",
+            ProblemKind::Auc => "auc",
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub problem: ProblemKind,
+    /// synthetic profile name (news20/rcv1/sector/tiny) or libsvm: path
+    pub dataset: String,
+    /// override sample count (0 = profile default)
+    pub samples: usize,
+    /// override dimension (0 = profile default)
+    pub dim: usize,
+    /// l2 weight; <0 means the paper's 1/(10 Q) default
+    pub lambda: f64,
+    pub nodes: usize,
+    pub topology: TopologyKind,
+    /// ER edge probability (paper: 0.4)
+    pub edge_prob: f64,
+    pub algorithm: AlgorithmKind,
+    pub alpha: f64,
+    pub passes: f64,
+    pub seed: u64,
+    pub record_points: usize,
+    /// count sparse index/value pairs as 2 doubles (default) or 1
+    pub charitable_sparse: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            problem: ProblemKind::Ridge,
+            dataset: "rcv1-like".into(),
+            samples: 0,
+            dim: 0,
+            lambda: -1.0,
+            nodes: 10,
+            topology: TopologyKind::ErdosRenyi,
+            edge_prob: 0.4,
+            algorithm: AlgorithmKind::Dsba,
+            alpha: 0.5,
+            passes: 20.0,
+            seed: 42,
+            record_points: 40,
+            charitable_sparse: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document (missing keys keep defaults).
+    pub fn from_json(src: &str) -> Result<ExperimentConfig, String> {
+        let v = parse(src)?;
+        let mut c = ExperimentConfig::default();
+        if let Some(s) = v.get("problem").and_then(Json::as_str) {
+            c.problem = ProblemKind::parse(s).ok_or(format!("bad problem {s}"))?;
+        }
+        if let Some(s) = v.get("dataset").and_then(Json::as_str) {
+            c.dataset = s.to_string();
+        }
+        if let Some(n) = v.get("samples").and_then(Json::as_usize) {
+            c.samples = n;
+        }
+        if let Some(n) = v.get("dim").and_then(Json::as_usize) {
+            c.dim = n;
+        }
+        if let Some(x) = v.get("lambda").and_then(Json::as_f64) {
+            c.lambda = x;
+        }
+        if let Some(n) = v.get("nodes").and_then(Json::as_usize) {
+            c.nodes = n;
+        }
+        if let Some(s) = v.get("topology").and_then(Json::as_str) {
+            c.topology = TopologyKind::parse(s).ok_or(format!("bad topology {s}"))?;
+        }
+        if let Some(x) = v.get("edge_prob").and_then(Json::as_f64) {
+            c.edge_prob = x;
+        }
+        if let Some(s) = v.get("algorithm").and_then(Json::as_str) {
+            c.algorithm =
+                AlgorithmKind::parse(s).ok_or(format!("bad algorithm {s}"))?;
+        }
+        if let Some(x) = v.get("alpha").and_then(Json::as_f64) {
+            c.alpha = x;
+        }
+        if let Some(x) = v.get("passes").and_then(Json::as_f64) {
+            c.passes = x;
+        }
+        if let Some(n) = v.get("seed").and_then(Json::as_usize) {
+            c.seed = n as u64;
+        }
+        if let Some(n) = v.get("record_points").and_then(Json::as_usize) {
+            c.record_points = n;
+        }
+        if let Some(b) = v.get("charitable_sparse").and_then(|j| j.as_bool()) {
+            c.charitable_sparse = b;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("problem", Json::Str(self.problem.name().into())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("lambda", Json::Num(self.lambda)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("topology", Json::Str(self.topology.name().into())),
+            ("edge_prob", Json::Num(self.edge_prob)),
+            ("algorithm", Json::Str(self.algorithm.name().into())),
+            ("alpha", Json::Num(self.alpha)),
+            ("passes", Json::Num(self.passes)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("record_points", Json::Num(self.record_points as f64)),
+            ("charitable_sparse", Json::Bool(self.charitable_sparse)),
+        ])
+    }
+
+    /// Materialize the dataset (synthetic profile or `libsvm:<path>`).
+    pub fn build_dataset(&self) -> Result<Dataset, String> {
+        let mut ds = if let Some(path) = self.dataset.strip_prefix("libsvm:") {
+            let mut d = load_libsvm(path, self.dim)?;
+            d.normalize_rows();
+            d
+        } else {
+            let mut spec = SyntheticSpec::by_name(&self.dataset)
+                .ok_or_else(|| format!("unknown dataset {}", self.dataset))?;
+            if self.samples > 0 {
+                spec = spec.with_samples(self.samples);
+            }
+            if self.dim > 0 {
+                spec = spec.with_dim(self.dim);
+            }
+            if self.problem == ProblemKind::Ridge {
+                spec = spec.with_regression(true);
+            }
+            spec.generate(self.seed ^ 0xda7a)
+        };
+        if ds.samples() < self.nodes {
+            return Err("dataset smaller than node count".into());
+        }
+        ds.normalize_rows();
+        Ok(ds)
+    }
+
+    /// Effective lambda (paper default `1/(10 Q)` when unset).
+    pub fn effective_lambda(&self, total_samples: usize) -> f64 {
+        if self.lambda >= 0.0 {
+            self.lambda
+        } else {
+            1.0 / (10.0 * total_samples as f64)
+        }
+    }
+
+    /// Build problem + topology + experiment.
+    pub fn build(&self) -> Result<Experiment, String> {
+        let ds = self.build_dataset()?;
+        let part = ds.partition_seeded(self.nodes, self.seed ^ 0x9a47);
+        let lam = self.effective_lambda(part.total_samples());
+        let topo =
+            Topology::generate(self.topology, self.nodes, self.edge_prob, self.seed ^ 0x109);
+        let problem: Arc<dyn Problem> = match self.problem {
+            ProblemKind::Ridge => Arc::new(RidgeProblem::new(part, lam)),
+            ProblemKind::Logistic => Arc::new(LogisticProblem::new(part, lam)),
+            ProblemKind::Auc => Arc::new(AucProblem::new(part, lam)),
+        };
+        let cost = if self.charitable_sparse {
+            CommCostModel::values_only()
+        } else {
+            CommCostModel::default()
+        };
+        Ok(Experiment::from_arc(problem, topo, self.algorithm)
+            .with_step_size(self.alpha)
+            .with_passes(self.passes)
+            .with_seed(self.seed)
+            .with_record_points(self.record_points)
+            .with_cost_model(cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ExperimentConfig {
+            problem: ProblemKind::Auc,
+            dataset: "tiny".into(),
+            alpha: 0.25,
+            nodes: 4,
+            ..Default::default()
+        };
+        let j = c.to_json().to_string();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.problem, ProblemKind::Auc);
+        assert_eq!(c2.alpha, 0.25);
+        assert_eq!(c2.nodes, 4);
+    }
+
+    #[test]
+    fn default_lambda_is_paper_value() {
+        let c = ExperimentConfig::default();
+        assert!((c.effective_lambda(1000) - 1.0 / 10_000.0).abs() < 1e-15);
+        let mut c2 = ExperimentConfig::default();
+        c2.lambda = 0.5;
+        assert_eq!(c2.effective_lambda(1000), 0.5);
+    }
+
+    #[test]
+    fn builds_tiny_experiment() {
+        let mut c = ExperimentConfig::default();
+        c.dataset = "tiny".into();
+        c.nodes = 4;
+        c.passes = 2.0;
+        let mut exp = c.build().unwrap();
+        let trace = exp.run();
+        assert!(!trace.rows.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_fields() {
+        assert!(ExperimentConfig::from_json("{\"problem\":\"nope\"}").is_err());
+        assert!(ExperimentConfig::from_json("{\"algorithm\":\"nope\"}").is_err());
+        assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Lyapunov-function probe for Theorem 6.1.
+//!
+//! `H^t = ||X^t - X*||_M^2 + c D^t` with `X^t = [Z^t; U Q^t]`,
+//! `Q^t = sum_{k<=t} U Z^k`, `M = diag(W~, I)`, `c = q / (96 L^2)`, and
+//! `D^t` the table-vs-optimum discrepancy (41).  Theorem 6.1 proves
+//! `E[H^{t+1}] <= (1 - min{gamma/12, mu/48L, 1/3q, 1/4}) E[H^t]` for
+//! `alpha <= 1/(24 L)`; the `theorem61` bench measures the empirical
+//! per-step contraction against that bound.
+
+use crate::algorithms::{Algorithm, Dsba};
+use crate::graph::MixingMatrix;
+use crate::linalg::{sqrt_psd, DenseMatrix};
+use crate::operators::Problem;
+use std::sync::Arc;
+
+pub struct LyapunovProbe {
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    /// U = ((I - W)/2)^{1/2}
+    u: DenseMatrix,
+    /// running Q^t = sum U Z^k  (N x dim)
+    q_acc: DenseMatrix,
+    /// U Q^* from the optimality conditions (15)
+    uq_star: DenseMatrix,
+    z_star: Vec<f64>,
+    /// coefs of B_{n,i}(z*) for the D^t term
+    star_coefs: Vec<Vec<f64>>,
+    /// row norm factors for coef-space distance
+    c_theorem: f64,
+    alpha: f64,
+}
+
+impl LyapunovProbe {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        z_star: Vec<f64>,
+        alpha: f64,
+    ) -> LyapunovProbe {
+        let n = problem.nodes();
+        let dim = problem.dim();
+        // U^2 = Wt - W = (I - W)/2
+        let mut u2 = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                u2[(i, j)] = mix.wt[(i, j)] - mix.w[(i, j)];
+            }
+        }
+        let u = sqrt_psd(&u2, 1e-13);
+        // U Q* solves U (U Q*) = -alpha B(Z*) restricted to range(U):
+        // (U Q*) = -alpha U^+ B(Z*)
+        let mut b_star = DenseMatrix::zeros(n, dim);
+        let mut g = vec![0.0; dim];
+        for nd in 0..n {
+            problem.full_operator(nd, &z_star, &mut g);
+            b_star.row_mut(nd).copy_from_slice(&g);
+        }
+        let uq_star = pinv_apply(&u, &b_star, -alpha);
+        // SAGA-table coefficients at the optimum
+        let w = problem.coef_width();
+        let mut star_coefs = Vec::with_capacity(n);
+        for nd in 0..n {
+            let mut c = vec![0.0; problem.q() * w];
+            for i in 0..problem.q() {
+                problem.coefs(nd, i, &z_star, &mut c[i * w..(i + 1) * w]);
+            }
+            star_coefs.push(c);
+        }
+        let (l, _) = problem.l_mu();
+        let c_theorem = problem.q() as f64 / (96.0 * l * l);
+        LyapunovProbe {
+            q_acc: DenseMatrix::zeros(n, dim),
+            u,
+            uq_star,
+            z_star,
+            star_coefs,
+            c_theorem,
+            alpha,
+            problem,
+            mix: mix.clone(),
+        }
+    }
+
+    /// The theorem's contraction-rate bound
+    /// `min{gamma/12, mu/48L, 1/(3q), 1/4}`.
+    pub fn theoretical_rate(&self) -> f64 {
+        let (l, mu) = self.problem.l_mu();
+        (self.mix.gamma / 12.0)
+            .min(mu / (48.0 * l))
+            .min(1.0 / (3.0 * self.problem.q() as f64))
+            .min(0.25)
+    }
+
+    /// Max step size the theorem allows: 1/(24 L).
+    pub fn max_alpha(&self) -> f64 {
+        let (l, _) = self.problem.l_mu();
+        1.0 / (24.0 * l)
+    }
+
+    /// Fold the *current* iterates into Q and return H^t. Call once per
+    /// DSBA round, after `step()`.
+    pub fn observe(&mut self, alg: &Dsba) -> f64 {
+        let p = self.problem.as_ref();
+        let n = p.nodes();
+        let dim = p.dim();
+        let zs = alg.iterates();
+        // Q^t += U Z^t
+        for i in 0..n {
+            for j in 0..n {
+                let uij = self.u[(i, j)];
+                if uij.abs() < 1e-300 {
+                    continue;
+                }
+                let row = &zs[j];
+                let qrow = self.q_acc.row_mut(i);
+                for k in 0..dim {
+                    qrow[k] += uij * row[k];
+                }
+            }
+        }
+        // ||Z - Z*||_{Wt}^2
+        let mut dz = DenseMatrix::zeros(n, dim);
+        for i in 0..n {
+            for k in 0..dim {
+                dz[(i, k)] = zs[i][k] - self.z_star[k];
+            }
+        }
+        let z_term = dz.weighted_frob_sq(&self.mix.wt);
+        // ||U Q - U Q*||^2
+        let mut uq = DenseMatrix::zeros(n, dim);
+        for i in 0..n {
+            for j in 0..n {
+                let uij = self.u[(i, j)];
+                if uij.abs() < 1e-300 {
+                    continue;
+                }
+                for k in 0..dim {
+                    uq[(i, k)] += uij * self.q_acc[(j, k)];
+                }
+            }
+        }
+        let q_term: f64 = uq
+            .data
+            .iter()
+            .zip(&self.uq_star.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        // D^t from the SAGA tables (coef-space distance x row norms)
+        let w = p.coef_width();
+        let mut d_term = 0.0;
+        for nd in 0..n {
+            let saga = &alg.saga()[nd];
+            let shard = &p.partition().shards[nd];
+            for i in 0..p.q() {
+                let cur = saga.coef(i);
+                let star = &self.star_coefs[nd][i * w..(i + 1) * w];
+                let dc0 = cur[0] - star[0];
+                let mut val = dc0 * dc0 * shard.row_norm_sq(i);
+                for k in 1..w {
+                    let d = cur[k] - star[k];
+                    val += d * d;
+                }
+                d_term += 2.0 * val / p.q() as f64;
+            }
+        }
+        z_term + q_term + self.c_theorem * d_term
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+/// `scale * U^+ B` via eigen-decomposition of U (symmetric PSD).
+fn pinv_apply(u: &DenseMatrix, b: &DenseMatrix, scale: f64) -> DenseMatrix {
+    let n = u.rows;
+    let (eig, v) = crate::linalg::symmetric_eigen(u, 1e-13);
+    // U^+ = V diag(1/e if e > tol else 0) V^T
+    let mut out = DenseMatrix::zeros(n, b.cols);
+    // tmp = V^T B
+    let vt = v.transpose();
+    let tmp = vt.matmul(b);
+    let mut scaled = tmp;
+    for (k, &e) in eig.iter().enumerate() {
+        let f = if e > 1e-9 { scale / e } else { 0.0 };
+        for c in 0..scaled.cols {
+            scaled[(k, c)] *= f;
+        }
+    }
+    let res = v.matmul(&scaled);
+    for i in 0..n {
+        for c in 0..b.cols {
+            out[(i, c)] = res[(i, c)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::AlgoParams;
+    use crate::comm::{CommCostModel, Network};
+    use crate::coordinator::solve_optimum;
+    use crate::data::SyntheticSpec;
+    use crate::graph::Topology;
+    use crate::operators::RidgeProblem;
+
+    #[test]
+    fn lyapunov_decreases_geometrically_on_average() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(81);
+        let part = ds.partition_seeded(4, 3);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(part, 0.1));
+        let z_star = solve_optimum(p.as_ref(), 1e-12);
+        let mut probe = LyapunovProbe::new(p.clone(), &mix, z_star, 0.0);
+        let alpha = probe.max_alpha(); // theorem's step size
+        let params = AlgoParams::new(alpha, p.dim(), 7);
+        let mut alg = crate::algorithms::Dsba::new(p.clone(), mix, topo.clone(), &params);
+        let mut net = Network::new(topo, CommCostModel::default());
+        let mut h = Vec::new();
+        for _ in 0..40 * p.q() {
+            alg.step(&mut net);
+            h.push(probe.observe(&alg));
+        }
+        // geometric decrease over the run (allow stochastic wiggle):
+        // the average contraction over the whole run must be at least as
+        // fast as the theorem's rate
+        let t = h.len() as f64;
+        let measured = (h.last().unwrap() / h[0]).powf(1.0 / t);
+        let bound = 1.0 - probe.theoretical_rate();
+        assert!(
+            measured <= bound + 1e-6,
+            "measured contraction {measured} vs bound {bound}"
+        );
+        assert!(h.last().unwrap() < &(h[0] * 1e-3));
+    }
+}

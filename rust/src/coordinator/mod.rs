@@ -1,0 +1,274 @@
+//! Experiment coordinator: wires problem + topology + algorithm +
+//! network together, drives synchronous rounds, pre-solves the reference
+//! optimum, and samples the paper's metrics.
+
+mod optimum;
+mod lyapunov;
+
+pub use lyapunov::LyapunovProbe;
+pub use optimum::solve_optimum;
+
+use crate::algorithms::{self, AlgoParams, Algorithm, AlgorithmKind};
+use crate::comm::{CommCostModel, Network};
+use crate::graph::{MixingMatrix, Topology};
+use crate::metrics::{auc_score, suboptimality, MetricsRow};
+use crate::operators::Problem;
+use crate::util::timer::Timer;
+use std::sync::Arc;
+
+/// A full experiment run: one (problem, topology, algorithm) triple.
+pub struct Experiment {
+    pub problem: Arc<dyn Problem>,
+    pub topo: Topology,
+    pub mix: MixingMatrix,
+    pub kind: AlgorithmKind,
+    pub params: AlgoParams,
+    pub cost_model: CommCostModel,
+    /// stop after this many effective passes
+    pub passes_target: f64,
+    /// number of metric samples to record across the run
+    pub record_points: usize,
+    /// reference optimum (pre-solved lazily if absent)
+    pub z_star: Option<Vec<f64>>,
+    /// hard cap on rounds (safety)
+    pub max_rounds: usize,
+}
+
+impl Experiment {
+    pub fn new<P: Problem + 'static>(
+        problem: P,
+        topo: Topology,
+        kind: AlgorithmKind,
+    ) -> Experiment {
+        Self::from_arc(Arc::new(problem), topo, kind)
+    }
+
+    pub fn from_arc(
+        problem: Arc<dyn Problem>,
+        topo: Topology,
+        kind: AlgorithmKind,
+    ) -> Experiment {
+        assert_eq!(problem.nodes(), topo.n, "partition/topology node mismatch");
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(0.5, problem.dim(), 0xa15e);
+        Experiment {
+            problem,
+            topo,
+            mix,
+            kind,
+            params,
+            cost_model: CommCostModel::default(),
+            passes_target: 20.0,
+            record_points: 40,
+            z_star: None,
+            max_rounds: usize::MAX,
+        }
+    }
+
+    pub fn with_step_size(mut self, alpha: f64) -> Self {
+        self.params.alpha = alpha;
+        self
+    }
+
+    pub fn with_passes(mut self, p: f64) -> Self {
+        self.passes_target = p;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    pub fn with_cost_model(mut self, c: CommCostModel) -> Self {
+        self.cost_model = c;
+        self
+    }
+
+    pub fn with_z_star(mut self, z: Vec<f64>) -> Self {
+        self.z_star = Some(z);
+        self
+    }
+
+    pub fn with_record_points(mut self, n: usize) -> Self {
+        self.record_points = n;
+        self
+    }
+
+    pub fn with_mixing(mut self, mix: MixingMatrix) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    pub fn with_params<F: FnOnce(&mut AlgoParams)>(mut self, f: F) -> Self {
+        f(&mut self.params);
+        self
+    }
+
+    /// Pre-solve the reference optimum if not supplied.
+    pub fn ensure_z_star(&mut self) -> &[f64] {
+        if self.z_star.is_none() {
+            self.z_star = Some(solve_optimum(self.problem.as_ref(), 1e-11));
+        }
+        self.z_star.as_ref().unwrap()
+    }
+
+    /// Rounds needed to reach the passes target for this method.
+    pub fn rounds_for_target(&self) -> usize {
+        let per_round = if self.kind.is_stochastic() {
+            1.0 / self.problem.q() as f64
+        } else {
+            1.0
+        };
+        ((self.passes_target / per_round).ceil() as usize).max(1)
+    }
+
+    /// Run to the passes target, sampling metrics along the way.
+    pub fn run(&mut self) -> Trace {
+        self.ensure_z_star();
+        let z_star = self.z_star.clone().unwrap();
+        let mut alg = algorithms::build(
+            self.kind,
+            self.problem.clone(),
+            &self.mix,
+            &self.topo,
+            &self.params,
+        );
+        let mut net = Network::new(self.topo.clone(), self.cost_model);
+        let total_rounds = self.rounds_for_target().min(self.max_rounds);
+        let stride = (total_rounds / self.record_points.max(1)).max(1);
+        let timer = Timer::start();
+        let mut rows = Vec::new();
+        rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs()));
+        let mut round = 0;
+        while round < total_rounds && alg.passes() < self.passes_target {
+            alg.step(&mut net);
+            round += 1;
+            if round % stride == 0 || round == total_rounds {
+                rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs()));
+            }
+        }
+        Trace { method: self.kind, rows, z_star }
+    }
+
+    fn sample(
+        &self,
+        alg: &dyn Algorithm,
+        net: &Network,
+        z_star: &[f64],
+        wall: f64,
+    ) -> MetricsRow {
+        let zs = alg.iterates();
+        let avg = average_iterate(zs);
+        let is_auc = self.problem.tail_dims() == 3;
+        MetricsRow {
+            iter: alg.iteration(),
+            passes: alg.passes(),
+            comm_doubles: net.max_received(),
+            suboptimality: suboptimality(zs, z_star),
+            objective: self.problem.objective(&avg).unwrap_or(f64::NAN),
+            auc: if is_auc {
+                auc_score(self.problem.partition(), &avg)
+            } else {
+                f64::NAN
+            },
+            wall_secs: wall,
+        }
+    }
+}
+
+/// Node-averaged iterate (metrics evaluation point).
+pub fn average_iterate(zs: &[Vec<f64>]) -> Vec<f64> {
+    let n = zs.len() as f64;
+    let mut avg = vec![0.0; zs[0].len()];
+    for z in zs {
+        crate::linalg::axpy(1.0 / n, z, &mut avg);
+    }
+    avg
+}
+
+/// Result of an experiment run.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub method: AlgorithmKind,
+    pub rows: Vec<MetricsRow>,
+    pub z_star: Vec<f64>,
+}
+
+impl Trace {
+    pub fn last_suboptimality(&self) -> f64 {
+        self.rows.last().map(|r| r.suboptimality).unwrap_or(f64::NAN)
+    }
+
+    pub fn last_auc(&self) -> f64 {
+        self.rows.last().map(|r| r.auc).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_comm(&self) -> f64 {
+        self.rows.last().map(|r| r.comm_doubles).unwrap_or(0.0)
+    }
+
+    /// First recorded pass count at which suboptimality <= tol
+    /// (None if never reached) — the "iterations to epsilon" of Table 1.
+    pub fn passes_to_tol(&self, tol: f64) -> Option<f64> {
+        self.rows.iter().find(|r| r.suboptimality <= tol).map(|r| r.passes)
+    }
+
+    /// Comm doubles spent when suboptimality first hits tol.
+    pub fn comm_to_tol(&self, tol: f64) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.suboptimality <= tol)
+            .map(|r| r.comm_doubles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::operators::RidgeProblem;
+
+    #[test]
+    fn experiment_runs_and_converges() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let part = ds.partition_seeded(4, 3);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let mut exp = Experiment::new(RidgeProblem::new(part, 0.05), topo, AlgorithmKind::Dsba)
+            .with_step_size(0.5)
+            .with_passes(40.0)
+            .with_record_points(10);
+        let trace = exp.run();
+        assert!(trace.rows.len() >= 10);
+        assert!(
+            trace.last_suboptimality() < 1e-8,
+            "subopt {}",
+            trace.last_suboptimality()
+        );
+        // suboptimality decreases overall
+        assert!(trace.rows[0].suboptimality > trace.last_suboptimality());
+        // comm monotone nondecreasing
+        for w in trace.rows.windows(2) {
+            assert!(w[1].comm_doubles >= w[0].comm_doubles);
+        }
+    }
+
+    #[test]
+    fn rounds_for_target_respects_method_type() {
+        let ds = SyntheticSpec::tiny().generate(62);
+        let part = ds.partition_seeded(2, 3);
+        let q = part.q;
+        let topo = Topology::complete(2);
+        let exp = Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+            .with_passes(3.0);
+        assert_eq!(exp.rounds_for_target(), 3 * q);
+        let ds2 = SyntheticSpec::tiny().generate(62);
+        let exp2 = Experiment::new(
+            RidgeProblem::new(ds2.partition_seeded(2, 3), 0.05),
+            topo,
+            AlgorithmKind::Extra,
+        )
+        .with_passes(3.0);
+        assert_eq!(exp2.rounds_for_target(), 3);
+    }
+}

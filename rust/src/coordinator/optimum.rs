@@ -1,0 +1,149 @@
+//! Reference-optimum pre-solve: every figure plots distance to `z*`, so
+//! we need it to much higher accuracy than any compared method reaches.
+//!
+//! Strategy: run centralized Point-SAGA (single-node DSBA, Remark 5.1) on
+//! the pooled dataset until the *global* operator residual
+//! `||sum_n B_n^lambda(z)||` is below tolerance, polishing with a damped
+//! full-operator iteration.  This works uniformly for gradient problems
+//! and the AUC saddle operator (for which no primal objective exists).
+
+use crate::algorithms::{AlgoParams, PointSaga};
+use crate::data::Partition;
+use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
+use std::sync::Arc;
+
+/// Build the pooled single-node twin of a problem. The global root is
+/// unchanged: `sum_n (B_n + lambda I)(z) = 0` iff
+/// `(B_pooled + lambda I)(z) = 0`.
+fn pooled_twin(p: &dyn Problem) -> Arc<dyn Problem> {
+    let pooled = p.partition().pooled();
+    let part = Partition::equal_random(&pooled, 1, 0);
+    let lam = p.lambda();
+    if p.tail_dims() == 3 {
+        Arc::new(AucProblem::new(part, lam))
+    } else if p.coef_width() == 1 && is_ridge_like(p) {
+        Arc::new(RidgeProblem::new(part, lam))
+    } else {
+        Arc::new(LogisticProblem::new(part, lam))
+    }
+}
+
+/// Distinguish ridge from logistic through the operator itself: ridge
+/// coefficients are affine in z with slope ||a||^2 along a; logistic
+/// saturates. Probe one component.
+fn is_ridge_like(p: &dyn Problem) -> bool {
+    let dim = p.dim();
+    let z0 = vec![0.0; dim];
+    let mut big = vec![0.0; dim];
+    // push far along the first data row; logistic coef is bounded by 1
+    let row = p.partition().shards[0].row_sparse(0);
+    row.axpy_into(1e6, &mut big);
+    let mut c0 = vec![0.0; p.coef_width()];
+    let mut c1 = vec![0.0; p.coef_width()];
+    p.coefs(0, 0, &z0, &mut c0);
+    p.coefs(0, 0, &big, &mut c1);
+    (c1[0] - c0[0]).abs() > 10.0
+}
+
+/// Solve the root-finding problem to `||sum B^lambda(z)|| <= tol`.
+pub fn solve_optimum(p: &dyn Problem, tol: f64) -> Vec<f64> {
+    let twin = pooled_twin(p);
+    let (l, mu) = twin.l_mu();
+    // Point-SAGA step from its theory (1/3L is safe; larger often fine)
+    let alpha = 1.0 / (2.0 * l.max(1e-12));
+    let mut params = AlgoParams::new(alpha, twin.dim(), 0x0971_u64 ^ 0x517a);
+    params.z0 = vec![0.0; twin.dim()];
+    let mut solver = PointSaga::new(twin.clone(), &params);
+    let q_total = twin.q();
+    // residual checked on the ORIGINAL problem scaling: residuals differ
+    // by the factor N (pooled mean vs sum) — solve to tol / N for safety
+    let n_factor = p.nodes() as f64;
+    let inner_tol = tol / n_factor.max(1.0) * 0.5;
+    let (mut z, _) = solver.solve_to_residual(inner_tol, 4 * q_total, 3000 * q_total);
+
+    // polish: damped full-operator (Picard) iterations on the pooled twin,
+    // safe for strongly monotone operators with step < 2 mu / L^2
+    let step = (mu / (l * l)).min(1.0 / l);
+    let mut g = vec![0.0; twin.dim()];
+    for _ in 0..2000 {
+        twin.full_operator(0, &z, &mut g);
+        let r = crate::linalg::norm2(&g) * n_factor;
+        if r <= tol {
+            break;
+        }
+        crate::linalg::axpy(-step, &g, &mut z);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn ridge_optimum_residual_small() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(71);
+        let p = RidgeProblem::new(ds.partition_seeded(4, 3), 0.05);
+        let z = solve_optimum(&p, 1e-10);
+        assert!(p.global_residual(&z) < 1e-9);
+    }
+
+    #[test]
+    fn ridge_optimum_matches_normal_equations() {
+        // cross-check against an explicit dense solve of
+        // (sum (1/q) A^T A + N lambda I) z = sum (1/q) A^T y
+        let ds = SyntheticSpec::tiny()
+            .with_samples(40)
+            .with_dim(12)
+            .with_regression(true)
+            .generate(72);
+        let lam = 0.1;
+        let p = RidgeProblem::new(ds.partition_seeded(2, 3), lam);
+        let z = solve_optimum(&p, 1e-12);
+        let d = p.dim();
+        let part = p.partition();
+        let mut a_mat = crate::linalg::DenseMatrix::zeros(d, d);
+        let mut rhs = vec![0.0; d];
+        for n in 0..part.nodes() {
+            let shard = &part.shards[n];
+            let inv_q = 1.0 / part.q as f64;
+            for i in 0..shard.rows {
+                let row = shard.row_sparse(i);
+                for (&ji, &vi) in row.idx.iter().zip(&row.val) {
+                    for (&jj, &vj) in row.idx.iter().zip(&row.val) {
+                        a_mat[(ji as usize, jj as usize)] += inv_q * vi * vj;
+                    }
+                    rhs[ji as usize] += inv_q * vi * part.labels[n][i];
+                }
+            }
+        }
+        for k in 0..d {
+            a_mat[(k, k)] += part.nodes() as f64 * lam;
+        }
+        let z_exact = a_mat.solve(&rhs).unwrap();
+        let err: f64 = z
+            .iter()
+            .zip(&z_exact)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-8, "err {err}");
+    }
+
+    #[test]
+    fn logistic_optimum_residual_small() {
+        let ds = SyntheticSpec::tiny().generate(73);
+        let p = LogisticProblem::new(ds.partition_seeded(3, 3), 0.05);
+        let z = solve_optimum(&p, 1e-9);
+        assert!(p.global_residual(&z) < 1e-8);
+    }
+
+    #[test]
+    fn auc_optimum_residual_small() {
+        let ds = SyntheticSpec::tiny().generate(74);
+        let p = AucProblem::new(ds.partition_seeded(3, 3), 0.05);
+        let z = solve_optimum(&p, 1e-8);
+        assert!(p.global_residual(&z) < 1e-7);
+    }
+}

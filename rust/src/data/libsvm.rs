@@ -1,0 +1,123 @@
+//! LIBSVM text format parser (`label idx:val idx:val ...`, 1-based
+//! indices). Handles comment lines, blank lines, and both {0,1} and
+//! {-1,+1} label conventions (0 is mapped to -1).
+
+use super::Dataset;
+use crate::linalg::{CsrMatrix, SparseVec};
+use std::io::BufReader;
+use std::path::Path;
+
+/// Parse LIBSVM-format text. `dim_hint` fixes the feature dimension (0 =
+/// infer from max index).
+pub fn parse_libsvm(src: &str, dim_hint: usize) -> Result<Dataset, String> {
+    let mut rows_raw: Vec<(f64, Vec<(u32, f64)>)> = Vec::new();
+    let mut max_idx = 0u32;
+    for (lineno, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad label ({e})", lineno + 1))?;
+        let label = if label == 0.0 { -1.0 } else { label };
+        let mut pairs = Vec::new();
+        for tok in parts {
+            if tok.starts_with('#') {
+                break; // trailing comment
+            }
+            let (is, vs) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad token {tok:?}", lineno + 1))?;
+            let i: u32 = is
+                .parse()
+                .map_err(|e| format!("line {}: bad index ({e})", lineno + 1))?;
+            if i == 0 {
+                return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
+            }
+            let v: f64 = vs
+                .parse()
+                .map_err(|e| format!("line {}: bad value ({e})", lineno + 1))?;
+            max_idx = max_idx.max(i);
+            pairs.push((i - 1, v));
+        }
+        rows_raw.push((label, pairs));
+    }
+    let dim = if dim_hint > 0 {
+        if (max_idx as usize) > dim_hint {
+            return Err(format!("index {max_idx} exceeds dim hint {dim_hint}"));
+        }
+        dim_hint
+    } else {
+        max_idx as usize
+    };
+    let mut y = Vec::with_capacity(rows_raw.len());
+    let mut rows = Vec::with_capacity(rows_raw.len());
+    for (label, pairs) in rows_raw {
+        y.push(label);
+        rows.push(SparseVec::from_pairs(dim, pairs));
+    }
+    Ok(Dataset {
+        name: "libsvm".into(),
+        a: CsrMatrix::from_rows(dim, &rows),
+        y,
+    })
+}
+
+/// Load a LIBSVM file from disk.
+pub fn load_libsvm<P: AsRef<Path>>(path: P, dim_hint: usize) -> Result<Dataset, String> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| format!("open {:?}: {e}", path.as_ref()))?;
+    let mut src = String::new();
+    BufReader::new(f)
+        .read_to_string(&mut src)
+        .map_err(|e| format!("read: {e}"))?;
+    let mut ds = parse_libsvm(&src, dim_hint)?;
+    ds.name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(ds)
+}
+
+use std::io::Read as _;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file() {
+        let src = "\
+# comment
++1 1:0.5 3:1.5
+-1 2:2.0
+
+0 1:1.0 4:-0.25
+";
+        let ds = parse_libsvm(src, 0).unwrap();
+        assert_eq!(ds.samples(), 3);
+        assert_eq!(ds.dim(), 4);
+        assert_eq!(ds.y, vec![1.0, -1.0, -1.0]); // 0 mapped to -1
+        assert_eq!(ds.a.row_dot(0, &[1.0, 0.0, 1.0, 0.0]), 2.0);
+        assert_eq!(ds.a.row_nnz(2), 2);
+    }
+
+    #[test]
+    fn dim_hint_respected_and_checked() {
+        let src = "+1 1:1 2:1\n";
+        assert_eq!(parse_libsvm(src, 10).unwrap().dim(), 10);
+        assert!(parse_libsvm("+1 11:1\n", 10).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_index_and_garbage() {
+        assert!(parse_libsvm("+1 0:1\n", 0).is_err());
+        assert!(parse_libsvm("+1 x:1\n", 0).is_err());
+        assert!(parse_libsvm("abc 1:1\n", 0).is_err());
+    }
+}

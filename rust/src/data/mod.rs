@@ -1,0 +1,70 @@
+//! Datasets: LIBSVM parsing, synthetic sparse generators matching the
+//! paper's dataset profiles, row normalization, and node partitioning.
+//!
+//! The paper evaluates on News20-binary, RCV1 and Sector (LIBSVM). Those
+//! files are not redistributable inside this repo, so `SyntheticSpec`
+//! generates sparse datasets matching their *published statistics*
+//! (dimension, density rho, per-row nnz long tail, label balance) — the
+//! quantities the paper's convergence and communication results actually
+//! depend on.  Real LIBSVM files drop in through [`load_libsvm`].
+
+mod libsvm;
+mod synthetic;
+mod partition;
+
+pub use libsvm::{load_libsvm, parse_libsvm};
+pub use partition::Partition;
+pub use synthetic::SyntheticSpec;
+
+use crate::linalg::CsrMatrix;
+
+/// A labeled sparse dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// feature rows (samples x dim)
+    pub a: CsrMatrix,
+    /// labels: {-1, +1} for classification, arbitrary reals for regression
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn samples(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Dataset sparsity `rho` (Table 1).
+    pub fn density(&self) -> f64 {
+        self.a.density()
+    }
+
+    /// Fraction of positive labels (AUC's `p`).
+    pub fn positive_ratio(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&y| y > 0.0).count() as f64 / self.y.len() as f64
+    }
+
+    /// Normalize each row to unit norm (paper §7: `||a_{n,i}|| = 1`).
+    pub fn normalize_rows(&mut self) {
+        self.a.normalize_rows();
+    }
+
+    /// Split into `n` equal-size shards, shuffling with `seed`
+    /// (paper §7: "randomly split them into N partitions with equal
+    /// sizes" — trailing remainder samples are dropped so every node gets
+    /// exactly q = floor(Q/N)).
+    pub fn partition(&self, n: usize) -> Partition {
+        Partition::equal_random(self, n, 0x5eed)
+    }
+
+    /// Same with explicit seed.
+    pub fn partition_seeded(&self, n: usize, seed: u64) -> Partition {
+        Partition::equal_random(self, n, seed)
+    }
+}

@@ -1,0 +1,131 @@
+//! Equal-size random partitioning of a dataset across the N nodes
+//! (paper §7: "randomly split them into N partitions with equal sizes").
+
+use super::Dataset;
+use crate::linalg::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// A dataset split into per-node shards. Every node holds exactly
+/// `q = floor(Q / N)` samples.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// per-node feature shards
+    pub shards: Vec<CsrMatrix>,
+    /// per-node labels
+    pub labels: Vec<Vec<f64>>,
+    /// samples per node (identical across nodes)
+    pub q: usize,
+    /// global positive ratio (AUC's p, computed over all kept samples)
+    pub positive_ratio: f64,
+    /// feature dimension
+    pub dim: usize,
+}
+
+impl Partition {
+    /// Random equal-size split.
+    pub fn equal_random(ds: &Dataset, n: usize, seed: u64) -> Partition {
+        assert!(n >= 1, "need at least one node");
+        assert!(ds.samples() >= n, "fewer samples than nodes");
+        let q = ds.samples() / n;
+        let mut order: Vec<usize> = (0..ds.samples()).collect();
+        Rng::new(seed).shuffle(&mut order);
+        let mut shards = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut pos = 0usize;
+        for node in 0..n {
+            let ids = &order[node * q..(node + 1) * q];
+            let rows: Vec<_> = ids.iter().map(|&i| ds.a.row_sparse(i)).collect();
+            let ys: Vec<f64> = ids.iter().map(|&i| ds.y[i]).collect();
+            pos += ys.iter().filter(|&&y| y > 0.0).count();
+            shards.push(CsrMatrix::from_rows(ds.dim(), &rows));
+            labels.push(ys);
+        }
+        Partition {
+            shards,
+            labels,
+            q,
+            positive_ratio: pos as f64 / (n * q) as f64,
+            dim: ds.dim(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total kept samples `N * q`.
+    pub fn total_samples(&self) -> usize {
+        self.nodes() * self.q
+    }
+
+    /// Worst-case density across shards (drives the sparse-comm cost).
+    pub fn max_shard_density(&self) -> f64 {
+        self.shards.iter().map(|s| s.density()).fold(0.0, f64::max)
+    }
+
+    /// Pool all shards back into one dataset (used by the centralized
+    /// optimum solver).
+    pub fn pooled(&self) -> Dataset {
+        let mut rows = Vec::with_capacity(self.total_samples());
+        let mut y = Vec::with_capacity(self.total_samples());
+        for (shard, ys) in self.shards.iter().zip(&self.labels) {
+            for i in 0..shard.rows {
+                rows.push(shard.row_sparse(i));
+            }
+            y.extend_from_slice(ys);
+        }
+        Dataset {
+            name: "pooled".into(),
+            a: CsrMatrix::from_rows(self.dim, &rows),
+            y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn equal_sizes_and_conservation() {
+        let ds = SyntheticSpec::tiny().with_samples(103).generate(5);
+        let p = Partition::equal_random(&ds, 10, 7);
+        assert_eq!(p.nodes(), 10);
+        assert_eq!(p.q, 10);
+        assert_eq!(p.total_samples(), 100); // 3 dropped
+        for shard in &p.shards {
+            assert_eq!(shard.rows, 10);
+            assert_eq!(shard.cols, ds.dim());
+        }
+    }
+
+    #[test]
+    fn no_sample_duplicated() {
+        let ds = SyntheticSpec::tiny().with_samples(60).generate(6);
+        let p = Partition::equal_random(&ds, 6, 8);
+        // match rows back to the source by exact content
+        let mut used = vec![false; ds.samples()];
+        for (shard, ys) in p.shards.iter().zip(&p.labels) {
+            for i in 0..shard.rows {
+                let row = shard.row_sparse(i);
+                let found = (0..ds.samples()).find(|&s| {
+                    !used[s] && ds.y[s] == ys[i] && ds.a.row_sparse(s) == row
+                });
+                let s = found.expect("shard row must come from the dataset");
+                used[s] = true;
+            }
+        }
+        assert_eq!(used.iter().filter(|&&u| u).count(), 60);
+    }
+
+    #[test]
+    fn pooled_roundtrip_counts() {
+        let ds = SyntheticSpec::tiny().with_samples(64).generate(7);
+        let p = Partition::equal_random(&ds, 8, 9);
+        let pooled = p.pooled();
+        assert_eq!(pooled.samples(), 64);
+        assert_eq!(pooled.dim(), ds.dim());
+        assert!((pooled.positive_ratio() - p.positive_ratio).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Mixing matrices `W` and their spectral quantities.
+//!
+//! Paper §4 requires: (i) graph sparsity, (ii) symmetry, (iii)
+//! `null(I - W) = span{1}`, (iv) `0 <= W <= I`.  §7 builds the
+//! Laplacian-based constant-edge-weight matrix `W = I - L/tau` with
+//! `tau >= lambda_max(L)/2`; we default to `tau = lambda_max(L)/2 * margin`
+//! with a small margin so that (iv) holds strictly.
+
+use crate::graph::Topology;
+use crate::linalg::{power_iteration, symmetric_eigenvalues, DenseMatrix};
+
+/// A mixing matrix with its derived spectral data.
+#[derive(Clone, Debug)]
+pub struct MixingMatrix {
+    /// `W` (satisfies (i)-(iv))
+    pub w: DenseMatrix,
+    /// `Wt = (I + W) / 2`
+    pub wt: DenseMatrix,
+    /// smallest nonzero eigenvalue of `U^2 = (I - W)/2` — the paper's gamma
+    pub gamma: f64,
+    /// graph condition number `kappa_g = 1/gamma`
+    pub kappa_g: f64,
+}
+
+impl MixingMatrix {
+    /// Laplacian-based constant edge weight matrix (paper §7):
+    /// `W = I - L/tau` with `tau = margin * lambda_max(L)`, `margin >= 1`.
+    ///
+    /// Note: §7 states `tau >= lambda_max(L)/2`, but that only guarantees
+    /// `-I <= W`; the spectral property (iv) of §4 (`0 <= W <= I`) that
+    /// the analysis relies on needs `tau >= lambda_max(L)`, which is what
+    /// we enforce (the looser scaling also empirically destabilizes the
+    /// t=0 step that uses `W` rather than `W~`).
+    pub fn laplacian(topo: &Topology, margin: f64) -> MixingMatrix {
+        assert!(margin >= 1.0, "tau must satisfy tau >= lambda_max(L)");
+        let n = topo.n;
+        let mut lap = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            lap[(i, i)] = topo.degree(i) as f64;
+            for &j in topo.neighbors(i) {
+                lap[(i, j)] = -1.0;
+            }
+        }
+        // power iteration overestimates tolerance-wise; pad slightly so the
+        // spectral property (iv) is strict.
+        let lmax = power_iteration(&lap, 300).max(1e-12) * 1.000001;
+        let tau = margin * lmax;
+        let mut w = DenseMatrix::identity(n);
+        for i in 0..n {
+            for j in 0..n {
+                w[(i, j)] -= lap[(i, j)] / tau;
+            }
+        }
+        Self::from_w(w)
+    }
+
+    /// Lazy Metropolis–Hastings weights: `w_ij = 1/(2(1 + max(d_i,
+    /// d_j)))`, diagonal absorbs the remainder. The 1/2 laziness keeps
+    /// the spectrum in [0, 1] (plain Metropolis admits negative
+    /// eigenvalues, violating (iv)). Alternative construction used in the
+    /// ablation benches.
+    pub fn metropolis(topo: &Topology) -> MixingMatrix {
+        let n = topo.n;
+        let mut w = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                w[(i, j)] =
+                    0.5 / (1.0 + topo.degree(i).max(topo.degree(j)) as f64);
+            }
+            let off: f64 = (0..n).filter(|&j| j != i).map(|j| w[(i, j)]).sum();
+            w[(i, i)] = 1.0 - off;
+        }
+        Self::from_w(w)
+    }
+
+    /// Wrap an explicit `W`, computing `Wt` and the spectral data.
+    pub fn from_w(w: DenseMatrix) -> MixingMatrix {
+        let n = w.rows;
+        let mut wt = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                wt[(i, j)] = 0.5 * (w[(i, j)] + if i == j { 1.0 } else { 0.0 });
+            }
+        }
+        // U^2 = Wt - W = (I - W)/2 ; gamma = smallest nonzero eigenvalue
+        let mut u2 = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                u2[(i, j)] = wt[(i, j)] - w[(i, j)];
+            }
+        }
+        let eig = symmetric_eigenvalues(&u2, 1e-13);
+        let gamma = eig
+            .iter()
+            .copied()
+            .find(|&e| e > 1e-9)
+            .unwrap_or(1.0);
+        MixingMatrix { w, wt, gamma, kappa_g: 1.0 / gamma }
+    }
+
+    pub fn n(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Verify conditions (i)-(iv) of §4; returns a violation description.
+    pub fn check_conditions(&self, topo: &Topology, tol: f64) -> Result<(), String> {
+        let n = self.n();
+        for i in 0..n {
+            for j in 0..n {
+                // (i) graph sparsity
+                if i != j
+                    && !topo.neighbors(i).contains(&j)
+                    && self.w[(i, j)].abs() > tol
+                {
+                    return Err(format!("(i) w[{i},{j}] nonzero off-graph"));
+                }
+                // (ii) symmetry
+                if (self.w[(i, j)] - self.w[(j, i)]).abs() > tol {
+                    return Err(format!("(ii) asymmetric at ({i},{j})"));
+                }
+            }
+        }
+        // (iii): W 1 = 1 (row sums) and 1 is the only null direction of I-W
+        for i in 0..n {
+            let s: f64 = (0..n).map(|j| self.w[(i, j)]).sum();
+            if (s - 1.0).abs() > 1e-8 {
+                return Err(format!("(iii) row {i} sums to {s}"));
+            }
+        }
+        let mut iw = DenseMatrix::identity(n);
+        for i in 0..n {
+            for j in 0..n {
+                iw[(i, j)] -= self.w[(i, j)];
+            }
+        }
+        let eig = symmetric_eigenvalues(&iw, 1e-13);
+        let zero_count = eig.iter().filter(|&&e| e.abs() < 1e-7).count();
+        if zero_count != 1 {
+            return Err(format!("(iii) null(I-W) has dim {zero_count}"));
+        }
+        // (iv): 0 <= spectrum(W) <= 1
+        let ew = symmetric_eigenvalues(&self.w, 1e-13);
+        if ew.first().copied().unwrap_or(0.0) < -1e-7
+            || ew.last().copied().unwrap_or(0.0) > 1.0 + 1e-7
+        {
+            return Err(format!("(iv) spectrum out of [0,1]: {ew:?}"));
+        }
+        Ok(())
+    }
+
+    /// Local mixing: `out = sum_m wt[n][m] * (2 z[m] - zprev[m])` computed
+    /// over neighbors only (O(deg * d)).
+    pub fn mix_row(
+        &self,
+        node: usize,
+        topo: &Topology,
+        z: &[Vec<f64>],
+        z_prev: &[Vec<f64>],
+        out: &mut [f64],
+    ) {
+        out.fill(0.0);
+        let touch = |m: usize, out: &mut [f64]| {
+            let w = self.wt[(node, m)];
+            if w == 0.0 {
+                return;
+            }
+            let (zm, zpm) = (&z[m], &z_prev[m]);
+            for k in 0..out.len() {
+                out[k] += w * (2.0 * zm[k] - zpm[k]);
+            }
+        };
+        touch(node, out);
+        for &m in topo.neighbors(node) {
+            touch(m, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_mixing_satisfies_conditions() {
+        let topo = Topology::erdos_renyi(10, 0.4, 42);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        mix.check_conditions(&topo, 1e-9).unwrap();
+        assert!(mix.gamma > 0.0 && mix.gamma < 1.0);
+        assert!(mix.kappa_g >= 1.0);
+    }
+
+    #[test]
+    fn metropolis_mixing_satisfies_conditions() {
+        let topo = Topology::ring(8);
+        let mix = MixingMatrix::metropolis(&topo);
+        mix.check_conditions(&topo, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn complete_graph_better_conditioned_than_ring() {
+        let ring = MixingMatrix::laplacian(&Topology::ring(12), 1.0);
+        let complete = MixingMatrix::laplacian(&Topology::complete(12), 1.0);
+        assert!(
+            complete.kappa_g < ring.kappa_g,
+            "complete {} vs ring {}",
+            complete.kappa_g,
+            ring.kappa_g
+        );
+    }
+
+    #[test]
+    fn wt_is_half_identity_plus_half_w() {
+        let topo = Topology::star(5);
+        let mix = MixingMatrix::laplacian(&topo, 1.2);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want =
+                    0.5 * (mix.w[(i, j)] + if i == j { 1.0 } else { 0.0 });
+                assert!((mix.wt[(i, j)] - want).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_row_matches_dense() {
+        let topo = Topology::erdos_renyi(6, 0.5, 9);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let d = 4;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let z: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let zp: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        for node in 0..6 {
+            let mut out = vec![0.0; d];
+            mix.mix_row(node, &topo, &z, &zp, &mut out);
+            // dense reference
+            for k in 0..d {
+                let mut want = 0.0;
+                for m in 0..6 {
+                    want += mix.wt[(node, m)] * (2.0 * z[m][k] - zp[m][k]);
+                }
+                assert!((out[k] - want).abs() < 1e-12);
+            }
+        }
+    }
+}

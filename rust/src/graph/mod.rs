@@ -1,0 +1,14 @@
+//! Network graphs, mixing matrices, and their spectral properties.
+//!
+//! The decentralized setting of the paper: `N` nodes on a connected
+//! undirected graph `G`, a doubly-stochastic-like mixing matrix
+//! `W = I - L/tau` built from the Laplacian (§7), and the derived spectral
+//! quantities: `gamma` (smallest nonzero eigenvalue of `(I - W)/2`), the
+//! graph condition number `kappa_g = 1/gamma`, diameter `E`, and the
+//! distance groups `V_j` used by the sparse-communication relay (§5.1).
+
+mod topology;
+mod mixing;
+
+pub use mixing::MixingMatrix;
+pub use topology::{Topology, TopologyKind};

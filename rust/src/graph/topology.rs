@@ -1,0 +1,333 @@
+//! Graph topologies: generation, connectivity, BFS distances, diameter,
+//! and the designated-parent forwarding trees of the §5.1 relay protocol.
+
+use crate::util::rng::Rng;
+
+/// Named topology families used across the benchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Erdős–Rényi G(N, p) conditioned on connectivity (paper §7: p=0.4).
+    ErdosRenyi,
+    Ring,
+    Path,
+    Star,
+    Complete,
+    /// sqrt(N) x sqrt(N) 4-neighbor torus-free grid.
+    Grid2d,
+    /// Random k-regular-ish graph (k-nearest ring + random chords).
+    SmallWorld,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        Some(match s {
+            "erdos-renyi" | "er" => TopologyKind::ErdosRenyi,
+            "ring" => TopologyKind::Ring,
+            "path" => TopologyKind::Path,
+            "star" => TopologyKind::Star,
+            "complete" => TopologyKind::Complete,
+            "grid" | "grid2d" => TopologyKind::Grid2d,
+            "small-world" => TopologyKind::SmallWorld,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::ErdosRenyi => "erdos-renyi",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Path => "path",
+            TopologyKind::Star => "star",
+            TopologyKind::Complete => "complete",
+            TopologyKind::Grid2d => "grid",
+            TopologyKind::SmallWorld => "small-world",
+        }
+    }
+}
+
+/// An undirected connected graph with adjacency lists and all-pairs BFS
+/// distances.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n: usize,
+    /// sorted adjacency lists
+    pub adj: Vec<Vec<usize>>,
+    /// all-pairs hop distances `dist[i][j]`
+    pub dist: Vec<Vec<usize>>,
+    /// graph diameter `E = max_{i,j} dist(i,j)`
+    pub diameter: usize,
+}
+
+impl Topology {
+    /// Build from an edge list (deduplicated, self-loops ignored).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Topology {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n, "edge ({a},{b}) out of range");
+            if a == b {
+                continue;
+            }
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+        }
+        let dist = all_pairs_bfs(&adj);
+        let diameter = dist
+            .iter()
+            .flat_map(|row| row.iter().copied())
+            .filter(|&d| d != usize::MAX)
+            .max()
+            .unwrap_or(0);
+        Topology { n, adj, dist, diameter }
+    }
+
+    /// Erdős–Rényi G(n, p), resampled until connected (paper §7 setup:
+    /// N=10, p=0.4).
+    pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Topology {
+        let mut rng = Rng::new(seed);
+        for _attempt in 0..10_000 {
+            let mut edges = Vec::new();
+            for a in 0..n {
+                for b in a + 1..n {
+                    if rng.bernoulli(p) {
+                        edges.push((a, b));
+                    }
+                }
+            }
+            let t = Topology::from_edges(n, &edges);
+            if t.is_connected() {
+                return t;
+            }
+        }
+        panic!("could not sample a connected G({n},{p}) in 10000 attempts");
+    }
+
+    pub fn ring(n: usize) -> Topology {
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Topology::from_edges(n, &edges)
+    }
+
+    pub fn path(n: usize) -> Topology {
+        let edges: Vec<_> = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+        Topology::from_edges(n, &edges)
+    }
+
+    pub fn star(n: usize) -> Topology {
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Topology::from_edges(n, &edges)
+    }
+
+    pub fn complete(n: usize) -> Topology {
+        let mut edges = Vec::new();
+        for a in 0..n {
+            for b in a + 1..n {
+                edges.push((a, b));
+            }
+        }
+        Topology::from_edges(n, &edges)
+    }
+
+    /// Near-square 2-D grid covering n nodes.
+    pub fn grid2d(n: usize) -> Topology {
+        let w = (n as f64).sqrt().ceil() as usize;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            let (r, c) = (i / w, i % w);
+            if c + 1 < w && i + 1 < n {
+                edges.push((i, i + 1));
+            }
+            if (r + 1) * w + c < n {
+                edges.push((i, (r + 1) * w + c));
+            }
+        }
+        Topology::from_edges(n, &edges)
+    }
+
+    /// Ring + `chords` random chords (Watts–Strogatz-ish).
+    pub fn small_world(n: usize, chords: usize, seed: u64) -> Topology {
+        let mut rng = Rng::new(seed);
+        let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        let mut added = 0;
+        while added < chords {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a != b && (a + 1) % n != b && (b + 1) % n != a {
+                edges.push((a.min(b), a.max(b)));
+                added += 1;
+            }
+        }
+        Topology::from_edges(n, &edges)
+    }
+
+    pub fn generate(kind: TopologyKind, n: usize, p: f64, seed: u64) -> Topology {
+        match kind {
+            TopologyKind::ErdosRenyi => Topology::erdos_renyi(n, p, seed),
+            TopologyKind::Ring => Topology::ring(n),
+            TopologyKind::Path => Topology::path(n),
+            TopologyKind::Star => Topology::star(n),
+            TopologyKind::Complete => Topology::complete(n),
+            TopologyKind::Grid2d => Topology::grid2d(n),
+            TopologyKind::SmallWorld => Topology::small_world(n, n / 2, seed),
+        }
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.n == 0 || self.dist[0].iter().all(|&d| d != usize::MAX)
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Max degree `Delta(G)` (Table 1 communication cost).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    /// Distance groups of §5.1 relative to `root`:
+    /// `V_j = { n : dist(root, n) = j }`, j = 0..=diameter.
+    pub fn distance_groups(&self, root: usize) -> Vec<Vec<usize>> {
+        let mut groups = vec![Vec::new(); self.diameter + 1];
+        for m in 0..self.n {
+            let d = self.dist[root][m];
+            if d != usize::MAX {
+                groups[d].push(m);
+            }
+        }
+        groups
+    }
+
+    /// Designated parent of `node` on the BFS forwarding tree rooted at
+    /// `src`: the *minimum-index* neighbor one hop closer to `src`
+    /// (paper §5.1: "only the one with the minimum node index sends").
+    /// `None` when `node == src`.
+    pub fn designated_parent(&self, src: usize, node: usize) -> Option<usize> {
+        if node == src {
+            return None;
+        }
+        let d = self.dist[src][node];
+        self.adj[node]
+            .iter()
+            .copied()
+            .filter(|&m| self.dist[src][m] + 1 == d)
+            .min()
+    }
+}
+
+fn all_pairs_bfs(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let n = adj.len();
+    let mut dist = vec![vec![usize::MAX; n]; n];
+    let mut queue = std::collections::VecDeque::new();
+    for s in 0..n {
+        dist[s][s] = 0;
+        queue.clear();
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                if dist[s][v] == usize::MAX {
+                    dist[s][v] = dist[s][u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_properties() {
+        let t = Topology::ring(6);
+        assert!(t.is_connected());
+        assert_eq!(t.diameter, 3);
+        assert_eq!(t.max_degree(), 2);
+        assert_eq!(t.edge_count(), 6);
+        assert_eq!(t.dist[0][3], 3);
+    }
+
+    #[test]
+    fn star_properties() {
+        let t = Topology::star(7);
+        assert_eq!(t.diameter, 2);
+        assert_eq!(t.max_degree(), 6);
+        assert_eq!(t.degree(3), 1);
+    }
+
+    #[test]
+    fn complete_diameter_one() {
+        let t = Topology::complete(5);
+        assert_eq!(t.diameter, 1);
+        assert_eq!(t.edge_count(), 10);
+    }
+
+    #[test]
+    fn er_connected_and_seeded() {
+        let a = Topology::erdos_renyi(10, 0.4, 42);
+        let b = Topology::erdos_renyi(10, 0.4, 42);
+        assert!(a.is_connected());
+        assert_eq!(a.adj, b.adj, "same seed, same graph");
+    }
+
+    #[test]
+    fn grid_connected() {
+        for n in [4, 9, 10, 16, 23] {
+            assert!(Topology::grid2d(n).is_connected(), "grid {n}");
+        }
+    }
+
+    #[test]
+    fn distance_groups_partition_nodes() {
+        let t = Topology::erdos_renyi(12, 0.3, 7);
+        let groups = t.distance_groups(0);
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 12);
+        assert_eq!(groups[0], vec![0]);
+        for (j, g) in groups.iter().enumerate() {
+            for &m in g {
+                assert_eq!(t.dist[0][m], j);
+            }
+        }
+    }
+
+    #[test]
+    fn designated_parent_is_closer_and_min() {
+        let t = Topology::erdos_renyi(10, 0.4, 3);
+        for src in 0..t.n {
+            for node in 0..t.n {
+                if node == src {
+                    assert!(t.designated_parent(src, node).is_none());
+                    continue;
+                }
+                let p = t.designated_parent(src, node).unwrap();
+                assert_eq!(t.dist[src][p] + 1, t.dist[src][node]);
+                // minimality
+                for &m in t.neighbors(node) {
+                    if t.dist[src][m] + 1 == t.dist[src][node] {
+                        assert!(p <= m);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn path_diameter() {
+        let t = Topology::path(5);
+        assert_eq!(t.diameter, 4);
+    }
+}

@@ -1,0 +1,64 @@
+//! # dsba — Decentralized Stochastic Backward Aggregation
+//!
+//! A full-system reproduction of *"Towards More Efficient Stochastic
+//! Decentralized Learning: Faster Convergence and Sparse Communication"*
+//! (Shen, Mokhtari, Zhou, Zhao, Qian — ICML 2018).
+//!
+//! The crate is the Layer-3 (coordination) half of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the decentralized runtime: graph topologies and
+//!   mixing matrices, an in-process message-passing network simulator with
+//!   per-node DOUBLE accounting, the DSBA / DSBA-s algorithms and every
+//!   baseline from the paper's Table 1, problem operators with closed-form
+//!   or Newton resolvents, metrics, a config system, and a CLI launcher.
+//! * **L2/L1 (python/, build-time only)** — JAX compute graphs calling
+//!   Pallas kernels, AOT-lowered to HLO text under `artifacts/` and
+//!   executed from [`runtime`] through the XLA PJRT CPU client.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dsba::prelude::*;
+//!
+//! let ds = SyntheticSpec::rcv1_like().with_samples(2_000).with_dim(512)
+//!     .generate(7);
+//! let topo = Topology::erdos_renyi(10, 0.4, 42);
+//! let problem = RidgeProblem::new(ds.partition(10), 1e-3);
+//! let mut exp = Experiment::new(problem, topo, AlgorithmKind::Dsba)
+//!     .with_step_size(0.5)
+//!     .with_passes(20.0);
+//! let trace = exp.run();
+//! println!("final suboptimality: {:.3e}", trace.last_suboptimality());
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod graph;
+pub mod data;
+pub mod operators;
+pub mod algorithms;
+pub mod comm;
+pub mod coordinator;
+pub mod metrics;
+pub mod config;
+pub mod runtime;
+pub mod solvers;
+pub mod bench_harness;
+pub mod cli;
+pub mod testing;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{Algorithm, AlgorithmKind};
+    pub use crate::comm::{CommCostModel, Network};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::{Experiment, Trace};
+    pub use crate::data::{Dataset, Partition, SyntheticSpec};
+    pub use crate::graph::{MixingMatrix, Topology};
+    pub use crate::linalg::{CsrMatrix, DenseMatrix, SparseVec};
+    pub use crate::metrics::MetricsRow;
+    pub use crate::operators::{
+        AucProblem, LogisticProblem, Problem, RidgeProblem,
+    };
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,198 @@
+//! Spectral helpers: power iteration (Laplacian scaling `tau >=
+//! lambda_max(L)/2`, §7) and a cyclic Jacobi eigensolver for the small
+//! symmetric mixing matrices (graph condition number `kappa_g = 1/gamma`).
+
+use super::DenseMatrix;
+
+/// Largest-magnitude eigenvalue of a symmetric matrix via power iteration.
+pub fn power_iteration(m: &DenseMatrix, iters: usize) -> f64 {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    // deterministic start that is unlikely to be orthogonal to the top
+    // eigenvector
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.01).collect();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let w = m.matvec(&v);
+        let norm = super::norm2(&w);
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        lambda = super::dot(&v, &w) / super::dot(&v, &v);
+        v = w;
+        for x in &mut v {
+            *x /= norm;
+        }
+    }
+    lambda
+}
+
+/// All eigenvalues of a symmetric matrix via cyclic Jacobi rotations.
+/// Suitable for the N x N mixing matrices (N <= a few hundred).
+pub fn symmetric_eigenvalues(m: &DenseMatrix, tol: f64) -> Vec<f64> {
+    symmetric_eigen(m, tol).0
+}
+
+/// Eigenvalues *and* orthonormal eigenvectors (columns of the returned
+/// matrix, in ascending eigenvalue order) via cyclic Jacobi.
+pub fn symmetric_eigen(m: &DenseMatrix, tol: f64) -> (Vec<f64>, DenseMatrix) {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut a = m.clone();
+    let mut v = DenseMatrix::identity(n);
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate rotations: V <- V R
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    order.sort_by(|&x, &y| diag[x].partial_cmp(&diag[y]).unwrap());
+    let eig: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vecs = DenseMatrix::zeros(n, n);
+    for (col, &src) in order.iter().enumerate() {
+        for row in 0..n {
+            vecs[(row, col)] = v[(row, src)];
+        }
+    }
+    (eig, vecs)
+}
+
+/// Symmetric PSD square root via eigen-decomposition.
+pub fn sqrt_psd(m: &DenseMatrix, tol: f64) -> DenseMatrix {
+    let (eig, v) = symmetric_eigen(m, tol);
+    let n = m.rows;
+    let mut out = DenseMatrix::zeros(n, n);
+    for k in 0..n {
+        let s = eig[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] += s * v[(i, k)] * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_iteration_diag() {
+        let mut m = DenseMatrix::zeros(3, 3);
+        m[(0, 0)] = 1.0;
+        m[(1, 1)] = 5.0;
+        m[(2, 2)] = 2.0;
+        let l = power_iteration(&m, 200);
+        assert!((l - 5.0).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn jacobi_known_spectrum() {
+        // path-graph Laplacian on 3 nodes: eigenvalues 0, 1, 3
+        let m = DenseMatrix::from_rows(vec![
+            vec![1.0, -1.0, 0.0],
+            vec![-1.0, 2.0, -1.0],
+            vec![0.0, -1.0, 1.0],
+        ]);
+        let e = symmetric_eigenvalues(&m, 1e-12);
+        for (got, want) in e.iter().zip(&[0.0, 1.0, 3.0]) {
+            assert!((got - want).abs() < 1e-9, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn sqrt_psd_squares_back() {
+        let m = DenseMatrix::from_rows(vec![
+            vec![2.0, -1.0, 0.0],
+            vec![-1.0, 2.0, -1.0],
+            vec![0.0, -1.0, 2.0],
+        ]);
+        let r = sqrt_psd(&m, 1e-13);
+        let sq = r.matmul(&r);
+        assert!(sq.max_abs_diff(&m) < 1e-9);
+    }
+
+    #[test]
+    fn eigenvectors_diagonalize() {
+        let m = DenseMatrix::from_rows(vec![
+            vec![1.0, -1.0, 0.0],
+            vec![-1.0, 2.0, -1.0],
+            vec![0.0, -1.0, 1.0],
+        ]);
+        let (e, v) = symmetric_eigen(&m, 1e-13);
+        // M v_k = e_k v_k
+        for k in 0..3 {
+            let col: Vec<f64> = (0..3).map(|i| v[(i, k)]).collect();
+            let mv = m.matvec(&col);
+            for i in 0..3 {
+                assert!((mv[i] - e[k] * col[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_matches_power_iteration_on_random_sym() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = 8;
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        let eig = symmetric_eigenvalues(&m, 1e-13);
+        let lmax_abs = eig.iter().fold(0.0f64, |acc, &e| acc.max(e.abs()));
+        let pi = power_iteration(&m, 500).abs();
+        assert!((lmax_abs - pi).abs() < 1e-6 * lmax_abs.max(1.0));
+    }
+}

@@ -1,0 +1,100 @@
+//! Linear-algebra substrate: dense matrices, sparse vectors/matrices
+//! (CSR), and a small symmetric eigensolver for mixing-matrix spectra.
+//!
+//! The DSBA hot path is built on [`SparseVec`] axpy/dot against dense
+//! iterates — per-iteration cost must be `O(nnz)`, never `O(d)` — so these
+//! primitives are written allocation-free where it matters and benchmarked
+//! in `rust/benches/hotpath.rs`.
+
+mod dense;
+mod sparse;
+mod eigen;
+
+pub use dense::DenseMatrix;
+pub use eigen::{power_iteration, sqrt_psd, symmetric_eigen, symmetric_eigenvalues};
+pub use sparse::{CsrMatrix, SparseVec};
+
+/// Dot product of two dense slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled for ILP; autovectorizes well.
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    for i in 4 * chunks..a.len() {
+        acc0 += a[i] * b[i];
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// `y += alpha * x` over dense slices.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist2_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// `out = a - b`.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// In-place scale.
+#[inline]
+pub fn scale(a: &mut [f64], s: f64) {
+    for x in a {
+        *x *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..101).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..101).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!((dist2_sq(&[1.0, 1.0], &[0.0, 0.0]) - 2.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,356 @@
+//! Sparse vector (sorted index/value pairs) and CSR matrix.
+//!
+//! `SparseVec` is the currency of the whole system: data rows, operator
+//! outputs `B_{n,i}(z) = g * a_i`, and the communicated deltas
+//! `delta_n^t` of the sparse protocol (§5.1) are all sparse vectors whose
+//! support equals a data row's support. Everything on the DSBA hot path is
+//! `O(nnz)`.
+
+/// Sparse vector: parallel sorted `idx`/`val` arrays over a logical
+/// dimension `dim`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl SparseVec {
+    pub fn empty(dim: usize) -> Self {
+        SparseVec { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Build from (possibly unsorted) pairs; sorts and merges duplicates.
+    pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, f64)>) -> Self {
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f64> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            debug_assert!((i as usize) < dim, "index {i} out of dim {dim}");
+            if idx.last() == Some(&i) {
+                *val.last_mut().unwrap() += v;
+            } else {
+                idx.push(i);
+                val.push(v);
+            }
+        }
+        SparseVec { dim, idx, val }
+    }
+
+    /// Densify into a fresh vector.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim];
+        self.scatter_into(&mut out);
+        out
+    }
+
+    /// Build from a dense slice, keeping entries with |x| > tol.
+    pub fn from_dense(x: &[f64], tol: f64) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() > tol {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        SparseVec { dim: x.len(), idx, val }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Sparsity ratio nnz/dim.
+    pub fn density(&self) -> f64 {
+        if self.dim == 0 { 0.0 } else { self.nnz() as f64 / self.dim as f64 }
+    }
+
+    /// `out[idx] += val` (scatter-add).
+    #[inline]
+    pub fn scatter_into(&self, out: &mut [f64]) {
+        debug_assert!(out.len() >= self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// `out += alpha * self` — THE hot-path primitive.
+    #[inline]
+    pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
+        debug_assert!(out.len() >= self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += alpha * v;
+        }
+    }
+
+    /// Dot with a dense vector — `O(nnz)`.
+    #[inline]
+    pub fn dot_dense(&self, x: &[f64]) -> f64 {
+        debug_assert!(x.len() >= self.dim);
+        let mut acc = 0.0;
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            acc += v * x[i as usize];
+        }
+        acc
+    }
+
+    /// Squared Euclidean norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.val.iter().map(|v| v * v).sum()
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.val {
+            *v *= s;
+        }
+    }
+
+    /// Return a scaled copy.
+    pub fn scaled(&self, s: f64) -> SparseVec {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+
+    /// Sparse-sparse sum (union of supports).
+    pub fn add(&self, other: &SparseVec) -> SparseVec {
+        assert_eq!(self.dim, other.dim);
+        let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut val = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.nnz() || j < other.nnz() {
+            let a = self.idx.get(i).copied().unwrap_or(u32::MAX);
+            let b = other.idx.get(j).copied().unwrap_or(u32::MAX);
+            match a.cmp(&b) {
+                std::cmp::Ordering::Less => {
+                    idx.push(a);
+                    val.push(self.val[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    idx.push(b);
+                    val.push(other.val[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    idx.push(a);
+                    val.push(self.val[i] + other.val[j]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        SparseVec { dim: self.dim, idx, val }
+    }
+}
+
+/// Compressed-sparse-row matrix: the dataset shard `A_n` of each node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn from_rows(cols: usize, rows: &[SparseVec]) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in rows {
+            assert_eq!(r.dim, cols);
+            indices.extend_from_slice(&r.idx);
+            values.extend_from_slice(&r.val);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: rows.len(), cols, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn row_indices(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    #[inline]
+    pub fn row_values(&self, i: usize) -> &[f64] {
+        &self.values[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// nnz / (rows * cols) — the paper's `rho`.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// Extract row `i` as a `SparseVec` (copies).
+    pub fn row_sparse(&self, i: usize) -> SparseVec {
+        SparseVec {
+            dim: self.cols,
+            idx: self.row_indices(i).to_vec(),
+            val: self.row_values(i).to_vec(),
+        }
+    }
+
+    /// `<row_i, x>` against a dense vector — `O(nnz_i)`.
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        debug_assert!(x.len() >= self.cols);
+        let mut acc = 0.0;
+        for (&j, &v) in self.row_indices(i).iter().zip(self.row_values(i)) {
+            acc += v * x[j as usize];
+        }
+        acc
+    }
+
+    /// `out[row support] += alpha * row_i`.
+    #[inline]
+    pub fn row_axpy(&self, i: usize, alpha: f64, out: &mut [f64]) {
+        for (&j, &v) in self.row_indices(i).iter().zip(self.row_values(i)) {
+            out[j as usize] += alpha * v;
+        }
+    }
+
+    /// Squared norm of row i.
+    #[inline]
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        self.row_values(i).iter().map(|v| v * v).sum()
+    }
+
+    /// `A x` dense.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row_dot(i, x)).collect()
+    }
+
+    /// `A^T g` dense.
+    pub fn t_matvec(&self, g: &[f64]) -> Vec<f64> {
+        assert_eq!(g.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let gi = g[i];
+            if gi != 0.0 {
+                self.row_axpy(i, gi, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Normalize every row to unit Euclidean norm (paper §7 preprocessing).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.rows {
+            let n = self.row_norm_sq(i).sqrt();
+            if n > 0.0 {
+                let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+                for v in &mut self.values[s..e] {
+                    *v /= n;
+                }
+            }
+        }
+    }
+
+    /// Dense copy (tests and small XLA staging only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for i in 0..self.rows {
+            for (&j, &v) in self.row_indices(i).iter().zip(self.row_values(i)) {
+                out[i * self.cols + j as usize] = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(dim: usize, pairs: &[(u32, f64)]) -> SparseVec {
+        SparseVec::from_pairs(dim, pairs.to_vec())
+    }
+
+    #[test]
+    fn from_pairs_sorts_and_merges() {
+        let v = sv(10, &[(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(v.idx, vec![2, 5]);
+        assert_eq!(v.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let v = sv(6, &[(0, 1.5), (3, -2.0), (5, 0.25)]);
+        let d = v.to_dense();
+        assert_eq!(d, vec![1.5, 0.0, 0.0, -2.0, 0.0, 0.25]);
+        assert_eq!(SparseVec::from_dense(&d, 0.0), v);
+    }
+
+    #[test]
+    fn axpy_dot_consistent_with_dense() {
+        let v = sv(8, &[(1, 2.0), (4, -1.0), (7, 0.5)]);
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert_eq!(v.dot_dense(&x), 2.0 * 1.0 - 4.0 + 0.5 * 7.0);
+        let mut y = vec![1.0; 8];
+        v.axpy_into(2.0, &mut y);
+        let mut want = vec![1.0; 8];
+        for (i, val) in [(1, 2.0), (4, -1.0), (7, 0.5)] {
+            want[i] += 2.0 * val;
+        }
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn sparse_add_union() {
+        let a = sv(6, &[(0, 1.0), (2, 1.0)]);
+        let b = sv(6, &[(2, 2.0), (5, 3.0)]);
+        let c = a.add(&b);
+        assert_eq!(c.idx, vec![0, 2, 5]);
+        assert_eq!(c.val, vec![1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn csr_matvec_roundtrip() {
+        let rows = vec![
+            sv(4, &[(0, 1.0), (2, 2.0)]),
+            sv(4, &[(1, -1.0)]),
+            sv(4, &[(0, 0.5), (3, 4.0)]),
+        ];
+        let a = CsrMatrix::from_rows(4, &rows);
+        assert_eq!(a.nnz(), 5);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(a.matvec(&x), vec![7.0, -2.0, 16.5]);
+        let g = vec![1.0, 1.0, 1.0];
+        assert_eq!(a.t_matvec(&g), vec![1.5, -1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn csr_normalize_rows() {
+        let rows = vec![sv(3, &[(0, 3.0), (1, 4.0)]), sv(3, &[])];
+        let mut a = CsrMatrix::from_rows(3, &rows);
+        a.normalize_rows();
+        assert!((a.row_norm_sq(0) - 1.0).abs() < 1e-14);
+        assert_eq!(a.row_nnz(1), 0); // empty rows untouched
+    }
+
+    #[test]
+    fn density_matches_definition() {
+        let rows = vec![sv(10, &[(0, 1.0)]), sv(10, &[(1, 1.0), (2, 1.0)])];
+        let a = CsrMatrix::from_rows(10, &rows);
+        assert!((a.density() - 3.0 / 20.0).abs() < 1e-15);
+    }
+}

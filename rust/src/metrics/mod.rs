@@ -1,0 +1,185 @@
+//! Metrics: the exact quantities the paper's figures plot.
+//!
+//! * *effective passes* over the dataset (x-axis of every figure's left
+//!   panel): `t / q` for stochastic methods, `t` for deterministic ones.
+//! * `C_max^t = max_n C_n^t` — DOUBLEs received by the hottest node
+//!   (x-axis of the right panels, §7).
+//! * suboptimality `sum_n ||z_n - z*||^2 / N` (objective-style problems)
+//!   and the AUC statistic (§7.3).
+
+use crate::data::Partition;
+use crate::util::json::Json;
+
+/// One sampled point of an experiment trace.
+#[derive(Clone, Debug)]
+pub struct MetricsRow {
+    /// iteration index t
+    pub iter: usize,
+    /// effective passes over the local datasets
+    pub passes: f64,
+    /// max over nodes of DOUBLEs received so far (paper's C_max^t)
+    pub comm_doubles: f64,
+    /// mean over nodes of ||z_n - z*||^2 (consensus suboptimality)
+    pub suboptimality: f64,
+    /// global objective value (NaN for saddle problems)
+    pub objective: f64,
+    /// AUC statistic at the averaged iterate (NaN unless AUC problem)
+    pub auc: f64,
+    /// wall-clock seconds since experiment start
+    pub wall_secs: f64,
+}
+
+impl MetricsRow {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("iter", Json::Num(self.iter as f64)),
+            ("passes", Json::Num(self.passes)),
+            ("comm_doubles", Json::Num(self.comm_doubles)),
+            ("suboptimality", Json::Num(self.suboptimality)),
+            ("objective", Json::Num(self.objective)),
+            ("auc", Json::Num(self.auc)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+}
+
+/// Exact AUC of the linear scores `A w` over all samples in the
+/// partition: the probability a random positive outranks a random
+/// negative, ties counted 1/2 (Hanley & McNeil / Mann–Whitney).
+///
+/// `z` may be the augmented AUC variable (only the first `dim` entries
+/// are read).
+pub fn auc_score(part: &Partition, z: &[f64]) -> f64 {
+    let mut scored: Vec<(f64, bool)> = Vec::with_capacity(part.total_samples());
+    for (shard, labels) in part.shards.iter().zip(&part.labels) {
+        for i in 0..shard.rows {
+            scored.push((shard.row_dot(i, &z[..part.dim]), labels[i] > 0.0));
+        }
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n_pos = scored.iter().filter(|s| s.1).count();
+    let n_neg = scored.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // rank-sum with average ranks for ties
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < scored.len() {
+        let mut j = i;
+        while j < scored.len() && scored[j].0 == scored[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j - 1) as f64 / 2.0 + 1.0; // 1-based
+        for s in &scored[i..j] {
+            if s.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    (rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0)
+        / (n_pos as f64 * n_neg as f64)
+}
+
+/// Mean squared distance of stacked iterates from `z*`:
+/// `(1/N) sum_n ||z_n - z*||^2`.
+pub fn suboptimality(zs: &[Vec<f64>], z_star: &[f64]) -> f64 {
+    if zs.is_empty() {
+        return 0.0;
+    }
+    zs.iter()
+        .map(|z| crate::linalg::dist2_sq(z, z_star))
+        .sum::<f64>()
+        / zs.len() as f64
+}
+
+/// Write a trace as a JSON file `{series: [rows...], meta: {...}}`.
+pub fn write_trace_json(
+    path: &str,
+    meta: Vec<(&str, Json)>,
+    rows: &[MetricsRow],
+) -> std::io::Result<()> {
+    let doc = Json::from_pairs(vec![
+        ("meta", Json::from_pairs(meta)),
+        ("series", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, doc.to_string())
+}
+
+/// Render rows as an aligned text table (the bench harness's stdout
+/// format, one row per sampled point).
+pub fn format_table(rows: &[MetricsRow]) -> String {
+    let mut out = String::from(
+        "  iter      passes   comm_doubles   suboptimality      objective        auc\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:>6}  {:>10.2}  {:>13.3e}  {:>14.6e}  {:>13.6e}  {:>9.4}\n",
+            r.iter, r.passes, r.comm_doubles, r.suboptimality, r.objective, r.auc
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn auc_of_perfect_separator_is_one() {
+        let ds = SyntheticSpec::tiny().with_samples(60).generate(1);
+        let part = ds.partition(3);
+        // build w that scores positives high by construction: w = sum y_i a_i
+        let mut w = vec![0.0; part.dim + 3];
+        for (shard, ys) in part.shards.iter().zip(&part.labels) {
+            for i in 0..shard.rows {
+                shard.row_axpy(i, ys[i] * 100.0, &mut w[..part.dim]);
+            }
+        }
+        // not necessarily perfect, but must beat chance decisively
+        let auc = auc_score(&part, &w);
+        assert!(auc > 0.7, "auc {auc}");
+        // and the reversed scorer must be symmetric around 1/2
+        let neg: Vec<f64> = w.iter().map(|v| -v).collect();
+        let auc_neg = auc_score(&part, &neg);
+        assert!((auc + auc_neg - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_of_zero_scores_is_half() {
+        let ds = SyntheticSpec::tiny().with_samples(40).generate(2);
+        let part = ds.partition(2);
+        let z = vec![0.0; part.dim + 3];
+        assert!((auc_score(&part, &z) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suboptimality_zero_at_star() {
+        let star = vec![1.0, 2.0, 3.0];
+        let zs = vec![star.clone(), star.clone()];
+        assert_eq!(suboptimality(&zs, &star), 0.0);
+        let zs2 = vec![vec![2.0, 2.0, 3.0], star.clone()];
+        assert!((suboptimality(&zs2, &star) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn table_formats_all_rows() {
+        let rows = vec![MetricsRow {
+            iter: 10,
+            passes: 1.0,
+            comm_doubles: 1e4,
+            suboptimality: 1e-5,
+            objective: 0.5,
+            auc: f64::NAN,
+            wall_secs: 0.1,
+        }];
+        let t = format_table(&rows);
+        assert!(t.contains("passes"));
+        assert_eq!(t.lines().count(), 2);
+    }
+}

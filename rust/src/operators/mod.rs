@@ -1,0 +1,215 @@
+//! Monotone operators and their resolvents (paper §3–§4).
+//!
+//! Every learning problem is expressed as a sum of component monotone
+//! operators `B_{n,i}` held at node `n`.  For linear predictors the
+//! component output is fully described by a few *scalar coefficients*
+//! applied to the data row (plus a small dense tail for the AUC saddle
+//! operator) — the structure behind both the `O(q)`-scalar SAGA table
+//! (Schmidt et al., 2017) and the sparse deltas of the §5.1 communication
+//! protocol.
+//!
+//! The l2 regularization of §7 is *not* baked into the raw components
+//! (that would densify the deltas); it is applied through the resolvent
+//! identity `J_{alpha B^lambda}(psi) = J_{beta B}(psi / (1+alpha lambda))`
+//! with `beta = alpha/(1 + alpha lambda)`, and added analytically wherever
+//! a forward evaluation of `B^lambda` is needed.
+
+mod ridge;
+mod logistic;
+mod auc;
+
+pub use auc::AucProblem;
+pub use logistic::LogisticProblem;
+pub use ridge::RidgeProblem;
+
+use crate::data::Partition;
+
+/// A decentralized monotone-operator root-finding problem (13).
+pub trait Problem: Send + Sync {
+    /// Total variable dimension `D` (= d for minimization, d+3 for AUC).
+    fn dim(&self) -> usize;
+    /// Feature dimension `d` (sparse block of the variable).
+    fn feature_dim(&self) -> usize;
+    /// Dense tail dimensions (0, or 3 for AUC's `[a, b, theta]`).
+    fn tail_dims(&self) -> usize {
+        self.dim() - self.feature_dim()
+    }
+    /// Number of nodes `N`.
+    fn nodes(&self) -> usize;
+    /// Components per node `q`.
+    fn q(&self) -> usize;
+    /// l2 regularization weight `lambda` (the operator solved for the
+    /// root is `sum_n (B_n + lambda I)`).
+    fn lambda(&self) -> f64;
+    /// Scalar coefficients per component (1 for ridge/logistic, 4 for AUC).
+    fn coef_width(&self) -> usize;
+
+    /// Access to the underlying partition (shards/labels).
+    fn partition(&self) -> &Partition;
+
+    /// Raw (unregularized) coefficients of `B_{n,i}` at `z`.
+    fn coefs(&self, n: usize, i: usize, z: &[f64], out: &mut [f64]);
+
+    /// `out += scale * B_{n,i}[coefs]` — scatter a coefficient-encoded
+    /// operator output. `O(nnz + tail)`.
+    fn scatter(&self, n: usize, i: usize, coefs: &[f64], scale: f64, out: &mut [f64]);
+
+    /// Backward step `z = J_{alpha (B_{n,i} + lambda I)}(psi)`.
+    /// Writes the new iterate into `z_out` (len `dim()`) and the raw
+    /// coefficients of `B_{n,i}(z)` *at the new point* into `coefs_out`.
+    fn backward(
+        &self,
+        n: usize,
+        i: usize,
+        alpha: f64,
+        psi: &[f64],
+        z_out: &mut [f64],
+        coefs_out: &mut [f64],
+    );
+
+    /// Global objective for metrics (None for saddle problems; AUC
+    /// reports the AUC statistic through `Metrics` instead).
+    fn objective(&self, z: &[f64]) -> Option<f64>;
+
+    /// (L, mu) of the regularized components `B_{n,i} + lambda I`.
+    fn l_mu(&self) -> (f64, f64);
+
+    // ---- provided ----
+
+    /// `out += scale * B_{n,i}(z)` (raw forward evaluation).
+    fn apply(&self, n: usize, i: usize, z: &[f64], scale: f64, out: &mut [f64]) {
+        let mut c = vec![0.0; self.coef_width()];
+        self.coefs(n, i, z, &mut c);
+        self.scatter(n, i, &c, scale, out);
+    }
+
+    /// Full raw local operator mean `(1/q) sum_i B_{n,i}(z)` into `out`
+    /// (overwrites). The deterministic baselines' inner loop.
+    fn full_raw_mean(&self, n: usize, z: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let scale = 1.0 / self.q() as f64;
+        for i in 0..self.q() {
+            self.apply(n, i, z, scale, out);
+        }
+    }
+
+    /// Regularized full local operator `B_n(z) + lambda z` (overwrites).
+    fn full_operator(&self, n: usize, z: &[f64], out: &mut [f64]) {
+        self.full_raw_mean(n, z, out);
+        let lam = self.lambda();
+        for (o, zi) in out.iter_mut().zip(z) {
+            *o += lam * zi;
+        }
+    }
+
+    /// Residual `|| sum_n (B_n(z) + lambda z) ||` — 0 at the solution of
+    /// (13). Used by optimum pre-solves and convergence checks.
+    fn global_residual(&self, z: &[f64]) -> f64 {
+        let mut acc = vec![0.0; self.dim()];
+        let mut tmp = vec![0.0; self.dim()];
+        for n in 0..self.nodes() {
+            self.full_operator(n, z, &mut tmp);
+            for (a, t) in acc.iter_mut().zip(&tmp) {
+                *a += t;
+            }
+        }
+        crate::linalg::norm2(&acc)
+    }
+
+    /// nnz of the sparse part of component (n,i)'s output — the §5.1
+    /// delta communication payload (values; tail adds `tail_dims()`).
+    fn delta_nnz(&self, n: usize, i: usize) -> usize {
+        self.partition().shards[n].row_nnz(i) + self.tail_dims()
+    }
+
+    /// Condition number `kappa = L / mu` of the regularized components.
+    fn kappa(&self) -> f64 {
+        let (l, mu) = self.l_mu();
+        l / mu
+    }
+}
+
+/// Numerically verify monotonicity of components at random pairs —
+/// shared test/diagnostic helper.
+pub fn check_monotone<P: Problem + ?Sized>(
+    p: &P,
+    seed: u64,
+    trials: usize,
+) -> Result<(), String> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let dim = p.dim();
+    for t in 0..trials {
+        let n = rng.below(p.nodes());
+        let i = rng.below(p.q());
+        let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut bx = vec![0.0; dim];
+        let mut by = vec![0.0; dim];
+        p.apply(n, i, &x, 1.0, &mut bx);
+        p.apply(n, i, &y, 1.0, &mut by);
+        let lam = p.lambda();
+        let mut inner = 0.0;
+        let mut dist = 0.0;
+        for k in 0..dim {
+            let dz = x[k] - y[k];
+            let db = (bx[k] + lam * x[k]) - (by[k] + lam * y[k]);
+            inner += db * dz;
+            dist += dz * dz;
+        }
+        if inner < -1e-10 * dist.max(1.0) {
+            return Err(format!(
+                "trial {t}: component ({n},{i}) not monotone: <Bx-By,x-y> = {inner}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Numerically verify the resolvent identity `z + alpha (B + lambda I)(z)
+/// = psi` at random points — the core correctness check for every
+/// backward implementation.
+pub fn check_resolvent<P: Problem + ?Sized>(
+    p: &P,
+    alpha: f64,
+    seed: u64,
+    trials: usize,
+) -> Result<(), String> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let dim = p.dim();
+    let mut z = vec![0.0; dim];
+    let mut coefs = vec![0.0; p.coef_width()];
+    for t in 0..trials {
+        let n = rng.below(p.nodes());
+        let i = rng.below(p.q());
+        let psi: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        p.backward(n, i, alpha, &psi, &mut z, &mut coefs);
+        // reconstruct psi_hat = z + alpha B(z) + alpha lambda z
+        let mut recon = z.clone();
+        for r in recon.iter_mut().zip(&z).map(|(r, _)| r) {
+            *r *= 1.0 + alpha * p.lambda();
+        }
+        p.apply(n, i, &z, alpha, &mut recon);
+        let err: f64 = recon
+            .iter()
+            .zip(&psi)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        if err > 1e-8 {
+            return Err(format!(
+                "trial {t}: resolvent identity violated on ({n},{i}): err {err}"
+            ));
+        }
+        // check coefs_out really are the coefs at the new point
+        let mut fresh = vec![0.0; p.coef_width()];
+        p.coefs(n, i, &z, &mut fresh);
+        for (a, b) in coefs.iter().zip(&fresh) {
+            if (a - b).abs() > 1e-8 {
+                return Err(format!(
+                    "trial {t}: stale coefs from backward ({a} vs {b})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}

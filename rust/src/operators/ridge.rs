@@ -1,0 +1,198 @@
+//! Ridge regression operators (paper §7.1).
+//!
+//! `B_{n,i}(z) = (a_{n,i}^T z - y_{n,i}) a_{n,i}` — one scalar coefficient
+//! `g = m - y` per component.  The resolvent admits a closed form: with
+//! `c = ||a||^2` and `m` the post-step margin,
+//! `m = (a^T psi + alpha c y) / (1 + alpha c)`,
+//! `J_{alpha B}(psi) = psi - alpha (m - y) a`,
+//! which for `c = 1` reduces to the paper's expression.
+
+use super::Problem;
+use crate::data::Partition;
+
+/// Decentralized ridge regression.
+pub struct RidgeProblem {
+    part: Partition,
+    lambda: f64,
+    /// cached row norms ||a_{n,i}||^2
+    row_norm_sq: Vec<Vec<f64>>,
+}
+
+impl RidgeProblem {
+    pub fn new(part: Partition, lambda: f64) -> Self {
+        let row_norm_sq = part
+            .shards
+            .iter()
+            .map(|s| (0..s.rows).map(|i| s.row_norm_sq(i)).collect())
+            .collect();
+        RidgeProblem { part, lambda, row_norm_sq }
+    }
+
+    fn shard(&self, n: usize) -> &crate::linalg::CsrMatrix {
+        &self.part.shards[n]
+    }
+}
+
+impl Problem for RidgeProblem {
+    fn dim(&self) -> usize {
+        self.part.dim
+    }
+    fn feature_dim(&self) -> usize {
+        self.part.dim
+    }
+    fn nodes(&self) -> usize {
+        self.part.nodes()
+    }
+    fn q(&self) -> usize {
+        self.part.q
+    }
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+    fn coef_width(&self) -> usize {
+        1
+    }
+    fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    fn coefs(&self, n: usize, i: usize, z: &[f64], out: &mut [f64]) {
+        out[0] = self.shard(n).row_dot(i, z) - self.part.labels[n][i];
+    }
+
+    fn scatter(&self, n: usize, i: usize, coefs: &[f64], scale: f64, out: &mut [f64]) {
+        self.shard(n).row_axpy(i, scale * coefs[0], out);
+    }
+
+    fn backward(
+        &self,
+        n: usize,
+        i: usize,
+        alpha: f64,
+        psi: &[f64],
+        z_out: &mut [f64],
+        coefs_out: &mut [f64],
+    ) {
+        // regularization via scaling: solve z + beta B(z) = psi / (1+alpha*lambda)
+        let s = 1.0 / (1.0 + alpha * self.lambda);
+        let beta = alpha * s;
+        let c = self.row_norm_sq[n][i];
+        let y = self.part.labels[n][i];
+        // margin at the new point: m = (a^T psi_hat + beta c y) / (1 + beta c)
+        let a_dot_psi = self.shard(n).row_dot(i, psi) * s;
+        let m = (a_dot_psi + beta * c * y) / (1.0 + beta * c);
+        let g = m - y;
+        // z = psi_hat - beta g a
+        for (zo, p) in z_out.iter_mut().zip(psi) {
+            *zo = s * p;
+        }
+        self.shard(n).row_axpy(i, -beta * g, z_out);
+        coefs_out[0] = g;
+    }
+
+    fn objective(&self, z: &[f64]) -> Option<f64> {
+        // sum_n [ (1/2q) ||A_n z - y_n||^2 + lambda/2 ||z||^2 ]
+        let mut obj = 0.0;
+        for n in 0..self.nodes() {
+            let shard = self.shard(n);
+            let mut local = 0.0;
+            for i in 0..self.q() {
+                let r = shard.row_dot(i, z) - self.part.labels[n][i];
+                local += r * r;
+            }
+            obj += 0.5 * local / self.q() as f64;
+        }
+        let znorm: f64 = z.iter().map(|v| v * v).sum();
+        obj += 0.5 * self.lambda * self.nodes() as f64 * znorm;
+        Some(obj)
+    }
+
+    fn l_mu(&self) -> (f64, f64) {
+        // raw B_{n,i} has L = ||a||^2 (rank-1 PSD), mu = 0; + lambda I
+        let cmax = self
+            .row_norm_sq
+            .iter()
+            .flatten()
+            .fold(0.0f64, |acc, &c| acc.max(c));
+        (cmax + self.lambda, self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::operators::{check_monotone, check_resolvent};
+
+    fn problem() -> RidgeProblem {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(3);
+        RidgeProblem::new(ds.partition(4), 0.05)
+    }
+
+    #[test]
+    fn resolvent_identity_holds() {
+        check_resolvent(&problem(), 0.3, 7, 50).unwrap();
+        check_resolvent(&problem(), 3.0, 8, 50).unwrap();
+    }
+
+    #[test]
+    fn components_monotone() {
+        check_monotone(&problem(), 9, 100).unwrap();
+    }
+
+    #[test]
+    fn apply_matches_definition() {
+        let p = problem();
+        let mut rng = crate::util::rng::Rng::new(4);
+        let z: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; p.dim()];
+        p.apply(0, 0, &z, 1.0, &mut out);
+        // definition: (a^T z - y) a
+        let shard = &p.partition().shards[0];
+        let g = shard.row_dot(0, &z) - p.partition().labels[0][0];
+        let mut want = vec![0.0; p.dim()];
+        shard.row_axpy(0, g, &mut want);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn paper_closed_form_matches_for_unit_rows() {
+        // paper: z = (alpha y + a^T z_in) / (alpha + 1) margin form for
+        // ||a|| = 1, lambda = 0
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(5);
+        let p = RidgeProblem::new(ds.partition(2), 0.0);
+        let alpha = 0.7;
+        let mut rng = crate::util::rng::Rng::new(6);
+        let psi: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+        let mut z = vec![0.0; p.dim()];
+        let mut c = vec![0.0];
+        p.backward(1, 2, alpha, &psi, &mut z, &mut c);
+        let shard = &p.partition().shards[1];
+        let y = p.partition().labels[1][2];
+        let m_paper = (alpha * y + shard.row_dot(2, &psi)) / (alpha + 1.0);
+        let mut want = psi.clone();
+        shard.row_axpy(2, -alpha * (m_paper - y), &mut want);
+        for (a, b) in z.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn objective_decreases_along_gradient_step() {
+        let p = problem();
+        let z0 = vec![0.1; p.dim()];
+        let mut g = vec![0.0; p.dim()];
+        let mut acc = vec![0.0; p.dim()];
+        for n in 0..p.nodes() {
+            p.full_operator(n, &z0, &mut g);
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                *a += gi;
+            }
+        }
+        let mut z1 = z0.clone();
+        crate::linalg::axpy(-0.05, &acc, &mut z1);
+        assert!(p.objective(&z1).unwrap() < p.objective(&z0).unwrap());
+    }
+}

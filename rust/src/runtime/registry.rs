@@ -1,0 +1,148 @@
+//! Artifact manifest: the JSON index written by `python/compile/aot.py`.
+
+use crate::util::json::{parse, Json};
+
+/// One AOT artifact (fn at a concrete shape bucket).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub fn_name: String,
+    pub file: String,
+    /// argument shapes
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// output shapes
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    /// (q, d) bucket for shard-shaped first argument.
+    pub fn qd(&self) -> Option<(usize, usize)> {
+        let a0 = self.arg_shapes.first()?;
+        if a0.len() == 2 {
+            Some((a0[0], a0[1]))
+        } else {
+            None
+        }
+    }
+
+    /// (n, d) bucket for mixing artifacts (arg1 = (n, d)).
+    pub fn nd(&self) -> Option<(usize, usize)> {
+        let a1 = self.arg_shapes.get(1)?;
+        if a1.len() == 2 {
+            Some((a1[0], a1[1]))
+        } else {
+            None
+        }
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest, String> {
+        let v = parse(src)?;
+        let arr = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing entries")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|args| {
+                        args.iter()
+                            .filter_map(|a| {
+                                a.get("shape").and_then(Json::as_arr).map(|s| {
+                                    s.iter().filter_map(Json::as_usize).collect()
+                                })
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            entries.push(ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                fn_name: e.get("fn").and_then(Json::as_str).unwrap_or("").to_string(),
+                file: e.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                arg_shapes: shapes("args"),
+                out_shapes: shapes("outputs"),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Smallest (q, d) bucket of `fn_name` with q >= q_need, d >= d_need.
+    pub fn pick_qd(&self, fn_name: &str, q: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.fn_name == fn_name)
+            .filter_map(|e| e.qd().map(|qd| (qd, e)))
+            .filter(|&((qb, db), _)| qb >= q && db >= d)
+            .min_by_key(|&((qb, db), _)| qb * db)
+            .map(|(_, e)| e)
+    }
+
+    /// Smallest mix bucket with n >= n_need, d >= d_need.
+    pub fn pick_mix(&self, n: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.fn_name == "mix")
+            .filter_map(|e| e.nd().map(|nd| (nd, e)))
+            .filter(|&((nb, db), _)| nb >= n && db >= d)
+            .min_by_key(|&((nb, db), _)| nb * db)
+            .map(|(_, e)| e)
+    }
+
+    pub fn fn_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.fn_name.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "dtype": "f64",
+      "entries": [
+        {"name": "coefs_ridge_q256_d1024", "fn": "coefs_ridge",
+         "file": "coefs_ridge_q256_d1024.hlo.txt",
+         "args": [{"shape": [256, 1024], "dtype": "f64"},
+                  {"shape": [1024], "dtype": "f64"},
+                  {"shape": [256], "dtype": "f64"}],
+         "outputs": [{"shape": [256], "dtype": "float64"}]},
+        {"name": "coefs_ridge_q512_d4096", "fn": "coefs_ridge",
+         "file": "coefs_ridge_q512_d4096.hlo.txt",
+         "args": [{"shape": [512, 4096], "dtype": "f64"},
+                  {"shape": [4096], "dtype": "f64"},
+                  {"shape": [512], "dtype": "f64"}],
+         "outputs": [{"shape": [512], "dtype": "float64"}]},
+        {"name": "mix_n16_d1024", "fn": "mix", "file": "mix_n16_d1024.hlo.txt",
+         "args": [{"shape": [16, 16], "dtype": "f64"},
+                  {"shape": [16, 1024], "dtype": "f64"},
+                  {"shape": [16, 1024], "dtype": "f64"}],
+         "outputs": [{"shape": [16, 1024], "dtype": "float64"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_and_picks_buckets() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.pick_qd("coefs_ridge", 100, 1000).unwrap();
+        assert_eq!(e.qd(), Some((256, 1024)));
+        let e2 = m.pick_qd("coefs_ridge", 300, 1000).unwrap();
+        assert_eq!(e2.qd(), Some((512, 4096)));
+        assert!(m.pick_qd("coefs_ridge", 9999, 10).is_none());
+        let mx = m.pick_mix(10, 800).unwrap();
+        assert_eq!(mx.nd(), Some((16, 1024)));
+        assert_eq!(m.fn_names(), vec!["coefs_ridge", "mix"]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Conjugate gradients on an implicit symmetric positive-definite
+//! operator.
+
+/// An implicit SPD linear map `y = A x`.
+pub trait LinearOperator {
+    fn dim(&self) -> usize;
+    fn apply(&self, x: &[f64], out: &mut [f64]);
+}
+
+impl<F: Fn(&[f64], &mut [f64])> LinearOperator for (usize, F) {
+    fn dim(&self) -> usize {
+        self.0
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        (self.1)(x, out)
+    }
+}
+
+/// Solve `A x = b` by CG. Returns (x, iterations, final residual norm).
+pub fn cg_solve<A: LinearOperator>(
+    a: &A,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, usize, f64) {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rs = crate::linalg::dot(&r, &r);
+    let b_norm = rs.sqrt().max(1e-300);
+    if rs.sqrt() <= tol * b_norm {
+        return (x, 0, rs.sqrt());
+    }
+    for it in 0..max_iters {
+        a.apply(&p, &mut ap);
+        let denom = crate::linalg::dot(&p, &ap);
+        if denom.abs() < 1e-300 {
+            return (x, it, rs.sqrt());
+        }
+        let alpha = rs / denom;
+        crate::linalg::axpy(alpha, &p, &mut x);
+        crate::linalg::axpy(-alpha, &ap, &mut r);
+        let rs_new = crate::linalg::dot(&r, &r);
+        if rs_new.sqrt() <= tol * b_norm {
+            return (x, it + 1, rs_new.sqrt());
+        }
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    let res = rs.sqrt();
+    (x, max_iters, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    struct DenseOp(DenseMatrix);
+    impl LinearOperator for DenseOp {
+        fn dim(&self) -> usize {
+            self.0.rows
+        }
+        fn apply(&self, x: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(&self.0.matvec(x));
+        }
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        // A = M^T M + I is SPD
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n = 12;
+        let mut m = DenseMatrix::zeros(n, n);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        let mut a = m.transpose().matmul(&m);
+        for i in 0..n {
+            a[(i, i)] += 1.0;
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64 - 3.0) * 0.5).collect();
+        let b = a.matvec(&x_true);
+        let (x, iters, res) = cg_solve(&DenseOp(a), &b, 1e-12, 200);
+        assert!(iters <= 200);
+        assert!(res < 1e-8);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = DenseOp(DenseMatrix::identity(4));
+        let (x, iters, _) = cg_solve(&a, &[0.0; 4], 1e-10, 10);
+        assert_eq!(iters, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

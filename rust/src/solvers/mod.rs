@@ -1,0 +1,11 @@
+//! Inner solvers used by the deterministic baselines and the optimum
+//! pre-solve: conjugate gradients for SPD systems (ridge resolvents,
+//! SSDA's conjugate-gradient oracle) and an accelerated proximal solver
+//! for the full-function resolvents P-EXTRA needs on non-quadratic
+//! losses.
+
+mod cg;
+mod prox;
+
+pub use cg::{cg_solve, LinearOperator};
+pub use prox::agd_minimize;

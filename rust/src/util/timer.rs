@@ -1,0 +1,107 @@
+//! Wall-clock timing helpers for the bench harness and perf logging.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds.
+    pub fn nanos(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+}
+
+/// Run `f` repeatedly until `min_time` seconds have elapsed (and at least
+/// `min_iters` runs), returning per-iteration seconds statistics.
+pub fn measure<F: FnMut()>(mut f: F, min_time: f64, min_iters: usize) -> Stats {
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < min_iters || total.secs() < min_time {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    Stats::from(&samples)
+}
+
+/// Timing statistics (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from(samples: &[f64]) -> Stats {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            n: s.len(),
+            mean: crate::util::mean(&s),
+            std: crate::util::stddev(&s),
+            min: *s.first().unwrap_or(&0.0),
+            p50: crate::util::percentile(&s, 50.0),
+            p95: crate::util::percentile(&s, 95.0),
+        }
+    }
+
+    /// Human-readable one-liner, auto-scaled units.
+    pub fn display(&self) -> String {
+        fn fmt(t: f64) -> String {
+            if t < 1e-6 {
+                format!("{:.1} ns", t * 1e9)
+            } else if t < 1e-3 {
+                format!("{:.2} µs", t * 1e6)
+            } else if t < 1.0 {
+                format!("{:.2} ms", t * 1e3)
+            } else {
+                format!("{:.3} s", t)
+            }
+        }
+        format!(
+            "mean {} (p50 {}, p95 {}, n={})",
+            fmt(self.mean),
+            fmt(self.p50),
+            fmt(self.p95),
+            self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let st = measure(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            0.01,
+            5,
+        );
+        assert!(st.n >= 5);
+        assert!(st.mean >= 0.0);
+        assert!(st.p95 >= st.p50);
+    }
+}

@@ -1,0 +1,166 @@
+//! Cross-algorithm integration tests: every linear-convergent method must
+//! reach the same optimum; the qualitative orderings of the paper's
+//! figures must hold on small instances.
+
+use dsba::prelude::*;
+use dsba::algorithms::AlgorithmKind::*;
+use dsba::coordinator::Experiment;
+
+fn ridge_world(seed: u64) -> (dsba::data::Dataset, Topology) {
+    let ds = SyntheticSpec::tiny()
+        .with_samples(160)
+        .with_regression(true)
+        .generate(seed);
+    let topo = Topology::erdos_renyi(4, 0.6, seed ^ 1);
+    (ds, topo)
+}
+
+#[test]
+fn all_linear_methods_agree_on_the_optimum() {
+    let (ds, topo) = ridge_world(101);
+    let part = ds.partition_seeded(4, 2);
+    let problem = RidgeProblem::new(part, 0.05);
+    let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
+
+    let runs = [
+        (Dsba, 0.8, 60.0),
+        (DsbaSparse, 0.8, 60.0),
+        (Dsa, 0.25, 120.0),
+        (Extra, 0.4, 400.0),
+        // P-EXTRA's exact resolvents burn many passes per round (the
+        // computational cost DSBA is designed to avoid) — budget for it
+        (PExtra, 2.0, 30_000.0),
+        (Ssda, 0.9, 30_000.0), // conjugate oracle burns passes per round
+        (Dlm, 0.0, 2500.0),
+    ];
+    for (kind, alpha, passes) in runs {
+        let part = ds.partition_seeded(4, 2);
+        let mut exp = Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), kind)
+            .with_step_size(alpha)
+            .with_passes(passes)
+            .with_z_star(z_star.clone())
+            .with_params(|p| {
+                p.dlm_c = 0.5;
+                p.dlm_rho = 1.5;
+            });
+        let trace = exp.run();
+        assert!(
+            trace.last_suboptimality() < 1e-6,
+            "{:?} ended at {:.3e}",
+            kind,
+            trace.last_suboptimality()
+        );
+    }
+}
+
+#[test]
+fn stochastic_methods_beat_deterministic_per_pass_ridge() {
+    // Figure 1's left panels: at a small pass budget, DSBA < DSA < EXTRA
+    // in suboptimality (same tuned steps as the figure harness)
+    let (ds, topo) = ridge_world(103);
+    let part = ds.partition_seeded(4, 2);
+    let problem = RidgeProblem::new(part, 0.01);
+    let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
+    let passes = 15.0;
+
+    let mut results = std::collections::HashMap::new();
+    for (kind, alpha) in [(Dsba, 1.0), (Dsa, 0.3), (Extra, 0.45)] {
+        let part = ds.partition_seeded(4, 2);
+        let mut exp = Experiment::new(RidgeProblem::new(part, 0.01), topo.clone(), kind)
+            .with_step_size(alpha)
+            .with_passes(passes)
+            .with_z_star(z_star.clone());
+        results.insert(kind.name(), exp.run().last_suboptimality());
+    }
+    let (dsba, dsa, extra) = (results["DSBA"], results["DSA"], results["EXTRA"]);
+    assert!(dsba < dsa, "DSBA {dsba:.3e} !< DSA {dsa:.3e}");
+    assert!(dsa < extra, "DSA {dsa:.3e} !< EXTRA {extra:.3e}");
+}
+
+#[test]
+fn dsba_handles_logistic_and_auc() {
+    let ds = SyntheticSpec::tiny().with_samples(160).generate(105);
+    let topo = Topology::erdos_renyi(4, 0.6, 7);
+
+    let mut exp = Experiment::new(
+        LogisticProblem::new(ds.partition_seeded(4, 2), 0.05),
+        topo.clone(),
+        Dsba,
+    )
+    .with_step_size(2.0)
+    .with_passes(60.0);
+    let t = exp.run();
+    assert!(t.last_suboptimality() < 1e-8, "logistic: {:.3e}", t.last_suboptimality());
+
+    let mut exp = Experiment::new(
+        AucProblem::new(ds.partition_seeded(4, 2), 0.05),
+        topo,
+        Dsba,
+    )
+    .with_step_size(0.5)
+    .with_passes(60.0);
+    let t = exp.run();
+    assert!(t.last_suboptimality() < 1e-7, "auc: {:.3e}", t.last_suboptimality());
+    assert!(t.last_auc() > 0.8, "AUC {:.3}", t.last_auc());
+}
+
+#[test]
+fn dgd_stalls_where_linear_methods_converge() {
+    let (ds, topo) = ridge_world(107);
+    let problem = RidgeProblem::new(ds.partition_seeded(4, 2), 0.05);
+    let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
+    let mut dgd = Experiment::new(
+        RidgeProblem::new(ds.partition_seeded(4, 2), 0.05),
+        topo.clone(),
+        Dgd,
+    )
+    .with_step_size(0.4)
+    .with_passes(120.0)
+    .with_z_star(z_star.clone());
+    let t_dgd = dgd.run();
+    let mut extra = Experiment::new(
+        RidgeProblem::new(ds.partition_seeded(4, 2), 0.05),
+        topo,
+        Extra,
+    )
+    .with_step_size(0.4)
+    .with_passes(120.0)
+    .with_z_star(z_star);
+    let t_extra = extra.run();
+    assert!(
+        t_extra.last_suboptimality() < t_dgd.last_suboptimality() * 1e-2,
+        "EXTRA {:.3e} should be orders below DGD {:.3e}",
+        t_extra.last_suboptimality(),
+        t_dgd.last_suboptimality()
+    );
+}
+
+#[test]
+fn larger_kappa_g_slows_dsba() {
+    // Table 1: iterations scale with kappa_g. Ring (large kappa_g) must
+    // need more passes to a fixed tolerance than complete graph (small).
+    let ds = SyntheticSpec::tiny()
+        .with_samples(240)
+        .with_regression(true)
+        .generate(109);
+    let tol = 1e-8;
+    let mut passes_needed = Vec::new();
+    for topo in [Topology::complete(8), Topology::ring(8)] {
+        let part = ds.partition_seeded(8, 2);
+        let problem = RidgeProblem::new(part, 0.05);
+        let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
+        let mut exp = Experiment::new(problem, topo, Dsba)
+            .with_step_size(0.8)
+            .with_passes(300.0)
+            .with_record_points(300)
+            .with_z_star(z_star);
+        let trace = exp.run();
+        passes_needed.push(trace.passes_to_tol(tol).unwrap_or(f64::INFINITY));
+    }
+    assert!(
+        passes_needed[0] < passes_needed[1],
+        "complete {:.1} should beat ring {:.1}",
+        passes_needed[0],
+        passes_needed[1]
+    );
+}

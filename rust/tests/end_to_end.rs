@@ -1,0 +1,98 @@
+//! Scaled-down end-to-end smoke of the full system (the example
+//! `examples/end_to_end.rs` is the full-size run recorded in
+//! EXPERIMENTS.md): data -> partition -> graph -> algorithm -> metrics,
+//! with the XLA artifact path cross-checked when artifacts exist.
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::config::{ExperimentConfig, ProblemKind};
+use dsba::coordinator::Experiment;
+use dsba::prelude::*;
+use std::sync::Arc;
+
+#[test]
+fn full_stack_ridge_through_config() {
+    let cfg = ExperimentConfig {
+        problem: ProblemKind::Ridge,
+        dataset: "rcv1-like".into(),
+        samples: 400,
+        dim: 1024,
+        nodes: 10,
+        algorithm: AlgorithmKind::Dsba,
+        lambda: 1e-3,
+        alpha: 2.0,
+        passes: 70.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut exp = cfg.build().expect("config builds");
+    let trace = exp.run();
+    assert!(
+        trace.last_suboptimality() < 1e-5,
+        "suboptimality {:.3e}",
+        trace.last_suboptimality()
+    );
+    // communication grew linearly with rounds (dense method)
+    let first = &trace.rows[1];
+    let last = trace.rows.last().unwrap();
+    assert!(last.comm_doubles > first.comm_doubles);
+}
+
+#[test]
+fn full_stack_dsba_s_and_xla_cross_check() {
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(300)
+        .with_dim(900)
+        .with_regression(true)
+        .generate(21);
+    let part = ds.partition(6);
+    let lam = 1e-3;
+    let problem = Arc::new(RidgeProblem::new(part, lam));
+    let topo = Topology::erdos_renyi(6, 0.4, 5);
+
+    // XLA path must agree with the trait path when artifacts exist
+    if let Ok(rt) = dsba::runtime::XlaRuntime::load_default() {
+        let mut rng = Rng::new(3);
+        let z: Vec<f64> = (0..problem.dim()).map(|_| rng.normal()).collect();
+        for n in 0..problem.nodes() {
+            let xla = rt
+                .full_op_ridge(&problem.partition().shards[n], &z, &problem.partition().labels[n])
+                .unwrap();
+            let mut rust = vec![0.0; problem.dim()];
+            problem.full_raw_mean(n, &z, &mut rust);
+            for (a, b) in xla.iter().zip(&rust) {
+                assert!((a - b).abs() < 1e-8);
+            }
+        }
+    }
+
+    let mut exp = Experiment::from_arc(problem, topo, AlgorithmKind::DsbaSparse)
+        .with_step_size(2.0)
+        .with_passes(30.0);
+    let trace = exp.run();
+    assert!(
+        trace.last_suboptimality() < 1e-4,
+        "{:.3e}",
+        trace.last_suboptimality()
+    );
+}
+
+#[test]
+fn full_stack_auc_reaches_good_ranking() {
+    let cfg = ExperimentConfig {
+        problem: ProblemKind::Auc,
+        dataset: "sector-like".into(),
+        samples: 400,
+        dim: 1024,
+        nodes: 5,
+        algorithm: AlgorithmKind::Dsba,
+        alpha: 0.5,
+        passes: 15.0,
+        seed: 9,
+        ..Default::default()
+    };
+    let mut exp = cfg.build().unwrap();
+    let trace = exp.run();
+    assert!(trace.last_auc() > 0.75, "AUC {:.3}", trace.last_auc());
+    // AUC improved over the zero model
+    assert!(trace.last_auc() > trace.rows[0].auc);
+}

@@ -1,0 +1,206 @@
+//! Property-based tests over the system invariants (via the in-repo
+//! `testing::prop_check` harness, standing in for proptest).
+
+use dsba::graph::MixingMatrix;
+use dsba::linalg::{CsrMatrix, SparseVec};
+use dsba::operators::{check_monotone, check_resolvent};
+use dsba::prelude::*;
+use dsba::testing::prop_check;
+
+#[test]
+fn prop_sparse_algebra_matches_dense() {
+    prop_check("sparse ≡ dense algebra", 100, |rng| {
+        let dim = 1 + rng.below(200);
+        let nnz = rng.below(dim + 1);
+        let pairs: Vec<(u32, f64)> = (0..nnz)
+            .map(|_| (rng.below(dim) as u32, rng.normal()))
+            .collect();
+        let sv = SparseVec::from_pairs(dim, pairs);
+        let dense = sv.to_dense();
+        let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        // dot
+        let want: f64 = dense.iter().zip(&x).map(|(a, b)| a * b).sum();
+        if (sv.dot_dense(&x) - want).abs() > 1e-9 * (1.0 + want.abs()) {
+            return Err(format!("dot mismatch {} vs {}", sv.dot_dense(&x), want));
+        }
+        // axpy
+        let alpha = rng.normal();
+        let mut y1 = x.clone();
+        sv.axpy_into(alpha, &mut y1);
+        let y2: Vec<f64> = x.iter().zip(&dense).map(|(xi, di)| xi + alpha * di).collect();
+        for (a, b) in y1.iter().zip(&y2) {
+            if (a - b).abs() > 1e-10 {
+                return Err("axpy mismatch".into());
+            }
+        }
+        // add
+        let sv2 = SparseVec::from_dense(&x, 0.5);
+        let sum = sv.add(&sv2);
+        let want_sum: Vec<f64> = dense
+            .iter()
+            .zip(sv2.to_dense())
+            .map(|(a, b)| a + b)
+            .collect();
+        if sum.to_dense() != want_sum {
+            return Err("sparse add mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_transpose_identity() {
+    prop_check("<A x, g> == <x, A^T g>", 50, |rng| {
+        let rows = 1 + rng.below(30);
+        let cols = 1 + rng.below(40);
+        let svs: Vec<SparseVec> = (0..rows)
+            .map(|_| {
+                let nnz = rng.below(cols + 1);
+                SparseVec::from_pairs(
+                    cols,
+                    (0..nnz).map(|_| (rng.below(cols) as u32, rng.normal())).collect(),
+                )
+            })
+            .collect();
+        let a = CsrMatrix::from_rows(cols, &svs);
+        let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let g: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let lhs = dsba::linalg::dot(&a.matvec(&x), &g);
+        let rhs = dsba::linalg::dot(&x, &a.t_matvec(&g));
+        if (lhs - rhs).abs() > 1e-8 * (1.0 + lhs.abs()) {
+            return Err(format!("adjoint identity broken: {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixing_matrix_conditions_hold_across_topologies() {
+    prop_check("mixing matrix (i)-(iv)", 25, |rng| {
+        let n = 3 + rng.below(12);
+        let topo = match rng.below(4) {
+            0 => Topology::erdos_renyi(n, 0.3 + 0.4 * rng.uniform(), rng.next_u64()),
+            1 => Topology::ring(n),
+            2 => Topology::star(n),
+            _ => Topology::grid2d(n),
+        };
+        let mix = if rng.bernoulli(0.5) {
+            MixingMatrix::laplacian(&topo, 1.0 + rng.uniform())
+        } else {
+            MixingMatrix::metropolis(&topo)
+        };
+        mix.check_conditions(&topo, 1e-8)
+    });
+}
+
+#[test]
+fn prop_resolvents_hold_across_random_problems() {
+    prop_check("resolvent identity (all problems)", 12, |rng| {
+        let ds = SyntheticSpec::tiny()
+            .with_samples(40 + rng.below(40))
+            .with_dim(20 + rng.below(30))
+            .generate(rng.next_u64());
+        let part = ds.partition_seeded(2, rng.next_u64());
+        let lam = rng.uniform() * 0.2;
+        let alpha = 0.05 + rng.uniform() * 3.0;
+        let seed = rng.next_u64();
+        match rng.below(3) {
+            0 => check_resolvent(&RidgeProblem::new(part, lam), alpha, seed, 10),
+            1 => check_resolvent(&LogisticProblem::new(part, lam), alpha, seed, 10),
+            _ => check_resolvent(&AucProblem::new(part, lam), alpha, seed, 10),
+        }
+    });
+}
+
+#[test]
+fn prop_operators_monotone() {
+    prop_check("component monotonicity", 10, |rng| {
+        let ds = SyntheticSpec::tiny()
+            .with_samples(30)
+            .with_dim(25)
+            .generate(rng.next_u64());
+        let part = ds.partition_seeded(3, rng.next_u64());
+        let seed = rng.next_u64();
+        match rng.below(3) {
+            0 => check_monotone(&RidgeProblem::new(part, 0.01), seed, 30),
+            1 => check_monotone(&LogisticProblem::new(part, 0.01), seed, 30),
+            _ => check_monotone(&AucProblem::new(part, 0.01), seed, 30),
+        }
+    });
+}
+
+#[test]
+fn prop_partition_conserves_samples() {
+    prop_check("partition conservation", 30, |rng| {
+        let q_total = 20 + rng.below(150);
+        let nodes = 1 + rng.below(8.min(q_total));
+        let ds = SyntheticSpec::tiny().with_samples(q_total).generate(rng.next_u64());
+        let part = ds.partition_seeded(nodes, rng.next_u64());
+        if part.q != q_total / nodes {
+            return Err(format!("q = {} != {}", part.q, q_total / nodes));
+        }
+        let total_nnz: usize = part.shards.iter().map(|s| s.nnz()).sum();
+        if part.total_samples() != nodes * (q_total / nodes) {
+            return Err("wrong total".into());
+        }
+        // nnz conservation up to dropped remainder rows
+        let dropped = q_total - part.total_samples();
+        let full_nnz = ds.a.nnz();
+        if total_nnz > full_nnz || (dropped == 0 && total_nnz != full_nnz) {
+            return Err(format!("nnz {total_nnz} vs {full_nnz}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use dsba::util::json::{parse, Json};
+    prop_check("json value roundtrip", 60, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bernoulli(0.5)),
+                2 => Json::Num((rng.normal() * 1e3).round() / 16.0),
+                3 => Json::Str(format!("s{}\n\"x{}", rng.below(100), rng.below(10))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        let parsed = parse(&v.to_string()).map_err(|e| e)?;
+        if parsed != v {
+            return Err(format!("roundtrip mismatch: {}", v.to_string()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_auc_score_invariances() {
+    use dsba::metrics::auc_score;
+    prop_check("auc scale invariance + flip symmetry", 20, |rng| {
+        let ds = SyntheticSpec::tiny().with_samples(60).generate(rng.next_u64());
+        let part = ds.partition_seeded(2, 1);
+        let mut z = vec![0.0; part.dim + 3];
+        for v in z.iter_mut() {
+            *v = rng.normal();
+        }
+        let a1 = auc_score(&part, &z);
+        // positive scaling leaves AUC unchanged
+        let zs: Vec<f64> = z.iter().map(|v| v * 3.7).collect();
+        if (auc_score(&part, &zs) - a1).abs() > 1e-12 {
+            return Err("not scale invariant".into());
+        }
+        // negation reflects around 1/2
+        let zn: Vec<f64> = z.iter().map(|v| -v).collect();
+        if (auc_score(&part, &zn) + a1 - 1.0).abs() > 1e-12 {
+            return Err("flip symmetry broken".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,155 @@
+//! XLA/PJRT runtime integration: every artifact family must agree with
+//! the pure-Rust operator implementations to f64 precision, through the
+//! shape-bucket padding path. Requires `make artifacts` (skips cleanly
+//! with a message when artifacts are absent).
+
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use dsba::runtime::XlaRuntime;
+
+fn runtime_or_skip() -> Option<XlaRuntime> {
+    match XlaRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime_xla tests: {e}");
+            None
+        }
+    }
+}
+
+fn world() -> (dsba::data::Dataset, Partition) {
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(300)
+        .with_dim(900) // forces padding into the (256..512, 1024..) buckets
+        .generate(55);
+    let part = ds.partition_seeded(2, 3);
+    (ds, part)
+}
+
+#[test]
+fn ridge_full_op_matches_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (_, part) = world();
+    let p = RidgeProblem::new(part, 0.0);
+    let mut rng = Rng::new(9);
+    let z: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+    for n in 0..p.nodes() {
+        let shard = &p.partition().shards[n];
+        let xla = rt
+            .full_op_ridge(shard, &z, &p.partition().labels[n])
+            .expect("xla exec");
+        let mut rust = vec![0.0; p.dim()];
+        p.full_raw_mean(n, &z, &mut rust);
+        let err = xla
+            .iter()
+            .zip(&rust)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-9, "node {n}: max err {err}");
+    }
+}
+
+#[test]
+fn logistic_coefs_and_full_op_match_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(200)
+        .with_dim(700)
+        .generate(56);
+    let part = ds.partition_seeded(2, 3);
+    let p = LogisticProblem::new(part, 0.0);
+    let mut rng = Rng::new(10);
+    let z: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+    let shard = &p.partition().shards[0];
+    let y = &p.partition().labels[0];
+    let coefs = rt.coefs_logistic(shard, &z, y).unwrap();
+    let mut want = vec![0.0; 1];
+    for i in 0..p.q() {
+        p.coefs(0, i, &z, &mut want);
+        assert!((coefs[i] - want[0]).abs() < 1e-10, "coef {i}");
+    }
+    let full = rt.full_op_logistic(shard, &z, y).unwrap();
+    let mut rust = vec![0.0; p.dim()];
+    p.full_raw_mean(0, &z, &mut rust);
+    for (a, b) in full.iter().zip(&rust) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn auc_full_op_matches_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(200)
+        .with_dim(600)
+        .generate(57);
+    let part = ds.partition_seeded(2, 3);
+    let p = AucProblem::new(part, 0.0);
+    let mut rng = Rng::new(11);
+    let z: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+    let shard = &p.partition().shards[1];
+    let y = &p.partition().labels[1];
+    let xla = rt.auc_full_op(shard, y, &z, p.p).unwrap();
+    let mut rust = vec![0.0; p.dim()];
+    p.full_raw_mean(1, &z, &mut rust);
+    let err = xla
+        .iter()
+        .zip(&rust)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(err < 1e-9, "max err {err}");
+}
+
+#[test]
+fn mix_step_matches_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let topo = Topology::erdos_renyi(10, 0.4, 42);
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let d = 800;
+    let mut rng = Rng::new(12);
+    let z: Vec<Vec<f64>> =
+        (0..10).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+    let zp: Vec<Vec<f64>> =
+        (0..10).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+    let xla = rt.mix_step(&mix.wt, &z, &zp).unwrap();
+    for n in 0..10 {
+        let mut want = vec![0.0; d];
+        mix.mix_row(n, &topo, &z, &zp, &mut want);
+        for (a, b) in xla[n].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10, "node {n}");
+        }
+    }
+}
+
+#[test]
+fn objectives_match_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (_, part) = world();
+    let q = part.q;
+    let ridge = RidgeProblem::new(part, 0.0);
+    let mut rng = Rng::new(13);
+    let z: Vec<f64> = (0..ridge.dim()).map(|_| 0.2 * rng.normal()).collect();
+    // sum over shards of xla objective == rust objective (lambda = 0)
+    let mut total = 0.0;
+    for n in 0..ridge.nodes() {
+        total += rt
+            .obj_ridge(&ridge.partition().shards[n], &z, &ridge.partition().labels[n])
+            .unwrap()
+            / q as f64;
+    }
+    let want = ridge.objective(&z).unwrap();
+    assert!((total - want).abs() < 1e-8 * (1.0 + want.abs()), "{total} vs {want}");
+}
+
+#[test]
+fn scores_match_row_dots() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (_, part) = world();
+    let shard = &part.shards[0];
+    let mut rng = Rng::new(14);
+    let z: Vec<f64> = (0..part.dim).map(|_| rng.normal()).collect();
+    let scores = rt.scores(shard, &z).unwrap();
+    for i in 0..shard.rows {
+        assert!((scores[i] - shard.row_dot(i, &z)).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,137 @@
+//! §5.1 integration tests: DSBA-s must produce *identical* iterates to
+//! dense DSBA while moving asymptotically less data on sparse problems —
+//! on every problem type and several topologies.
+
+use dsba::algorithms::{AlgoParams, Algorithm, AlgorithmKind, Dsba, DsbaSparse};
+use dsba::comm::{CommCostModel, Network};
+use dsba::coordinator::Experiment;
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use std::sync::Arc;
+
+fn check_equivalence(problem: Arc<dyn Problem>, topo: Topology, alpha: f64, rounds: usize) {
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let params = AlgoParams::new(alpha, problem.dim(), 1234);
+    let mut dense = Dsba::new(problem.clone(), mix.clone(), topo.clone(), &params);
+    let mut sparse = DsbaSparse::new(problem.clone(), mix, topo.clone(), &params);
+    let mut net1 = Network::new(topo.clone(), CommCostModel::default());
+    let mut net2 = Network::new(topo, CommCostModel::default());
+    for round in 0..rounds {
+        dense.step(&mut net1);
+        sparse.step(&mut net2);
+        for n in 0..problem.nodes() {
+            let d = dsba::linalg::dist2_sq(&dense.iterates()[n], &sparse.iterates()[n]);
+            assert!(
+                d < 1e-16,
+                "round {round}, node {n}: DSBA-s diverged from DSBA by {d:.3e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn equivalence_ridge_er_graph() {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(1);
+    check_equivalence(
+        Arc::new(RidgeProblem::new(ds.partition_seeded(5, 2), 0.05)),
+        Topology::erdos_renyi(5, 0.5, 3),
+        0.7,
+        150,
+    );
+}
+
+#[test]
+fn equivalence_logistic_ring() {
+    // ring of 6 has diameter 3: deep relay pipeline
+    let ds = SyntheticSpec::tiny().generate(2);
+    check_equivalence(
+        Arc::new(LogisticProblem::new(ds.partition_seeded(6, 2), 0.05)),
+        Topology::ring(6),
+        1.5,
+        120,
+    );
+}
+
+#[test]
+fn equivalence_auc_star() {
+    let ds = SyntheticSpec::tiny().generate(3);
+    check_equivalence(
+        Arc::new(AucProblem::new(ds.partition_seeded(5, 2), 0.05)),
+        Topology::star(5),
+        0.4,
+        100,
+    );
+}
+
+#[test]
+fn equivalence_path_graph_max_diameter() {
+    // worst-case pipeline depth: path of 6 has diameter 5
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(4);
+    check_equivalence(
+        Arc::new(RidgeProblem::new(ds.partition_seeded(6, 2), 0.1)),
+        Topology::path(6),
+        0.6,
+        100,
+    );
+}
+
+#[test]
+fn equivalence_with_zero_lambda() {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(5);
+    check_equivalence(
+        Arc::new(RidgeProblem::new(ds.partition_seeded(4, 2), 0.0)),
+        Topology::erdos_renyi(4, 0.7, 9),
+        0.5,
+        100,
+    );
+}
+
+#[test]
+fn sparse_comm_wins_on_sparse_data_loses_on_dense() {
+    // Table 1's communication tradeoff: DSBA-s moves O(N rho d), dense
+    // DSBA moves O(Delta d). On very sparse data sparse wins by a big
+    // factor; as density grows the advantage shrinks/reverses.
+    let topo = Topology::erdos_renyi(8, 0.4, 11);
+    let mut ratios = Vec::new();
+    for rho in [0.002, 0.3] {
+        let ds = SyntheticSpec::tiny()
+            .with_samples(240)
+            .with_dim(1500)
+            .with_density(rho)
+            .with_regression(true)
+            .generate(7);
+        let p: Arc<dyn Problem> = Arc::new(RidgeProblem::new(ds.partition_seeded(8, 2), 0.05));
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(0.5, p.dim(), 77);
+        let mut dense = Dsba::new(p.clone(), mix.clone(), topo.clone(), &params);
+        let mut sparse = DsbaSparse::new(p.clone(), mix, topo.clone(), &params);
+        let mut net1 = Network::new(topo.clone(), CommCostModel::default());
+        let mut net2 = Network::new(topo.clone(), CommCostModel::default());
+        for _ in 0..60 {
+            dense.step(&mut net1);
+            sparse.step(&mut net2);
+        }
+        ratios.push(net2.max_received() / net1.max_received());
+    }
+    assert!(ratios[0] < 0.35, "sparse data: ratio {:.3} should be << 1", ratios[0]);
+    assert!(
+        ratios[1] > 3.0 * ratios[0],
+        "dense data must erode the advantage: {:?}",
+        ratios
+    );
+}
+
+#[test]
+fn dsba_s_through_experiment_driver() {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(8);
+    let topo = Topology::erdos_renyi(5, 0.5, 13);
+    let mut exp = Experiment::new(
+        RidgeProblem::new(ds.partition_seeded(5, 2), 0.05),
+        topo,
+        AlgorithmKind::DsbaSparse,
+    )
+    .with_step_size(0.7)
+    .with_passes(50.0);
+    let t = exp.run();
+    assert!(t.last_suboptimality() < 1e-7, "{:.3e}", t.last_suboptimality());
+}
