@@ -1,0 +1,29 @@
+# Repo task entry points. `make verify` is the tier-1 gate CI runs.
+
+CARGO ?= cargo
+
+.PHONY: verify build test fmt bench-engine artifacts clean
+
+## tier-1: release build + full test suite
+verify:
+	$(CARGO) build --release && $(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+## parallel-engine scaling table (wall-clock vs thread count)
+bench-engine:
+	$(CARGO) bench --bench engine_scaling
+
+## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
+artifacts:
+	python3 python/compile/aot.py
+
+clean:
+	$(CARGO) clean

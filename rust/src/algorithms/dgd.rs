@@ -5,23 +5,96 @@
 //! `z^{t+1}_n = sum_m w_{nm} z^t_m - alpha_t g_n(z^t_n)`,
 //! `alpha_t = alpha0 / (1 + t)^decay`.
 
-use super::{AlgoParams, Algorithm};
-use crate::comm::Network;
+use super::node::{broadcast_dense, w_row_local, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
 use std::sync::Arc;
 
-pub struct Dgd {
+pub(crate) struct DgdCtx {
     problem: Arc<dyn Problem>,
     mix: MixingMatrix,
     topo: Topology,
     alpha0: f64,
     decay: f64,
-    z: Vec<Vec<f64>>,
-    z_next: Vec<Vec<f64>>,
-    t: usize,
+}
+
+pub(crate) struct DgdNode {
+    ctx: Arc<DgdCtx>,
+    n: usize,
+    z: Vec<f64>,
+    nbrs: NeighborBuf,
     evals: u64,
+    z_next: Vec<f64>,
     g: Vec<f64>,
+}
+
+impl NodeState for DgdNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.z)
+    }
+
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("DGD exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let n = self.n;
+        let alpha_t = ctx.alpha0 / (1.0 + t as f64).powf(ctx.decay);
+        let zn = &mut self.z_next;
+        w_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.nbrs, zn);
+        p.full_operator(n, &self.z, &mut self.g);
+        self.evals += p.q() as u64;
+        crate::linalg::axpy(-alpha_t, &self.g, zn);
+        std::mem::swap(&mut self.z, &mut self.z_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn dgd_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<DgdNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    let ctx = Arc::new(DgdCtx {
+        problem,
+        mix,
+        topo,
+        alpha0: params.alpha,
+        decay: params.dgd_decay,
+    });
+    (0..n)
+        .map(|nd| DgdNode {
+            n: nd,
+            z: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            evals: 0,
+            z_next: params.z0.clone(),
+            g: vec![0.0; dim],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven DGD.
+pub struct Dgd {
+    drv: RoundDriver<DgdNode>,
 }
 
 impl Dgd {
@@ -31,60 +104,27 @@ impl Dgd {
         topo: Topology,
         params: &AlgoParams,
     ) -> Dgd {
-        let n = problem.nodes();
-        let z = vec![params.z0.clone(); n];
-        Dgd {
-            alpha0: params.alpha,
-            decay: params.dgd_decay,
-            z_next: z.clone(),
-            z,
-            t: 0,
-            evals: 0,
-            g: vec![0.0; problem.dim()],
-            problem,
-            mix,
-            topo,
-        }
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = dgd_nodes(problem, mix, topo, params);
+        Dgd { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
     }
 }
 
 impl Algorithm for Dgd {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let dim = p.dim();
-        let alpha_t = self.alpha0 / (1.0 + self.t as f64).powf(self.decay);
-        net.round_dense_exchange(dim);
-        for n in 0..p.nodes() {
-            let zn = &mut self.z_next[n];
-            zn.fill(0.0);
-            let add = |m: usize, zn: &mut [f64]| {
-                let w = self.mix.w[(n, m)];
-                if w != 0.0 {
-                    crate::linalg::axpy(w, &self.z[m], zn);
-                }
-            };
-            add(n, zn);
-            for &m in self.topo.neighbors(n) {
-                add(m, zn);
-            }
-            p.full_operator(n, &self.z[n], &mut self.g);
-            self.evals += p.q() as u64;
-            crate::linalg::axpy(-alpha_t, &self.g, zn);
-        }
-        std::mem::swap(&mut self.z, &mut self.z_next);
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

@@ -12,96 +12,146 @@
 //! `sum_n phi_n` is conserved (= 0 from init) the consensus point solves
 //! `sum_n g_n(x*) = 0`.
 
-use super::{AlgoParams, Algorithm};
-use crate::comm::Network;
+use super::node::{broadcast_dense, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::Topology;
 use crate::operators::Problem;
 use std::sync::Arc;
 
-pub struct Dlm {
+pub(crate) struct DlmCtx {
     problem: Arc<dyn Problem>,
     topo: Topology,
     c: f64,
     rho: f64,
-    x: Vec<Vec<f64>>,
-    x_prev: Vec<Vec<f64>>,
-    phi: Vec<Vec<f64>>,
-    t: usize,
+}
+
+pub(crate) struct DlmNode {
+    ctx: Arc<DlmCtx>,
+    n: usize,
+    x: Vec<f64>,
+    nbrs: NeighborBuf,
+    phi: Vec<f64>,
     evals: u64,
-    x_next: Vec<Vec<f64>>,
+    x_next: Vec<f64>,
     g: Vec<f64>,
+}
+
+impl DlmNode {
+    /// Graph-Laplacian row entry `deg(n) x_n[k] - sum_{j in N(n)} x_j[k]`
+    /// from the freshly exchanged iterates, same subtraction order as the
+    /// monolithic loop (adjacency order).
+    #[inline]
+    fn laplacian_at(&self, k: usize, deg: f64) -> f64 {
+        let mut lap = deg * self.x[k];
+        for &j in self.ctx.topo.neighbors(self.n) {
+            lap -= self.nbrs.cur(j)[k];
+        }
+        lap
+    }
+}
+
+impl NodeState for DlmNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.x)
+    }
+
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("DLM exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let dim = p.dim();
+        let n = self.n;
+        let deg = ctx.topo.degree(n) as f64;
+        // dual update with current exchanged iterates (skipped at t=0,
+        // where x is at consensus and the Laplacian term vanishes anyway)
+        if t > 0 {
+            for k in 0..dim {
+                let lap = self.laplacian_at(k, deg);
+                self.phi[k] += ctx.c * lap;
+            }
+        }
+        p.full_operator(n, &self.x, &mut self.g);
+        self.evals += p.q() as u64;
+        let step = 1.0 / (2.0 * ctx.c * deg + ctx.rho);
+        for k in 0..dim {
+            let lap = self.laplacian_at(k, deg);
+            self.x_next[k] =
+                self.x[k] - step * (self.g[k] + self.phi[k] + ctx.c * lap);
+        }
+        std::mem::swap(&mut self.x, &mut self.x_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn dlm_nodes(
+    problem: Arc<dyn Problem>,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<DlmNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    let ctx = Arc::new(DlmCtx { problem, topo, c: params.dlm_c, rho: params.dlm_rho });
+    (0..n)
+        .map(|nd| DlmNode {
+            n: nd,
+            x: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            phi: vec![0.0; dim],
+            evals: 0,
+            x_next: params.z0.clone(),
+            g: vec![0.0; dim],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven DLM.
+pub struct Dlm {
+    drv: RoundDriver<DlmNode>,
 }
 
 impl Dlm {
     pub fn new(problem: Arc<dyn Problem>, topo: Topology, params: &AlgoParams) -> Dlm {
-        let n = problem.nodes();
-        let dim = problem.dim();
-        let x = vec![params.z0.clone(); n];
-        Dlm {
-            c: params.dlm_c,
-            rho: params.dlm_rho,
-            x_prev: x.clone(),
-            x_next: x.clone(),
-            phi: vec![vec![0.0; dim]; n],
-            x,
-            t: 0,
-            evals: 0,
-            g: vec![0.0; dim],
-            problem,
-            topo,
-        }
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = dlm_nodes(problem, topo, params);
+        Dlm { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
+    }
+
+    /// One node's dual variable (tests / diagnostics).
+    pub fn phi(&self, n: usize) -> &[f64] {
+        &self.drv.nodes[n].phi
     }
 }
 
 impl Algorithm for Dlm {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let dim = p.dim();
-        net.round_dense_exchange(dim);
-        // dual update with current exchanged iterates (skipped at t=0,
-        // where x is at consensus and the Laplacian term vanishes anyway)
-        if self.t > 0 {
-            for n in 0..p.nodes() {
-                let deg = self.topo.degree(n) as f64;
-                for k in 0..dim {
-                    let mut lap = deg * self.x[n][k];
-                    for &j in self.topo.neighbors(n) {
-                        lap -= self.x[j][k];
-                    }
-                    self.phi[n][k] += self.c * lap;
-                }
-            }
-        }
-        for n in 0..p.nodes() {
-            p.full_operator(n, &self.x[n], &mut self.g);
-            self.evals += p.q() as u64;
-            let deg = self.topo.degree(n) as f64;
-            let step = 1.0 / (2.0 * self.c * deg + self.rho);
-            let xn = &mut self.x_next[n];
-            for k in 0..dim {
-                let mut lap = deg * self.x[n][k];
-                for &j in self.topo.neighbors(n) {
-                    lap -= self.x[j][k];
-                }
-                xn[k] = self.x[n][k]
-                    - step * (self.g[k] + self.phi[n][k] + self.c * lap);
-            }
-        }
-        std::mem::swap(&mut self.x_prev, &mut self.x);
-        std::mem::swap(&mut self.x, &mut self.x_next);
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.x
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {
@@ -133,7 +183,7 @@ mod tests {
         // sum of duals stays zero
         let mut dual_sum = vec![0.0; p.dim()];
         for n in 0..4 {
-            crate::linalg::axpy(1.0, &alg.phi[n], &mut dual_sum);
+            crate::linalg::axpy(1.0, alg.phi(n), &mut dual_sum);
         }
         assert!(crate::linalg::norm2(&dual_sum) < 1e-9);
         let r = p.global_residual(&alg.iterates()[0]);

@@ -11,30 +11,138 @@
 //! with `delta_f^t = B_{n,i_t}(z^t) - phi_{n,i_t}` and
 //! `z^1 = W z^0 - alpha (phibar^0 + lambda z^0)`.
 
-use super::{AlgoParams, Algorithm, NodeSaga};
-use crate::comm::Network;
+use super::node::{broadcast_dense, mix_row_local, w_row_local, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeSaga, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
-pub struct Dsa {
+pub(crate) struct DsaCtx {
     problem: Arc<dyn Problem>,
     mix: MixingMatrix,
     topo: Topology,
     alpha: f64,
-    z: Vec<Vec<f64>>,
-    z_prev: Vec<Vec<f64>>,
-    saga: Vec<NodeSaga>,
-    /// previous forward delta per node: (component, coef delta)
-    delta_prev: Vec<(usize, Vec<f64>)>,
-    rngs: Vec<Rng>,
-    t: usize,
+}
+
+pub(crate) struct DsaNode {
+    ctx: Arc<DsaCtx>,
+    n: usize,
+    z: Vec<f64>,
+    z_prev: Vec<f64>,
+    nbrs: NeighborBuf,
+    saga: NodeSaga,
+    /// previous forward delta: (component, coef delta)
+    delta_prev: (usize, Vec<f64>),
+    rng: Rng,
     evals: u64,
-    z_next: Vec<Vec<f64>>,
+    z_next: Vec<f64>,
     coefs: Vec<f64>,
     dcur: Vec<f64>,
     dtable: Vec<f64>,
+}
+
+impl NodeState for DsaNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.z)
+    }
+
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("DSA exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let (alpha, lam, q) = (ctx.alpha, p.lambda(), p.q());
+        let dim = p.dim();
+        let n = self.n;
+        let i = self.rng.below(q);
+        let zn = &mut self.z_next;
+        if t == 0 {
+            // z^1 = W z^0 - alpha (phibar^0 + lambda z^0)
+            w_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.nbrs, zn);
+            crate::linalg::axpy(-alpha, &self.saga.phibar, zn);
+            if lam != 0.0 {
+                crate::linalg::axpy(-alpha * lam, &self.z, zn);
+            }
+            // forward table refresh at z^0 is a no-op (phi = B(z^0))
+            self.evals += 1;
+        } else {
+            mix_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.z_prev, &self.nbrs, zn);
+            // forward delta at z^t
+            p.coefs(n, i, &self.z, &mut self.coefs);
+            self.evals += 1;
+            for (d, (c, ph)) in self
+                .dcur
+                .iter_mut()
+                .zip(self.coefs.iter().zip(self.saga.coef(i)))
+            {
+                *d = c - ph;
+            }
+            let (i_prev, ref dprev) = self.delta_prev;
+            p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, zn);
+            p.scatter(n, i, &self.dcur, -alpha, zn);
+            if lam != 0.0 {
+                for k in 0..dim {
+                    zn[k] -= alpha * lam * (self.z[k] - self.z_prev[k]);
+                }
+            }
+            // table update with the forward coefficients
+            let (ip, dp) = &mut self.delta_prev;
+            *ip = i;
+            dp.copy_from_slice(&self.dcur);
+            self.saga.update(p, n, i, &self.coefs, &mut self.dtable);
+        }
+        std::mem::swap(&mut self.z_prev, &mut self.z);
+        std::mem::swap(&mut self.z, &mut self.z_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn dsa_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<DsaNode> {
+    let n = problem.nodes();
+    let w = problem.coef_width();
+    let mut root = Rng::new(params.seed);
+    let ctx = Arc::new(DsaCtx { problem, mix, topo, alpha: params.alpha });
+    (0..n)
+        .map(|nd| DsaNode {
+            n: nd,
+            z: params.z0.clone(),
+            z_prev: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            saga: NodeSaga::init(ctx.problem.as_ref(), nd, &params.z0),
+            delta_prev: (0, vec![0.0; w]),
+            rng: root.fork(nd as u64),
+            evals: 0,
+            z_next: params.z0.clone(),
+            coefs: vec![0.0; w],
+            dcur: vec![0.0; w],
+            dtable: vec![0.0; w],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven DSA.
+pub struct Dsa {
+    drv: RoundDriver<DsaNode>,
 }
 
 impl Dsa {
@@ -44,104 +152,27 @@ impl Dsa {
         topo: Topology,
         params: &AlgoParams,
     ) -> Dsa {
-        let n = problem.nodes();
-        let z: Vec<Vec<f64>> = vec![params.z0.clone(); n];
-        let saga: Vec<NodeSaga> =
-            (0..n).map(|nd| NodeSaga::init(problem.as_ref(), nd, &params.z0)).collect();
-        let w = problem.coef_width();
-        let mut root = Rng::new(params.seed);
-        let rngs = (0..n).map(|nd| root.fork(nd as u64)).collect();
-        Dsa {
-            alpha: params.alpha,
-            z_prev: z.clone(),
-            z_next: z.clone(),
-            z,
-            saga,
-            delta_prev: vec![(0, vec![0.0; w]); n],
-            rngs,
-            t: 0,
-            evals: 0,
-            coefs: vec![0.0; w],
-            dcur: vec![0.0; w],
-            dtable: vec![0.0; w],
-            problem,
-            mix,
-            topo,
-        }
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = dsa_nodes(problem, mix, topo, params);
+        Dsa { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
     }
 }
 
 impl Algorithm for Dsa {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q());
-        let dim = p.dim();
-        net.round_dense_exchange(dim);
-
-        for n in 0..p.nodes() {
-            let i = self.rngs[n].below(q);
-            let zn = &mut self.z_next[n];
-            if self.t == 0 {
-                // z^1 = W z^0 - alpha (phibar^0 + lambda z^0)
-                zn.fill(0.0);
-                let add = |m: usize, zn: &mut [f64]| {
-                    let w = self.mix.w[(n, m)];
-                    if w != 0.0 {
-                        crate::linalg::axpy(w, &self.z[m], zn);
-                    }
-                };
-                add(n, zn);
-                for &m in self.topo.neighbors(n) {
-                    add(m, zn);
-                }
-                crate::linalg::axpy(-alpha, &self.saga[n].phibar, zn);
-                if lam != 0.0 {
-                    crate::linalg::axpy(-alpha * lam, &self.z[n], zn);
-                }
-                // forward table refresh at z^0 is a no-op (phi = B(z^0))
-                self.evals += 1;
-            } else {
-                self.mix.mix_row(n, &self.topo, &self.z, &self.z_prev, zn);
-                // forward delta at z^t
-                p.coefs(n, i, &self.z[n], &mut self.coefs);
-                self.evals += 1;
-                for (d, (c, ph)) in self
-                    .dcur
-                    .iter_mut()
-                    .zip(self.coefs.iter().zip(self.saga[n].coef(i)))
-                {
-                    *d = c - ph;
-                }
-                let (i_prev, ref dprev) = self.delta_prev[n];
-                p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, zn);
-                p.scatter(n, i, &self.dcur, -alpha, zn);
-                if lam != 0.0 {
-                    for k in 0..dim {
-                        zn[k] -= alpha * lam * (self.z[n][k] - self.z_prev[n][k]);
-                    }
-                }
-                // table update with the forward coefficients
-                let (ip, dp) = &mut self.delta_prev[n];
-                *ip = i;
-                dp.copy_from_slice(&self.dcur);
-                self.saga[n].update(p, n, i, &self.coefs, &mut self.dtable);
-            }
-        }
-        std::mem::swap(&mut self.z_prev, &mut self.z);
-        std::mem::swap(&mut self.z, &mut self.z_next);
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

@@ -1,8 +1,9 @@
 //! DSBA — Decentralized Stochastic Backward Aggregation (Algorithm 1),
-//! dense-communication implementation.
+//! dense-communication implementation, in per-node form.
 //!
 //! Per round, every node n:
-//!   1. gathers neighbor iterates (dense exchange),
+//!   1. broadcasts `z_n^t` to its neighbors and absorbs theirs (dense
+//!      exchange, Algorithm 1 line 3),
 //!   2. samples a component `i_n^t`,
 //!   3. forms `psi_n^t` — eq. (31) at t=0, eq. (29) for t>=1, with the l2
 //!      regularization folded in analytically (see operators module docs):
@@ -12,31 +13,132 @@
 //!   5. updates the SAGA table with the *post-step* coefficients
 //!      (the "backward aggregation" that distinguishes DSBA from DSA).
 
-use super::{AlgoParams, Algorithm, NodeSaga};
-use crate::comm::Network;
+use super::node::{broadcast_dense, mix_row_local, w_row_local, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeSaga, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
-pub struct Dsba {
-    problem: Arc<dyn Problem>,
-    mix: MixingMatrix,
-    topo: Topology,
-    alpha: f64,
-    /// z^t and z^{t-1}, one row per node
-    z: Vec<Vec<f64>>,
-    z_prev: Vec<Vec<f64>>,
-    saga: Vec<NodeSaga>,
-    /// previous round's (component, coefficient delta) per node
-    delta_prev: Vec<(usize, Vec<f64>)>,
-    rngs: Vec<Rng>,
-    t: usize,
+/// Shared immutable world of one DSBA instance.
+pub(crate) struct DsbaCtx {
+    pub problem: Arc<dyn Problem>,
+    pub mix: MixingMatrix,
+    pub topo: Topology,
+    pub alpha: f64,
+}
+
+/// One node's DSBA state.
+pub(crate) struct DsbaNode {
+    ctx: Arc<DsbaCtx>,
+    n: usize,
+    z: Vec<f64>,
+    z_prev: Vec<f64>,
+    nbrs: NeighborBuf,
+    pub(crate) saga: NodeSaga,
+    /// previous round's (component, coefficient delta)
+    delta_prev: (usize, Vec<f64>),
+    rng: Rng,
     evals: u64,
     /// scratch buffers reused across rounds (hot-path: no allocation)
     psi: Vec<f64>,
-    z_next: Vec<Vec<f64>>,
+    z_next: Vec<f64>,
     coefs_new: Vec<f64>,
+}
+
+impl NodeState for DsbaNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.z)
+    }
+
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("DSBA exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let (alpha, lam, q) = (ctx.alpha, p.lambda(), p.q());
+        let n = self.n;
+        let i = self.rng.below(q);
+        let psi = &mut self.psi;
+        if t == 0 {
+            // eq. (31): psi = sum_m w_{nm} z_m^0 + alpha (phi_{n,i} - phibar)
+            w_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.nbrs, psi);
+            p.scatter(n, i, self.saga.coef(i), alpha, psi);
+            crate::linalg::axpy(-alpha, &self.saga.phibar, psi);
+        } else {
+            // eq. (29) + analytic l2 term:
+            // psi = sum w~ (2z - z_prev) + alpha((q-1)/q delta_prev
+            //       + phi_{n,i}) + alpha lambda z_n
+            mix_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.z_prev, &self.nbrs, psi);
+            let (i_prev, ref dprev) = self.delta_prev;
+            p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, psi);
+            p.scatter(n, i, self.saga.coef(i), alpha, psi);
+            if lam != 0.0 {
+                crate::linalg::axpy(alpha * lam, &self.z, psi);
+            }
+        }
+        // backward step (30) — resolvent of the sampled component
+        p.backward(n, i, alpha, psi, &mut self.z_next, &mut self.coefs_new);
+        self.evals += 1;
+        // SAGA table update with post-step coefficients (line 7-8)
+        let (ip, dp) = &mut self.delta_prev;
+        *ip = i;
+        self.saga.update(p, n, i, &self.coefs_new, dp);
+        // synchronous commit
+        std::mem::swap(&mut self.z_prev, &mut self.z);
+        std::mem::swap(&mut self.z, &mut self.z_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Construct the per-node states (shared by the sequential driver and the
+/// parallel engine; RNG streams forked in node order).
+pub(crate) fn dsba_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<DsbaNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    assert_eq!(params.z0.len(), dim, "z0 dimension mismatch");
+    let w = problem.coef_width();
+    let mut root = Rng::new(params.seed);
+    let ctx = Arc::new(DsbaCtx { problem, mix, topo, alpha: params.alpha });
+    (0..n)
+        .map(|nd| DsbaNode {
+            n: nd,
+            z: params.z0.clone(),
+            z_prev: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            saga: NodeSaga::init(ctx.problem.as_ref(), nd, &params.z0),
+            delta_prev: (0, vec![0.0; w]),
+            rng: root.fork(nd as u64),
+            evals: 0,
+            psi: vec![0.0; dim],
+            z_next: params.z0.clone(),
+            coefs_new: vec![0.0; w],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven DSBA (the reference oracle).
+pub struct Dsba {
+    drv: RoundDriver<DsbaNode>,
 }
 
 impl Dsba {
@@ -46,106 +148,36 @@ impl Dsba {
         topo: Topology,
         params: &AlgoParams,
     ) -> Dsba {
-        let n = problem.nodes();
-        let dim = problem.dim();
-        assert_eq!(params.z0.len(), dim, "z0 dimension mismatch");
-        let z: Vec<Vec<f64>> = vec![params.z0.clone(); n];
-        let saga: Vec<NodeSaga> =
-            (0..n).map(|nd| NodeSaga::init(problem.as_ref(), nd, &params.z0)).collect();
-        let w = problem.coef_width();
-        let mut root = Rng::new(params.seed);
-        let rngs = (0..n).map(|nd| root.fork(nd as u64)).collect();
-        Dsba {
-            alpha: params.alpha,
-            z_prev: z.clone(),
-            z_next: z.clone(),
-            z,
-            saga,
-            delta_prev: vec![(0, vec![0.0; w]); n],
-            rngs,
-            t: 0,
-            evals: 0,
-            psi: vec![0.0; dim],
-            coefs_new: vec![0.0; w],
-            problem,
-            mix,
-            topo,
-        }
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = dsba_nodes(problem, mix, topo, params);
+        Dsba { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
     }
 
-    /// Access to the SAGA tables (Lyapunov probe & tests).
-    pub fn saga(&self) -> &[NodeSaga] {
-        &self.saga
+    /// Access to one node's SAGA table (Lyapunov probe & tests).
+    pub fn saga(&self, n: usize) -> &NodeSaga {
+        &self.drv.nodes[n].saga
     }
 
     pub fn alpha(&self) -> f64 {
-        self.alpha
+        self.drv.nodes[0].ctx.alpha
     }
 }
 
 impl Algorithm for Dsba {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q());
-        let dim = p.dim();
-        // 1. dense neighbor exchange (Algorithm 1, line 3)
-        net.round_dense_exchange(dim);
-
-        for n in 0..p.nodes() {
-            let i = self.rngs[n].below(q);
-            let psi = &mut self.psi;
-            if self.t == 0 {
-                // eq. (31): psi = sum_m w_{nm} z_m^0 + alpha (phi_{n,i} - phibar)
-                psi.fill(0.0);
-                let wrow = &self.mix.w;
-                let add = |m: usize, psi: &mut [f64]| {
-                    let w = wrow[(n, m)];
-                    if w != 0.0 {
-                        crate::linalg::axpy(w, &self.z[m], psi);
-                    }
-                };
-                add(n, psi);
-                for &m in self.topo.neighbors(n) {
-                    add(m, psi);
-                }
-                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
-                crate::linalg::axpy(-alpha, &self.saga[n].phibar, psi);
-            } else {
-                // eq. (29) + analytic l2 term:
-                // psi = sum w~ (2z - z_prev) + alpha((q-1)/q delta_prev
-                //       + phi_{n,i}) + alpha lambda z_n
-                self.mix.mix_row(n, &self.topo, &self.z, &self.z_prev, psi);
-                let (i_prev, ref dprev) = self.delta_prev[n];
-                p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, psi);
-                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
-                if lam != 0.0 {
-                    crate::linalg::axpy(alpha * lam, &self.z[n], psi);
-                }
-            }
-            // backward step (30) — resolvent of the sampled component
-            p.backward(n, i, alpha, psi, &mut self.z_next[n], &mut self.coefs_new);
-            self.evals += 1;
-            // SAGA table update with post-step coefficients (line 7-8)
-            let (ip, dp) = &mut self.delta_prev[n];
-            *ip = i;
-            self.saga[n].update(p, n, i, &self.coefs_new, dp);
-        }
-        // synchronous commit
-        std::mem::swap(&mut self.z_prev, &mut self.z);
-        std::mem::swap(&mut self.z, &mut self.z_next);
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

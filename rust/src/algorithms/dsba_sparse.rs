@@ -1,11 +1,12 @@
-//! DSBA-s: DSBA with the §5.1 sparse communication scheme.
+//! DSBA-s: DSBA with the §5.1 sparse communication scheme, in per-node
+//! message-passing form.
 //!
 //! Nodes never exchange dense iterates.  Each node transmits only its
 //! sparse update `delta_n^t = B_{n,i}(z^{t+1}) - phi_{n,i}` (support of a
-//! single data row, + the 3-scalar tail for AUC) through the BFS relay of
-//! [`crate::comm::RelayProtocol`], and *reconstructs* delayed copies of
-//! every other node's iterate by replaying the delta-closed recursion
-//! (28):
+//! single data row, + the 3-scalar tail for AUC) along the BFS forwarding
+//! trees of [`crate::comm::RelayProtocol`], and *reconstructs* delayed
+//! copies of every other node's iterate by replaying the delta-closed
+//! recursion (28):
 //!
 //! `(1 + alpha lambda) z_m^{tau+1} = sum_k w~_{mk} (2 z_k^tau -
 //!  z_k^{tau-1}) + alpha ((q-1)/q delta_m^{tau-1} - delta_m^tau)
@@ -18,16 +19,22 @@
 //! reconstruction advances every remote node by one step per round, in
 //! decreasing-distance order, using a 3-deep history ring per remote node.
 //!
-//! The only dense traffic is a one-time flood of the initial table means
-//! `phibar_m^0` (accounted on the first round), needed for the `tau = 0`
-//! base case of the replay — the `O(Nd)` per-node storage the paper's
-//! §5.1 complexity analysis allows.
+//! Relaying is now *literally* message passing: a node's
+//! [`NodeState::outgoing`] forwards the deltas received last round (plus
+//! its own fresh delta) to the neighbors for which it is the designated
+//! parent on the source's BFS tree — each delta crosses every tree edge
+//! exactly once, the `O(N rho d)` DOUBLEs of Table 1.  The only dense
+//! traffic is a one-time flood of the initial table means `phibar_m^0`
+//! (accounted before round 0 via the driver's setup schedule), needed for
+//! the `tau = 0` base case of the replay — the `O(Nd)` per-node storage
+//! the paper's §5.1 complexity analysis allows.
 //!
 //! Equivalence with dense [`super::Dsba`] (identical iterate sequences
 //! under identical seeds) is enforced by `rust/tests/sparse_comm.rs`.
 
-use super::{AlgoParams, Algorithm, NodeSaga};
-use crate::comm::{Network, RelayDelta, RelayProtocol};
+use super::node::RoundDriver;
+use super::{AlgoParams, Algorithm, NodeSaga, NodeState};
+use crate::comm::{Message, Network, Outgoing, RelayDelta, RelayProtocol};
 use crate::graph::{MixingMatrix, Topology};
 use crate::linalg::SparseVec;
 use crate::operators::Problem;
@@ -85,8 +92,34 @@ impl ArchivedDelta {
     }
 }
 
-/// Per-node view of the network (what §5.1 calls the node's "memory").
-struct NodeView {
+/// The archived delta of source `m` at `time` (panics if the wavefront
+/// invariant is violated and the slot holds a different round).
+fn archived_at<'a>(
+    archive_m: &'a [Option<(i64, ArchivedDelta)>; 2],
+    m: usize,
+    time: i64,
+) -> &'a ArchivedDelta {
+    let (tt, d) = archive_m[(time.rem_euclid(2)) as usize]
+        .as_ref()
+        .map(|(t, d)| (*t, d))
+        .unwrap_or_else(|| panic!("missing delta_{m}^{time}"));
+    assert_eq!(tt, time, "archive slot holds wrong time");
+    d
+}
+
+pub(crate) struct DsbaSparseCtx {
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    alpha: f64,
+    /// precomputed BFS forwarding trees (read-only: children tables)
+    relay: RelayProtocol,
+}
+
+/// One node's DSBA-s state (what §5.1 calls the node's "memory").
+pub(crate) struct DsbaSparseNode {
+    ctx: Arc<DsbaSparseCtx>,
+    n: usize,
     /// reconstructed rows for every node (own entry holds exact rows)
     replay: Vec<ReplayBuf>,
     /// two-deep delta archive per source: archive[m][t % 2]
@@ -95,28 +128,285 @@ struct NodeView {
     phibar0: Vec<Vec<f64>>,
     /// remote nodes in decreasing-distance order
     order: Vec<usize>,
+    saga: NodeSaga,
+    delta_prev: (usize, Vec<f64>),
+    rng: Rng,
+    evals: u64,
+    /// own iterates (z^t, z^{t-1}) — mirrors of replay[n] kept for the
+    /// NodeState::iterate() interface
+    z: Vec<f64>,
+    z_prev: Vec<f64>,
+    /// deltas received this round, to forward next round
+    inbox_next: Vec<RelayDelta>,
+    /// deltas received last round (forward targets resolved in outgoing)
+    pending: Vec<RelayDelta>,
+    /// own delta produced last round, injected this round
+    fresh: Option<RelayDelta>,
+    psi: Vec<f64>,
+    coefs_new: Vec<f64>,
 }
 
-pub struct DsbaSparse {
+impl DsbaSparseNode {
+    /// Build the communicated sparse delta from a coefficient diff:
+    /// feature block = dcoefs[0] * a_{n,i}, tail = dcoefs[1..].
+    fn make_delta(&self, i: usize, dcoefs: &[f64]) -> ArchivedDelta {
+        let row = self.ctx.problem.partition().shards[self.n].row_sparse(i);
+        ArchivedDelta { vec: row.scaled(dcoefs[0]), tail: dcoefs[1..].to_vec() }
+    }
+
+    /// Replay node `m` one step forward: reconstruct `z_m^{target}` from
+    /// archived deltas and neighbor history.
+    fn advance_replay(&mut self, m: usize, target: i64) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let (alpha, lam, q) = (ctx.alpha, p.lambda(), p.q() as f64);
+        let d_feat = p.feature_dim();
+        let dim = p.dim();
+        let scale = 1.0 / (1.0 + alpha * lam);
+        // write into the ring slot being retired (time target-3): it is
+        // dead, and all reads below touch times target-1/target-2 of m or
+        // other nodes' buffers, so no aliasing. Avoids an O(d) alloc per
+        // (node, remote) pair per round (see EXPERIMENTS.md §Perf).
+        let mut new_row =
+            std::mem::take(&mut self.replay[m].rows[ReplayBuf::slot(target)]);
+        new_row.fill(0.0);
+        debug_assert_eq!(new_row.len(), dim);
+        if target == 1 {
+            // base case: (1+al) z_m^1 = z^0 - alpha (delta_m^0 + phibar_m^0)
+            let (t0, d0) = self.archive[m][0]
+                .as_ref()
+                .map(|(t, d)| (*t, d))
+                .expect("delta_m^0 must have arrived before replay start");
+            assert_eq!(t0, 0, "expected delta at time 0");
+            new_row.copy_from_slice(self.replay[m].row(0)); // z^0
+            d0.axpy(-alpha, &mut new_row, d_feat);
+            crate::linalg::axpy(-alpha, &self.phibar0[m], &mut new_row);
+            crate::linalg::scale(&mut new_row, scale);
+        } else {
+            let tau = target - 1;
+            // mixing over m's neighborhood at times (tau, tau-1)
+            {
+                let replay = &self.replay;
+                let mut mix_term = |k: usize, out: &mut [f64]| {
+                    let w = ctx.mix.wt[(m, k)];
+                    if w == 0.0 {
+                        return;
+                    }
+                    let zk = replay[k].row(tau);
+                    let zkp = replay[k].row(tau - 1);
+                    for idx in 0..dim {
+                        out[idx] += w * (2.0 * zk[idx] - zkp[idx]);
+                    }
+                };
+                mix_term(m, &mut new_row[..]);
+                for &k in ctx.topo.neighbors(m) {
+                    mix_term(k, &mut new_row[..]);
+                }
+            }
+            // + alpha ((q-1)/q delta_m^{tau-1} - delta_m^tau) + alpha lam z_m^tau
+            let archive_m = &self.archive[m];
+            archived_at(archive_m, m, tau).axpy(-alpha, &mut new_row, d_feat);
+            if tau >= 1 {
+                archived_at(archive_m, m, tau - 1).axpy(
+                    alpha * (q - 1.0) / q,
+                    &mut new_row,
+                    d_feat,
+                );
+            }
+            if lam != 0.0 {
+                crate::linalg::axpy(alpha * lam, self.replay[m].row(tau), &mut new_row);
+            }
+            crate::linalg::scale(&mut new_row, scale);
+        }
+        *self.replay[m].advance_into(target) = new_row;
+    }
+}
+
+impl NodeState for DsbaSparseNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        // forward everything received last round, plus the fresh injection
+        // (delta produced by last round's local step) — each delta goes to
+        // the children for which this node is the designated parent on the
+        // source's BFS tree
+        let mut msgs = std::mem::take(&mut self.pending);
+        if let Some(f) = self.fresh.take() {
+            msgs.push(f);
+        }
+        let mut out = Vec::new();
+        for d in msgs {
+            let targets = self.ctx.relay.children(self.n, d.src as usize);
+            for &l in targets {
+                out.push(Outgoing { to: l, msg: Message::Sparse(d.clone()) });
+            }
+        }
+        out
+    }
+
+    fn on_receive(&mut self, _from: usize, msg: Message) {
+        let d = match msg {
+            Message::Sparse(d) => d,
+            Message::Dense(_) => panic!("DSBA-s relays sparse deltas only"),
+        };
+        let src = d.src as usize;
+        let time = d.t as i64;
+        self.archive[src][(time.rem_euclid(2)) as usize] = Some((
+            time,
+            ArchivedDelta { vec: d.vec.clone(), tail: d.tail.clone() },
+        ));
+        self.inbox_next.push(d);
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.clone();
+        let (alpha, lam, q) = (ctx.alpha, p.lambda(), p.q());
+        let dim = p.dim();
+        let t_i = t as i64;
+        let n = self.n;
+        // this round's receipts become next round's forwards
+        self.pending = std::mem::take(&mut self.inbox_next);
+
+        // advance remote nodes farthest-first
+        for idx in 0..self.order.len() {
+            let m = self.order[idx];
+            let target = t_i + 1 - ctx.topo.dist[n][m] as i64;
+            if target >= 1 {
+                debug_assert_eq!(self.replay[m].newest, target - 1);
+                self.advance_replay(m, target);
+            }
+        }
+
+        // psi_n^t from reconstructed neighbor rows
+        let i = self.rng.below(q);
+        let psi = &mut self.psi;
+        if t == 0 {
+            // consensus start: sum_m w z^0 = z^0
+            psi.copy_from_slice(self.replay[n].row(0));
+            p.scatter(n, i, self.saga.coef(i), alpha, psi);
+            crate::linalg::axpy(-alpha, &self.saga.phibar, psi);
+        } else {
+            psi.fill(0.0);
+            {
+                let replay = &self.replay;
+                let mut mix_term = |m: usize, out: &mut [f64]| {
+                    let w = ctx.mix.wt[(n, m)];
+                    if w == 0.0 {
+                        return;
+                    }
+                    let zm = replay[m].row(t_i);
+                    let zmp = replay[m].row(t_i - 1);
+                    for k in 0..dim {
+                        out[k] += w * (2.0 * zm[k] - zmp[k]);
+                    }
+                };
+                mix_term(n, &mut psi[..]);
+                for &m in ctx.topo.neighbors(n) {
+                    mix_term(m, &mut psi[..]);
+                }
+            }
+            let (i_prev, ref dprev) = self.delta_prev;
+            p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, psi);
+            p.scatter(n, i, self.saga.coef(i), alpha, psi);
+            if lam != 0.0 {
+                crate::linalg::axpy(alpha * lam, self.replay[n].row(t_i), psi);
+            }
+        }
+        // backward step; own row advances to time t+1
+        let mut z_new = vec![0.0; dim];
+        p.backward(n, i, alpha, psi, &mut z_new, &mut self.coefs_new);
+        self.evals += 1;
+        let (ip, dp) = &mut self.delta_prev;
+        *ip = i;
+        self.saga.update(p.as_ref(), n, i, &self.coefs_new, dp);
+        // own archive + fresh outgoing delta (delta_n^t)
+        let arch = self.make_delta(i, &self.delta_prev.1.clone());
+        self.archive[n][(t_i.rem_euclid(2)) as usize] = Some((t_i, arch.clone()));
+        self.fresh = Some(RelayDelta {
+            src: n as u32,
+            t: t as u32,
+            vec: arch.vec.clone(),
+            tail: arch.tail.clone(),
+        });
+        self.z_prev.copy_from_slice(self.replay[n].row(t_i));
+        *self.replay[n].advance_into(t_i + 1) = z_new.clone();
+        self.z = z_new;
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Round-0 accounting schedule for the one-time dense flood of the
+/// initial table means `phibar_m^0` along the BFS trees: every non-source
+/// node receives each source's vector exactly once, from its designated
+/// parent — the `O(Nd)` setup cost of §5.1.
+pub(crate) fn flood_schedule(topo: &Topology, dim: usize) -> Vec<(usize, usize, usize)> {
+    let mut setup = Vec::new();
+    for src in 0..topo.n {
+        for node in 0..topo.n {
+            if node == src {
+                continue;
+            }
+            let parent = topo.designated_parent(src, node).unwrap();
+            setup.push((parent, node, dim));
+        }
+    }
+    setup
+}
+
+pub(crate) fn dsba_sparse_nodes(
     problem: Arc<dyn Problem>,
     mix: MixingMatrix,
     topo: Topology,
-    alpha: f64,
-    views: Vec<NodeView>,
-    saga: Vec<NodeSaga>,
-    delta_prev: Vec<(usize, Vec<f64>)>,
-    /// own iterates (z^t, z^{t-1}) — mirrors of replay[n][n] kept for the
-    /// Algorithm::iterates() interface
-    z: Vec<Vec<f64>>,
-    z_prev: Vec<Vec<f64>>,
-    relay: RelayProtocol,
-    /// deltas produced last round, to inject this round
-    fresh: Vec<Option<RelayDelta>>,
-    rngs: Vec<Rng>,
-    t: usize,
-    evals: u64,
-    psi: Vec<f64>,
-    coefs_new: Vec<f64>,
+    params: &AlgoParams,
+) -> Vec<DsbaSparseNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    assert_eq!(params.z0.len(), dim);
+    let saga: Vec<NodeSaga> =
+        (0..n).map(|nd| NodeSaga::init(problem.as_ref(), nd, &params.z0)).collect();
+    // one-time flood payload: every node learns every phibar_m^0
+    let phibar0: Vec<Vec<f64>> = saga.iter().map(|s| s.phibar.clone()).collect();
+    let w = problem.coef_width();
+    let mut root = Rng::new(params.seed);
+    let relay = RelayProtocol::new(&topo);
+    let ctx = Arc::new(DsbaSparseCtx { problem, mix, topo, alpha: params.alpha, relay });
+    saga.into_iter()
+        .enumerate()
+        .map(|(nd, saga_nd)| {
+            let mut order: Vec<usize> = (0..n).filter(|&m| m != nd).collect();
+            order.sort_by_key(|&m| std::cmp::Reverse(ctx.topo.dist[nd][m]));
+            DsbaSparseNode {
+                n: nd,
+                replay: (0..n).map(|_| ReplayBuf::new(&params.z0)).collect(),
+                archive: vec![[None, None]; n],
+                phibar0: phibar0.clone(),
+                order,
+                saga: saga_nd,
+                delta_prev: (0, vec![0.0; w]),
+                rng: root.fork(nd as u64),
+                evals: 0,
+                z: params.z0.clone(),
+                z_prev: params.z0.clone(),
+                inbox_next: Vec::new(),
+                pending: Vec::new(),
+                fresh: None,
+                psi: vec![0.0; dim],
+                coefs_new: vec![0.0; w],
+                ctx: ctx.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Sequentially driven DSBA-s.
+pub struct DsbaSparse {
+    drv: RoundDriver<DsbaSparseNode>,
 }
 
 impl DsbaSparse {
@@ -126,248 +416,28 @@ impl DsbaSparse {
         topo: Topology,
         params: &AlgoParams,
     ) -> DsbaSparse {
-        let n = problem.nodes();
-        let dim = problem.dim();
-        assert_eq!(params.z0.len(), dim);
-        let saga: Vec<NodeSaga> =
-            (0..n).map(|nd| NodeSaga::init(problem.as_ref(), nd, &params.z0)).collect();
-        // one-time flood payload: every node learns every phibar_m^0
-        let phibar0: Vec<Vec<f64>> = saga.iter().map(|s| s.phibar.clone()).collect();
-        let views = (0..n)
-            .map(|nd| {
-                let mut order: Vec<usize> = (0..n).filter(|&m| m != nd).collect();
-                order.sort_by_key(|&m| std::cmp::Reverse(topo.dist[nd][m]));
-                NodeView {
-                    replay: (0..n).map(|_| ReplayBuf::new(&params.z0)).collect(),
-                    archive: vec![[None, None]; n],
-                    phibar0: phibar0.clone(),
-                    order,
-                }
-            })
-            .collect();
-        let w = problem.coef_width();
-        let mut root = Rng::new(params.seed);
-        let rngs = (0..n).map(|nd| root.fork(nd as u64)).collect();
-        let relay = RelayProtocol::new(&topo);
-        DsbaSparse {
-            alpha: params.alpha,
-            views,
-            saga,
-            delta_prev: vec![(0, vec![0.0; w]); n],
-            z: vec![params.z0.clone(); n],
-            z_prev: vec![params.z0.clone(); n],
-            relay,
-            fresh: vec![None; n],
-            rngs,
-            t: 0,
-            evals: 0,
-            psi: vec![0.0; dim],
-            coefs_new: vec![0.0; w],
-            problem,
-            mix,
-            topo,
-        }
-    }
-
-    /// Build the communicated sparse delta from a coefficient diff:
-    /// feature block = dcoefs[0] * a_{n,i}, tail = dcoefs[1..].
-    fn make_delta(&self, n: usize, i: usize, dcoefs: &[f64]) -> ArchivedDelta {
-        let row = self.problem.partition().shards[n].row_sparse(i);
-        ArchivedDelta { vec: row.scaled(dcoefs[0]), tail: dcoefs[1..].to_vec() }
-    }
-
-    /// Replay node `m` one step forward inside `view`: reconstruct
-    /// `z_m^{target}` from archived deltas and neighbor history.
-    fn advance_replay(&self, view: &mut NodeView, m: usize, target: i64) {
-        let p = self.problem.as_ref();
-        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q() as f64);
-        let d_feat = p.feature_dim();
-        let dim = p.dim();
-        let scale = 1.0 / (1.0 + alpha * lam);
-        // write into the ring slot being retired (time target-3): it is
-        // dead, and all reads below touch times target-1/target-2 of m or
-        // other nodes' buffers, so no aliasing. Avoids an O(d) alloc per
-        // (node, remote) pair per round (see EXPERIMENTS.md §Perf).
-        let mut new_row = std::mem::take(
-            &mut view.replay[m].rows[ReplayBuf::slot(target)],
-        );
-        new_row.fill(0.0);
-        debug_assert_eq!(new_row.len(), dim);
-        if target == 1 {
-            // base case: (1+al) z_m^1 = z^0 - alpha (delta_m^0 + phibar_m^0)
-            let (t0, d0) = view.archive[m][0]
-                .as_ref()
-                .map(|(t, d)| (*t, d))
-                .expect("delta_m^0 must have arrived before replay start");
-            assert_eq!(t0, 0, "expected delta at time 0");
-            new_row.copy_from_slice(view.replay[m].row(0)); // z^0
-            d0.axpy(-alpha, &mut new_row, d_feat);
-            crate::linalg::axpy(-alpha, &view.phibar0[m], &mut new_row);
-            crate::linalg::scale(&mut new_row, scale);
-        } else {
-            let tau = target - 1;
-            // mixing over m's neighborhood at times (tau, tau-1)
-            let mix_term = |k: usize, out: &mut [f64]| {
-                let w = self.mix.wt[(m, k)];
-                if w == 0.0 {
-                    return;
-                }
-                let zk = view.replay[k].row(tau);
-                let zkp = view.replay[k].row(tau - 1);
-                for idx in 0..dim {
-                    out[idx] += w * (2.0 * zk[idx] - zkp[idx]);
-                }
-            };
-            mix_term(m, &mut new_row);
-            for &k in self.topo.neighbors(m) {
-                mix_term(k, &mut new_row);
-            }
-            // + alpha ((q-1)/q delta_m^{tau-1} - delta_m^tau) + alpha lam z_m^tau
-            let get = |time: i64| -> &ArchivedDelta {
-                let (tt, d) = view.archive[m][(time.rem_euclid(2)) as usize]
-                    .as_ref()
-                    .map(|(t, d)| (*t, d))
-                    .unwrap_or_else(|| panic!("missing delta_{m}^{time}"));
-                assert_eq!(tt, time, "archive slot holds wrong time");
-                d
-            };
-            get(tau).axpy(-alpha, &mut new_row, d_feat);
-            if tau >= 1 {
-                get(tau - 1).axpy(alpha * (q - 1.0) / q, &mut new_row, d_feat);
-            }
-            if lam != 0.0 {
-                crate::linalg::axpy(alpha * lam, view.replay[m].row(tau), &mut new_row);
-            }
-            crate::linalg::scale(&mut new_row, scale);
-        }
-        *view.replay[m].advance_into(target) = new_row;
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let setup = flood_schedule(&topo, problem.dim());
+        let nodes = dsba_sparse_nodes(problem, mix, topo, params);
+        DsbaSparse { drv: RoundDriver::new(nodes, setup, pass_denom) }
     }
 }
 
 impl Algorithm for DsbaSparse {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.clone();
-        let (alpha, lam, q) = (self.alpha, p.lambda(), p.q());
-        let dim = p.dim();
-        let t = self.t as i64;
-
-        // one-time flood of phibar^0 along the relay trees (dense, N-1
-        // vectors received per node) — the O(Nd) setup cost of §5.1
-        if self.t == 0 {
-            for src in 0..p.nodes() {
-                // walk the BFS tree: every non-src node receives once
-                for node in 0..p.nodes() {
-                    if node == src {
-                        continue;
-                    }
-                    let parent = self.topo.designated_parent(src, node).unwrap();
-                    net.send_dense(parent, node, dim);
-                }
-            }
-        }
-
-        // 1. relay round: inject deltas produced last iteration; the inbox
-        //    delivers delta_s^{t - xi_s} to each node
-        let fresh = std::mem::replace(&mut self.fresh, vec![None; p.nodes()]);
-        let inboxes = self.relay.round(fresh, net);
-        for (n, inbox) in inboxes.into_iter().enumerate() {
-            for d in inbox {
-                let src = d.src as usize;
-                let time = d.t as i64;
-                self.views[n].archive[src][(time.rem_euclid(2)) as usize] =
-                    Some((time, ArchivedDelta { vec: d.vec, tail: d.tail }));
-            }
-        }
-
-        // 2-4. per node: advance replay wavefront, compute psi, backward
-        let mut new_fresh: Vec<Option<RelayDelta>> = vec![None; p.nodes()];
-        for n in 0..p.nodes() {
-            let mut view = std::mem::replace(
-                &mut self.views[n],
-                NodeView {
-                    replay: Vec::new(),
-                    archive: Vec::new(),
-                    phibar0: Vec::new(),
-                    order: Vec::new(),
-                },
-            );
-            // advance remote nodes farthest-first
-            for idx in 0..view.order.len() {
-                let m = view.order[idx];
-                let target = t + 1 - self.topo.dist[n][m] as i64;
-                if target >= 1 {
-                    debug_assert_eq!(view.replay[m].newest, target - 1);
-                    self.advance_replay(&mut view, m, target);
-                }
-            }
-
-            // psi_n^t from reconstructed neighbor rows
-            let i = self.rngs[n].below(q);
-            let psi = &mut self.psi;
-            if self.t == 0 {
-                // consensus start: sum_m w z^0 = z^0
-                psi.copy_from_slice(view.replay[n].row(0));
-                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
-                crate::linalg::axpy(-alpha, &self.saga[n].phibar, psi);
-            } else {
-                psi.fill(0.0);
-                let mix_term = |m: usize, out: &mut [f64]| {
-                    let w = self.mix.wt[(n, m)];
-                    if w == 0.0 {
-                        return;
-                    }
-                    let zm = view.replay[m].row(t);
-                    let zmp = view.replay[m].row(t - 1);
-                    for k in 0..dim {
-                        out[k] += w * (2.0 * zm[k] - zmp[k]);
-                    }
-                };
-                mix_term(n, psi);
-                for &m in self.topo.neighbors(n) {
-                    mix_term(m, psi);
-                }
-                let (i_prev, ref dprev) = self.delta_prev[n];
-                p.scatter(n, i_prev, dprev, alpha * (q as f64 - 1.0) / q as f64, psi);
-                p.scatter(n, i, self.saga[n].coef(i), alpha, psi);
-                if lam != 0.0 {
-                    crate::linalg::axpy(alpha * lam, view.replay[n].row(t), psi);
-                }
-            }
-            // backward step; own row advances to time t+1
-            let mut z_new = vec![0.0; dim];
-            p.backward(n, i, alpha, psi, &mut z_new, &mut self.coefs_new);
-            self.evals += 1;
-            let (ip, dp) = &mut self.delta_prev[n];
-            *ip = i;
-            self.saga[n].update(p.as_ref(), n, i, &self.coefs_new, dp);
-            // own archive + fresh outgoing delta (delta_n^t)
-            let arch = self.make_delta(n, i, &self.delta_prev[n].1.clone());
-            view.archive[n][(t.rem_euclid(2)) as usize] = Some((t, arch.clone()));
-            new_fresh[n] = Some(RelayDelta {
-                src: n as u32,
-                t: t as u32,
-                vec: arch.vec.clone(),
-                tail: arch.tail.clone(),
-            });
-            self.z_prev[n].copy_from_slice(view.replay[n].row(t));
-            *view.replay[n].advance_into(t + 1) = z_new.clone();
-            self.z[n] = z_new;
-            self.views[n] = view;
-        }
-        self.fresh = new_fresh;
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

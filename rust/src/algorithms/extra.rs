@@ -6,25 +6,105 @@
 //! `B_n(z) + lambda z`.  Linear convergence at
 //! `O((kappa^2 + kappa_g) log 1/eps)` (Table 1).
 
-use super::{AlgoParams, Algorithm};
-use crate::comm::Network;
+use super::node::{broadcast_dense, mix_row_local, w_row_local, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
 use std::sync::Arc;
 
-pub struct Extra {
+pub(crate) struct ExtraCtx {
     problem: Arc<dyn Problem>,
     mix: MixingMatrix,
     topo: Topology,
     alpha: f64,
-    z: Vec<Vec<f64>>,
-    z_prev: Vec<Vec<f64>>,
-    /// full regularized operator at z^{t-1}, per node
-    g_prev: Vec<Vec<f64>>,
-    t: usize,
+}
+
+pub(crate) struct ExtraNode {
+    ctx: Arc<ExtraCtx>,
+    n: usize,
+    z: Vec<f64>,
+    z_prev: Vec<f64>,
+    nbrs: NeighborBuf,
+    /// full regularized operator at z^{t-1}
+    g_prev: Vec<f64>,
     evals: u64,
-    z_next: Vec<Vec<f64>>,
+    z_next: Vec<f64>,
     g: Vec<f64>,
+}
+
+impl NodeState for ExtraNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.z)
+    }
+
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("EXTRA exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let alpha = ctx.alpha;
+        let dim = p.dim();
+        let n = self.n;
+        p.full_operator(n, &self.z, &mut self.g);
+        self.evals += p.q() as u64;
+        let zn = &mut self.z_next;
+        if t == 0 {
+            // z^1 = W z^0 - alpha g(z^0)
+            w_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.nbrs, zn);
+            crate::linalg::axpy(-alpha, &self.g, zn);
+        } else {
+            mix_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.z_prev, &self.nbrs, zn);
+            for k in 0..dim {
+                zn[k] -= alpha * (self.g[k] - self.g_prev[k]);
+            }
+        }
+        self.g_prev.copy_from_slice(&self.g);
+        std::mem::swap(&mut self.z_prev, &mut self.z);
+        std::mem::swap(&mut self.z, &mut self.z_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn extra_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<ExtraNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    let ctx = Arc::new(ExtraCtx { problem, mix, topo, alpha: params.alpha });
+    (0..n)
+        .map(|nd| ExtraNode {
+            n: nd,
+            z: params.z0.clone(),
+            z_prev: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            g_prev: vec![0.0; dim],
+            evals: 0,
+            z_next: params.z0.clone(),
+            g: vec![0.0; dim],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven EXTRA.
+pub struct Extra {
+    drv: RoundDriver<ExtraNode>,
 }
 
 impl Extra {
@@ -34,72 +114,27 @@ impl Extra {
         topo: Topology,
         params: &AlgoParams,
     ) -> Extra {
-        let n = problem.nodes();
-        let dim = problem.dim();
-        let z = vec![params.z0.clone(); n];
-        Extra {
-            alpha: params.alpha,
-            z_prev: z.clone(),
-            z_next: z.clone(),
-            g_prev: vec![vec![0.0; dim]; n],
-            z,
-            t: 0,
-            evals: 0,
-            g: vec![0.0; dim],
-            problem,
-            mix,
-            topo,
-        }
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = extra_nodes(problem, mix, topo, params);
+        Extra { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
     }
 }
 
 impl Algorithm for Extra {
     fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let alpha = self.alpha;
-        let dim = p.dim();
-        net.round_dense_exchange(dim);
-        for n in 0..p.nodes() {
-            p.full_operator(n, &self.z[n], &mut self.g);
-            self.evals += p.q() as u64;
-            let zn = &mut self.z_next[n];
-            if self.t == 0 {
-                // z^1 = W z^0 - alpha g(z^0)
-                zn.fill(0.0);
-                let add = |m: usize, zn: &mut [f64]| {
-                    let w = self.mix.w[(n, m)];
-                    if w != 0.0 {
-                        crate::linalg::axpy(w, &self.z[m], zn);
-                    }
-                };
-                add(n, zn);
-                for &m in self.topo.neighbors(n) {
-                    add(m, zn);
-                }
-                crate::linalg::axpy(-alpha, &self.g, zn);
-            } else {
-                self.mix.mix_row(n, &self.topo, &self.z, &self.z_prev, zn);
-                for k in 0..dim {
-                    zn[k] -= alpha * (self.g[k] - self.g_prev[n][k]);
-                }
-            }
-            self.g_prev[n].copy_from_slice(&self.g);
-        }
-        std::mem::swap(&mut self.z_prev, &mut self.z);
-        std::mem::swap(&mut self.z, &mut self.z_next);
-        self.t += 1;
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

@@ -13,9 +13,22 @@
 //! | DGD        | diminishing-step consensus       | dense Δ(G)d       |
 //! | Point-SAGA | single-node stochastic backward  | none              |
 //!
-//! All methods share the same [`Algorithm`] interface driven by the
-//! coordinator one synchronous round at a time, with all communication
-//! accounted through [`crate::comm::Network`].
+//! Every method is implemented as a **per-node state machine**
+//! ([`NodeState`]): a node emits typed [`Message`]s to its neighbors,
+//! absorbs the round's deliveries, then runs a local update. Two drivers
+//! execute that decomposition:
+//!
+//! * the sequential [`node::RoundDriver`] — deterministic node order, the
+//!   reference oracle, behind each method's [`Algorithm`] impl;
+//! * the multi-threaded [`crate::runtime::ParallelEngine`] — one worker
+//!   thread per node group, mpsc channels on the topology's edges,
+//!   barrier-synchronized rounds. Bit-for-bit equal to the sequential
+//!   driver under the same seed (per-node RNG streams are forked
+//!   identically), pinned by `rust/tests/engine_parity.rs`.
+//!
+//! All communication is accounted through [`crate::comm::Network`].
+
+pub mod node;
 
 mod saga;
 mod dsba;
@@ -39,13 +52,14 @@ pub use point_saga::PointSaga;
 pub use saga::NodeSaga;
 pub use ssda::Ssda;
 
-use crate::comm::Network;
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::MixingMatrix;
 use crate::operators::Problem;
 use std::sync::Arc;
 
 /// One decentralized optimization method, stepped one synchronous round
-/// at a time.
+/// at a time. The step is the sequential reference execution of the
+/// method's per-node decomposition (see [`NodeState`]).
 pub trait Algorithm {
     /// Execute one synchronous round on every node; all transmissions are
     /// accounted into `net`.
@@ -63,6 +77,39 @@ pub trait Algorithm {
     fn iteration(&self) -> usize;
 
     fn name(&self) -> &'static str;
+}
+
+/// One node's slice of a decentralized method: the unit both the
+/// sequential driver and the parallel engine schedule.
+///
+/// Round protocol (synchronous, round `t`):
+/// 1. [`NodeState::outgoing`] — emit this round's messages to neighbors
+///    (may mutate local state: SSDA runs its conjugate oracle pre-send);
+/// 2. [`NodeState::on_receive`] — absorb each delivered message; within a
+///    round, handlers must be order-independent across senders (the
+///    engine delivers in ascending sender order for determinism anyway);
+/// 3. [`NodeState::local_step`] — the local update once the round's
+///    messages are all in.
+///
+/// Determinism contract: given identical construction (seeded per-node
+/// RNG streams forked in node order) and per-round message sets, the
+/// iterate sequence must not depend on scheduling — nodes may only read
+/// their own state plus received payloads.
+pub trait NodeState: Send {
+    /// Messages to emit at the start of round `t`.
+    fn outgoing(&mut self, t: usize) -> Vec<Outgoing>;
+
+    /// Deliver one message from neighbor `from`.
+    fn on_receive(&mut self, from: usize, msg: Message);
+
+    /// Local update once the round's messages are all delivered.
+    fn local_step(&mut self, t: usize);
+
+    /// Current iterate `z_n^t` (primal estimate for dual methods).
+    fn iterate(&self) -> &[f64];
+
+    /// Component evaluations so far on this node.
+    fn evals(&self) -> u64;
 }
 
 /// Method selector.
@@ -172,7 +219,7 @@ impl AlgoParams {
     }
 }
 
-/// Build an algorithm instance.
+/// Build an algorithm instance (sequential reference driver).
 pub fn build(
     kind: AlgorithmKind,
     problem: Arc<dyn Problem>,
@@ -195,4 +242,79 @@ pub fn build(
         AlgorithmKind::Dgd => Box::new(Dgd::new(problem, mix.clone(), topo.clone(), params)),
         AlgorithmKind::PointSaga => Box::new(PointSaga::new(problem, params)),
     }
+}
+
+/// A method decomposed into engine-schedulable per-node states, plus the
+/// round-0 setup accounting (DSBA-s's one-time phibar flood) and the
+/// effective-passes denominator.
+pub struct NodeProgram {
+    pub kind: AlgorithmKind,
+    pub nodes: Vec<Box<dyn NodeState>>,
+    /// (from, to, dense_len) sends charged once before round 0
+    pub setup: Vec<(usize, usize, usize)>,
+    /// `N * q`
+    pub pass_denom: f64,
+}
+
+fn boxup<N: NodeState + 'static>(v: Vec<N>) -> Vec<Box<dyn NodeState>> {
+    v.into_iter().map(|x| Box::new(x) as Box<dyn NodeState>).collect()
+}
+
+/// Decompose a method into per-node states for an external engine. The
+/// states are constructed identically to [`build`]'s (same RNG forking
+/// order), so any engine that respects the round protocol reproduces the
+/// sequential iterate sequence exactly.
+pub fn build_node_program(
+    kind: AlgorithmKind,
+    problem: Arc<dyn Problem>,
+    mix: &MixingMatrix,
+    topo: &crate::graph::Topology,
+    params: &AlgoParams,
+) -> NodeProgram {
+    let pass_denom = (problem.nodes() * problem.q()) as f64;
+    let (nodes, setup) = match kind {
+        AlgorithmKind::Dsba => (
+            boxup(dsba::dsba_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::DsbaSparse => {
+            let dim = problem.dim();
+            (
+                boxup(dsba_sparse::dsba_sparse_nodes(
+                    problem,
+                    mix.clone(),
+                    topo.clone(),
+                    params,
+                )),
+                dsba_sparse::flood_schedule(topo, dim),
+            )
+        }
+        AlgorithmKind::Dsa => (
+            boxup(dsa::dsa_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::Extra => (
+            boxup(extra::extra_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::PExtra => (
+            boxup(p_extra::p_extra_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::Dlm => {
+            (boxup(dlm::dlm_nodes(problem, topo.clone(), params)), Vec::new())
+        }
+        AlgorithmKind::Ssda => (
+            boxup(ssda::ssda_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::Dgd => (
+            boxup(dgd::dgd_nodes(problem, mix.clone(), topo.clone(), params)),
+            Vec::new(),
+        ),
+        AlgorithmKind::PointSaga => {
+            (boxup(point_saga::point_saga_nodes(problem, params)), Vec::new())
+        }
+    };
+    NodeProgram { kind, nodes, setup, pass_denom }
 }

@@ -1,0 +1,242 @@
+//! Per-node runtime substrate: neighbor-iterate buffers, local mixing
+//! helpers, and the sequential reference driver over [`NodeState`]s.
+//!
+//! Every helper here reproduces the *exact* floating-point accumulation
+//! order of the legacy monolithic implementations (own row first, then
+//! neighbors in sorted adjacency order), so the per-node decomposition is
+//! bit-for-bit identical to the pre-refactor iterate sequences — which is
+//! what lets `rust/tests/sparse_comm.rs` keep pinning DSBA ≡ DSBA-s at
+//! 1e-16 and `rust/tests/engine_parity.rs` pin sequential ≡ parallel
+//! exactly.
+
+use super::NodeState;
+use crate::comm::{Message, Network, Outgoing};
+use crate::graph::{MixingMatrix, Topology};
+use std::sync::Arc;
+
+/// Per-neighbor storage of the last two received iterates, aligned with
+/// the (sorted) adjacency list. Payloads are the broadcast `Arc`s
+/// themselves, so delivery is pointer rotation — no per-edge copy. At
+/// consensus start both generations hold `z0`, matching the monolithic
+/// `z = z_prev = z0` initialization.
+pub struct NeighborBuf {
+    ids: Vec<usize>,
+    z: Vec<Arc<Vec<f64>>>,
+    z_prev: Vec<Arc<Vec<f64>>>,
+}
+
+impl NeighborBuf {
+    pub fn new(topo: &Topology, n: usize, z0: &[f64]) -> NeighborBuf {
+        let ids = topo.neighbors(n).to_vec();
+        let z0 = Arc::new(z0.to_vec());
+        NeighborBuf {
+            z: vec![z0.clone(); ids.len()],
+            z_prev: vec![z0; ids.len()],
+            ids,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, from: usize) -> usize {
+        self.ids
+            .binary_search(&from)
+            .unwrap_or_else(|_| panic!("message from non-neighbor {from}"))
+    }
+
+    /// Rotate in a freshly received iterate: current becomes previous.
+    pub fn accept(&mut self, from: usize, v: Arc<Vec<f64>>) {
+        let j = self.slot(from);
+        std::mem::swap(&mut self.z[j], &mut self.z_prev[j]);
+        self.z[j] = v;
+    }
+
+    /// Latest received iterate of neighbor `from` (`z_m^t` inside round t).
+    #[inline]
+    pub fn cur(&self, from: usize) -> &[f64] {
+        self.z[self.slot(from)].as_slice()
+    }
+
+    /// (current, previous) pair of neighbor `from`.
+    #[inline]
+    pub fn pair(&self, from: usize) -> (&[f64], &[f64]) {
+        let j = self.slot(from);
+        (self.z[j].as_slice(), self.z_prev[j].as_slice())
+    }
+}
+
+/// The standard round exchange of every dense-communication method: one
+/// shared payload (single allocation + copy of `v`) addressed to each
+/// neighbor edge.
+pub fn broadcast_dense(topo: &Topology, n: usize, v: &[f64]) -> Vec<Outgoing> {
+    let payload = Arc::new(v.to_vec());
+    topo.neighbors(n)
+        .iter()
+        .map(|&to| Outgoing { to, msg: Message::Dense(payload.clone()) })
+        .collect()
+}
+
+#[inline]
+fn acc_mixed(w: f64, zm: &[f64], zmp: &[f64], out: &mut [f64]) {
+    if w == 0.0 {
+        return;
+    }
+    for k in 0..out.len() {
+        out[k] += w * (2.0 * zm[k] - zmp[k]);
+    }
+}
+
+/// `out = sum_{m in {n} ∪ N(n)} wt[n][m] (2 z_m^t - z_m^{t-1})` from the
+/// node's own rows plus its neighbor buffer — the per-node twin of
+/// [`MixingMatrix::mix_row`], same accumulation order.
+pub fn mix_row_local(
+    mix: &MixingMatrix,
+    topo: &Topology,
+    n: usize,
+    own_z: &[f64],
+    own_z_prev: &[f64],
+    nbrs: &NeighborBuf,
+    out: &mut [f64],
+) {
+    out.fill(0.0);
+    acc_mixed(mix.wt[(n, n)], own_z, own_z_prev, out);
+    for &m in topo.neighbors(n) {
+        let (zm, zmp) = nbrs.pair(m);
+        acc_mixed(mix.wt[(n, m)], zm, zmp, out);
+    }
+}
+
+/// `out = sum_{m in {n} ∪ N(n)} w[n][m] z_m` — the `W`-row sum every
+/// method uses at `t = 0`, same accumulation order as the monolithic
+/// `add(n); for m in neighbors { add(m) }` blocks.
+pub fn w_row_local(
+    mix: &MixingMatrix,
+    topo: &Topology,
+    n: usize,
+    own_z: &[f64],
+    nbrs: &NeighborBuf,
+    out: &mut [f64],
+) {
+    out.fill(0.0);
+    let w = mix.w[(n, n)];
+    if w != 0.0 {
+        crate::linalg::axpy(w, own_z, out);
+    }
+    for &m in topo.neighbors(n) {
+        let w = mix.w[(n, m)];
+        if w != 0.0 {
+            crate::linalg::axpy(w, nbrs.cur(m), out);
+        }
+    }
+}
+
+/// Sequential reference driver: one synchronous round = collect every
+/// node's outgoing messages (charging each into the network in node
+/// order), deliver, then run every local step in node order. This is the
+/// oracle semantics the parallel engine
+/// ([`crate::runtime::ParallelEngine`]) must reproduce bit-for-bit.
+pub struct RoundDriver<N: NodeState> {
+    pub(crate) nodes: Vec<N>,
+    /// mirror of per-node iterates for `Algorithm::iterates()`
+    z: Vec<Vec<f64>>,
+    t: usize,
+    /// one-time dense sends charged before round 0 (DSBA-s phibar flood)
+    setup: Vec<(usize, usize, usize)>,
+    /// `N * q`, the denominator of effective passes
+    pass_denom: f64,
+}
+
+impl<N: NodeState> RoundDriver<N> {
+    pub fn new(nodes: Vec<N>, setup: Vec<(usize, usize, usize)>, pass_denom: f64) -> Self {
+        let z = nodes.iter().map(|nd| nd.iterate().to_vec()).collect();
+        RoundDriver { nodes, z, t: 0, setup, pass_denom }
+    }
+
+    pub fn step(&mut self, net: &mut Network) {
+        if self.t == 0 {
+            for &(from, to, len) in &self.setup {
+                net.send_dense(from, to, len);
+            }
+        }
+        let n = self.nodes.len();
+        let mut inbox: Vec<Vec<(usize, Message)>> = (0..n).map(|_| Vec::new()).collect();
+        for (src, node) in self.nodes.iter_mut().enumerate() {
+            for out in node.outgoing(self.t) {
+                out.msg.charge(net, src, out.to);
+                inbox[out.to].push((src, out.msg));
+            }
+        }
+        for (nd, node) in self.nodes.iter_mut().enumerate() {
+            for (from, msg) in inbox[nd].drain(..) {
+                node.on_receive(from, msg);
+            }
+            node.local_step(self.t);
+            let it = node.iterate();
+            self.z[nd].copy_from_slice(it);
+        }
+        self.t += 1;
+    }
+
+    pub fn iterates(&self) -> &[Vec<f64>] {
+        &self.z
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    pub fn passes(&self) -> f64 {
+        let evals: u64 = self.nodes.iter().map(|n| n.evals()).sum();
+        evals as f64 / self.pass_denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbor_buf_rotates_generations() {
+        let topo = Topology::ring(4); // node 0 neighbors: 1, 3
+        let mut buf = NeighborBuf::new(&topo, 0, &[0.0, 0.0]);
+        assert_eq!(buf.pair(1), (&[0.0, 0.0][..], &[0.0, 0.0][..]));
+        buf.accept(1, Arc::new(vec![1.0, 1.0]));
+        assert_eq!(buf.pair(1), (&[1.0, 1.0][..], &[0.0, 0.0][..]));
+        buf.accept(1, Arc::new(vec![2.0, 2.0]));
+        assert_eq!(buf.pair(1), (&[2.0, 2.0][..], &[1.0, 1.0][..]));
+        // untouched neighbor keeps consensus start
+        assert_eq!(buf.pair(3), (&[0.0, 0.0][..], &[0.0, 0.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-neighbor")]
+    fn neighbor_buf_rejects_strangers() {
+        let topo = Topology::ring(4);
+        let mut buf = NeighborBuf::new(&topo, 0, &[0.0]);
+        buf.accept(2, Arc::new(vec![1.0]));
+    }
+
+    #[test]
+    fn mix_row_local_matches_global_mix_row() {
+        let topo = Topology::erdos_renyi(6, 0.5, 9);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let d = 5;
+        let mut rng = crate::util::rng::Rng::new(2);
+        let z: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let zp: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        for n in 0..6 {
+            let mut buf = NeighborBuf::new(&topo, n, &vec![0.0; d]);
+            for &m in topo.neighbors(n) {
+                buf.accept(m, Arc::new(zp[m].clone()));
+                buf.accept(m, Arc::new(z[m].clone()));
+            }
+            let mut want = vec![0.0; d];
+            mix.mix_row(n, &topo, &z, &zp, &mut want);
+            let mut got = vec![0.0; d];
+            mix_row_local(&mix, &topo, n, &z[n], &zp[n], &buf, &mut got);
+            // bit-for-bit: identical accumulation order
+            assert_eq!(got, want, "node {n}");
+        }
+    }
+}

@@ -9,56 +9,39 @@
 //! operators (ridge / logistic); the paper uses it conceptually as the
 //! expensive exact method DSBA cheapens.
 
-use super::{AlgoParams, Algorithm};
-use crate::comm::Network;
+use super::node::{broadcast_dense, mix_row_local, w_row_local, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
 use crate::solvers::agd_minimize;
 use std::sync::Arc;
 
-pub struct PExtra {
+pub(crate) struct PExtraCtx {
     problem: Arc<dyn Problem>,
     mix: MixingMatrix,
     topo: Topology,
     alpha: f64,
     inner_tol: f64,
-    z: Vec<Vec<f64>>,
-    z_prev: Vec<Vec<f64>>,
-    t: usize,
+}
+
+pub(crate) struct PExtraNode {
+    ctx: Arc<PExtraCtx>,
+    n: usize,
+    z: Vec<f64>,
+    z_prev: Vec<f64>,
+    nbrs: NeighborBuf,
     evals: u64,
-    z_next: Vec<Vec<f64>>,
     rhs: Vec<f64>,
 }
 
-impl PExtra {
-    pub fn new(
-        problem: Arc<dyn Problem>,
-        mix: MixingMatrix,
-        topo: Topology,
-        params: &AlgoParams,
-    ) -> PExtra {
-        let n = problem.nodes();
-        let z = vec![params.z0.clone(); n];
-        PExtra {
-            alpha: params.alpha,
-            inner_tol: params.inner_tol,
-            z_prev: z.clone(),
-            z_next: z.clone(),
-            rhs: vec![0.0; problem.dim()],
-            z,
-            t: 0,
-            evals: 0,
-            problem,
-            mix,
-            topo,
-        }
-    }
-
+impl PExtraNode {
     /// Solve `u + alpha B_n^lambda(u) = rhs` by minimizing the strongly
     /// convex inner objective with AGD.
-    fn solve_resolvent(&mut self, n: usize, warm: &[f64]) -> Vec<f64> {
-        let p = self.problem.clone();
-        let alpha = self.alpha;
+    fn solve_resolvent(&mut self, warm: &[f64]) -> Vec<f64> {
+        let p = self.ctx.problem.clone();
+        let n = self.n;
+        let alpha = self.ctx.alpha;
         let lam = p.lambda();
         let rhs = self.rhs.clone();
         let evals = std::cell::Cell::new(0u64);
@@ -76,7 +59,7 @@ impl PExtra {
             warm,
             1.0 + alpha * l,
             1.0 + alpha * mu,
-            self.inner_tol,
+            self.ctx.inner_tol,
             20_000,
         );
         self.evals += evals.get();
@@ -84,59 +67,122 @@ impl PExtra {
     }
 }
 
-impl Algorithm for PExtra {
-    fn step(&mut self, net: &mut Network) {
-        let p = self.problem.clone();
-        let alpha = self.alpha;
-        let lam = p.lambda();
-        let dim = p.dim();
-        net.round_dense_exchange(dim);
-        for n in 0..p.nodes() {
-            // rhs = mix + alpha B_n^lambda(z^t)   (W row at t=0)
-            if self.t == 0 {
-                self.rhs.fill(0.0);
-                let add = |m: usize, rhs: &mut [f64]| {
-                    let w = self.mix.w[(n, m)];
-                    if w != 0.0 {
-                        crate::linalg::axpy(w, &self.z[m], rhs);
-                    }
-                };
-                add(n, &mut self.rhs);
-                for &m in self.topo.neighbors(n) {
-                    add(m, &mut self.rhs);
-                }
-                // z^1 + alpha B(z^1) = W z^0  (P-EXTRA first step keeps
-                // the pure backward form; matches (25) with exact B)
-            } else {
-                let (z, z_prev) = (&self.z, &self.z_prev);
-                let mut rhs = std::mem::take(&mut self.rhs);
-                self.mix.mix_row(n, &self.topo, z, z_prev, &mut rhs);
-                self.rhs = rhs;
-                let mut bz = vec![0.0; dim];
-                p.full_raw_mean(n, &self.z[n], &mut bz);
-                self.evals += p.q() as u64;
-                for k in 0..dim {
-                    self.rhs[k] += alpha * (bz[k] + lam * self.z[n][k]);
-                }
-            }
-            let warm = self.z[n].clone();
-            self.z_next[n] = self.solve_resolvent(n, &warm);
-        }
-        std::mem::swap(&mut self.z_prev, &mut self.z);
-        std::mem::swap(&mut self.z, &mut self.z_next);
-        self.t += 1;
+impl NodeState for PExtraNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        broadcast_dense(&self.ctx.topo, self.n, &self.z)
     }
 
-    fn iterates(&self) -> &[Vec<f64>] {
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("P-EXTRA exchanges dense iterates only"),
+        }
+    }
+
+    fn local_step(&mut self, t: usize) {
+        let ctx = self.ctx.clone();
+        let p = ctx.problem.as_ref();
+        let alpha = ctx.alpha;
+        let lam = p.lambda();
+        let dim = p.dim();
+        let n = self.n;
+        // rhs = mix + alpha B_n^lambda(z^t)   (W row at t=0)
+        if t == 0 {
+            w_row_local(&ctx.mix, &ctx.topo, n, &self.z, &self.nbrs, &mut self.rhs);
+            // z^1 + alpha B(z^1) = W z^0  (P-EXTRA first step keeps
+            // the pure backward form; matches (25) with exact B)
+        } else {
+            mix_row_local(
+                &ctx.mix,
+                &ctx.topo,
+                n,
+                &self.z,
+                &self.z_prev,
+                &self.nbrs,
+                &mut self.rhs,
+            );
+            let mut bz = vec![0.0; dim];
+            p.full_raw_mean(n, &self.z, &mut bz);
+            self.evals += p.q() as u64;
+            for k in 0..dim {
+                self.rhs[k] += alpha * (bz[k] + lam * self.z[k]);
+            }
+        }
+        let warm = self.z.clone();
+        let u = self.solve_resolvent(&warm);
+        self.z_prev = std::mem::replace(&mut self.z, u);
+    }
+
+    fn iterate(&self) -> &[f64] {
         &self.z
     }
 
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn p_extra_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<PExtraNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    let ctx = Arc::new(PExtraCtx {
+        problem,
+        mix,
+        topo,
+        alpha: params.alpha,
+        inner_tol: params.inner_tol,
+    });
+    (0..n)
+        .map(|nd| PExtraNode {
+            n: nd,
+            z: params.z0.clone(),
+            z_prev: params.z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &params.z0),
+            evals: 0,
+            rhs: vec![0.0; dim],
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven P-EXTRA.
+pub struct PExtra {
+    drv: RoundDriver<PExtraNode>,
+}
+
+impl PExtra {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        mix: MixingMatrix,
+        topo: Topology,
+        params: &AlgoParams,
+    ) -> PExtra {
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = p_extra_nodes(problem, mix, topo, params);
+        PExtra { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
+    }
+}
+
+impl Algorithm for PExtra {
+    fn step(&mut self, net: &mut Network) {
+        self.drv.step(net);
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        self.drv.iterates()
+    }
+
     fn passes(&self) -> f64 {
-        self.evals as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

@@ -5,50 +5,97 @@
 //! Update: `psi^t = z^t + alpha (phi_{i_t} - phibar^t)`,
 //!         `z^{t+1} = J_{alpha (B_{i_t} + lambda I)}(psi^t)`.
 
-use super::{AlgoParams, Algorithm, NodeSaga};
-use crate::comm::Network;
+use super::node::RoundDriver;
+use super::{AlgoParams, Algorithm, NodeSaga, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::operators::Problem;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
-pub struct PointSaga {
+pub(crate) struct PointSagaNode {
     problem: Arc<dyn Problem>,
     alpha: f64,
-    z: Vec<Vec<f64>>, // single row
+    z: Vec<f64>,
     saga: NodeSaga,
     rng: Rng,
-    t: usize,
+    evals: u64,
     psi: Vec<f64>,
     z_next: Vec<f64>,
     coefs: Vec<f64>,
     delta: Vec<f64>,
 }
 
+impl NodeState for PointSagaNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        Vec::new() // single node: nothing to exchange
+    }
+
+    fn on_receive(&mut self, _from: usize, _msg: Message) {
+        panic!("Point-SAGA is single-node; no messages expected");
+    }
+
+    fn local_step(&mut self, _t: usize) {
+        let p = self.problem.clone();
+        let i = self.rng.below(p.q());
+        // psi = z + alpha (phi_i - phibar)
+        self.psi.copy_from_slice(&self.z);
+        p.scatter(0, i, self.saga.coef(i), self.alpha, &mut self.psi);
+        crate::linalg::axpy(-self.alpha, &self.saga.phibar, &mut self.psi);
+        p.backward(0, i, self.alpha, &self.psi, &mut self.z_next, &mut self.coefs);
+        self.evals += 1;
+        self.saga.update(p.as_ref(), 0, i, &self.coefs, &mut self.delta);
+        std::mem::swap(&mut self.z, &mut self.z_next);
+    }
+
+    fn iterate(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn point_saga_nodes(
+    problem: Arc<dyn Problem>,
+    params: &AlgoParams,
+) -> Vec<PointSagaNode> {
+    assert_eq!(
+        problem.nodes(),
+        1,
+        "Point-SAGA is a single-node method; pool the partition first"
+    );
+    let dim = problem.dim();
+    let saga = NodeSaga::init(problem.as_ref(), 0, &params.z0);
+    let w = problem.coef_width();
+    // fork(0) — identical sample path to node 0 of the decentralized
+    // methods under the same seed (Remark 5.1 equivalence tests)
+    let rng = Rng::new(params.seed).fork(0);
+    vec![PointSagaNode {
+        alpha: params.alpha,
+        z: params.z0.clone(),
+        saga,
+        rng,
+        evals: 0,
+        psi: vec![0.0; dim],
+        z_next: vec![0.0; dim],
+        coefs: vec![0.0; w],
+        delta: vec![0.0; w],
+        problem,
+    }]
+}
+
+/// Sequentially driven Point-SAGA.
+pub struct PointSaga {
+    problem: Arc<dyn Problem>,
+    drv: RoundDriver<PointSagaNode>,
+}
+
 impl PointSaga {
     pub fn new(problem: Arc<dyn Problem>, params: &AlgoParams) -> PointSaga {
-        assert_eq!(
-            problem.nodes(),
-            1,
-            "Point-SAGA is a single-node method; pool the partition first"
-        );
-        let dim = problem.dim();
-        let saga = NodeSaga::init(problem.as_ref(), 0, &params.z0);
-        let w = problem.coef_width();
-        // fork(0) — identical sample path to node 0 of the decentralized
-        // methods under the same seed (Remark 5.1 equivalence tests)
-        let rng = Rng::new(params.seed).fork(0);
-        PointSaga {
-            alpha: params.alpha,
-            z: vec![params.z0.clone()],
-            saga,
-            rng,
-            t: 0,
-            psi: vec![0.0; dim],
-            z_next: vec![0.0; dim],
-            coefs: vec![0.0; w],
-            delta: vec![0.0; w],
-            problem,
-        }
+        let nodes = point_saga_nodes(problem.clone(), params);
+        let pass_denom = problem.q() as f64;
+        PointSaga { problem, drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
     }
 
     /// Run until the global residual drops below `tol` (optimum pre-solve).
@@ -69,38 +116,29 @@ impl PointSaga {
                 self.step(&mut net);
                 it += 1;
             }
-            if self.problem.global_residual(&self.z[0]) < tol {
+            if self.problem.global_residual(&self.iterates()[0]) < tol {
                 break;
             }
         }
-        (self.z[0].clone(), it)
+        (self.iterates()[0].clone(), it)
     }
 }
 
 impl Algorithm for PointSaga {
-    fn step(&mut self, _net: &mut Network) {
-        let p = self.problem.as_ref();
-        let i = self.rng.below(p.q());
-        // psi = z + alpha (phi_i - phibar)
-        self.psi.copy_from_slice(&self.z[0]);
-        p.scatter(0, i, self.saga.coef(i), self.alpha, &mut self.psi);
-        crate::linalg::axpy(-self.alpha, &self.saga.phibar, &mut self.psi);
-        p.backward(0, i, self.alpha, &self.psi, &mut self.z_next, &mut self.coefs);
-        self.saga.update(p, 0, i, &self.coefs, &mut self.delta);
-        std::mem::swap(&mut self.z[0], &mut self.z_next);
-        self.t += 1;
+    fn step(&mut self, net: &mut Network) {
+        self.drv.step(net);
     }
 
     fn iterates(&self) -> &[Vec<f64>] {
-        &self.z
+        self.drv.iterates()
     }
 
     fn passes(&self) -> f64 {
-        self.t as f64 / self.problem.q() as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

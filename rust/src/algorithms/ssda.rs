@@ -14,16 +14,21 @@
 //! The conjugate oracle `grad f*(v) = argmin_u f(u) - <v, u>` is computed
 //! by solving `B_n(u) + lambda u = v` with AGD (closed-form-free but
 //! exact to `inner_tol`); for ridge this is an SPD solve identical to CG.
+//!
+//! Per-node round shape: the oracle runs in the *send* phase (it produces
+//! the theta that is broadcast), the y/x update in the local step once
+//! neighbor thetas are in.
 
-use super::{AlgoParams, Algorithm};
-use crate::comm::Network;
+use super::node::{broadcast_dense, NeighborBuf, RoundDriver};
+use super::{AlgoParams, Algorithm, NodeState};
+use crate::comm::{Message, Network, Outgoing};
 use crate::graph::{MixingMatrix, Topology};
 use crate::linalg::power_iteration;
 use crate::operators::Problem;
 use crate::solvers::agd_minimize;
 use std::sync::Arc;
 
-pub struct Ssda {
+pub(crate) struct SsdaCtx {
     problem: Arc<dyn Problem>,
     topo: Topology,
     /// true when the operator field is affine (ridge) -> CG oracle
@@ -33,70 +38,9 @@ pub struct Ssda {
     eta: f64,
     momentum: f64,
     inner_tol: f64,
-    /// dual iterates
-    x: Vec<Vec<f64>>,
-    y_prev: Vec<Vec<f64>>,
-    /// primal estimates theta_n (reported iterates)
-    theta: Vec<Vec<f64>>,
-    t: usize,
-    evals: std::cell::Cell<u64>,
 }
 
-impl Ssda {
-    pub fn new(
-        problem: Arc<dyn Problem>,
-        mix: MixingMatrix,
-        topo: Topology,
-        params: &AlgoParams,
-    ) -> Ssda {
-        let n = problem.nodes();
-        let dim = problem.dim();
-        let mut k_op = crate::linalg::DenseMatrix::zeros(n, n);
-        for i in 0..n {
-            for j in 0..n {
-                k_op[(i, j)] =
-                    0.5 * ((if i == j { 1.0 } else { 0.0 }) - mix.w[(i, j)]);
-            }
-        }
-        let lmax = power_iteration(&k_op, 300).max(1e-12);
-        let gamma = mix.gamma; // smallest nonzero eig of K
-        let (l_f, mu_f) = problem.l_mu();
-        // theory step scaled by the tuned multiplier
-        let eta = params.alpha * mu_f / lmax;
-        let kappa_dual = (l_f / mu_f) * (lmax / gamma);
-        let r = 1.0 / kappa_dual.max(1.0);
-        let momentum = params
-            .ssda_momentum
-            .unwrap_or((1.0 - r.sqrt()) / (1.0 + r.sqrt()));
-        // probe linearity of the field (ridge vs logistic/auc): push far
-        // along one data row; bounded coefficients mean non-affine
-        let linear_field = {
-            let dim2 = problem.dim();
-            let z0 = vec![0.0; dim2];
-            let mut big = vec![0.0; dim2];
-            problem.partition().shards[0].row_sparse(0).axpy_into(1e6, &mut big);
-            let mut c0 = vec![0.0; problem.coef_width()];
-            let mut c1 = vec![0.0; problem.coef_width()];
-            problem.coefs(0, 0, &z0, &mut c0);
-            problem.coefs(0, 0, &big, &mut c1);
-            problem.coef_width() == 1 && (c1[0] - c0[0]).abs() > 10.0
-        };
-        Ssda {
-            linear_field,
-            eta,
-            momentum,
-            inner_tol: params.inner_tol,
-            x: vec![vec![0.0; dim]; n],
-            y_prev: vec![vec![0.0; dim]; n],
-            theta: vec![params.z0.clone(); n],
-            t: 0,
-            evals: std::cell::Cell::new(0),
-            k_op,
-            problem,
-            topo: topo.clone(),
-        }
-    }
-
+impl SsdaCtx {
     /// grad f_n^*(v): solve B_n(u) + lambda u = v.
     ///
     /// Cost accounting follows Table 1's convention for SSDA
@@ -104,9 +48,9 @@ impl Ssda {
     /// one pass over the shard, independent of the inner solver's
     /// iteration count — the same convention under which the paper's
     /// Figure 1/2 SSDA curves are plotted.
-    fn conjugate_oracle(&self, n: usize, v: &[f64], warm: &[f64]) -> Vec<f64> {
+    fn conjugate_oracle(&self, n: usize, v: &[f64], warm: &[f64], evals: &mut u64) -> Vec<f64> {
         let p = self.problem.clone();
-        self.evals.set(self.evals.get() + p.q() as u64);
+        *evals += p.q() as u64;
         if self.linear_field {
             // ridge: the field is affine, solve by CG (exact in <= rank
             // iterations). matvec(u) = B_n(u) + lambda u - (B_n(0))
@@ -121,7 +65,8 @@ impl Ssda {
                 }
             });
             let rhs: Vec<f64> = v.iter().zip(&b0).map(|(vk, bk)| vk - bk).collect();
-            let (u, _, _) = crate::solvers::cg_solve(&op, &rhs, self.inner_tol, 4 * p.q() + 50);
+            let (u, _, _) =
+                crate::solvers::cg_solve(&op, &rhs, self.inner_tol, 4 * p.q() + 50);
             return u;
         }
         let grad = |u: &[f64], g: &mut [f64]| {
@@ -136,51 +81,159 @@ impl Ssda {
     }
 }
 
-impl Algorithm for Ssda {
-    fn step(&mut self, net: &mut Network) {
-        let p = self.problem.as_ref();
-        let n_nodes = p.nodes();
-        let dim = p.dim();
-        // conjugate oracles (local)
-        for n in 0..n_nodes {
-            let warm = self.theta[n].clone();
-            self.theta[n] = self.conjugate_oracle(n, &self.x[n], &warm);
-        }
-        // exchange theta (dense)
-        net.round_dense_exchange(dim);
-        // y^{t+1} = x - eta Theta K ; x^{t+1} = y + m (y - y_prev)
-        for n in 0..n_nodes {
-            let mut y_new = self.x[n].clone();
-            // (Theta K)_n = sum_m K[n,m] theta_m — K is graph-sparse
-            let touch = |m: usize, y_new: &mut [f64]| {
-                let km = self.k_op[(n, m)];
-                if km != 0.0 {
-                    crate::linalg::axpy(-self.eta * km, &self.theta[m], y_new);
-                }
-            };
-            touch(n, &mut y_new);
-            for &m in self.topo.neighbors(n) {
-                touch(m, &mut y_new);
-            }
-            for k in 0..dim {
-                let yv = y_new[k];
-                self.x[n][k] = yv + self.momentum * (yv - self.y_prev[n][k]);
-                self.y_prev[n][k] = yv;
-            }
-        }
-        self.t += 1;
+pub(crate) struct SsdaNode {
+    ctx: Arc<SsdaCtx>,
+    n: usize,
+    /// dual iterate
+    x: Vec<f64>,
+    y_prev: Vec<f64>,
+    /// primal estimate theta_n (reported iterate)
+    theta: Vec<f64>,
+    /// neighbor thetas of the current round
+    nbrs: NeighborBuf,
+    evals: u64,
+}
+
+impl NodeState for SsdaNode {
+    fn outgoing(&mut self, _t: usize) -> Vec<Outgoing> {
+        // conjugate oracle (local), then dense theta exchange
+        let warm = self.theta.clone();
+        self.theta = self.ctx.conjugate_oracle(self.n, &self.x, &warm, &mut self.evals);
+        broadcast_dense(&self.ctx.topo, self.n, &self.theta)
     }
 
-    fn iterates(&self) -> &[Vec<f64>] {
+    fn on_receive(&mut self, from: usize, msg: Message) {
+        match msg {
+            Message::Dense(v) => self.nbrs.accept(from, v),
+            Message::Sparse(_) => panic!("SSDA exchanges dense thetas only"),
+        }
+    }
+
+    fn local_step(&mut self, _t: usize) {
+        let ctx = self.ctx.clone();
+        let n = self.n;
+        let dim = self.x.len();
+        // y^{t+1} = x - eta Theta K ; x^{t+1} = y + m (y - y_prev)
+        let mut y_new = self.x.clone();
+        // (Theta K)_n = sum_m K[n,m] theta_m — K is graph-sparse
+        let kn = ctx.k_op[(n, n)];
+        if kn != 0.0 {
+            crate::linalg::axpy(-ctx.eta * kn, &self.theta, &mut y_new);
+        }
+        for &m in ctx.topo.neighbors(n) {
+            let km = ctx.k_op[(n, m)];
+            if km != 0.0 {
+                crate::linalg::axpy(-ctx.eta * km, self.nbrs.cur(m), &mut y_new);
+            }
+        }
+        for k in 0..dim {
+            let yv = y_new[k];
+            self.x[k] = yv + ctx.momentum * (yv - self.y_prev[k]);
+            self.y_prev[k] = yv;
+        }
+    }
+
+    fn iterate(&self) -> &[f64] {
         &self.theta
     }
 
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+pub(crate) fn ssda_nodes(
+    problem: Arc<dyn Problem>,
+    mix: MixingMatrix,
+    topo: Topology,
+    params: &AlgoParams,
+) -> Vec<SsdaNode> {
+    let n = problem.nodes();
+    let dim = problem.dim();
+    let mut k_op = crate::linalg::DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            k_op[(i, j)] = 0.5 * ((if i == j { 1.0 } else { 0.0 }) - mix.w[(i, j)]);
+        }
+    }
+    let lmax = power_iteration(&k_op, 300).max(1e-12);
+    let gamma = mix.gamma; // smallest nonzero eig of K
+    let (l_f, mu_f) = problem.l_mu();
+    // theory step scaled by the tuned multiplier
+    let eta = params.alpha * mu_f / lmax;
+    let kappa_dual = (l_f / mu_f) * (lmax / gamma);
+    let r = 1.0 / kappa_dual.max(1.0);
+    let momentum = params
+        .ssda_momentum
+        .unwrap_or((1.0 - r.sqrt()) / (1.0 + r.sqrt()));
+    // probe linearity of the field (ridge vs logistic/auc): push far
+    // along one data row; bounded coefficients mean non-affine
+    let linear_field = {
+        let z0 = vec![0.0; dim];
+        let mut big = vec![0.0; dim];
+        problem.partition().shards[0].row_sparse(0).axpy_into(1e6, &mut big);
+        let mut c0 = vec![0.0; problem.coef_width()];
+        let mut c1 = vec![0.0; problem.coef_width()];
+        problem.coefs(0, 0, &z0, &mut c0);
+        problem.coefs(0, 0, &big, &mut c1);
+        problem.coef_width() == 1 && (c1[0] - c0[0]).abs() > 10.0
+    };
+    let z0 = params.z0.clone();
+    let ctx = Arc::new(SsdaCtx {
+        linear_field,
+        eta,
+        momentum,
+        inner_tol: params.inner_tol,
+        k_op,
+        problem,
+        topo,
+    });
+    (0..n)
+        .map(|nd| SsdaNode {
+            n: nd,
+            x: vec![0.0; dim],
+            y_prev: vec![0.0; dim],
+            theta: z0.clone(),
+            nbrs: NeighborBuf::new(&ctx.topo, nd, &z0),
+            evals: 0,
+            ctx: ctx.clone(),
+        })
+        .collect()
+}
+
+/// Sequentially driven SSDA.
+pub struct Ssda {
+    drv: RoundDriver<SsdaNode>,
+}
+
+impl Ssda {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        mix: MixingMatrix,
+        topo: Topology,
+        params: &AlgoParams,
+    ) -> Ssda {
+        let pass_denom = (problem.nodes() * problem.q()) as f64;
+        let nodes = ssda_nodes(problem, mix, topo, params);
+        Ssda { drv: RoundDriver::new(nodes, Vec::new(), pass_denom) }
+    }
+}
+
+impl Algorithm for Ssda {
+    fn step(&mut self, net: &mut Network) {
+        self.drv.step(net);
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        self.drv.iterates()
+    }
+
     fn passes(&self) -> f64 {
-        self.evals.get() as f64 / (self.problem.nodes() * self.problem.q()) as f64
+        self.drv.passes()
     }
 
     fn iteration(&self) -> usize {
-        self.t
+        self.drv.iteration()
     }
 
     fn name(&self) -> &'static str {

@@ -7,6 +7,7 @@ use crate::algorithms::AlgorithmKind;
 use crate::config::{ExperimentConfig, ProblemKind};
 use crate::coordinator::Trace;
 use crate::metrics::format_table;
+use crate::runtime::EngineKind;
 use crate::util::json::Json;
 
 /// Print a bench section header.
@@ -53,6 +54,11 @@ pub struct FigureSpec {
     pub dim: usize,
     pub nodes: usize,
     pub seed: u64,
+    /// round driver for every run in the grid (engine parity means the
+    /// figures are identical either way; parallel is just faster)
+    pub engine: EngineKind,
+    /// parallel-engine worker threads (0 = auto)
+    pub threads: usize,
 }
 
 impl FigureSpec {
@@ -74,6 +80,8 @@ impl FigureSpec {
             dim: 2048,
             nodes: 10,
             seed: 42,
+            engine: EngineKind::Sequential,
+            threads: 0,
         }
     }
 
@@ -97,6 +105,8 @@ impl FigureSpec {
                     passes: self.passes,
                     seed: self.seed,
                     record_points: 25,
+                    engine: self.engine,
+                    threads: self.threads,
                     ..Default::default()
                 };
                 if m == AlgorithmKind::Dlm {

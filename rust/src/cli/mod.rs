@@ -13,6 +13,7 @@ use crate::bench_harness::FigureSpec;
 use crate::config::{ExperimentConfig, ProblemKind};
 use crate::graph::TopologyKind;
 use crate::metrics::format_table;
+use crate::runtime::EngineKind;
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +47,7 @@ USAGE:
   dsba run [--config FILE] [--problem ridge|logistic|auc] [--dataset NAME]
            [--algorithm NAME] [--alpha X] [--passes X] [--nodes N]
            [--topology KIND] [--samples N] [--dim N] [--seed N]
+           [--engine sequential|parallel] [--threads N]
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
   dsba info [--dataset NAME] [--nodes N]   dataset & graph statistics
   dsba artifacts          verify the XLA artifact directory
@@ -119,6 +121,15 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     }
+    if let Some(v) = f.get("engine") {
+        match EngineKind::parse(v) {
+            Some(e) => cfg.engine = e,
+            None => {
+                eprintln!("bad --engine {v} (sequential|parallel)");
+                return 2;
+            }
+        }
+    }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
             if let Some(v) = f.get($key) {
@@ -139,6 +150,7 @@ fn cmd_run(args: &[String]) -> i32 {
     num!("dim", cfg.dim, usize);
     num!("seed", cfg.seed, u64);
     num!("lambda", cfg.lambda, f64);
+    num!("threads", cfg.threads, usize);
 
     println!("config: {}", cfg.to_json().to_string());
     let mut exp = match cfg.build() {
@@ -154,6 +166,14 @@ fn cmd_run(args: &[String]) -> i32 {
         exp.topo.diameter,
         exp.topo.max_degree()
     );
+    if cfg.engine == EngineKind::Parallel {
+        let t = if cfg.threads == 0 {
+            crate::runtime::engine::auto_threads(cfg.nodes)
+        } else {
+            cfg.threads
+        };
+        println!("engine: parallel, {t} worker thread(s)");
+    }
     let trace = exp.run();
     println!("{}", format_table(&trace.rows));
     println!(
@@ -248,6 +268,12 @@ fn cmd_artifacts() -> i32 {
                 m.entries.len(),
                 m.fn_names()
             );
+            if !rt.has_backend() {
+                println!(
+                    "note: manifest validated, but the PJRT execution backend is \
+                     not compiled in (build with --features pjrt to execute)"
+                );
+            }
             0
         }
         Err(e) => {

@@ -1,0 +1,247 @@
+//! Typed messages crossing topology edges, with cost accounting and a
+//! lossless wire codec.
+//!
+//! The per-node runtime (sequential driver and parallel engine alike)
+//! moves exactly two payload families: dense iterate broadcasts (the
+//! EXTRA / DSA / dense-DSBA / DLM / SSDA / DGD exchange) and the §5.1
+//! sparse relay deltas of DSBA-s. Costs are priced through
+//! [`CommCostModel`] identically to the legacy `round_dense_exchange` /
+//! `RelayProtocol::round` accounting, so engine traffic is comparable
+//! DOUBLE-for-DOUBLE with the paper's `C_n^t` metric.
+//!
+//! The codec is an explicit little-endian layout (f64 via `to_bits`, so
+//! round-tripping is bit-exact); `rust/tests/properties.rs` pins
+//! encode → decode as the identity.
+
+use crate::comm::{Network, RelayDelta};
+use crate::linalg::SparseVec;
+use std::sync::Arc;
+
+/// One typed payload on an edge of the topology.
+///
+/// The dense variant is reference-counted so a broadcast allocates and
+/// copies the iterate **once** per round, not once per edge — clones
+/// handed to each neighbor (and sent across engine threads) share the
+/// payload. Receivers keep the `Arc` itself (see
+/// `algorithms::node::NeighborBuf`), so delivery is pointer rotation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Dense vector broadcast (an iterate `z_m^t`, `d` DOUBLEs).
+    Dense(Arc<Vec<f64>>),
+    /// Sparse §5.1 relay delta (support of one data row + dense tail).
+    Sparse(RelayDelta),
+}
+
+/// A message addressed to one neighbor.
+#[derive(Clone, Debug)]
+pub struct Outgoing {
+    pub to: usize,
+    pub msg: Message,
+}
+
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+
+impl Message {
+    /// Wrap an owned vector as a dense payload.
+    pub fn dense(v: Vec<f64>) -> Message {
+        Message::Dense(Arc::new(v))
+    }
+
+    /// Account this message on edge (from, to) at the network's cost
+    /// model — dense length or sparse (nnz, tail) pricing.
+    pub fn charge(&self, net: &mut Network, from: usize, to: usize) {
+        match self {
+            Message::Dense(v) => net.send_dense(from, to, v.len()),
+            Message::Sparse(d) => net.send_sparse(from, to, d.vec.nnz(), d.tail.len()),
+        }
+    }
+
+    /// Payload size in DOUBLE-equivalents under `cost` (header included).
+    pub fn cost(&self, cost: &crate::comm::CommCostModel) -> f64 {
+        match self {
+            Message::Dense(v) => cost.dense_cost(v.len()),
+            Message::Sparse(d) => cost.sparse_cost(d.vec.nnz(), d.tail.len()),
+        }
+    }
+
+    /// Serialize to the wire layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Message::Dense(v) => {
+                out.push(TAG_DENSE);
+                put_u64(&mut out, v.len() as u64);
+                for &x in v {
+                    put_f64(&mut out, x);
+                }
+            }
+            Message::Sparse(d) => {
+                out.push(TAG_SPARSE);
+                put_u32(&mut out, d.src);
+                put_u32(&mut out, d.t);
+                put_u64(&mut out, d.vec.dim as u64);
+                put_u64(&mut out, d.vec.nnz() as u64);
+                for &i in &d.vec.idx {
+                    put_u32(&mut out, i);
+                }
+                for &v in &d.vec.val {
+                    put_f64(&mut out, v);
+                }
+                put_u64(&mut out, d.tail.len() as u64);
+                for &v in &d.tail {
+                    put_f64(&mut out, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Reconstruct from the wire layout (bit-exact inverse of `encode`).
+    pub fn decode(buf: &[u8]) -> Result<Message, String> {
+        let mut r = Reader { buf, pos: 0 };
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_DENSE => {
+                let len = r.u64()? as usize;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(r.f64()?);
+                }
+                Message::Dense(Arc::new(v))
+            }
+            TAG_SPARSE => {
+                let src = r.u32()?;
+                let t = r.u32()?;
+                let dim = r.u64()? as usize;
+                let nnz = r.u64()? as usize;
+                let mut idx = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    idx.push(r.u32()?);
+                }
+                let mut val = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    val.push(r.f64()?);
+                }
+                let tail_len = r.u64()? as usize;
+                let mut tail = Vec::with_capacity(tail_len);
+                for _ in 0..tail_len {
+                    tail.push(r.f64()?);
+                }
+                Message::Sparse(RelayDelta { src, t, vec: SparseVec { dim, idx, val }, tail })
+            }
+            other => return Err(format!("unknown message tag {other}")),
+        };
+        if r.pos != buf.len() {
+            return Err(format!("{} trailing bytes after message", buf.len() - r.pos));
+        }
+        Ok(msg)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err("truncated message".to_string());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_bit_exact() {
+        let m = Message::dense(vec![0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e300]);
+        let back = Message::decode(&m.encode()).unwrap();
+        // -0.0 == 0.0 under PartialEq, so compare bits explicitly too
+        match (&m, &back) {
+            (Message::Dense(a), Message::Dense(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            _ => panic!("tag changed"),
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let m = Message::Sparse(RelayDelta {
+            src: 3,
+            t: 41,
+            vec: SparseVec::from_pairs(100, vec![(4, -1.25), (99, 3.5)]),
+            tail: vec![0.1, 0.2, 0.3],
+        });
+        assert_eq!(Message::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[7]).is_err());
+        let mut enc = Message::dense(vec![1.0]).encode();
+        enc.push(0); // trailing byte
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn charge_matches_cost_model() {
+        use crate::comm::{CommCostModel, Network};
+        use crate::graph::Topology;
+        let topo = Topology::ring(4);
+        let cost = CommCostModel::default();
+        let mut net = Network::new(topo, cost);
+        let dense = Message::dense(vec![0.0; 10]);
+        dense.charge(&mut net, 0, 1);
+        assert_eq!(net.received_by(1), cost.dense_cost(10));
+        let sparse = Message::Sparse(RelayDelta {
+            src: 0,
+            t: 0,
+            vec: SparseVec::from_pairs(10, vec![(1, 1.0), (2, 2.0)]),
+            tail: vec![9.0],
+        });
+        sparse.charge(&mut net, 1, 2);
+        assert_eq!(net.received_by(2), cost.sparse_cost(2, 1));
+        assert_eq!(dense.cost(&cost), cost.dense_cost(10));
+        assert_eq!(sparse.cost(&cost), cost.sparse_cost(2, 1));
+    }
+}

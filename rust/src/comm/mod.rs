@@ -1,13 +1,16 @@
 //! Communication substrate: an in-process network with per-node DOUBLE
-//! accounting (the paper's `C_n^t` / `C_max^t` metric, §7) and the
-//! sparse-delta relay protocol of §5.1.
+//! accounting (the paper's `C_n^t` / `C_max^t` metric, §7), the
+//! sparse-delta relay protocol of §5.1, and the typed [`Message`] payloads
+//! the per-node runtime moves across edges.
 //!
 //! The simulator is synchronous-round-based, matching the paper's model:
 //! all messages sent in round `t` are available to their receivers at the
 //! start of round `t+1` (neighbor-to-neighbor hops only).
 
+mod message;
 mod network;
 mod relay;
 
+pub use message::{Message, Outgoing};
 pub use network::{CommCostModel, Network};
 pub use relay::{RelayDelta, RelayProtocol};

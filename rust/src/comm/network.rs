@@ -107,6 +107,11 @@ impl Network {
         self.received[n]
     }
 
+    /// DOUBLEs sent by one node so far.
+    pub fn sent_by(&self, n: usize) -> f64 {
+        self.sent[n]
+    }
+
     /// The paper's `C_max^t = max_n C_n^t`.
     pub fn max_received(&self) -> f64 {
         self.received.iter().copied().fold(0.0, f64::max)

@@ -1,4 +1,4 @@
-//! The §5.1 sparse-delta relay protocol.
+//! The §5.1 sparse-delta relay forwarding trees.
 //!
 //! Every node's fresh delta `delta_n^t` must reach every other node `m`
 //! after exactly `dist(n, m)` hops.  The paper organizes this by distance
@@ -9,13 +9,19 @@
 //! *designated parent* (minimum-index closer neighbor) it is.  Each delta
 //! then crosses every tree edge exactly once, so a node receives at most
 //! `N - 1` deltas per round: the `O(N rho d)` DOUBLEs of Table 1.
+//!
+//! [`RelayProtocol`] holds the precomputed children tables; the actual
+//! per-round forwarding (inject own fresh delta, forward last round's
+//! receipts one hop) lives in the per-node DSBA-s implementation
+//! (`crate::algorithms::DsbaSparse`), which consults
+//! [`RelayProtocol::children`] each round. The unit tests below simulate
+//! that exact schedule to pin the tree/timing invariants.
 
-use crate::comm::Network;
 use crate::graph::Topology;
 use crate::linalg::SparseVec;
 
 /// A sparse update in flight: produced by `src` at iteration `t`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RelayDelta {
     pub src: u32,
     pub t: u32,
@@ -25,13 +31,11 @@ pub struct RelayDelta {
     pub tail: Vec<f64>,
 }
 
-/// Precomputed forwarding trees + in-flight state.
+/// Precomputed BFS forwarding trees.
 pub struct RelayProtocol {
     /// children[node][src] = neighbors to which `node` forwards deltas
     /// originating at `src`
     children: Vec<Vec<Vec<usize>>>,
-    /// deltas received last round, to be forwarded this round
-    pending: Vec<Vec<RelayDelta>>,
 }
 
 impl RelayProtocol {
@@ -64,79 +68,62 @@ impl RelayProtocol {
             }
             children[node][node] = own;
         }
-        RelayProtocol { children, pending: vec![Vec::new(); n] }
+        RelayProtocol { children }
     }
 
     /// Forwarding targets of `node` for deltas originating at `src`.
     pub fn children(&self, node: usize, src: usize) -> &[usize] {
         &self.children[node][src]
     }
-
-    /// One synchronous relay round.
-    ///
-    /// `fresh[n]` is node n's newly produced delta (if any). Deltas
-    /// received in the *previous* round are forwarded one hop farther.
-    /// Returns `inbox[n]`: the deltas delivered to node n this round —
-    /// exactly the paper's set `F_1^t` (one delta per source `s` with
-    /// `t_delta + dist(s, n) = round`), after pipeline fill.
-    ///
-    /// All transmissions are accounted into `net` at sparse cost.
-    pub fn round(
-        &mut self,
-        fresh: Vec<Option<RelayDelta>>,
-        net: &mut Network,
-    ) -> Vec<Vec<RelayDelta>> {
-        let n = self.pending.len();
-        assert_eq!(fresh.len(), n);
-        let mut inbox: Vec<Vec<RelayDelta>> = vec![Vec::new(); n];
-        // forward everything received last round, plus fresh injections
-        let to_send: Vec<Vec<RelayDelta>> = self
-            .pending
-            .drain(..)
-            .zip(fresh)
-            .map(|(mut pend, f)| {
-                if let Some(d) = f {
-                    pend.push(d);
-                }
-                pend
-            })
-            .collect();
-        for (node, msgs) in to_send.into_iter().enumerate() {
-            for d in msgs {
-                let targets = &self.children[node][d.src as usize];
-                for &l in targets {
-                    net.send_sparse(node, l, d.vec.nnz(), d.tail.len());
-                    inbox[l].push(d.clone());
-                }
-            }
-        }
-        self.pending = inbox.clone();
-        inbox
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::CommCostModel;
+    use crate::comm::{CommCostModel, Network};
+
+    /// Simulate the per-node forwarding schedule (the same one
+    /// `DsbaSparseNode::outgoing` runs): every node injects one fresh
+    /// delta per round and forwards last round's receipts one hop along
+    /// the children tables. Returns per-node inboxes per round.
+    fn simulate(
+        topo: &Topology,
+        rounds: usize,
+        net: &mut Network,
+    ) -> Vec<Vec<Vec<RelayDelta>>> {
+        let relay = RelayProtocol::new(topo);
+        let n = topo.n;
+        let mut pending: Vec<Vec<RelayDelta>> = vec![Vec::new(); n];
+        let mut inboxes_per_round = Vec::with_capacity(rounds);
+        for r in 0..rounds {
+            let mut inbox: Vec<Vec<RelayDelta>> = vec![Vec::new(); n];
+            for node in 0..n {
+                let mut msgs = std::mem::take(&mut pending[node]);
+                msgs.push(RelayDelta {
+                    src: node as u32,
+                    t: r as u32,
+                    vec: SparseVec::from_pairs(8, vec![(1, 1.0)]),
+                    tail: vec![],
+                });
+                for d in msgs {
+                    for &l in relay.children(node, d.src as usize) {
+                        net.send_sparse(node, l, d.vec.nnz(), d.tail.len());
+                        inbox[l].push(d.clone());
+                    }
+                }
+            }
+            pending = inbox.clone();
+            inboxes_per_round.push(inbox);
+        }
+        inboxes_per_round
+    }
 
     fn run_protocol(topo: &Topology, rounds: usize) -> Vec<Vec<(u32, u32, usize)>> {
         // returns per-node log of (src, t, arrival_round)
-        let mut relay = RelayProtocol::new(topo);
         let mut net = Network::new(topo.clone(), CommCostModel::values_only());
+        let per_round = simulate(topo, rounds, &mut net);
         let mut log: Vec<Vec<(u32, u32, usize)>> = vec![Vec::new(); topo.n];
-        for r in 0..rounds {
-            let fresh: Vec<Option<RelayDelta>> = (0..topo.n)
-                .map(|nd| {
-                    Some(RelayDelta {
-                        src: nd as u32,
-                        t: r as u32,
-                        vec: SparseVec::from_pairs(8, vec![(1, 1.0)]),
-                        tail: vec![],
-                    })
-                })
-                .collect();
-            let inbox = relay.round(fresh, &mut net);
+        for (r, inbox) in per_round.into_iter().enumerate() {
             for (node, msgs) in inbox.into_iter().enumerate() {
                 for d in msgs {
                     log[node].push((d.src, d.t, r));
@@ -164,10 +151,9 @@ mod tests {
                         seen.insert((src, t), r).is_none(),
                         "duplicate delivery of ({src},{t}) at node {node}"
                     );
-                    // arrival round = t + dist(src, node) - 1 (sent in the
-                    // round after production, i.e. delta produced at
-                    // iteration t is injected in round t and takes
-                    // dist hops => arrives in round t + dist - 1, 0-based)
+                    // arrival round = t + dist(src, node) - 1 (a delta
+                    // produced/injected in round t takes dist hops =>
+                    // arrives in round t + dist - 1, 0-based)
                     let d = topo.dist[src as usize][node];
                     assert_eq!(
                         r,
@@ -195,21 +181,10 @@ mod tests {
     #[test]
     fn per_round_inbox_bounded_by_n_minus_one() {
         let topo = Topology::erdos_renyi(12, 0.35, 5);
-        let mut relay = RelayProtocol::new(&topo);
         let mut net = Network::new(topo.clone(), CommCostModel::values_only());
-        for r in 0..30 {
-            let fresh: Vec<Option<RelayDelta>> = (0..topo.n)
-                .map(|nd| {
-                    Some(RelayDelta {
-                        src: nd as u32,
-                        t: r as u32,
-                        vec: SparseVec::from_pairs(4, vec![(0, 1.0)]),
-                        tail: vec![],
-                    })
-                })
-                .collect();
-            let inbox = relay.round(fresh, &mut net);
-            for msgs in &inbox {
+        let per_round = simulate(&topo, 30, &mut net);
+        for inbox in &per_round {
+            for msgs in inbox {
                 assert!(msgs.len() <= topo.n - 1, "steady-state bound violated");
             }
         }

@@ -8,6 +8,7 @@ use crate::coordinator::Experiment;
 use crate::data::{load_libsvm, Dataset, SyntheticSpec};
 use crate::graph::{Topology, TopologyKind};
 use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
+use crate::runtime::EngineKind;
 use crate::util::json::{parse, Json};
 use std::sync::Arc;
 
@@ -61,6 +62,10 @@ pub struct ExperimentConfig {
     pub record_points: usize,
     /// count sparse index/value pairs as 2 doubles (default) or 1
     pub charitable_sparse: bool,
+    /// round driver: sequential reference oracle or parallel engine
+    pub engine: EngineKind,
+    /// parallel-engine worker threads (0 = auto: cores capped by nodes)
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -80,6 +85,8 @@ impl Default for ExperimentConfig {
             seed: 42,
             record_points: 40,
             charitable_sparse: false,
+            engine: EngineKind::Sequential,
+            threads: 0,
         }
     }
 }
@@ -132,6 +139,12 @@ impl ExperimentConfig {
         if let Some(b) = v.get("charitable_sparse").and_then(|j| j.as_bool()) {
             c.charitable_sparse = b;
         }
+        if let Some(s) = v.get("engine").and_then(Json::as_str) {
+            c.engine = EngineKind::parse(s).ok_or(format!("bad engine {s}"))?;
+        }
+        if let Some(n) = v.get("threads").and_then(Json::as_usize) {
+            c.threads = n;
+        }
         Ok(c)
     }
 
@@ -151,6 +164,8 @@ impl ExperimentConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("record_points", Json::Num(self.record_points as f64)),
             ("charitable_sparse", Json::Bool(self.charitable_sparse)),
+            ("engine", Json::Str(self.engine.name().into())),
+            ("threads", Json::Num(self.threads as f64)),
         ])
     }
 
@@ -212,7 +227,8 @@ impl ExperimentConfig {
             .with_passes(self.passes)
             .with_seed(self.seed)
             .with_record_points(self.record_points)
-            .with_cost_model(cost))
+            .with_cost_model(cost)
+            .with_engine(self.engine, self.threads))
     }
 }
 
@@ -260,6 +276,19 @@ mod tests {
     fn rejects_bad_fields() {
         assert!(ExperimentConfig::from_json("{\"problem\":\"nope\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"algorithm\":\"nope\"}").is_err());
+        assert!(ExperimentConfig::from_json("{\"engine\":\"warp\"}").is_err());
         assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn engine_fields_roundtrip() {
+        let c = ExperimentConfig {
+            engine: EngineKind::Parallel,
+            threads: 3,
+            ..Default::default()
+        };
+        let c2 = ExperimentConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.engine, EngineKind::Parallel);
+        assert_eq!(c2.threads, 3);
     }
 }

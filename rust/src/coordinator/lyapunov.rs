@@ -149,7 +149,7 @@ impl LyapunovProbe {
         let w = p.coef_width();
         let mut d_term = 0.0;
         for nd in 0..n {
-            let saga = &alg.saga()[nd];
+            let saga = alg.saga(nd);
             let shard = &p.partition().shards[nd];
             for i in 0..p.q() {
                 let cur = saga.coef(i);

@@ -13,6 +13,7 @@ use crate::comm::{CommCostModel, Network};
 use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{auc_score, suboptimality, MetricsRow};
 use crate::operators::Problem;
+use crate::runtime::{EngineKind, ParallelEngine};
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
@@ -32,6 +33,10 @@ pub struct Experiment {
     pub z_star: Option<Vec<f64>>,
     /// hard cap on rounds (safety)
     pub max_rounds: usize,
+    /// which driver runs the rounds (sequential oracle or parallel engine)
+    pub engine: EngineKind,
+    /// worker threads for the parallel engine (0 = auto)
+    pub threads: usize,
 }
 
 impl Experiment {
@@ -62,6 +67,8 @@ impl Experiment {
             record_points: 40,
             z_star: None,
             max_rounds: usize::MAX,
+            engine: EngineKind::Sequential,
+            threads: 0,
         }
     }
 
@@ -105,6 +112,14 @@ impl Experiment {
         self
     }
 
+    /// Select the execution engine (and worker count for the parallel
+    /// one; `threads = 0` = all available cores, capped by node count).
+    pub fn with_engine(mut self, engine: EngineKind, threads: usize) -> Self {
+        self.engine = engine;
+        self.threads = threads;
+        self
+    }
+
     /// Pre-solve the reference optimum if not supplied.
     pub fn ensure_z_star(&mut self) -> &[f64] {
         if self.z_star.is_none() {
@@ -127,13 +142,23 @@ impl Experiment {
     pub fn run(&mut self) -> Trace {
         self.ensure_z_star();
         let z_star = self.z_star.clone().unwrap();
-        let mut alg = algorithms::build(
-            self.kind,
-            self.problem.clone(),
-            &self.mix,
-            &self.topo,
-            &self.params,
-        );
+        let mut alg: Box<dyn Algorithm> = match self.engine {
+            EngineKind::Sequential => algorithms::build(
+                self.kind,
+                self.problem.clone(),
+                &self.mix,
+                &self.topo,
+                &self.params,
+            ),
+            EngineKind::Parallel => Box::new(ParallelEngine::new(
+                self.kind,
+                self.problem.clone(),
+                &self.mix,
+                &self.topo,
+                &self.params,
+                self.threads,
+            )),
+        };
         let mut net = Network::new(self.topo.clone(), self.cost_model);
         let total_rounds = self.rounds_for_target().min(self.max_rounds);
         let stride = (total_rounds / self.record_points.max(1)).max(1);
@@ -250,6 +275,36 @@ mod tests {
         // comm monotone nondecreasing
         for w in trace.rows.windows(2) {
             assert!(w[1].comm_doubles >= w[0].comm_doubles);
+        }
+    }
+
+    #[test]
+    fn parallel_engine_reproduces_sequential_trace() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let z_star = {
+            let p = RidgeProblem::new(ds.partition_seeded(4, 3), 0.05);
+            solve_optimum(&p, 1e-11)
+        };
+        let run = |engine: EngineKind| {
+            let part = ds.partition_seeded(4, 3);
+            let mut exp =
+                Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+                    .with_step_size(0.5)
+                    .with_passes(8.0)
+                    .with_record_points(8)
+                    .with_z_star(z_star.clone())
+                    .with_engine(engine, 2);
+            exp.run()
+        };
+        let seq = run(EngineKind::Sequential);
+        let par = run(EngineKind::Parallel);
+        assert_eq!(seq.rows.len(), par.rows.len());
+        for (a, b) in seq.rows.iter().zip(&par.rows) {
+            // identical sampling rounds, identical iterates -> identical metrics
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.suboptimality, b.suboptimality);
+            assert_eq!(a.comm_doubles, b.comm_doubles);
         }
     }
 

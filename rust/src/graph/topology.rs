@@ -149,6 +149,12 @@ impl Topology {
 
     /// Ring + `chords` random chords (Watts–Strogatz-ish).
     pub fn small_world(n: usize, chords: usize, seed: u64) -> Topology {
+        // on n < 4 every pair of distinct nodes is ring-adjacent, so no
+        // chord can ever be sampled — fail fast instead of looping forever
+        assert!(
+            chords == 0 || n >= 4,
+            "small_world({n}, {chords}): no non-ring chord exists below 4 nodes"
+        );
         let mut rng = Rng::new(seed);
         let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
         let mut added = 0;

@@ -9,7 +9,10 @@
 //! * **L3 (this crate)** — the decentralized runtime: graph topologies and
 //!   mixing matrices, an in-process message-passing network simulator with
 //!   per-node DOUBLE accounting, the DSBA / DSBA-s algorithms and every
-//!   baseline from the paper's Table 1, problem operators with closed-form
+//!   baseline from the paper's Table 1 (each decomposed into per-node
+//!   [`algorithms::NodeState`] machines, driven either by the sequential
+//!   reference driver or bit-for-bit-identically by the multi-threaded
+//!   [`runtime::ParallelEngine`]), problem operators with closed-form
 //!   or Newton resolvents, metrics, a config system, and a CLI launcher.
 //! * **L2/L1 (python/, build-time only)** — JAX compute graphs calling
 //!   Pallas kernels, AOT-lowered to HLO text under `artifacts/` and
@@ -60,5 +63,6 @@ pub mod prelude {
     pub use crate::operators::{
         AucProblem, LogisticProblem, Problem, RidgeProblem,
     };
+    pub use crate::runtime::{EngineKind, ParallelEngine};
     pub use crate::util::rng::Rng;
 }

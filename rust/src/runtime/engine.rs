@@ -1,0 +1,479 @@
+//! Multi-threaded message-passing node engine.
+//!
+//! Executes the per-node decomposition of any method
+//! ([`crate::algorithms::build_node_program`]) across worker threads, with
+//! `std::sync::mpsc` channels carrying typed [`Message`]s along the
+//! topology's edges and `std::sync::Barrier`-synchronized rounds. The
+//! engine is the *fast path*; the sequential
+//! [`crate::algorithms::node::RoundDriver`] behind each `Algorithm` impl
+//! is the reference oracle.
+//!
+//! ## Determinism contract
+//!
+//! Given the same seed, the engine's iterates are **bit-for-bit equal** to
+//! the sequential driver's (pinned by `rust/tests/engine_parity.rs`):
+//!
+//! * node states are constructed on the launching thread in node order,
+//!   so per-node RNG streams are forked identically;
+//! * rounds are barrier-synchronized — phase A (every node emits its
+//!   messages), barrier, phase B (every node drains its inbox and runs
+//!   its local step), barrier — so a round's messages are all delivered
+//!   before any local step runs, exactly the synchronous model;
+//! * each inbox is sorted by (sender, emit index) before delivery, so
+//!   handlers see the same order the sequential driver produces;
+//! * nodes may only read their own state plus received payloads, so
+//!   scheduling cannot leak into the arithmetic.
+//!
+//! ## Accounting
+//!
+//! Workers log one cost event per message; after the round the launching
+//! thread replays the events into the [`Network`] in canonical (sender,
+//! emit index) order, so per-node sent/received DOUBLE totals equal the
+//! sequential accounting exactly (dense and sparse payloads priced
+//! through the same [`crate::comm::CommCostModel`]).
+
+use crate::algorithms::{
+    build_node_program, AlgoParams, Algorithm, AlgorithmKind, NodeProgram, NodeState,
+};
+use crate::comm::{Message, Network};
+use crate::graph::{MixingMatrix, Topology};
+use crate::operators::Problem;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+/// Which driver executes the rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Deterministic in-order reference driver (the oracle).
+    Sequential,
+    /// Multi-threaded engine (bit-for-bit equal, wall-clock faster).
+    Parallel,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => EngineKind::Sequential,
+            "parallel" | "par" => EngineKind::Parallel,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Sequential => "sequential",
+            EngineKind::Parallel => "parallel",
+        }
+    }
+}
+
+/// Worker count for `threads = 0` (auto): available cores capped by the
+/// node count.
+pub fn auto_threads(n_nodes: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    cores.clamp(1, n_nodes.max(1))
+}
+
+/// (from, emit index, payload) crossing one edge.
+type Envelope = (usize, u32, Message);
+
+#[derive(Clone, Copy, Debug)]
+enum CostKind {
+    Dense(usize),
+    Sparse(usize, usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CostEvent {
+    from: usize,
+    seq: u32,
+    to: usize,
+    kind: CostKind,
+}
+
+struct Shared {
+    /// per-node iterate slots, written by the owning worker each round
+    slots: Vec<Mutex<Vec<f64>>>,
+    /// per-node cumulative component evaluations
+    evals: Vec<AtomicU64>,
+    /// this round's cost events (drained by the launching thread)
+    costs: Mutex<Vec<CostEvent>>,
+    sent: AtomicU64,
+    delivered: AtomicU64,
+    /// set when any worker's node code panicked; workers keep honoring
+    /// the barrier protocol (skipping work) so nothing deadlocks, and the
+    /// launcher propagates the failure after the round
+    panicked: AtomicBool,
+}
+
+fn worker_loop(
+    mut nodes: Vec<(usize, Box<dyn NodeState>, Receiver<Envelope>)>,
+    txs: Vec<Sender<Envelope>>,
+    shared: Arc<Shared>,
+    barrier: Arc<Barrier>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut t = 0usize;
+    loop {
+        barrier.wait(); // round start
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // phase A: emit this round's messages
+        if !shared.panicked.load(Ordering::SeqCst) {
+            let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut cost_batch: Vec<CostEvent> = Vec::new();
+                for (idx, node, _) in nodes.iter_mut() {
+                    let outs = node.outgoing(t);
+                    for (seq, out) in outs.into_iter().enumerate() {
+                        let kind = match &out.msg {
+                            Message::Dense(v) => CostKind::Dense(v.len()),
+                            Message::Sparse(d) => {
+                                CostKind::Sparse(d.vec.nnz(), d.tail.len())
+                            }
+                        };
+                        cost_batch.push(CostEvent {
+                            from: *idx,
+                            seq: seq as u32,
+                            to: out.to,
+                            kind,
+                        });
+                        shared.sent.fetch_add(1, Ordering::Relaxed);
+                        txs[out.to]
+                            .send((*idx, seq as u32, out.msg))
+                            .expect("engine inbox receiver dropped mid-round");
+                    }
+                }
+                if !cost_batch.is_empty() {
+                    shared.costs.lock().unwrap().extend(cost_batch);
+                }
+            }));
+            if phase_a.is_err() {
+                shared.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        barrier.wait(); // all sends complete
+        // phase B: drain inboxes (canonical order), run local steps
+        if !shared.panicked.load(Ordering::SeqCst) {
+            let phase_b = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for (idx, node, rx) in nodes.iter_mut() {
+                    let mut msgs: Vec<Envelope> = rx.try_iter().collect();
+                    msgs.sort_by_key(|&(from, seq, _)| (from, seq));
+                    for (from, _seq, msg) in msgs {
+                        shared.delivered.fetch_add(1, Ordering::Relaxed);
+                        node.on_receive(from, msg);
+                    }
+                    node.local_step(t);
+                    shared.slots[*idx].lock().unwrap().copy_from_slice(node.iterate());
+                    shared.evals[*idx].store(node.evals(), Ordering::Relaxed);
+                }
+            }));
+            if phase_b.is_err() {
+                shared.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        barrier.wait(); // round end
+        t += 1;
+    }
+}
+
+/// The multi-threaded engine. Implements [`Algorithm`], so the
+/// coordinator, CLI, and benches drive it exactly like the sequential
+/// methods.
+pub struct ParallelEngine {
+    kind: AlgorithmKind,
+    topo: Topology,
+    threads: usize,
+    setup: Vec<(usize, usize, usize)>,
+    pass_denom: f64,
+    t: usize,
+    /// launching-thread mirror of the per-node iterates
+    z: Vec<Vec<f64>>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    barrier: Arc<Barrier>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ParallelEngine {
+    /// Decompose `kind` into per-node states and launch the workers.
+    /// `threads = 0` selects [`auto_threads`].
+    pub fn new(
+        kind: AlgorithmKind,
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        topo: &Topology,
+        params: &AlgoParams,
+        threads: usize,
+    ) -> ParallelEngine {
+        let program = build_node_program(kind, problem, mix, topo, params);
+        Self::from_program(program, topo.clone(), threads)
+    }
+
+    /// Launch workers over an already-built node program.
+    pub fn from_program(program: NodeProgram, topo: Topology, threads: usize) -> ParallelEngine {
+        let n = program.nodes.len();
+        assert!(n > 0, "engine needs at least one node");
+        let threads = if threads == 0 { auto_threads(n) } else { threads }.clamp(1, n);
+        let z: Vec<Vec<f64>> = program.nodes.iter().map(|nd| nd.iterate().to_vec()).collect();
+        let shared = Arc::new(Shared {
+            slots: z.iter().map(|r| Mutex::new(r.clone())).collect(),
+            evals: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            costs: Mutex::new(Vec::new()),
+            sent: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let barrier = Arc::new(Barrier::new(threads + 1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut txs: Vec<Sender<Envelope>> = Vec::with_capacity(n);
+        let mut rxs: Vec<Receiver<Envelope>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Envelope>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        // contiguous balanced buckets: node idx -> worker idx*threads/n
+        let mut buckets: Vec<Vec<(usize, Box<dyn NodeState>, Receiver<Envelope>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        let mut rx_iter = rxs.into_iter();
+        for (idx, node) in program.nodes.into_iter().enumerate() {
+            let rx = rx_iter.next().unwrap();
+            buckets[idx * threads / n].push((idx, node, rx));
+        }
+        let mut workers = Vec::with_capacity(threads);
+        for bucket in buckets {
+            let txs = txs.clone();
+            let shared = shared.clone();
+            let barrier = barrier.clone();
+            let stop = stop.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(bucket, txs, shared, barrier, stop)
+            }));
+        }
+        drop(txs); // workers hold the only senders
+        ParallelEngine {
+            kind: program.kind,
+            topo,
+            threads,
+            setup: program.setup,
+            pass_denom: program.pass_denom,
+            t: 0,
+            z,
+            shared,
+            workers,
+            barrier,
+            stop,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// (messages sent, messages delivered) so far — equal unless a
+    /// message was dropped, which the concurrency stress test forbids.
+    pub fn message_stats(&self) -> (u64, u64) {
+        (
+            self.shared.sent.load(Ordering::Relaxed),
+            self.shared.delivered.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Algorithm for ParallelEngine {
+    fn step(&mut self, net: &mut Network) {
+        if self.t == 0 {
+            for &(from, to, len) in &self.setup {
+                net.send_dense(from, to, len);
+            }
+        }
+        self.barrier.wait(); // release the round
+        self.barrier.wait(); // phase A complete
+        self.barrier.wait(); // phase B complete
+        // fail fast (with an error instead of a barrier deadlock) if any
+        // node's code panicked on a worker — the engine is poisoned
+        if self.shared.panicked.load(Ordering::SeqCst) {
+            panic!(
+                "ParallelEngine: a node panicked on a worker thread during \
+                 round {} of {} — engine state is poisoned",
+                self.t,
+                self.kind.name()
+            );
+        }
+        // replay cost events in canonical (sender, emit index) order —
+        // identical to the sequential driver's charging order
+        let mut events = {
+            let mut guard = self.shared.costs.lock().unwrap();
+            std::mem::take(&mut *guard)
+        };
+        events.sort_by_key(|e| (e.from, e.seq));
+        for e in events {
+            match e.kind {
+                CostKind::Dense(len) => net.send_dense(e.from, e.to, len),
+                CostKind::Sparse(nnz, tail) => net.send_sparse(e.from, e.to, nnz, tail),
+            }
+        }
+        // mirror iterates for `iterates()`
+        for (n, row) in self.z.iter_mut().enumerate() {
+            let slot = self.shared.slots[n].lock().unwrap();
+            row.copy_from_slice(&slot);
+        }
+        self.t += 1;
+    }
+
+    fn iterates(&self) -> &[Vec<f64>] {
+        &self.z
+    }
+
+    fn passes(&self) -> f64 {
+        let evals: u64 = self.shared.evals.iter().map(|e| e.load(Ordering::Relaxed)).sum();
+        evals as f64 / self.pass_denom
+    }
+
+    fn iteration(&self) -> usize {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+}
+
+impl Drop for ParallelEngine {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.barrier.wait(); // wake workers at the round-start barrier
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::build;
+    use crate::comm::CommCostModel;
+    use crate::data::SyntheticSpec;
+    use crate::operators::RidgeProblem;
+
+    fn tiny_world(nodes: usize) -> (Arc<dyn Problem>, MixingMatrix, Topology) {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(63);
+        let part = ds.partition_seeded(nodes, 3);
+        let topo = Topology::ring(nodes);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        (Arc::new(RidgeProblem::new(part, 0.05)), mix, topo)
+    }
+
+    #[test]
+    fn engine_matches_sequential_bitwise_smoke() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut seq = build(AlgorithmKind::Dsba, p.clone(), &mix, &topo, &params);
+        let mut par =
+            ParallelEngine::new(AlgorithmKind::Dsba, p.clone(), &mix, &topo, &params, 2);
+        let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+        let mut net_p = Network::new(topo.clone(), CommCostModel::default());
+        for round in 0..12 {
+            seq.step(&mut net_s);
+            par.step(&mut net_p);
+            for n in 0..topo.n {
+                assert_eq!(
+                    seq.iterates()[n],
+                    par.iterates()[n],
+                    "round {round} node {n}"
+                );
+            }
+        }
+        assert_eq!(net_s.messages(), net_p.messages());
+        assert_eq!(seq.passes(), par.passes());
+    }
+
+    #[test]
+    fn drop_without_stepping_does_not_hang() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let eng = ParallelEngine::new(AlgorithmKind::Extra, p, &mix, &topo, &params, 3);
+        drop(eng);
+    }
+
+    #[test]
+    fn message_stats_balance() {
+        let (p, mix, topo) = tiny_world(5);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut eng =
+            ParallelEngine::new(AlgorithmKind::DsbaSparse, p, &mix, &topo, &params, 2);
+        let mut net = Network::new(topo, CommCostModel::default());
+        for _ in 0..10 {
+            eng.step(&mut net);
+        }
+        let (sent, delivered) = eng.message_stats();
+        assert_eq!(sent, delivered, "engine dropped messages");
+        assert!(sent > 0);
+    }
+
+    struct PanickyNode {
+        z: Vec<f64>,
+        boom_at: usize,
+    }
+
+    impl NodeState for PanickyNode {
+        fn outgoing(&mut self, _t: usize) -> Vec<crate::comm::Outgoing> {
+            Vec::new()
+        }
+        fn on_receive(&mut self, _from: usize, _msg: Message) {}
+        fn local_step(&mut self, t: usize) {
+            if t == self.boom_at {
+                panic!("boom");
+            }
+        }
+        fn iterate(&self) -> &[f64] {
+            &self.z
+        }
+        fn evals(&self) -> u64 {
+            0
+        }
+    }
+
+    #[test]
+    fn worker_panic_fails_fast_instead_of_deadlocking() {
+        let program = NodeProgram {
+            kind: AlgorithmKind::Dsba,
+            nodes: vec![Box::new(PanickyNode { z: vec![0.0], boom_at: 2 })],
+            setup: Vec::new(),
+            pass_denom: 1.0,
+        };
+        let topo = Topology::from_edges(1, &[]);
+        let mut eng = ParallelEngine::from_program(program, topo.clone(), 1);
+        let mut net = Network::new(topo, CommCostModel::default());
+        eng.step(&mut net);
+        eng.step(&mut net);
+        // round t=2 panics on the worker; the launcher must surface it as
+        // a panic, not a barrier deadlock
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.step(&mut net);
+        }));
+        assert!(result.is_err(), "expected fail-fast panic");
+        drop(eng); // must not hang
+    }
+
+    #[test]
+    fn auto_threads_is_bounded() {
+        assert!(auto_threads(1) == 1);
+        assert!(auto_threads(4) >= 1 && auto_threads(4) <= 4);
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("parallel"), Some(EngineKind::Parallel));
+        assert_eq!(EngineKind::parse("SEQ"), Some(EngineKind::Sequential));
+        assert_eq!(EngineKind::parse("bogus"), None);
+    }
+}

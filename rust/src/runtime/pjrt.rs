@@ -1,0 +1,290 @@
+//! XLA/PJRT runtime (requires the `pjrt` feature and a vendored `xla`
+//! crate): loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — xla_extension 0.5.1 rejects jax>=0.5 serialized protos)
+//! and executes them on the PJRT CPU client from the Rust side. Python
+//! never runs at request time.
+//!
+//! Artifacts are compiled per *shape bucket* (see `python/compile/
+//! shapes.py`); [`XlaRuntime`] picks the smallest bucket that fits a
+//! shard, zero-pads (every exported function is padding-neutral by
+//! construction — enforced by `python/tests/test_model.py`), executes,
+//! and un-pads/normalizes the result.
+
+use super::registry::{ArtifactEntry, Manifest};
+use crate::linalg::CsrMatrix;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn err<E: std::fmt::Display>(e: E) -> String {
+    e.to_string()
+}
+
+/// PJRT-backed executor over the artifact directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaRuntime {
+    /// Load `artifacts/manifest.json` and connect the PJRT CPU client.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<XlaRuntime, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_src = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            format!("reading {:?}/manifest.json — run `make artifacts` ({e})", dir)
+        })?;
+        let manifest = Manifest::parse(&manifest_src)?;
+        let client = xla::PjRtClient::cpu().map_err(err)?;
+        Ok(XlaRuntime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn load_default() -> Result<XlaRuntime, String> {
+        Self::load(super::find_artifacts_dir()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether artifact execution is available (true in this build).
+    pub fn has_backend(&self) -> bool {
+        true
+    }
+
+    /// Smallest (q, d) bucket of `fn_name` fitting the given shard shape.
+    pub fn pick_bucket(&self, fn_name: &str, q: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.manifest.pick_qd(fn_name, q, d)
+    }
+
+    fn executable(&self, entry: &ArtifactEntry) -> Result<(), String> {
+        if self.cache.borrow().contains_key(&entry.name) {
+            return Ok(());
+        }
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| "bad path".to_string())?,
+        )
+        .map_err(err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(err)?;
+        self.cache.borrow_mut().insert(entry.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f64 literals; returns the flattened f64
+    /// outputs (the lowering always returns a 1-tuple).
+    pub fn exec_raw(
+        &self,
+        entry: &ArtifactEntry,
+        args: &[xla::Literal],
+    ) -> Result<Vec<f64>, String> {
+        self.executable(entry)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&entry.name).unwrap();
+        let result = exe.execute::<xla::Literal>(args).map_err(err)?[0][0]
+            .to_literal_sync()
+            .map_err(err)?;
+        let out = result.to_tuple1().map_err(err)?;
+        out.to_vec::<f64>().map_err(err)
+    }
+
+    /// Dense-pad a CSR shard into a (qb x db) row-major f64 buffer.
+    fn pad_shard(shard: &CsrMatrix, qb: usize, db: usize) -> Vec<f64> {
+        assert!(shard.rows <= qb && shard.cols <= db);
+        let mut a = vec![0.0; qb * db];
+        for i in 0..shard.rows {
+            for (&j, &v) in shard.row_indices(i).iter().zip(shard.row_values(i)) {
+                a[i * db + j as usize] = v;
+            }
+        }
+        a
+    }
+
+    fn pad_vec(x: &[f64], len: usize) -> Vec<f64> {
+        let mut v = x.to_vec();
+        v.resize(len, 0.0);
+        v
+    }
+
+    fn lit1(x: &[f64]) -> Result<xla::Literal, String> {
+        Ok(xla::Literal::vec1(x))
+    }
+
+    fn lit2(x: &[f64], rows: usize, cols: usize) -> Result<xla::Literal, String> {
+        xla::Literal::vec1(x)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(err)
+    }
+
+    /// Shared driver for the `(A, z, y) -> g or sum` families.
+    fn run_azy(
+        &self,
+        fn_name: &str,
+        shard: &CsrMatrix,
+        z: &[f64],
+        y: &[f64],
+        out_kind: OutKind,
+    ) -> Result<Vec<f64>, String> {
+        let (q, d) = (shard.rows, shard.cols);
+        let entry = self
+            .pick_bucket(fn_name, q, d)
+            .ok_or_else(|| format!("no {fn_name} bucket fits q={q}, d={d}"))?;
+        let (qb, db) = entry.qd().ok_or_else(|| "entry lacks qd".to_string())?;
+        let a = Self::pad_shard(shard, qb, db);
+        let args = vec![
+            Self::lit2(&a, qb, db)?,
+            Self::lit1(&Self::pad_vec(&z[..d], db))?,
+            Self::lit1(&Self::pad_vec(y, qb))?,
+        ];
+        let out = self.exec_raw(entry, &args)?;
+        Ok(match out_kind {
+            OutKind::PerSample => out[..q].to_vec(),
+            OutKind::FeatureVec => out[..d].to_vec(),
+            OutKind::Scalar => out,
+        })
+    }
+
+    /// Batched ridge coefficients `A z - y` (SAGA init path).
+    pub fn coefs_ridge(&self, shard: &CsrMatrix, z: &[f64], y: &[f64]) -> Result<Vec<f64>, String> {
+        self.run_azy("coefs_ridge", shard, z, y, OutKind::PerSample)
+    }
+
+    /// Batched logistic coefficients.
+    pub fn coefs_logistic(
+        &self,
+        shard: &CsrMatrix,
+        z: &[f64],
+        y: &[f64],
+    ) -> Result<Vec<f64>, String> {
+        self.run_azy("coefs_logistic", shard, z, y, OutKind::PerSample)
+    }
+
+    /// Full (unregularized, mean) ridge operator `(1/q) A^T (A z - y)`.
+    pub fn full_op_ridge(&self, shard: &CsrMatrix, z: &[f64], y: &[f64]) -> Result<Vec<f64>, String> {
+        let mut out = self.run_azy("full_op_ridge", shard, z, y, OutKind::FeatureVec)?;
+        crate::linalg::scale(&mut out, 1.0 / shard.rows as f64);
+        Ok(out)
+    }
+
+    /// Full (unregularized, mean) logistic operator.
+    pub fn full_op_logistic(
+        &self,
+        shard: &CsrMatrix,
+        z: &[f64],
+        y: &[f64],
+    ) -> Result<Vec<f64>, String> {
+        let mut out = self.run_azy("full_op_logistic", shard, z, y, OutKind::FeatureVec)?;
+        crate::linalg::scale(&mut out, 1.0 / shard.rows as f64);
+        Ok(out)
+    }
+
+    /// Raw margins `A z` (metrics path).
+    pub fn scores(&self, shard: &CsrMatrix, z: &[f64]) -> Result<Vec<f64>, String> {
+        let (q, d) = (shard.rows, shard.cols);
+        let entry = self
+            .pick_bucket("scores", q, d)
+            .ok_or_else(|| format!("no scores bucket fits q={q}, d={d}"))?;
+        let (qb, db) = entry.qd().unwrap();
+        let a = Self::pad_shard(shard, qb, db);
+        let out = self.exec_raw(
+            entry,
+            &[Self::lit2(&a, qb, db)?, Self::lit1(&Self::pad_vec(z, db))?],
+        )?;
+        Ok(out[..q].to_vec())
+    }
+
+    /// Ridge objective `0.5 ||A z - y||^2` (unnormalized sum).
+    pub fn obj_ridge(&self, shard: &CsrMatrix, z: &[f64], y: &[f64]) -> Result<f64, String> {
+        Ok(self.run_azy("obj_ridge", shard, z, y, OutKind::Scalar)?[0])
+    }
+
+    /// Logistic objective `sum log(1+exp(-y m))` (unnormalized sum).
+    pub fn obj_logistic(&self, shard: &CsrMatrix, z: &[f64], y: &[f64]) -> Result<f64, String> {
+        Ok(self.run_azy("obj_logistic", shard, z, y, OutKind::Scalar)?[0])
+    }
+
+    /// Full (unregularized, mean) AUC saddle operator over a shard.
+    /// `z_aug = [w(d); a; b; theta]`, returns `(d+3,)`.
+    pub fn auc_full_op(
+        &self,
+        shard: &CsrMatrix,
+        y: &[f64],
+        z_aug: &[f64],
+        p: f64,
+    ) -> Result<Vec<f64>, String> {
+        let (q, d) = (shard.rows, shard.cols);
+        let entry = self
+            .pick_bucket("auc_full_op", q, d)
+            .ok_or_else(|| format!("no auc bucket fits q={q}, d={d}"))?;
+        let (qb, db) = entry.qd().unwrap();
+        let a = Self::pad_shard(shard, qb, db);
+        // pad z_aug: [w pad to db, tail(3)]
+        let mut zp = Self::pad_vec(&z_aug[..d], db);
+        zp.extend_from_slice(&z_aug[d..d + 3]);
+        let out = self.exec_raw(
+            entry,
+            &[
+                Self::lit2(&a, qb, db)?,
+                Self::lit1(&Self::pad_vec(y, qb))?,
+                Self::lit1(&zp)?,
+                xla::Literal::from(p),
+            ],
+        )?;
+        let mut res = out[..d].to_vec();
+        res.extend_from_slice(&out[db..db + 3]);
+        crate::linalg::scale(&mut res, 1.0 / q as f64);
+        Ok(res)
+    }
+
+    /// Fused gossip mixing `Wt (2 Z - Z_prev)` for stacked iterates.
+    pub fn mix_step(
+        &self,
+        wt: &crate::linalg::DenseMatrix,
+        z: &[Vec<f64>],
+        z_prev: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>, String> {
+        let n = z.len();
+        let d = z[0].len();
+        let entry = self
+            .manifest
+            .pick_mix(n, d)
+            .ok_or_else(|| format!("no mix bucket fits n={n}, d={d}"))?;
+        let (nb, db) = entry.nd().unwrap();
+        let mut w_pad = vec![0.0; nb * nb];
+        for i in 0..n {
+            for j in 0..n {
+                w_pad[i * nb + j] = wt[(i, j)];
+            }
+        }
+        let pad_rows = |rows: &[Vec<f64>]| {
+            let mut out = vec![0.0; nb * db];
+            for (i, r) in rows.iter().enumerate() {
+                out[i * db..i * db + d].copy_from_slice(r);
+            }
+            out
+        };
+        let out = self.exec_raw(
+            entry,
+            &[
+                Self::lit2(&w_pad, nb, nb)?,
+                Self::lit2(&pad_rows(z), nb, db)?,
+                Self::lit2(&pad_rows(z_prev), nb, db)?,
+            ],
+        )?;
+        Ok((0..n).map(|i| out[i * db..i * db + d].to_vec()).collect())
+    }
+}
+
+enum OutKind {
+    PerSample,
+    FeatureVec,
+    Scalar,
+}

@@ -94,6 +94,104 @@ fn prop_mixing_matrix_conditions_hold_across_topologies() {
 }
 
 #[test]
+fn prop_mixing_doubly_stochastic_and_contractive() {
+    // The consensus-convergence core of §4: W is symmetric doubly
+    // stochastic on every random connected topology, and the disagreement
+    // operator W - (1/n) 11^T has spectral radius strictly below 1 (so
+    // gossip mixing contracts toward consensus).
+    use dsba::linalg::symmetric_eigenvalues;
+    prop_check("W row/col sums, symmetry, rho(W - J/n) < 1", 20, |rng| {
+        let n = 3 + rng.below(10);
+        let topo = match rng.below(4) {
+            0 => Topology::erdos_renyi(n, 0.3 + 0.4 * rng.uniform(), rng.next_u64()),
+            1 => Topology::ring(n),
+            2 => Topology::grid2d(n),
+            // small_world needs n >= 4 for any non-ring chord to exist
+            _ => Topology::small_world(n.max(4), n / 2, rng.next_u64()),
+        };
+        let n = topo.n;
+        if !topo.is_connected() {
+            return Err("generator produced a disconnected graph".into());
+        }
+        let mix = if rng.bernoulli(0.5) {
+            MixingMatrix::laplacian(&topo, 1.0 + rng.uniform())
+        } else {
+            MixingMatrix::metropolis(&topo)
+        };
+        let w = &mix.w;
+        for i in 0..n {
+            let row: f64 = (0..n).map(|j| w[(i, j)]).sum();
+            if (row - 1.0).abs() > 1e-8 {
+                return Err(format!("row {i} sums to {row}"));
+            }
+            let col: f64 = (0..n).map(|j| w[(j, i)]).sum();
+            if (col - 1.0).abs() > 1e-8 {
+                return Err(format!("col {i} sums to {col}"));
+            }
+            for j in 0..n {
+                if (w[(i, j)] - w[(j, i)]).abs() > 1e-10 {
+                    return Err(format!("asymmetric at ({i},{j})"));
+                }
+            }
+        }
+        // spectral radius of the disagreement operator
+        let mut m = w.clone();
+        let inv_n = 1.0 / n as f64;
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] -= inv_n;
+            }
+        }
+        let eig = symmetric_eigenvalues(&m, 1e-13);
+        let radius = eig.iter().fold(0.0f64, |a, e| a.max(e.abs()));
+        if radius >= 1.0 - 1e-9 {
+            return Err(format!(
+                "spectral radius {radius} not strictly < 1 on {} nodes",
+                topo.n
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_message_wire_roundtrip_lossless() {
+    // Engine payloads survive serialize -> deliver -> reconstruct
+    // bit-for-bit (f64 via to_bits), for both dense iterates and sparse
+    // relay deltas.
+    use dsba::comm::{Message, RelayDelta};
+    prop_check("message encode/decode identity", 60, |rng| {
+        let msg = if rng.bernoulli(0.5) {
+            let len = rng.below(300);
+            Message::dense(
+                (0..len).map(|_| rng.normal() * 10f64.powi(rng.below(7) as i32 - 3)).collect(),
+            )
+        } else {
+            let dim = 1 + rng.below(500);
+            let nnz = rng.below(dim.min(40) + 1);
+            let pairs: Vec<(u32, f64)> =
+                (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+            let tail_len = rng.below(4);
+            Message::Sparse(RelayDelta {
+                src: rng.below(1000) as u32,
+                t: rng.below(100_000) as u32,
+                vec: SparseVec::from_pairs(dim, pairs),
+                tail: (0..tail_len).map(|_| rng.normal()).collect(),
+            })
+        };
+        let decoded = Message::decode(&msg.encode()).map_err(|e| e)?;
+        if decoded != msg {
+            return Err("roundtrip mismatch".into());
+        }
+        // bit-exactness beyond PartialEq (e.g. signed zeros)
+        if decoded.encode() != msg.encode() {
+            return Err("re-encode not bit-identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_resolvents_hold_across_random_problems() {
     prop_check("resolvent identity (all problems)", 12, |rng| {
         let ds = SyntheticSpec::tiny()

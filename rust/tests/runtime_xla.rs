@@ -9,7 +9,14 @@ use dsba::runtime::XlaRuntime;
 
 fn runtime_or_skip() -> Option<XlaRuntime> {
     match XlaRuntime::load_default() {
-        Ok(rt) => Some(rt),
+        Ok(rt) if rt.has_backend() => Some(rt),
+        Ok(_) => {
+            eprintln!(
+                "SKIP runtime_xla tests: artifacts present but the PJRT \
+                 backend is not compiled in (build with --features pjrt)"
+            );
+            None
+        }
         Err(e) => {
             eprintln!("SKIP runtime_xla tests: {e}");
             None
