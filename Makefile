@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt bench-engine artifacts clean
+.PHONY: verify build test fmt lint bench-engine bench-transport artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -17,9 +17,17 @@ test:
 fmt:
 	$(CARGO) fmt --check
 
+## clippy over lib + bins + tests + benches, warnings are errors (CI gate)
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
 ## parallel-engine scaling table (wall-clock vs thread count)
 bench-engine:
 	$(CARGO) bench --bench engine_scaling
+
+## local vs loopback-TCP transport throughput (DOUBLEs/sec)
+bench-transport:
+	$(CARGO) bench --bench transport_overhead
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
 artifacts:

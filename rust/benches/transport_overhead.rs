@@ -1,0 +1,100 @@
+//! Transport overhead: DOUBLEs/sec moved by the parallel engine with
+//! in-process mpsc edges vs per-edge loopback TCP sockets (every payload
+//! serialized through the wire codec and length-prefix-framed). Output is
+//! identical either way (transport parity, `rust/tests/engine_parity.rs`);
+//! only wall-clock changes — this table is the honest price of making the
+//! paper's `C_n^t` DOUBLEs cross real sockets.
+//!
+//!     cargo bench --bench transport_overhead
+
+use dsba::algorithms::{AlgoParams, AlgorithmKind};
+use dsba::bench_harness::header;
+use dsba::comm::{CommCostModel, Network};
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use dsba::runtime::{ParallelEngine, TcpTransport};
+use dsba::util::timer::Timer;
+use std::sync::Arc;
+
+/// Run `rounds` engine rounds; returns (secs, DOUBLEs accounted).
+fn time_rounds(eng: &mut ParallelEngine, topo: &Topology, rounds: usize) -> (f64, f64) {
+    let mut net = Network::new(topo.clone(), CommCostModel::default());
+    // warm past t = 0 special cases and relay pipeline fill
+    for _ in 0..topo.diameter + 2 {
+        eng.step(&mut net);
+    }
+    let warm = net.total_received();
+    let t = Timer::start();
+    for _ in 0..rounds {
+        eng.step(&mut net);
+    }
+    (t.secs(), net.total_received() - warm)
+}
+
+fn main() {
+    let threads = 4;
+    for &nodes in &[8] {
+        let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+        let ds = SyntheticSpec::rcv1_like()
+            .with_samples(40 * nodes)
+            .with_dim(4_096)
+            .with_regression(true)
+            .generate(3);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        header(&format!(
+            "transport overhead @ N = {nodes} (d = 4096, {} edges, x{threads} threads)",
+            topo.edge_count()
+        ));
+        println!(
+            "{:>9} {:>9} {:>12} {:>14} {:>9}",
+            "method", "transport", "per-round", "MDOUBLEs/sec", "overhead"
+        );
+        // a dense broadcast method and the sparse relay extreme
+        for (kind, alpha, rounds) in [
+            (AlgorithmKind::Dsba, 0.5, 30),
+            (AlgorithmKind::Extra, 0.3, 20),
+            (AlgorithmKind::DsbaSparse, 0.5, 30),
+        ] {
+            let problem: Arc<dyn Problem> =
+                Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 2), 0.01));
+            let params = AlgoParams::new(alpha, problem.dim(), 7);
+            let mut rows = Vec::new();
+            {
+                let mut eng =
+                    ParallelEngine::new(kind, problem.clone(), &mix, &topo, &params, threads);
+                let (secs, doubles) = time_rounds(&mut eng, &topo, rounds);
+                rows.push(("local", secs / rounds as f64, doubles / secs / 1e6));
+            }
+            {
+                let transport = TcpTransport::loopback(&topo, params.seed)
+                    .expect("loopback transport setup");
+                let mut eng = ParallelEngine::new_with_transport(
+                    kind,
+                    problem.clone(),
+                    &mix,
+                    &topo,
+                    &params,
+                    threads,
+                    Box::new(transport),
+                );
+                let (secs, doubles) = time_rounds(&mut eng, &topo, rounds);
+                rows.push(("tcp", secs / rounds as f64, doubles / secs / 1e6));
+            }
+            let local_rate = rows[0].2;
+            for (name, per_round, rate) in rows {
+                println!(
+                    "{:>9} {:>9} {:>9.3} ms {:>14.2} {:>8.2}x",
+                    kind.name(),
+                    name,
+                    per_round * 1e3,
+                    rate,
+                    local_rate / rate
+                );
+            }
+        }
+    }
+    println!(
+        "\n(overhead = local rate / tcp rate; the tcp column pays encode + \
+         frame + loopback syscalls per edge, the real cross-process cost)"
+    );
+}

@@ -7,7 +7,7 @@ use crate::algorithms::AlgorithmKind;
 use crate::config::{ExperimentConfig, ProblemKind};
 use crate::coordinator::Trace;
 use crate::metrics::format_table;
-use crate::runtime::EngineKind;
+use crate::runtime::{EngineKind, TransportKind};
 use crate::util::json::Json;
 
 /// Print a bench section header.
@@ -59,6 +59,9 @@ pub struct FigureSpec {
     pub engine: EngineKind,
     /// parallel-engine worker threads (0 = auto)
     pub threads: usize,
+    /// parallel-engine edge channels (transport parity means figures are
+    /// identical either way; tcp adds the measured socket overhead)
+    pub transport: TransportKind,
 }
 
 impl FigureSpec {
@@ -82,6 +85,7 @@ impl FigureSpec {
             seed: 42,
             engine: EngineKind::Sequential,
             threads: 0,
+            transport: TransportKind::Local,
         }
     }
 
@@ -107,6 +111,7 @@ impl FigureSpec {
                     record_points: 25,
                     engine: self.engine,
                     threads: self.threads,
+                    transport: self.transport,
                     ..Default::default()
                 };
                 if m == AlgorithmKind::Dlm {

@@ -13,7 +13,7 @@ use crate::bench_harness::FigureSpec;
 use crate::config::{ExperimentConfig, ProblemKind};
 use crate::graph::TopologyKind;
 use crate::metrics::format_table;
-use crate::runtime::EngineKind;
+use crate::runtime::{EngineKind, TransportKind};
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -48,6 +48,12 @@ USAGE:
            [--algorithm NAME] [--alpha X] [--passes X] [--nodes N]
            [--topology KIND] [--samples N] [--dim N] [--seed N]
            [--engine sequential|parallel] [--threads N]
+           [--transport local|tcp] [--listen ADDR] [--peers N=ADDR,..]
+           [--hosted SPEC]
+           (tcp transport: every edge crosses a loopback/host socket;
+            default hosts all nodes on loopback. --hosted \"0-4\" +
+            --peers \"5=host:port,...\" splits one run across engine
+            processes, each reporting metrics for its own nodes)
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
   dsba info [--dataset NAME] [--nodes N]   dataset & graph statistics
   dsba artifacts          verify the XLA artifact directory
@@ -130,6 +136,24 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     }
+    if let Some(v) = f.get("transport") {
+        match TransportKind::parse(v) {
+            Some(t) => cfg.transport = t,
+            None => {
+                eprintln!("bad --transport {v} (local|tcp)");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = f.get("listen") {
+        cfg.listen = v.clone();
+    }
+    if let Some(v) = f.get("peers") {
+        cfg.peers = v.clone();
+    }
+    if let Some(v) = f.get("hosted") {
+        cfg.hosted = v.clone();
+    }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
             if let Some(v) = f.get($key) {
@@ -152,7 +176,7 @@ fn cmd_run(args: &[String]) -> i32 {
     num!("lambda", cfg.lambda, f64);
     num!("threads", cfg.threads, usize);
 
-    println!("config: {}", cfg.to_json().to_string());
+    println!("config: {}", cfg.to_json());
     let mut exp = match cfg.build() {
         Ok(e) => e,
         Err(e) => {
@@ -172,9 +196,28 @@ fn cmd_run(args: &[String]) -> i32 {
         } else {
             cfg.threads
         };
-        println!("engine: parallel, {t} worker thread(s)");
+        println!(
+            "engine: parallel, {t} worker thread(s), {} transport",
+            cfg.transport.name()
+        );
+    } else if cfg.transport == TransportKind::Tcp {
+        eprintln!("note: --transport tcp only applies to --engine parallel; ignored");
     }
-    let trace = exp.run();
+    if cfg.transport == TransportKind::Local
+        && !(cfg.hosted.is_empty() && cfg.peers.is_empty() && cfg.listen.is_empty())
+    {
+        eprintln!(
+            "note: --hosted/--peers/--listen only apply to --transport tcp; \
+             ignored (this process will simulate ALL nodes in-process)"
+        );
+    }
+    let trace = match exp.try_run() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("run error: {e}");
+            return 1;
+        }
+    };
     println!("{}", format_table(&trace.rows));
     println!(
         "final: suboptimality {:.3e}, comm {:.3e} doubles",

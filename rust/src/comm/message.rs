@@ -98,12 +98,20 @@ impl Message {
     }
 
     /// Reconstruct from the wire layout (bit-exact inverse of `encode`).
+    ///
+    /// Total on arbitrary bytes: every length field is bounded by the
+    /// remaining buffer before any allocation (a flipped bit can never
+    /// trigger a multi-GB `Vec::with_capacity`), and sparse frames are
+    /// validated structurally (`nnz <= dim`, every `idx < dim`, indices
+    /// strictly increasing) so a corrupt frame can never materialize an
+    /// invalid [`SparseVec`]. Accepted frames are canonical:
+    /// `decode(b)?.encode() == b`.
     pub fn decode(buf: &[u8]) -> Result<Message, String> {
         let mut r = Reader { buf, pos: 0 };
         let tag = r.u8()?;
         let msg = match tag {
             TAG_DENSE => {
-                let len = r.u64()? as usize;
+                let len = r.count("dense len", 8)?;
                 let mut v = Vec::with_capacity(len);
                 for _ in 0..len {
                     v.push(r.f64()?);
@@ -113,17 +121,30 @@ impl Message {
             TAG_SPARSE => {
                 let src = r.u32()?;
                 let t = r.u32()?;
-                let dim = r.u64()? as usize;
-                let nnz = r.u64()? as usize;
+                let dim_raw = r.u64()?;
+                let dim = usize::try_from(dim_raw)
+                    .map_err(|_| format!("dim {dim_raw} exceeds address space"))?;
+                // one entry = 4 idx bytes + 8 val bytes
+                let nnz = r.count("sparse nnz", 12)?;
+                if nnz > dim {
+                    return Err(format!("nnz {nnz} exceeds dim {dim}"));
+                }
                 let mut idx = Vec::with_capacity(nnz);
                 for _ in 0..nnz {
-                    idx.push(r.u32()?);
+                    let i = r.u32()?;
+                    if i as usize >= dim {
+                        return Err(format!("idx {i} out of dim {dim}"));
+                    }
+                    if idx.last().is_some_and(|&prev| i <= prev) {
+                        return Err(format!("idx {i} not strictly increasing"));
+                    }
+                    idx.push(i);
                 }
                 let mut val = Vec::with_capacity(nnz);
                 for _ in 0..nnz {
                     val.push(r.f64()?);
                 }
-                let tail_len = r.u64()? as usize;
+                let tail_len = r.count("tail len", 8)?;
                 let mut tail = Vec::with_capacity(tail_len);
                 for _ in 0..tail_len {
                     tail.push(r.f64()?);
@@ -158,12 +179,35 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.pos + n > self.buf.len() {
+        // checked: a huge `n` must fail cleanly, not wrap the bound below
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| "length overflow".to_string())?;
+        if end > self.buf.len() {
             return Err("truncated message".to_string());
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Read a u64 element-count field and bound it by the bytes actually
+    /// left in the buffer (`elem_bytes` per element), so corrupt frames
+    /// can never drive an over-allocation.
+    fn count(&mut self, what: &str, elem_bytes: usize) -> Result<usize, String> {
+        let raw = self.u64()?;
+        let max = (self.remaining() / elem_bytes) as u64;
+        if raw > max {
+            return Err(format!(
+                "{what} {raw} exceeds remaining buffer ({max} elements max)"
+            ));
+        }
+        Ok(raw as usize)
     }
 
     fn u8(&mut self) -> Result<u8, String> {
@@ -221,6 +265,86 @@ mod tests {
         let mut enc = Message::dense(vec![1.0]).encode();
         enc.push(0); // trailing byte
         assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_bounds_length_fields_before_allocating() {
+        // dense frame claiming u64::MAX doubles: must error, never allocate
+        let mut b = vec![TAG_DENSE];
+        put_u64(&mut b, u64::MAX);
+        assert!(Message::decode(&b).is_err());
+        // dense frame claiming more doubles than the buffer holds
+        let mut b = Message::dense(vec![1.0, 2.0]).encode();
+        b[1..9].copy_from_slice(&1000u64.to_le_bytes());
+        assert!(Message::decode(&b).is_err());
+        // sparse frame with a huge nnz field
+        let mut b = vec![TAG_SPARSE];
+        put_u32(&mut b, 0); // src
+        put_u32(&mut b, 0); // t
+        put_u64(&mut b, 10); // dim
+        put_u64(&mut b, u64::MAX); // nnz
+        assert!(Message::decode(&b).is_err());
+        // sparse frame with a huge tail length
+        let mut b = Message::Sparse(RelayDelta {
+            src: 0,
+            t: 0,
+            vec: SparseVec::from_pairs(4, vec![(1, 1.0)]),
+            tail: vec![],
+        })
+        .encode();
+        let tail_field = b.len() - 8;
+        b[tail_field..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&b).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_structurally_invalid_sparse() {
+        fn sparse_frame(dim: u64, idx: &[u32], val: &[f64]) -> Vec<u8> {
+            let mut b = vec![TAG_SPARSE];
+            put_u32(&mut b, 3); // src
+            put_u32(&mut b, 7); // t
+            put_u64(&mut b, dim);
+            put_u64(&mut b, idx.len() as u64);
+            for &i in idx {
+                put_u32(&mut b, i);
+            }
+            for &v in val {
+                put_f64(&mut b, v);
+            }
+            put_u64(&mut b, 0); // tail
+            b
+        }
+        // nnz > dim
+        assert!(Message::decode(&sparse_frame(1, &[0, 1], &[1.0, 2.0])).is_err());
+        // idx out of dim
+        assert!(Message::decode(&sparse_frame(5, &[2, 5], &[1.0, 2.0])).is_err());
+        // duplicate / unsorted idx
+        assert!(Message::decode(&sparse_frame(5, &[2, 2], &[1.0, 2.0])).is_err());
+        assert!(Message::decode(&sparse_frame(5, &[3, 1], &[1.0, 2.0])).is_err());
+        // the well-formed variant still decodes
+        assert!(Message::decode(&sparse_frame(5, &[1, 3], &[1.0, 2.0])).is_ok());
+    }
+
+    #[test]
+    fn decode_every_truncation_errs() {
+        for msg in [
+            Message::dense(vec![1.0, -2.5, 3.0]),
+            Message::Sparse(RelayDelta {
+                src: 1,
+                t: 9,
+                vec: SparseVec::from_pairs(16, vec![(2, 0.5), (7, -1.0)]),
+                tail: vec![4.0],
+            }),
+        ] {
+            let enc = msg.encode();
+            for k in 0..enc.len() {
+                assert!(
+                    Message::decode(&enc[..k]).is_err(),
+                    "prefix {k}/{} decoded Ok",
+                    enc.len()
+                );
+            }
+        }
     }
 
     #[test]

@@ -83,11 +83,12 @@ impl Network {
     }
 
     /// Dense broadcast to all neighbors (the per-round exchange of every
-    /// dense-communication method).
+    /// dense-communication method). Accumulation order matches per-edge
+    /// [`Network::send_dense`] calls exactly (repeated `+= c`, not `c *
+    /// degree`), so broadcast and unicast accounting stay bit-identical.
     pub fn broadcast_dense(&mut self, from: usize, len: usize) {
-        for i in 0..self.topo.neighbors(from).len() {
-            let to = self.topo.neighbors(from)[i];
-            let c = self.cost.dense_cost(len);
+        let c = self.cost.dense_cost(len);
+        for &to in &self.topo.adj[from] {
             self.received[to] += c;
             self.sent[from] += c;
             self.messages += 1;

@@ -8,7 +8,7 @@ use crate::coordinator::Experiment;
 use crate::data::{load_libsvm, Dataset, SyntheticSpec};
 use crate::graph::{Topology, TopologyKind};
 use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
-use crate::runtime::EngineKind;
+use crate::runtime::{EngineKind, TransportKind};
 use crate::util::json::{parse, Json};
 use std::sync::Arc;
 
@@ -66,6 +66,14 @@ pub struct ExperimentConfig {
     pub engine: EngineKind,
     /// parallel-engine worker threads (0 = auto: cores capped by nodes)
     pub threads: usize,
+    /// parallel-engine edge channels: in-process mpsc or per-edge TCP
+    pub transport: TransportKind,
+    /// TCP listen address ("" = ephemeral loopback port)
+    pub listen: String,
+    /// TCP peers spec: comma-separated `node=host:port` for remote nodes
+    pub peers: String,
+    /// TCP hosted-node spec ("" = host all nodes in this process)
+    pub hosted: String,
 }
 
 impl Default for ExperimentConfig {
@@ -87,6 +95,10 @@ impl Default for ExperimentConfig {
             charitable_sparse: false,
             engine: EngineKind::Sequential,
             threads: 0,
+            transport: TransportKind::Local,
+            listen: String::new(),
+            peers: String::new(),
+            hosted: String::new(),
         }
     }
 }
@@ -145,6 +157,18 @@ impl ExperimentConfig {
         if let Some(n) = v.get("threads").and_then(Json::as_usize) {
             c.threads = n;
         }
+        if let Some(s) = v.get("transport").and_then(Json::as_str) {
+            c.transport = TransportKind::parse(s).ok_or(format!("bad transport {s}"))?;
+        }
+        if let Some(s) = v.get("listen").and_then(Json::as_str) {
+            c.listen = s.to_string();
+        }
+        if let Some(s) = v.get("peers").and_then(Json::as_str) {
+            c.peers = s.to_string();
+        }
+        if let Some(s) = v.get("hosted").and_then(Json::as_str) {
+            c.hosted = s.to_string();
+        }
         Ok(c)
     }
 
@@ -166,6 +190,10 @@ impl ExperimentConfig {
             ("charitable_sparse", Json::Bool(self.charitable_sparse)),
             ("engine", Json::Str(self.engine.name().into())),
             ("threads", Json::Num(self.threads as f64)),
+            ("transport", Json::Str(self.transport.name().into())),
+            ("listen", Json::Str(self.listen.clone())),
+            ("peers", Json::Str(self.peers.clone())),
+            ("hosted", Json::Str(self.hosted.clone())),
         ])
     }
 
@@ -212,6 +240,13 @@ impl ExperimentConfig {
         let lam = self.effective_lambda(part.total_samples());
         let topo =
             Topology::generate(self.topology, self.nodes, self.edge_prob, self.seed ^ 0x109);
+        // reject malformed or under-specified TCP specs here, on the
+        // clean error path, so only genuine socket failures can surface
+        // later inside `run()` — the sequential oracle ignores the
+        // transport entirely, so don't gate it on these specs
+        if self.engine == EngineKind::Parallel && self.transport == TransportKind::Tcp {
+            crate::runtime::transport::validate_tcp_spec(&topo, &self.hosted, &self.peers)?;
+        }
         let problem: Arc<dyn Problem> = match self.problem {
             ProblemKind::Ridge => Arc::new(RidgeProblem::new(part, lam)),
             ProblemKind::Logistic => Arc::new(LogisticProblem::new(part, lam)),
@@ -228,7 +263,9 @@ impl ExperimentConfig {
             .with_seed(self.seed)
             .with_record_points(self.record_points)
             .with_cost_model(cost)
-            .with_engine(self.engine, self.threads))
+            .with_engine(self.engine, self.threads)
+            .with_transport(self.transport)
+            .with_tcp_endpoints(&self.listen, &self.peers, &self.hosted))
     }
 }
 
@@ -256,17 +293,18 @@ mod tests {
     fn default_lambda_is_paper_value() {
         let c = ExperimentConfig::default();
         assert!((c.effective_lambda(1000) - 1.0 / 10_000.0).abs() < 1e-15);
-        let mut c2 = ExperimentConfig::default();
-        c2.lambda = 0.5;
+        let c2 = ExperimentConfig { lambda: 0.5, ..Default::default() };
         assert_eq!(c2.effective_lambda(1000), 0.5);
     }
 
     #[test]
     fn builds_tiny_experiment() {
-        let mut c = ExperimentConfig::default();
-        c.dataset = "tiny".into();
-        c.nodes = 4;
-        c.passes = 2.0;
+        let c = ExperimentConfig {
+            dataset: "tiny".into(),
+            nodes: 4,
+            passes: 2.0,
+            ..Default::default()
+        };
         let mut exp = c.build().unwrap();
         let trace = exp.run();
         assert!(!trace.rows.is_empty());
@@ -277,7 +315,25 @@ mod tests {
         assert!(ExperimentConfig::from_json("{\"problem\":\"nope\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"algorithm\":\"nope\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"engine\":\"warp\"}").is_err());
+        assert!(ExperimentConfig::from_json("{\"transport\":\"pigeon\"}").is_err());
         assert!(ExperimentConfig::from_json("not json").is_err());
+        // malformed TCP specs fail at build(), not as a panic inside run()
+        let base = ExperimentConfig {
+            dataset: "tiny".into(),
+            nodes: 4,
+            engine: EngineKind::Parallel,
+            transport: TransportKind::Tcp,
+            ..Default::default()
+        };
+        let bad_hosted =
+            ExperimentConfig { hosted: "0-4000000000".into(), ..base.clone() };
+        assert!(bad_hosted.build().is_err());
+        let bad_peers = ExperimentConfig { peers: "5=".into(), ..base.clone() };
+        assert!(bad_peers.build().is_err());
+        // hosting a subset without addresses for the remote neighbors
+        // must also fail at build(), not panic during run()
+        let missing_peers = ExperimentConfig { hosted: "0-1".into(), ..base };
+        assert!(missing_peers.build().is_err());
     }
 
     #[test]
@@ -285,10 +341,18 @@ mod tests {
         let c = ExperimentConfig {
             engine: EngineKind::Parallel,
             threads: 3,
+            transport: TransportKind::Tcp,
+            listen: "127.0.0.1:9100".into(),
+            peers: "5=10.0.0.2:9100".into(),
+            hosted: "0-4".into(),
             ..Default::default()
         };
         let c2 = ExperimentConfig::from_json(&c.to_json().to_string()).unwrap();
         assert_eq!(c2.engine, EngineKind::Parallel);
         assert_eq!(c2.threads, 3);
+        assert_eq!(c2.transport, TransportKind::Tcp);
+        assert_eq!(c2.listen, "127.0.0.1:9100");
+        assert_eq!(c2.peers, "5=10.0.0.2:9100");
+        assert_eq!(c2.hosted, "0-4");
     }
 }

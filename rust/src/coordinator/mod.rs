@@ -13,7 +13,8 @@ use crate::comm::{CommCostModel, Network};
 use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{auc_score, suboptimality, MetricsRow};
 use crate::operators::Problem;
-use crate::runtime::{EngineKind, ParallelEngine};
+use crate::runtime::transport::tcp_from_spec;
+use crate::runtime::{EngineKind, ParallelEngine, TransportKind};
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
@@ -37,6 +38,15 @@ pub struct Experiment {
     pub engine: EngineKind,
     /// worker threads for the parallel engine (0 = auto)
     pub threads: usize,
+    /// edge-channel backend for the parallel engine (ignored by the
+    /// sequential oracle)
+    pub transport: TransportKind,
+    /// TCP listen address ("" = ephemeral loopback port)
+    pub tcp_listen: String,
+    /// TCP peers spec, comma-separated `node=host:port`
+    pub tcp_peers: String,
+    /// TCP hosted-node spec ("" = host all nodes)
+    pub tcp_hosted: String,
 }
 
 impl Experiment {
@@ -69,6 +79,10 @@ impl Experiment {
             max_rounds: usize::MAX,
             engine: EngineKind::Sequential,
             threads: 0,
+            transport: TransportKind::Local,
+            tcp_listen: String::new(),
+            tcp_peers: String::new(),
+            tcp_hosted: String::new(),
         }
     }
 
@@ -120,6 +134,24 @@ impl Experiment {
         self
     }
 
+    /// Select the parallel engine's edge-channel backend.
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// TCP endpoint configuration for `TransportKind::Tcp`: listen
+    /// address ("" = ephemeral loopback), `node=host:port` peers spec,
+    /// and hosted-node spec ("" = host everything — the single-process
+    /// loopback mode). A partial `hosted` splits the run across engine
+    /// processes; this process then reports metrics for its share only.
+    pub fn with_tcp_endpoints(mut self, listen: &str, peers: &str, hosted: &str) -> Self {
+        self.tcp_listen = listen.to_string();
+        self.tcp_peers = peers.to_string();
+        self.tcp_hosted = hosted.to_string();
+        self
+    }
+
     /// Pre-solve the reference optimum if not supplied.
     pub fn ensure_z_star(&mut self) -> &[f64] {
         if self.z_star.is_none() {
@@ -139,9 +171,21 @@ impl Experiment {
     }
 
     /// Run to the passes target, sampling metrics along the way.
+    /// Panics on transport setup failure — use [`Experiment::try_run`]
+    /// where a recoverable error path is needed (the CLI does).
     pub fn run(&mut self) -> Trace {
+        self.try_run().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible variant of [`Experiment::run`]: operational transport
+    /// failures (port in use, peer unreachable, handshake timeout)
+    /// surface as `Err` instead of a panic.
+    pub fn try_run(&mut self) -> Result<Trace, String> {
         self.ensure_z_star();
         let z_star = self.z_star.clone().unwrap();
+        // set when a TCP transport hosts only part of the node set: the
+        // remote rows never move, so metrics must cover our share only
+        let mut hosted_rows: Option<Vec<usize>> = None;
         let mut alg: Box<dyn Algorithm> = match self.engine {
             EngineKind::Sequential => algorithms::build(
                 self.kind,
@@ -150,30 +194,62 @@ impl Experiment {
                 &self.topo,
                 &self.params,
             ),
-            EngineKind::Parallel => Box::new(ParallelEngine::new(
-                self.kind,
-                self.problem.clone(),
-                &self.mix,
-                &self.topo,
-                &self.params,
-                self.threads,
-            )),
+            EngineKind::Parallel => match self.transport {
+                TransportKind::Local => Box::new(ParallelEngine::new(
+                    self.kind,
+                    self.problem.clone(),
+                    &self.mix,
+                    &self.topo,
+                    &self.params,
+                    self.threads,
+                )),
+                TransportKind::Tcp => {
+                    let transport = tcp_from_spec(
+                        &self.topo,
+                        self.params.seed,
+                        &self.tcp_hosted,
+                        &self.tcp_listen,
+                        &self.tcp_peers,
+                    )
+                    .map_err(|e| format!("tcp transport setup failed: {e}"))?;
+                    let eng = ParallelEngine::new_with_transport(
+                        self.kind,
+                        self.problem.clone(),
+                        &self.mix,
+                        &self.topo,
+                        &self.params,
+                        self.threads,
+                        Box::new(transport),
+                    );
+                    if eng.hosted().len() < self.topo.n {
+                        hosted_rows = Some(eng.hosted().to_vec());
+                    }
+                    Box::new(eng)
+                }
+            },
         };
         let mut net = Network::new(self.topo.clone(), self.cost_model);
         let total_rounds = self.rounds_for_target().min(self.max_rounds);
         let stride = (total_rounds / self.record_points.max(1)).max(1);
         let timer = Timer::start();
         let mut rows = Vec::new();
-        rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs()));
+        let hosted = hosted_rows.as_deref();
+        rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs(), hosted));
         let mut round = 0;
-        while round < total_rounds && alg.passes() < self.passes_target {
+        // split-hosted processes must run the exact same number of rounds
+        // (they are socket-lockstepped), so the share-local passes()
+        // early-exit — which can diverge across processes for
+        // inner-solver methods — is disabled; total_rounds is computed
+        // identically from the shared config on every process
+        let split = hosted.is_some();
+        while round < total_rounds && (split || alg.passes() < self.passes_target) {
             alg.step(&mut net);
             round += 1;
             if round % stride == 0 || round == total_rounds {
-                rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs()));
+                rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs(), hosted));
             }
         }
-        Trace { method: self.kind, rows, z_star }
+        Ok(Trace { method: self.kind, rows, z_star })
     }
 
     fn sample(
@@ -182,14 +258,31 @@ impl Experiment {
         net: &Network,
         z_star: &[f64],
         wall: f64,
+        hosted: Option<&[usize]>,
     ) -> MetricsRow {
-        let zs = alg.iterates();
+        let all = alg.iterates();
+        // split-hosted runs: score only the rows this engine steps
+        let hosted_view: Vec<Vec<f64>>;
+        let zs: &[Vec<f64>] = match hosted {
+            Some(rows) => {
+                hosted_view = rows.iter().map(|&n| all[n].clone()).collect();
+                &hosted_view
+            }
+            None => all,
+        };
         let avg = average_iterate(zs);
         let is_auc = self.problem.tail_dims() == 3;
         MetricsRow {
             iter: alg.iteration(),
             passes: alg.passes(),
-            comm_doubles: net.max_received(),
+            // split-hosted: C_max over this engine's share (receive-side
+            // events keep hosted rows exact; remote rows are partial)
+            comm_doubles: match hosted {
+                Some(rows) => {
+                    rows.iter().map(|&n| net.received_by(n)).fold(0.0, f64::max)
+                }
+                None => net.max_received(),
+            },
             suboptimality: suboptimality(zs, z_star),
             objective: self.problem.objective(&avg).unwrap_or(f64::NAN),
             auc: if is_auc {
@@ -302,6 +395,36 @@ mod tests {
         assert_eq!(seq.rows.len(), par.rows.len());
         for (a, b) in seq.rows.iter().zip(&par.rows) {
             // identical sampling rounds, identical iterates -> identical metrics
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.suboptimality, b.suboptimality);
+            assert_eq!(a.comm_doubles, b.comm_doubles);
+        }
+    }
+
+    #[test]
+    fn tcp_transport_reproduces_sequential_trace_through_config() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let z_star = {
+            let p = RidgeProblem::new(ds.partition_seeded(4, 3), 0.05);
+            solve_optimum(&p, 1e-11)
+        };
+        let run = |engine: EngineKind, transport: TransportKind| {
+            let part = ds.partition_seeded(4, 3);
+            let mut exp =
+                Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+                    .with_step_size(0.5)
+                    .with_passes(6.0)
+                    .with_record_points(6)
+                    .with_z_star(z_star.clone())
+                    .with_engine(engine, 2)
+                    .with_transport(transport);
+            exp.run()
+        };
+        let seq = run(EngineKind::Sequential, TransportKind::Local);
+        let tcp = run(EngineKind::Parallel, TransportKind::Tcp);
+        assert_eq!(seq.rows.len(), tcp.rows.len());
+        for (a, b) in seq.rows.iter().zip(&tcp.rows) {
             assert_eq!(a.iter, b.iter);
             assert_eq!(a.suboptimality, b.suboptimality);
             assert_eq!(a.comm_doubles, b.comm_doubles);

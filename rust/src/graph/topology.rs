@@ -215,6 +215,27 @@ impl Topology {
         groups
     }
 
+    /// Structural hash of the graph (FNV-1a over the node count and the
+    /// sorted adjacency lists). Exchanged in the TCP transport handshake
+    /// so two endpoints refuse to pair engines built over different
+    /// topologies.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(PRIME)
+        }
+        let mut h = mix(OFFSET, self.n as u64);
+        for (i, l) in self.adj.iter().enumerate() {
+            h = mix(h, i as u64);
+            h = mix(h, l.len() as u64);
+            for &m in l {
+                h = mix(h, m as u64);
+            }
+        }
+        h
+    }
+
     /// Designated parent of `node` on the BFS forwarding tree rooted at
     /// `src`: the *minimum-index* neighbor one hop closer to `src`
     /// (paper §5.1: "only the one with the minimum node index sends").
@@ -335,5 +356,19 @@ mod tests {
     fn path_diameter() {
         let t = Topology::path(5);
         assert_eq!(t.diameter, 4);
+    }
+
+    #[test]
+    fn fingerprint_separates_topologies() {
+        // deterministic across constructions of the same graph
+        assert_eq!(
+            Topology::erdos_renyi(10, 0.4, 42).fingerprint(),
+            Topology::erdos_renyi(10, 0.4, 42).fingerprint()
+        );
+        // different structure, node count, or labeling hashes apart
+        let ring = Topology::ring(6).fingerprint();
+        assert_ne!(ring, Topology::ring(7).fingerprint());
+        assert_ne!(ring, Topology::path(6).fingerprint());
+        assert_ne!(ring, Topology::star(6).fingerprint());
     }
 }

@@ -63,6 +63,6 @@ pub mod prelude {
     pub use crate::operators::{
         AucProblem, LogisticProblem, Problem, RidgeProblem,
     };
-    pub use crate::runtime::{EngineKind, ParallelEngine};
+    pub use crate::runtime::{EngineKind, ParallelEngine, TcpTransport, TransportKind};
     pub use crate::util::rng::Rng;
 }

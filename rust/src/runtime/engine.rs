@@ -2,11 +2,16 @@
 //!
 //! Executes the per-node decomposition of any method
 //! ([`crate::algorithms::build_node_program`]) across worker threads, with
-//! `std::sync::mpsc` channels carrying typed [`Message`]s along the
+//! a pluggable [`Transport`] carrying typed [`Message`]s along the
 //! topology's edges and `std::sync::Barrier`-synchronized rounds. The
 //! engine is the *fast path*; the sequential
 //! [`crate::algorithms::node::RoundDriver`] behind each `Algorithm` impl
 //! is the reference oracle.
+//!
+//! Two transports exist today (see [`crate::runtime::transport`]):
+//! [`LocalTransport`] (in-process mpsc, the default) and
+//! [`crate::runtime::TcpTransport`] (per-edge loopback/host sockets with
+//! the framed wire codec). The determinism contract below holds for both.
 //!
 //! ## Determinism contract
 //!
@@ -16,9 +21,12 @@
 //! * node states are constructed on the launching thread in node order,
 //!   so per-node RNG streams are forked identically;
 //! * rounds are barrier-synchronized — phase A (every node emits its
-//!   messages), barrier, phase B (every node drains its inbox and runs
-//!   its local step), barrier — so a round's messages are all delivered
-//!   before any local step runs, exactly the synchronous model;
+//!   messages), barrier, phase B (every node drains its round inbox and
+//!   runs its local step), barrier — so a round's messages are all
+//!   delivered before any local step runs, exactly the synchronous
+//!   model (the TCP backend additionally gates each drain on per-edge
+//!   end-of-round control frames, which is what keeps *separate engine
+//!   processes* in lockstep);
 //! * each inbox is sorted by (sender, emit index) before delivery, so
 //!   handlers see the same order the sequential driver produces;
 //! * nodes may only read their own state plus received payloads, so
@@ -31,6 +39,18 @@
 //! emit index) order, so per-node sent/received DOUBLE totals equal the
 //! sequential accounting exactly (dense and sparse payloads priced
 //! through the same [`crate::comm::CommCostModel`]).
+//!
+//! ## Hosting a subset (cross-process runs)
+//!
+//! A transport may host only part of the node set (`--hosted` + `--peers`
+//! split one topology across engine processes). The engine then steps
+//! only its hosted nodes; `iterates()` rows of remote nodes stay at the
+//! initial point, and `passes()` covers the hosted share. Cost accounting
+//! for hosted nodes is exact in both directions: sends are charged at the
+//! emitting node, and inflow from remote engines is charged via
+//! receive-side cost events merged into the same canonical replay.
+//! Single-process runs — both transports' default — host everything and
+//! are bit-for-bit complete.
 
 use crate::algorithms::{
     build_node_program, AlgoParams, Algorithm, AlgorithmKind, NodeProgram, NodeState,
@@ -38,8 +58,8 @@ use crate::algorithms::{
 use crate::comm::{Message, Network};
 use crate::graph::{MixingMatrix, Topology};
 use crate::operators::Problem;
+use crate::runtime::transport::{LocalTransport, NodePort, Transport};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
@@ -76,8 +96,9 @@ pub fn auto_threads(n_nodes: usize) -> usize {
     cores.clamp(1, n_nodes.max(1))
 }
 
-/// (from, emit index, payload) crossing one edge.
-type Envelope = (usize, u32, Message);
+/// One hosted node scheduled on a worker: (node index, state machine,
+/// its transport port).
+type HostedNode = (usize, Box<dyn NodeState>, Box<dyn NodePort>);
 
 #[derive(Clone, Copy, Debug)]
 enum CostKind {
@@ -100,17 +121,35 @@ struct Shared {
     evals: Vec<AtomicU64>,
     /// this round's cost events (drained by the launching thread)
     costs: Mutex<Vec<CostEvent>>,
+    /// which nodes this engine hosts — receive-side costs are logged for
+    /// messages arriving from non-hosted (remote) senders
+    hosted_mask: Vec<bool>,
     sent: AtomicU64,
     delivered: AtomicU64,
     /// set when any worker's node code panicked; workers keep honoring
     /// the barrier protocol (skipping work) so nothing deadlocks, and the
     /// launcher propagates the failure after the round
     panicked: AtomicBool,
+    /// first transport failure observed by a worker (None when the
+    /// poisoning was a genuine node-code panic)
+    failure: Mutex<Option<String>>,
+}
+
+impl Shared {
+    /// Record a transport failure (first one wins) and poison the engine
+    /// via the normal panic path so the barrier protocol stays sound.
+    fn transport_failure(&self, msg: String) -> ! {
+        let mut slot = self.failure.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg.clone());
+        }
+        drop(slot);
+        panic!("{msg}");
+    }
 }
 
 fn worker_loop(
-    mut nodes: Vec<(usize, Box<dyn NodeState>, Receiver<Envelope>)>,
-    txs: Vec<Sender<Envelope>>,
+    mut nodes: Vec<HostedNode>,
     shared: Arc<Shared>,
     barrier: Arc<Barrier>,
     stop: Arc<AtomicBool>,
@@ -125,7 +164,7 @@ fn worker_loop(
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut cost_batch: Vec<CostEvent> = Vec::new();
-                for (idx, node, _) in nodes.iter_mut() {
+                for (idx, node, port) in nodes.iter_mut() {
                     let outs = node.outgoing(t);
                     for (seq, out) in outs.into_iter().enumerate() {
                         let kind = match &out.msg {
@@ -141,9 +180,12 @@ fn worker_loop(
                             kind,
                         });
                         shared.sent.fetch_add(1, Ordering::Relaxed);
-                        txs[out.to]
-                            .send((*idx, seq as u32, out.msg))
-                            .expect("engine inbox receiver dropped mid-round");
+                        if let Err(e) = port.send(t, out.to, seq as u32, out.msg) {
+                            shared.transport_failure(e);
+                        }
+                    }
+                    if let Err(e) = port.finish_round(t) {
+                        shared.transport_failure(e);
                     }
                 }
                 if !cost_batch.is_empty() {
@@ -158,16 +200,37 @@ fn worker_loop(
         // phase B: drain inboxes (canonical order), run local steps
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_b = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                for (idx, node, rx) in nodes.iter_mut() {
-                    let mut msgs: Vec<Envelope> = rx.try_iter().collect();
+                let mut recv_batch: Vec<CostEvent> = Vec::new();
+                for (idx, node, port) in nodes.iter_mut() {
+                    let mut msgs = match port.drain_round(t) {
+                        Ok(m) => m,
+                        Err(e) => shared.transport_failure(e),
+                    };
                     msgs.sort_by_key(|&(from, seq, _)| (from, seq));
-                    for (from, _seq, msg) in msgs {
+                    for (from, seq, msg) in msgs {
                         shared.delivered.fetch_add(1, Ordering::Relaxed);
+                        // inflow from a remote engine: the sender's side
+                        // can't charge it into OUR network, so log the
+                        // receive-side event — merged into the same
+                        // canonical (sender, emit idx) replay, keeping
+                        // hosted received-DOUBLE totals exact
+                        if !shared.hosted_mask[from] {
+                            let kind = match &msg {
+                                Message::Dense(v) => CostKind::Dense(v.len()),
+                                Message::Sparse(d) => {
+                                    CostKind::Sparse(d.vec.nnz(), d.tail.len())
+                                }
+                            };
+                            recv_batch.push(CostEvent { from, seq, to: *idx, kind });
+                        }
                         node.on_receive(from, msg);
                     }
                     node.local_step(t);
                     shared.slots[*idx].lock().unwrap().copy_from_slice(node.iterate());
                     shared.evals[*idx].store(node.evals(), Ordering::Relaxed);
+                }
+                if !recv_batch.is_empty() {
+                    shared.costs.lock().unwrap().extend(recv_batch);
                 }
             }));
             if phase_b.is_err() {
@@ -186,6 +249,8 @@ pub struct ParallelEngine {
     kind: AlgorithmKind,
     topo: Topology,
     threads: usize,
+    /// nodes this engine hosts (all of them for single-process runs)
+    hosted: Vec<usize>,
     setup: Vec<(usize, usize, usize)>,
     pass_denom: f64,
     t: usize,
@@ -198,8 +263,9 @@ pub struct ParallelEngine {
 }
 
 impl ParallelEngine {
-    /// Decompose `kind` into per-node states and launch the workers.
-    /// `threads = 0` selects [`auto_threads`].
+    /// Decompose `kind` into per-node states and launch the workers over
+    /// the default in-process transport. `threads = 0` selects
+    /// [`auto_threads`].
     pub fn new(
         kind: AlgorithmKind,
         problem: Arc<dyn Problem>,
@@ -212,54 +278,115 @@ impl ParallelEngine {
         Self::from_program(program, topo.clone(), threads)
     }
 
-    /// Launch workers over an already-built node program.
+    /// [`ParallelEngine::new`] with an explicit transport backend (e.g. a
+    /// [`crate::runtime::TcpTransport`] over loopback or host sockets).
+    pub fn new_with_transport(
+        kind: AlgorithmKind,
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        topo: &Topology,
+        params: &AlgoParams,
+        threads: usize,
+        transport: Box<dyn Transport>,
+    ) -> ParallelEngine {
+        let program = build_node_program(kind, problem, mix, topo, params);
+        Self::from_program_with_transport(program, topo.clone(), threads, transport)
+    }
+
+    /// Launch workers over an already-built node program (in-process
+    /// transport).
     pub fn from_program(program: NodeProgram, topo: Topology, threads: usize) -> ParallelEngine {
         let n = program.nodes.len();
+        Self::from_program_with_transport(
+            program,
+            topo,
+            threads,
+            Box::new(LocalTransport::new(n)),
+        )
+    }
+
+    /// Launch workers over an already-built node program and a connected
+    /// transport. The transport decides which nodes this engine hosts;
+    /// states are still *built* for every node (in node order) so RNG
+    /// forking matches the sequential oracle, then non-hosted states are
+    /// dropped.
+    pub fn from_program_with_transport(
+        program: NodeProgram,
+        topo: Topology,
+        threads: usize,
+        transport: Box<dyn Transport>,
+    ) -> ParallelEngine {
+        let n = program.nodes.len();
         assert!(n > 0, "engine needs at least one node");
-        let threads = if threads == 0 { auto_threads(n) } else { threads }.clamp(1, n);
+        let hosted = transport.hosted().to_vec();
+        assert!(
+            !hosted.is_empty()
+                && hosted.windows(2).all(|w| w[0] < w[1])
+                && *hosted.last().unwrap() < n,
+            "transport hosts an invalid node set {hosted:?} for {n} nodes"
+        );
+        let mut is_hosted = vec![false; n];
+        for &h in &hosted {
+            is_hosted[h] = true;
+        }
+        let h = hosted.len();
+        let threads = if threads == 0 { auto_threads(h) } else { threads }.clamp(1, h);
         let z: Vec<Vec<f64>> = program.nodes.iter().map(|nd| nd.iterate().to_vec()).collect();
         let shared = Arc::new(Shared {
             slots: z.iter().map(|r| Mutex::new(r.clone())).collect(),
             evals: (0..n).map(|_| AtomicU64::new(0)).collect(),
             costs: Mutex::new(Vec::new()),
+            hosted_mask: is_hosted.clone(),
             sent: AtomicU64::new(0),
             delivered: AtomicU64::new(0),
             panicked: AtomicBool::new(false),
+            failure: Mutex::new(None),
         });
         let barrier = Arc::new(Barrier::new(threads + 1));
         let stop = Arc::new(AtomicBool::new(false));
-        let mut txs: Vec<Sender<Envelope>> = Vec::with_capacity(n);
-        let mut rxs: Vec<Receiver<Envelope>> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel::<Envelope>();
-            txs.push(tx);
-            rxs.push(rx);
-        }
-        // contiguous balanced buckets: node idx -> worker idx*threads/n
-        let mut buckets: Vec<Vec<(usize, Box<dyn NodeState>, Receiver<Envelope>)>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        let mut rx_iter = rxs.into_iter();
+        let ports = transport.into_ports();
+        assert_eq!(ports.len(), h, "transport port count != hosted node count");
+        // contiguous balanced buckets over the hosted nodes
+        let mut buckets: Vec<Vec<HostedNode>> = (0..threads).map(|_| Vec::new()).collect();
+        let mut port_iter = ports.into_iter();
+        let mut k = 0;
         for (idx, node) in program.nodes.into_iter().enumerate() {
-            let rx = rx_iter.next().unwrap();
-            buckets[idx * threads / n].push((idx, node, rx));
+            if !is_hosted[idx] {
+                continue; // built for RNG parity, stepped by a peer engine
+            }
+            let port = port_iter.next().unwrap();
+            buckets[k * threads / h].push((idx, node, port));
+            k += 1;
         }
         let mut workers = Vec::with_capacity(threads);
         for bucket in buckets {
-            let txs = txs.clone();
             let shared = shared.clone();
             let barrier = barrier.clone();
             let stop = stop.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(bucket, txs, shared, barrier, stop)
+                worker_loop(bucket, shared, barrier, stop)
             }));
         }
-        drop(txs); // workers hold the only senders
+        // setup accounting and effective-pass denominator cover this
+        // engine's share of the nodes: keep every setup send that touches
+        // a hosted endpoint so hosted sent AND received totals stay exact
+        let setup: Vec<(usize, usize, usize)> = program
+            .setup
+            .into_iter()
+            .filter(|&(from, to, _)| is_hosted[from] || is_hosted[to])
+            .collect();
+        let pass_denom = if h == n {
+            program.pass_denom
+        } else {
+            program.pass_denom * h as f64 / n as f64
+        };
         ParallelEngine {
             kind: program.kind,
             topo,
             threads,
-            setup: program.setup,
-            pass_denom: program.pass_denom,
+            hosted,
+            setup,
+            pass_denom,
             t: 0,
             z,
             shared,
@@ -275,6 +402,12 @@ impl ParallelEngine {
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// Nodes this engine hosts (all of them unless the transport splits
+    /// the topology across processes).
+    pub fn hosted(&self) -> &[usize] {
+        &self.hosted
     }
 
     /// (messages sent, messages delivered) so far — equal unless a
@@ -297,15 +430,25 @@ impl Algorithm for ParallelEngine {
         self.barrier.wait(); // release the round
         self.barrier.wait(); // phase A complete
         self.barrier.wait(); // phase B complete
-        // fail fast (with an error instead of a barrier deadlock) if any
-        // node's code panicked on a worker — the engine is poisoned
+        // fail fast (with an error instead of a barrier deadlock) if a
+        // worker hit trouble — the engine is poisoned either way, but a
+        // transport failure (peer died, drain timed out) must not be
+        // reported as node code panicking
         if self.shared.panicked.load(Ordering::SeqCst) {
-            panic!(
-                "ParallelEngine: a node panicked on a worker thread during \
-                 round {} of {} — engine state is poisoned",
-                self.t,
-                self.kind.name()
-            );
+            let transport_err = self.shared.failure.lock().unwrap().take();
+            match transport_err {
+                Some(e) => panic!(
+                    "ParallelEngine: transport failure during round {} of {}: {e}",
+                    self.t,
+                    self.kind.name()
+                ),
+                None => panic!(
+                    "ParallelEngine: a node panicked on a worker thread during \
+                     round {} of {} — engine state is poisoned",
+                    self.t,
+                    self.kind.name()
+                ),
+            }
         }
         // replay cost events in canonical (sender, emit index) order —
         // identical to the sequential driver's charging order
@@ -394,6 +537,34 @@ mod tests {
         }
         assert_eq!(net_s.messages(), net_p.messages());
         assert_eq!(seq.passes(), par.passes());
+    }
+
+    #[test]
+    fn engine_matches_sequential_on_tcp_loopback_smoke() {
+        use crate::runtime::transport::TcpTransport;
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut seq = build(AlgorithmKind::Extra, p.clone(), &mix, &topo, &params);
+        let transport = Box::new(TcpTransport::loopback(&topo, params.seed).unwrap());
+        let mut par = ParallelEngine::new_with_transport(
+            AlgorithmKind::Extra,
+            p.clone(),
+            &mix,
+            &topo,
+            &params,
+            2,
+            transport,
+        );
+        let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+        let mut net_p = Network::new(topo.clone(), CommCostModel::default());
+        for round in 0..8 {
+            seq.step(&mut net_s);
+            par.step(&mut net_p);
+            for n in 0..topo.n {
+                assert_eq!(seq.iterates()[n], par.iterates()[n], "round {round} node {n}");
+            }
+        }
+        assert_eq!(net_s.messages(), net_p.messages());
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! Two independent halves live here:
 //!
 //! * [`engine`] — the **parallel message-passing node engine**: one worker
-//!   thread per group of nodes, `std::sync::mpsc` channels modeling the
-//!   topology's edges, barrier-synchronized rounds, and per-edge byte
+//!   thread per group of nodes, a pluggable [`transport`] backend modeling
+//!   the topology's edges ([`LocalTransport`] in-process mpsc channels, or
+//!   [`TcpTransport`] per-edge loopback/host sockets carrying the framed
+//!   wire codec), barrier-synchronized rounds, and per-edge byte
 //!   accounting routed through [`crate::comm::CommCostModel`]. Drives the
 //!   per-node [`crate::algorithms::NodeState`] decomposition that the
 //!   sequential reference driver also runs, so its output is bit-for-bit
@@ -22,11 +24,13 @@
 //!   absent.
 
 pub mod engine;
+pub mod transport;
 
 mod registry;
 
 pub use engine::{EngineKind, ParallelEngine};
 pub use registry::{ArtifactEntry, Manifest};
+pub use transport::{LocalTransport, NodePort, TcpTransport, Transport, TransportKind};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

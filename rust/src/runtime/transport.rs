@@ -1,0 +1,1057 @@
+//! Edge-channel transports behind the parallel engine.
+//!
+//! [`crate::runtime::ParallelEngine`] schedules per-node state machines;
+//! *how* a round's [`Message`]s physically cross the topology's edges is
+//! this module's job, abstracted as a [`Transport`] that hands the engine
+//! one [`NodePort`] per hosted node:
+//!
+//! * [`LocalTransport`] — the in-process backend (PR 1 behavior): one
+//!   `std::sync::mpsc` inbox per node, structured payloads moved
+//!   directly (dense broadcasts stay `Arc`-shared, delivery is pointer
+//!   rotation).
+//! * [`TcpTransport`] — per-edge loopback/host sockets. Every payload is
+//!   run through the lossless `Message::encode`/`decode` wire codec and
+//!   length-prefix-framed, so the bytes the paper's `C_n^t` accounting
+//!   prices actually cross a socket. Connections start with a small
+//!   handshake (edge endpoints, topology fingerprint, seed) and rounds
+//!   are delimited by end-of-round control frames, which is what lets two
+//!   engine processes hosting disjoint node sets stay in lockstep without
+//!   any shared memory.
+//!
+//! ## Wire framing (little-endian, after the handshake)
+//!
+//! ```text
+//! MSG frame:  0x4D | t: u64 | seq: u32 | len: u64 | len bytes (Message::encode)
+//! END frame:  0x45 | t: u64                         (round t emissions complete)
+//! ```
+//!
+//! ## Handshake (29 bytes each way, dialer first)
+//!
+//! ```text
+//! "DSBA" | version: u8 | from: u32 | to: u32 | topology fingerprint: u64 | seed: u64
+//! ```
+//!
+//! The acceptor validates the magic/version, that `(from, to)` is a real
+//! edge whose `to` end it hosts, and that the fingerprint and seed match
+//! its own experiment, then answers with the mirrored hello. A mismatch
+//! drops the connection, so a mispaired engine fails fast instead of
+//! silently diverging.
+//!
+//! The determinism contract is transport-independent: the engine sorts
+//! each drained inbox by `(sender, emit index)` before delivery and the
+//! codec is bit-exact, so the TCP backend reproduces the sequential
+//! oracle's iterates exactly (pinned by `rust/tests/engine_parity.rs`).
+
+use crate::comm::Message;
+use crate::graph::Topology;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// (from, emit index, payload) crossing one edge.
+pub type Envelope = (usize, u32, Message);
+
+/// Which edge-channel backend carries the engine's messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (structured payloads, no serialization).
+    Local,
+    /// Per-edge TCP sockets (encoded frames, loopback or cross-host).
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "local" | "mpsc" => TransportKind::Local,
+            "tcp" => TransportKind::Tcp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// One node's view of its edge channels. Exactly one port exists per
+/// hosted node; the engine moves it into the worker thread that owns the
+/// node, so implementations need `Send` but never `Sync`.
+pub trait NodePort: Send {
+    /// Queue `msg` (round `t`, emit index `seq`) toward neighbor `to`.
+    fn send(&mut self, t: usize, to: usize, seq: u32, msg: Message) -> Result<(), String>;
+
+    /// Mark this node's round-`t` emissions complete (flush buffers and
+    /// emit end-of-round control frames where the backend needs them).
+    fn finish_round(&mut self, t: usize) -> Result<(), String>;
+
+    /// Collect every envelope addressed to this node in round `t`.
+    ///
+    /// In-process backends may assume the engine's phase barrier: every
+    /// hosted node's round-`t` sends complete before the first
+    /// `drain_round(t)` call, so a non-blocking drain is exhaustive.
+    /// Cross-process backends must instead block until each neighbor's
+    /// round-`t` end-of-round marker arrives (with a failure timeout).
+    fn drain_round(&mut self, t: usize) -> Result<Vec<Envelope>, String>;
+}
+
+/// A connected communication backend for one engine instance: the set of
+/// nodes it hosts plus one [`NodePort`] per hosted node.
+pub trait Transport: Send {
+    /// Nodes this endpoint hosts, sorted ascending. The engine builds
+    /// and steps node states only for these (all states are still
+    /// *constructed* in node order, so RNG forking stays identical to
+    /// the sequential oracle).
+    fn hosted(&self) -> &[usize];
+
+    /// Consume the transport into per-node ports, aligned with
+    /// [`Transport::hosted`] order.
+    fn into_ports(self: Box<Self>) -> Vec<Box<dyn NodePort>>;
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Local (in-process mpsc) backend
+// ---------------------------------------------------------------------------
+
+/// The in-process backend: one mpsc inbox per node, every port holding
+/// senders for all inboxes (workers may address any neighbor).
+pub struct LocalTransport {
+    hosted: Vec<usize>,
+    txs: Vec<Sender<Envelope>>,
+    rxs: Vec<Receiver<Envelope>>,
+}
+
+impl LocalTransport {
+    /// Channels for all `n` nodes of a single-process engine.
+    pub fn new(n: usize) -> LocalTransport {
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Envelope>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        LocalTransport { hosted: (0..n).collect(), txs, rxs }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn hosted(&self) -> &[usize] {
+        &self.hosted
+    }
+
+    fn into_ports(self: Box<Self>) -> Vec<Box<dyn NodePort>> {
+        let txs = self.txs;
+        self.rxs
+            .into_iter()
+            .enumerate()
+            .map(|(id, rx)| {
+                Box::new(LocalPort { id, txs: txs.clone(), rx }) as Box<dyn NodePort>
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "local"
+    }
+}
+
+struct LocalPort {
+    id: usize,
+    txs: Vec<Sender<Envelope>>,
+    rx: Receiver<Envelope>,
+}
+
+impl NodePort for LocalPort {
+    fn send(&mut self, _t: usize, to: usize, seq: u32, msg: Message) -> Result<(), String> {
+        self.txs[to]
+            .send((self.id, seq, msg))
+            .map_err(|_| format!("node {to}: inbox receiver dropped mid-round"))
+    }
+
+    fn finish_round(&mut self, _t: usize) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn drain_round(&mut self, _t: usize) -> Result<Vec<Envelope>, String> {
+        // exhaustive under the engine's phase barrier (all sends landed)
+        Ok(self.rx.try_iter().collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP backend
+// ---------------------------------------------------------------------------
+
+const HANDSHAKE_MAGIC: [u8; 4] = *b"DSBA";
+const WIRE_VERSION: u8 = 1;
+const FRAME_MSG: u8 = 0x4D; // 'M'
+const FRAME_END: u8 = 0x45; // 'E'
+/// Hard upper bound on one frame's payload; a corrupt length field fails
+/// fast instead of stalling the reader for gigabytes.
+const MAX_FRAME_BYTES: u64 = 1 << 30;
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Accept-side limit for reading one hello. Dialers write their hello
+/// immediately after connecting, so anything slower is a stray (port
+/// scanner, health check) — kept much shorter than the dialer-side
+/// [`HANDSHAKE_TIMEOUT`] so idle strays, which are read serially, cannot
+/// exhaust the [`ACCEPT_DEADLINE`].
+const ACCEPT_HELLO_TIMEOUT: Duration = Duration::from_secs(2);
+const ACCEPT_DEADLINE: Duration = Duration::from_secs(30);
+const DIAL_RETRIES: usize = 100;
+const DIAL_BACKOFF: Duration = Duration::from_millis(100);
+/// End-of-round wait before declaring a peer dead. Generous by default —
+/// inner-solver-heavy methods (P-EXTRA/SSDA) can legitimately spend a
+/// long time in a round on large problems. Override with
+/// `DSBA_DRAIN_TIMEOUT_SECS` for faster failure detection.
+const DRAIN_TIMEOUT_DEFAULT: Duration = Duration::from_secs(180);
+
+fn drain_timeout() -> Duration {
+    std::env::var("DSBA_DRAIN_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(Duration::from_secs)
+        .unwrap_or(DRAIN_TIMEOUT_DEFAULT)
+}
+
+/// A bound-but-not-yet-connected TCP endpoint. Binding is split from
+/// [`TcpTransport::establish`] so cooperating endpoints can publish their
+/// (possibly ephemeral) addresses before any of them starts dialing.
+pub struct BoundListener {
+    inner: TcpListener,
+    addr: SocketAddr,
+}
+
+impl BoundListener {
+    /// The bound address (resolves port 0 to the assigned ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// One decoded item crossing a link, queued toward the owning port.
+enum TcpEvent {
+    Msg { from: usize, t: u64, seq: u32, msg: Message },
+    End { from: usize, t: u64 },
+    Closed { from: usize, reason: String },
+}
+
+/// Per-edge socket backend. See the module docs for framing/handshake.
+pub struct TcpTransport {
+    hosted: Vec<usize>,
+    ports: Vec<TcpPort>,
+}
+
+impl TcpTransport {
+    /// Bind a listener (use port 0 for an ephemeral loopback port).
+    pub fn bind(addr: &str) -> Result<BoundListener, String> {
+        let inner =
+            TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let addr = inner.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        Ok(BoundListener { inner, addr })
+    }
+
+    /// Single-process convenience: host every node, route every edge
+    /// through a loopback socket pair.
+    pub fn loopback(topo: &Topology, seed: u64) -> Result<TcpTransport, String> {
+        let listener = Self::bind("127.0.0.1:0")?;
+        Self::establish(listener, topo, seed, (0..topo.n).collect(), &HashMap::new())
+    }
+
+    /// Connect this endpoint's share of the topology: host `hosted`
+    /// (sorted), dial the lower end of every hosted edge, accept the
+    /// upper end. `peers` maps every non-hosted neighbor to the address
+    /// of the endpoint hosting it.
+    pub fn establish(
+        listener: BoundListener,
+        topo: &Topology,
+        seed: u64,
+        hosted: Vec<usize>,
+        peers: &HashMap<usize, String>,
+    ) -> Result<TcpTransport, String> {
+        if hosted.is_empty() {
+            return Err("tcp transport hosts no nodes".to_string());
+        }
+        if !hosted.windows(2).all(|w| w[0] < w[1]) {
+            return Err("hosted node list must be sorted and unique".to_string());
+        }
+        if *hosted.last().unwrap() >= topo.n {
+            return Err(format!(
+                "hosted node {} out of range (N = {})",
+                hosted.last().unwrap(),
+                topo.n
+            ));
+        }
+        let mut is_hosted = vec![false; topo.n];
+        for &n in &hosted {
+            is_hosted[n] = true;
+        }
+        for &n in &hosted {
+            for &m in topo.neighbors(n) {
+                if !is_hosted[m] && !peers.contains_key(&m) {
+                    return Err(format!(
+                        "neighbor {m} of hosted node {n} has no peer address \
+                         (pass it via --peers {m}=host:port)"
+                    ));
+                }
+            }
+        }
+
+        let hash = topo.fingerprint();
+        let self_addr = listener.addr.to_string();
+        // edges touching this endpoint, normalized (a < b)
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for a in 0..topo.n {
+            for &b in topo.neighbors(a) {
+                if a < b && (is_hosted[a] || is_hosted[b]) {
+                    edges.push((a, b));
+                }
+            }
+        }
+        let expect_accept = edges.iter().filter(|&&(_, b)| is_hosted[b]).count();
+        let edge_set: HashSet<(usize, usize)> = edges.iter().copied().collect();
+        let hosted_mask = is_hosted.clone();
+        let tcp_listener = listener.inner;
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel_accept = cancel.clone();
+        let acceptor = std::thread::spawn(move || {
+            accept_all(
+                tcp_listener,
+                expect_accept,
+                edge_set,
+                hosted_mask,
+                hash,
+                seed,
+                cancel_accept,
+            )
+        });
+
+        // dial the lower end of every edge we host, in edge order;
+        // self-edges (both ends hosted) loop back to our own listener
+        let mut streams: HashMap<(usize, usize), TcpStream> = HashMap::new();
+        for &(a, b) in &edges {
+            if !is_hosted[a] {
+                continue; // the endpoint hosting `a` dials this edge
+            }
+            let addr = if is_hosted[b] { &self_addr } else { &peers[&b] };
+            let stream = match dial(addr, a, b, hash, seed) {
+                Ok(s) => s,
+                Err(e) => {
+                    // shut the acceptor down promptly so the listener (and
+                    // a user-supplied --listen port) is released now, not
+                    // after the 30 s accept deadline
+                    cancel.store(true, Ordering::SeqCst);
+                    let _ = acceptor.join();
+                    return Err(e);
+                }
+            };
+            streams.insert((a, b), stream);
+        }
+        let accepted = acceptor
+            .join()
+            .map_err(|_| "tcp acceptor thread panicked".to_string())??;
+        for (local, remote, stream) in accepted {
+            if streams.insert((local, remote), stream).is_some() {
+                return Err(format!(
+                    "duplicate connection for edge ({remote},{local})"
+                ));
+            }
+        }
+
+        // assemble one port per hosted node: buffered writers plus one
+        // reader thread per link feeding the node's event inbox
+        let mut ports = Vec::with_capacity(hosted.len());
+        for &n in &hosted {
+            let (inbox_tx, inbox_rx) = channel::<TcpEvent>();
+            let nbrs = topo.neighbors(n).to_vec();
+            let mut writers = Vec::with_capacity(nbrs.len());
+            let mut shutdown = Vec::with_capacity(nbrs.len());
+            for &m in &nbrs {
+                let stream = streams
+                    .remove(&(n, m))
+                    .ok_or_else(|| format!("missing stream for edge ({n},{m})"))?;
+                let clone_err = |e| format!("clone stream ({n},{m}): {e}");
+                shutdown.push(stream.try_clone().map_err(clone_err)?);
+                writers.push((m, BufWriter::new(stream.try_clone().map_err(clone_err)?)));
+                let tx = inbox_tx.clone();
+                std::thread::spawn(move || reader_loop(stream, m, tx));
+            }
+            ports.push(TcpPort {
+                id: n,
+                neighbors: nbrs,
+                writers,
+                inbox: inbox_rx,
+                carry: Vec::new(),
+                enc_cache: None,
+                drain_timeout: drain_timeout(),
+                shutdown,
+            });
+        }
+        debug_assert!(streams.is_empty(), "unassigned streams after port assembly");
+        Ok(TcpTransport { hosted, ports })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn hosted(&self) -> &[usize] {
+        &self.hosted
+    }
+
+    fn into_ports(self: Box<Self>) -> Vec<Box<dyn NodePort>> {
+        self.ports
+            .into_iter()
+            .map(|p| Box::new(p) as Box<dyn NodePort>)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+struct TcpPort {
+    id: usize,
+    /// sorted adjacency of this node
+    neighbors: Vec<usize>,
+    /// per-neighbor buffered write halves, aligned with `neighbors`
+    writers: Vec<(usize, BufWriter<TcpStream>)>,
+    inbox: Receiver<TcpEvent>,
+    /// events already pulled that belong to a future round
+    carry: Vec<TcpEvent>,
+    /// last dense broadcast payload and its encoding — a degree-k
+    /// broadcast encodes once, not k times (the held `Arc` keeps the
+    /// allocation alive, so pointer identity can never alias a recycled
+    /// address)
+    enc_cache: Option<(Arc<Vec<f64>>, Vec<u8>)>,
+    /// see [`drain_timeout`]
+    drain_timeout: Duration,
+    /// raw clones used only to shut the links down on drop, so blocked
+    /// reader threads exit promptly
+    shutdown: Vec<TcpStream>,
+}
+
+impl NodePort for TcpPort {
+    fn send(&mut self, t: usize, to: usize, seq: u32, msg: Message) -> Result<(), String> {
+        let id = self.id;
+        let j = self
+            .writers
+            .binary_search_by_key(&to, |&(m, _)| m)
+            .map_err(|_| format!("node {id} has no link to {to}"))?;
+        let res = match &msg {
+            Message::Dense(v) => {
+                // the engine hands every neighbor the same Arc-shared
+                // broadcast payload — encode it once, not once per edge
+                let hit = self
+                    .enc_cache
+                    .as_ref()
+                    .is_some_and(|(cached, _)| Arc::ptr_eq(cached, v));
+                if !hit {
+                    self.enc_cache = Some((v.clone(), msg.encode()));
+                }
+                let (_, bytes) = self.enc_cache.as_ref().unwrap();
+                write_msg_frame(&mut self.writers[j].1, t as u64, seq, bytes)
+            }
+            Message::Sparse(_) => {
+                let bytes = msg.encode();
+                write_msg_frame(&mut self.writers[j].1, t as u64, seq, &bytes)
+            }
+        };
+        res.map_err(|e| format!("node {id}: send to {to} failed: {e}"))
+    }
+
+    fn finish_round(&mut self, t: usize) -> Result<(), String> {
+        let id = self.id;
+        for (to, w) in &mut self.writers {
+            write_end_frame(w, t as u64)
+                .and_then(|_| w.flush())
+                .map_err(|e| format!("node {id}: end-of-round to {to} failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    fn drain_round(&mut self, t: usize) -> Result<Vec<Envelope>, String> {
+        let t64 = t as u64;
+        let mut out = Vec::new();
+        let mut ended = vec![false; self.neighbors.len()];
+        let mut remaining = self.neighbors.len();
+        // events pulled during the previous round that ran ahead
+        let mut queue: VecDeque<TcpEvent> = self.carry.drain(..).collect();
+        while remaining > 0 {
+            let ev = match queue.pop_front() {
+                Some(ev) => ev,
+                None => self.inbox.recv_timeout(self.drain_timeout).map_err(|_| {
+                    format!(
+                        "node {}: round {t} never completed — {remaining} \
+                         neighbor(s) missing end-of-round (remote engine dead \
+                         or stalled)",
+                        self.id
+                    )
+                })?,
+            };
+            match ev {
+                TcpEvent::Msg { from, t: et, seq, msg } => {
+                    if et == t64 {
+                        out.push((from, seq, msg));
+                    } else if et > t64 {
+                        self.carry.push(TcpEvent::Msg { from, t: et, seq, msg });
+                    } else {
+                        return Err(format!(
+                            "node {}: stale round-{et} frame from {from} during \
+                             round {t}",
+                            self.id
+                        ));
+                    }
+                }
+                TcpEvent::End { from, t: et } => {
+                    if et == t64 {
+                        let j = self.neighbors.binary_search(&from).map_err(|_| {
+                            format!(
+                                "node {}: end-of-round from non-neighbor {from}",
+                                self.id
+                            )
+                        })?;
+                        if ended[j] {
+                            return Err(format!(
+                                "node {}: duplicate end-of-round from {from}",
+                                self.id
+                            ));
+                        }
+                        ended[j] = true;
+                        remaining -= 1;
+                    } else if et > t64 {
+                        self.carry.push(TcpEvent::End { from, t: et });
+                    } else {
+                        return Err(format!(
+                            "node {}: stale end-of-round {et} from {from} during \
+                             round {t}",
+                            self.id
+                        ));
+                    }
+                }
+                TcpEvent::Closed { from, reason } => {
+                    // a peer that already delivered this round's END and
+                    // then closed is tearing down, not failing — defer the
+                    // event so only a drain that actually still needs the
+                    // link (a future round) fails fast on it
+                    let done = self
+                        .neighbors
+                        .binary_search(&from)
+                        .map(|j| ended[j])
+                        .unwrap_or(false);
+                    if !done {
+                        return Err(format!(
+                            "node {}: link to {from} closed: {reason}",
+                            self.id
+                        ));
+                    }
+                    self.carry.push(TcpEvent::Closed { from, reason });
+                }
+            }
+        }
+        // per-link FIFO means the queue is provably drained here (a
+        // sender's round-t frames precede its round-t END), but never
+        // risk dropping an envelope that ran ahead; leftovers arrived
+        // before anything carried during this drain, so they go first
+        if !queue.is_empty() {
+            self.carry.splice(0..0, queue);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for TcpPort {
+    fn drop(&mut self) {
+        for s in &self.shutdown {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+// --- connection setup ------------------------------------------------------
+
+struct Hello {
+    from: u32,
+    to: u32,
+    hash: u64,
+    seed: u64,
+}
+
+fn write_hello(
+    s: &mut TcpStream,
+    from: usize,
+    to: usize,
+    hash: u64,
+    seed: u64,
+) -> std::io::Result<()> {
+    let mut b = Vec::with_capacity(29);
+    b.extend_from_slice(&HANDSHAKE_MAGIC);
+    b.push(WIRE_VERSION);
+    b.extend_from_slice(&(from as u32).to_le_bytes());
+    b.extend_from_slice(&(to as u32).to_le_bytes());
+    b.extend_from_slice(&hash.to_le_bytes());
+    b.extend_from_slice(&seed.to_le_bytes());
+    s.write_all(&b)
+}
+
+fn read_hello(s: &mut TcpStream) -> Result<Hello, String> {
+    let mut b = [0u8; 29];
+    s.read_exact(&mut b).map_err(|e| e.to_string())?;
+    if b[0..4] != HANDSHAKE_MAGIC {
+        return Err("bad handshake magic".to_string());
+    }
+    if b[4] != WIRE_VERSION {
+        return Err(format!("wire version {} (want {WIRE_VERSION})", b[4]));
+    }
+    Ok(Hello {
+        from: u32::from_le_bytes(b[5..9].try_into().unwrap()),
+        to: u32::from_le_bytes(b[9..13].try_into().unwrap()),
+        hash: u64::from_le_bytes(b[13..21].try_into().unwrap()),
+        seed: u64::from_le_bytes(b[21..29].try_into().unwrap()),
+    })
+}
+
+fn dial(
+    addr: &str,
+    from: usize,
+    to: usize,
+    hash: u64,
+    seed: u64,
+) -> Result<TcpStream, String> {
+    let mut last = String::new();
+    for _ in 0..DIAL_RETRIES {
+        let mut s = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(e) => {
+                // the peer endpoint may simply not have bound yet
+                last = e.to_string();
+                std::thread::sleep(DIAL_BACKOFF);
+                continue;
+            }
+        };
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+        write_hello(&mut s, from, to, hash, seed)
+            .map_err(|e| format!("edge ({from},{to}): handshake write: {e}"))?;
+        let hello = read_hello(&mut s)
+            .map_err(|e| format!("edge ({from},{to}): handshake ack: {e}"))?;
+        if hello.hash != hash {
+            return Err(format!("edge ({from},{to}): topology fingerprint mismatch"));
+        }
+        if hello.seed != seed {
+            return Err(format!("edge ({from},{to}): experiment seed mismatch"));
+        }
+        if hello.from as usize != to || hello.to as usize != from {
+            return Err(format!(
+                "edge ({from},{to}): acceptor answered for edge ({},{})",
+                hello.to, hello.from
+            ));
+        }
+        let _ = s.set_read_timeout(None);
+        return Ok(s);
+    }
+    Err(format!("could not connect edge ({from},{to}) via {addr}: {last}"))
+}
+
+/// Accept `expect` edge connections, validating each handshake. Returns
+/// `(local node, remote node, stream)` triples. A connection that can't
+/// even produce a well-formed hello (port scanner, health check, line
+/// noise) is silently dropped and does not count toward `expect`; a
+/// well-formed hello from a *mispaired* peer (wrong topology, seed, or
+/// edge) is a hard error — dropping either way means the dialer sees EOF
+/// on its ack read and fails fast.
+fn accept_all(
+    listener: TcpListener,
+    expect: usize,
+    edges: HashSet<(usize, usize)>,
+    is_hosted: Vec<bool>,
+    hash: u64,
+    seed: u64,
+    cancel: Arc<AtomicBool>,
+) -> Result<Vec<(usize, usize, TcpStream)>, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener nonblocking: {e}"))?;
+    let deadline = Instant::now() + ACCEPT_DEADLINE;
+    let mut out = Vec::with_capacity(expect);
+    let mut seen: HashSet<(usize, usize)> = HashSet::new();
+    while out.len() < expect {
+        let mut s = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if cancel.load(Ordering::SeqCst) {
+                    return Err("transport setup aborted".to_string());
+                }
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "timed out waiting for {} peer connection(s)",
+                        expect - out.len()
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(e) => return Err(format!("accept: {e}")),
+        };
+        s.set_nonblocking(false)
+            .map_err(|e| format!("accepted stream blocking mode: {e}"))?;
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(ACCEPT_HELLO_TIMEOUT));
+        let hello = match read_hello(&mut s) {
+            Ok(h) => h,
+            Err(_) => continue, // garbled stray connection — drop, keep waiting
+        };
+        let (a, b) = (hello.from as usize, hello.to as usize);
+        if hello.hash != hash {
+            return Err(format!(
+                "dialer of edge ({a},{b}) runs a different topology \
+                 (fingerprint mismatch)"
+            ));
+        }
+        if hello.seed != seed {
+            return Err(format!(
+                "dialer of edge ({a},{b}) runs a different experiment \
+                 (seed mismatch)"
+            ));
+        }
+        if a >= b || !edges.contains(&(a, b)) {
+            return Err(format!("handshake names non-edge ({a},{b})"));
+        }
+        if !is_hosted[b] {
+            return Err(format!("dialer targeted node {b}, which is not hosted here"));
+        }
+        if !seen.insert((a, b)) {
+            return Err(format!("duplicate connection for edge ({a},{b})"));
+        }
+        write_hello(&mut s, b, a, hash, seed)
+            .map_err(|e| format!("handshake ack for edge ({a},{b}): {e}"))?;
+        let _ = s.set_read_timeout(None);
+        out.push((b, a, s));
+    }
+    Ok(out)
+}
+
+// --- framing ---------------------------------------------------------------
+
+fn write_msg_frame(
+    w: &mut BufWriter<TcpStream>,
+    t: u64,
+    seq: u32,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    w.write_all(&[FRAME_MSG])?;
+    w.write_all(&t.to_le_bytes())?;
+    w.write_all(&seq.to_le_bytes())?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+fn write_end_frame(w: &mut BufWriter<TcpStream>, t: u64) -> std::io::Result<()> {
+    w.write_all(&[FRAME_END])?;
+    w.write_all(&t.to_le_bytes())
+}
+
+fn read_u32(s: &mut TcpStream) -> Result<u32, String> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b).map_err(|e| e.to_string())?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(s: &mut TcpStream) -> Result<u64, String> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b).map_err(|e| e.to_string())?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read one frame; `Ok(None)` is a clean close at a frame boundary.
+fn read_frame(s: &mut TcpStream, from: usize) -> Result<Option<TcpEvent>, String> {
+    let mut tag = [0u8; 1];
+    if s.read_exact(&mut tag).is_err() {
+        return Ok(None);
+    }
+    match tag[0] {
+        FRAME_MSG => {
+            let t = read_u64(s)?;
+            let seq = read_u32(s)?;
+            let len = read_u64(s)?;
+            if len > MAX_FRAME_BYTES {
+                return Err(format!("oversized frame ({len} bytes)"));
+            }
+            let mut payload = Vec::new();
+            let got = (&mut *s)
+                .take(len)
+                .read_to_end(&mut payload)
+                .map_err(|e| e.to_string())?;
+            if got as u64 != len {
+                return Err("truncated frame".to_string());
+            }
+            let msg = Message::decode(&payload)
+                .map_err(|e| format!("bad frame payload: {e}"))?;
+            Ok(Some(TcpEvent::Msg { from, t, seq, msg }))
+        }
+        FRAME_END => Ok(Some(TcpEvent::End { from, t: read_u64(s)? })),
+        other => Err(format!("unknown frame tag {other:#04x}")),
+    }
+}
+
+/// Per-link reader: decode frames into the owning node's event inbox
+/// until the link closes (clean EOF and errors both surface as `Closed`;
+/// the port only treats `Closed` as fatal if it is still waiting on the
+/// link, so engine teardown stays silent).
+fn reader_loop(mut stream: TcpStream, from: usize, tx: Sender<TcpEvent>) {
+    loop {
+        match read_frame(&mut stream, from) {
+            Ok(Some(ev)) => {
+                if tx.send(ev).is_err() {
+                    return; // port dropped — engine is shutting down
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send(TcpEvent::Closed {
+                    from,
+                    reason: "connection closed".to_string(),
+                });
+                return;
+            }
+            Err(reason) => {
+                let _ = tx.send(TcpEvent::Closed { from, reason });
+                return;
+            }
+        }
+    }
+}
+
+// --- CLI/config-level constructors -----------------------------------------
+
+/// Parse a hosted-node spec: `""` = all `n` nodes, otherwise
+/// comma-separated indices and inclusive ranges (`"0-3"`, `"0,2,5"`).
+pub fn parse_hosted(spec: &str, n: usize) -> Result<Vec<usize>, String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Ok((0..n).collect());
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some((lo, hi)) = part.split_once('-') {
+            let lo: usize =
+                lo.trim().parse().map_err(|_| format!("bad hosted range {part:?}"))?;
+            let hi: usize =
+                hi.trim().parse().map_err(|_| format!("bad hosted range {part:?}"))?;
+            if lo > hi {
+                return Err(format!("empty hosted range {part:?}"));
+            }
+            // bound BEFORE materializing: a typo'd range must error, not
+            // allocate billions of indices
+            if hi >= n {
+                return Err(format!("hosted node {hi} out of range (N = {n})"));
+            }
+            out.extend(lo..=hi);
+        } else {
+            let v: usize =
+                part.parse().map_err(|_| format!("bad hosted node {part:?}"))?;
+            if v >= n {
+                return Err(format!("hosted node {v} out of range (N = {n})"));
+            }
+            out.push(v);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    if out.is_empty() {
+        return Err("empty hosted spec".to_string());
+    }
+    Ok(out)
+}
+
+/// Parse a peers spec: comma-separated `node=host:port` entries.
+pub fn parse_peers(spec: &str) -> Result<HashMap<usize, String>, String> {
+    let mut map = HashMap::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (node, addr) = part
+            .split_once('=')
+            .ok_or_else(|| format!("bad peer entry {part:?} (want node=host:port)"))?;
+        let node: usize =
+            node.trim().parse().map_err(|_| format!("bad peer node in {part:?}"))?;
+        if addr.trim().is_empty() {
+            return Err(format!("empty peer address in {part:?}"));
+        }
+        if map.insert(node, addr.trim().to_string()).is_some() {
+            return Err(format!("duplicate peer entry for node {node}"));
+        }
+    }
+    Ok(map)
+}
+
+/// Validate CLI/config-level TCP specs against a topology without
+/// opening any socket: parses both specs and checks that every
+/// non-hosted neighbor of a hosted node has a peer address — the same
+/// precondition [`TcpTransport::establish`] enforces, surfaced early on
+/// the clean error path.
+pub fn validate_tcp_spec(
+    topo: &Topology,
+    hosted_spec: &str,
+    peers_spec: &str,
+) -> Result<(), String> {
+    let hosted = parse_hosted(hosted_spec, topo.n)?;
+    let peers = parse_peers(peers_spec)?;
+    for &n in &hosted {
+        for &m in topo.neighbors(n) {
+            if hosted.binary_search(&m).is_err() && !peers.contains_key(&m) {
+                return Err(format!(
+                    "neighbor {m} of hosted node {n} has no peer address \
+                     (pass it via --peers {m}=host:port)"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a TCP transport from CLI/config-level strings: empty `hosted`
+/// hosts every node (single-process loopback run), empty `listen` binds
+/// an ephemeral loopback port.
+pub fn tcp_from_spec(
+    topo: &Topology,
+    seed: u64,
+    hosted_spec: &str,
+    listen: &str,
+    peers_spec: &str,
+) -> Result<TcpTransport, String> {
+    let hosted = parse_hosted(hosted_spec, topo.n)?;
+    let peers = parse_peers(peers_spec)?;
+    let listen = if listen.trim().is_empty() { "127.0.0.1:0" } else { listen.trim() };
+    let listener = TcpTransport::bind(listen)?;
+    TcpTransport::establish(listener, topo, seed, hosted, &peers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::RelayDelta;
+    use crate::linalg::SparseVec;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("LOCAL"), Some(TransportKind::Local));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn hosted_spec_parses() {
+        assert_eq!(parse_hosted("", 4).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_hosted("0-2", 4).unwrap(), vec![0, 1, 2]);
+        assert_eq!(parse_hosted("3,1,1", 4).unwrap(), vec![1, 3]);
+        assert_eq!(parse_hosted("0,2-3", 4).unwrap(), vec![0, 2, 3]);
+        assert!(parse_hosted("4", 4).is_err());
+        assert!(parse_hosted("2-1", 4).is_err());
+        assert!(parse_hosted("x", 4).is_err());
+        assert!(parse_hosted(",", 4).is_err());
+        // a typo'd range must error before materializing anything
+        assert!(parse_hosted("0-4000000000", 6).is_err());
+    }
+
+    #[test]
+    fn peers_spec_parses() {
+        assert!(parse_peers("").unwrap().is_empty());
+        let p = parse_peers("3=127.0.0.1:9001, 4=10.0.0.2:9001").unwrap();
+        assert_eq!(p[&3], "127.0.0.1:9001");
+        assert_eq!(p[&4], "10.0.0.2:9001");
+        assert!(parse_peers("3").is_err());
+        assert!(parse_peers("3=").is_err());
+        assert!(parse_peers("3=a,3=b").is_err());
+    }
+
+    #[test]
+    fn local_ports_deliver_within_a_round() {
+        let t = Box::new(LocalTransport::new(3));
+        assert_eq!(t.hosted(), &[0, 1, 2]);
+        let mut ports = t.into_ports();
+        ports[0].send(0, 1, 0, Message::dense(vec![1.0])).unwrap();
+        ports[2].send(0, 1, 0, Message::dense(vec![2.0])).unwrap();
+        ports[0].finish_round(0).unwrap();
+        ports[2].finish_round(0).unwrap();
+        let mut got = ports[1].drain_round(0).unwrap();
+        got.sort_by_key(|&(from, seq, _)| (from, seq));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[1].0, 2);
+        assert!(ports[0].drain_round(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tcp_loopback_ports_roundtrip_both_payload_families() {
+        let topo = Topology::ring(3); // everyone neighbors everyone
+        let t = Box::new(TcpTransport::loopback(&topo, 7).unwrap());
+        assert_eq!(t.hosted(), &[0, 1, 2]);
+        let mut ports = t.into_ports();
+        let dense = Message::dense(vec![0.5, -0.0, 3.25]);
+        let sparse = Message::Sparse(RelayDelta {
+            src: 2,
+            t: 0,
+            vec: SparseVec::from_pairs(10, vec![(1, 1.5), (7, -2.0)]),
+            tail: vec![9.0],
+        });
+        ports[0].send(0, 1, 0, dense.clone()).unwrap();
+        ports[2].send(0, 1, 0, sparse.clone()).unwrap();
+        for p in ports.iter_mut() {
+            p.finish_round(0).unwrap();
+        }
+        let mut got = ports[1].drain_round(0).unwrap();
+        got.sort_by_key(|&(from, seq, _)| (from, seq));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].2, dense);
+        // bit-exactness beyond PartialEq
+        assert_eq!(got[0].2.encode(), dense.encode());
+        assert_eq!(got[1].2, sparse);
+        assert!(ports[0].drain_round(0).unwrap().is_empty());
+        assert!(ports[2].drain_round(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tcp_drain_carries_early_next_round_frames() {
+        let topo = Topology::path(3); // 1 neighbors {0, 2}
+        let t = Box::new(TcpTransport::loopback(&topo, 1).unwrap());
+        let mut ports = t.into_ports();
+        // node 0 races two rounds ahead before node 1 drains anything
+        ports[0].send(0, 1, 0, Message::dense(vec![1.0])).unwrap();
+        ports[0].finish_round(0).unwrap();
+        ports[0].send(1, 1, 0, Message::dense(vec![2.0])).unwrap();
+        ports[0].finish_round(1).unwrap();
+        for t in 0..2 {
+            ports[2].finish_round(t).unwrap();
+        }
+        let r0 = ports[1].drain_round(0).unwrap();
+        assert_eq!(r0.len(), 1);
+        assert_eq!(r0[0].2, Message::dense(vec![1.0]));
+        let r1 = ports[1].drain_round(1).unwrap();
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r1[0].2, Message::dense(vec![2.0]));
+    }
+
+    #[test]
+    fn tcp_transport_handles_edgeless_topology() {
+        let topo = Topology::from_edges(1, &[]);
+        let t = Box::new(TcpTransport::loopback(&topo, 5).unwrap());
+        let mut ports = t.into_ports();
+        ports[0].finish_round(0).unwrap();
+        assert!(ports[0].drain_round(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn establish_rejects_missing_peer_address() {
+        let topo = Topology::path(2);
+        let listener = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let err = TcpTransport::establish(listener, &topo, 1, vec![0], &HashMap::new())
+            .unwrap_err();
+        assert!(err.contains("no peer address"), "{err}");
+    }
+}

@@ -58,12 +58,8 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // compact serialization lives in the `Display` impl below
+    // (`.to_string()` keeps working through the blanket `ToString`)
 
     fn write(&self, out: &mut String) {
         match self {
@@ -120,6 +116,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (also reachable as `.to_string()`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

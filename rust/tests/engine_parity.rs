@@ -1,16 +1,20 @@
 //! Parallel-engine parity suite: the multi-threaded message-passing
 //! engine must be **bit-for-bit** equal to the sequential reference
 //! driver — same iterates, same per-node comm-cost accounting — for every
-//! `AlgorithmKind` on several topologies, plus a concurrency stress
-//! property (no deadlocks under random thread/node counts, no dropped
-//! messages).
+//! `AlgorithmKind` on several topologies, over BOTH transports (in-process
+//! mpsc and per-edge loopback TCP sockets carrying the framed wire
+//! codec), plus a concurrency stress property (no deadlocks under random
+//! thread/node counts, no dropped messages) and a split-hosting test
+//! pairing two TCP engines over real sockets.
 
 use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
 use dsba::comm::{CommCostModel, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
+use dsba::runtime::transport::TcpTransport;
 use dsba::runtime::ParallelEngine;
 use dsba::testing::prop_check;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -19,9 +23,21 @@ fn ridge_world(nodes: usize, seed: u64) -> Arc<dyn Problem> {
     Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 3), 0.05))
 }
 
+#[derive(Clone, Copy, PartialEq)]
+enum Backend {
+    Local,
+    Tcp,
+}
+
 /// Step both drivers `rounds` times, asserting exact iterate equality and
 /// exact per-node sent/received DOUBLE totals each round.
-fn assert_parity(kind: AlgorithmKind, topo: Topology, rounds: usize, threads: usize) {
+fn assert_parity_on(
+    kind: AlgorithmKind,
+    topo: Topology,
+    rounds: usize,
+    threads: usize,
+    backend: Backend,
+) {
     // Point-SAGA is single-node by construction (Remark 5.1); the engine
     // degenerates to one worker on the trivial topology.
     let topo = if kind == AlgorithmKind::PointSaga {
@@ -38,7 +54,22 @@ fn assert_parity(kind: AlgorithmKind, topo: Topology, rounds: usize, threads: us
     let mut params = AlgoParams::new(0.25, p.dim(), 99);
     params.inner_tol = 1e-11;
     let mut seq = build(kind, p.clone(), &mix, &topo, &params);
-    let mut par = ParallelEngine::new(kind, p.clone(), &mix, &topo, &params, threads);
+    let mut par = match backend {
+        Backend::Local => ParallelEngine::new(kind, p.clone(), &mix, &topo, &params, threads),
+        Backend::Tcp => {
+            let transport = TcpTransport::loopback(&topo, params.seed)
+                .expect("loopback transport setup");
+            ParallelEngine::new_with_transport(
+                kind,
+                p.clone(),
+                &mix,
+                &topo,
+                &params,
+                threads,
+                Box::new(transport),
+            )
+        }
+    };
     let mut net_s = Network::new(topo.clone(), CommCostModel::default());
     let mut net_p = Network::new(topo.clone(), CommCostModel::default());
     for round in 0..rounds {
@@ -79,6 +110,10 @@ fn assert_parity(kind: AlgorithmKind, topo: Topology, rounds: usize, threads: us
     assert_eq!(sent, delivered, "{}: engine dropped messages", kind.name());
 }
 
+fn assert_parity(kind: AlgorithmKind, topo: Topology, rounds: usize, threads: usize) {
+    assert_parity_on(kind, topo, rounds, threads, Backend::Local);
+}
+
 /// Cheap stochastic methods get the full 60 rounds; the
 /// inner-solver-heavy deterministic methods (P-EXTRA, SSDA run an AGD/CG
 /// oracle per node per round) still exceed the 50-round bar.
@@ -86,6 +121,16 @@ fn rounds_for(kind: AlgorithmKind) -> usize {
     match kind {
         AlgorithmKind::PExtra | AlgorithmKind::Ssda => 52,
         _ => 60,
+    }
+}
+
+/// The TCP suite covers the same (kind x topology) grid; fewer rounds
+/// (still several multiples of every diameter, so the relay pipeline is
+/// exercised in steady state) keep the socket-bound suite fast.
+fn tcp_rounds_for(kind: AlgorithmKind) -> usize {
+    match kind {
+        AlgorithmKind::PExtra | AlgorithmKind::Ssda => 16,
+        _ => 24,
     }
 }
 
@@ -111,12 +156,177 @@ fn parity_all_kinds_random_graph() {
 }
 
 #[test]
+fn parity_all_kinds_ring_tcp() {
+    for &kind in AlgorithmKind::all() {
+        assert_parity_on(kind, Topology::ring(6), tcp_rounds_for(kind), 3, Backend::Tcp);
+    }
+}
+
+#[test]
+fn parity_all_kinds_grid_tcp() {
+    for &kind in AlgorithmKind::all() {
+        assert_parity_on(kind, Topology::grid2d(6), tcp_rounds_for(kind), 2, Backend::Tcp);
+    }
+}
+
+#[test]
+fn parity_all_kinds_random_graph_tcp() {
+    for &kind in AlgorithmKind::all() {
+        assert_parity_on(
+            kind,
+            Topology::erdos_renyi(6, 0.5, 7),
+            tcp_rounds_for(kind),
+            4,
+            Backend::Tcp,
+        );
+    }
+}
+
+#[test]
 fn parity_holds_at_every_thread_count() {
     // thread count must never leak into the arithmetic
     let topo = Topology::erdos_renyi(8, 0.4, 11);
     for threads in [1, 2, 3, 8] {
         assert_parity(AlgorithmKind::DsbaSparse, topo.clone(), 55, threads);
     }
+}
+
+/// Two engine instances hosting disjoint halves of one ring, wired to
+/// each other over real loopback sockets (handshake, framed codec,
+/// end-of-round control frames): each hosted node's iterate sequence and
+/// sent-DOUBLE total must equal the sequential oracle's bit-for-bit, and
+/// no message may be lost between the processes' engines. DSBA-s is the
+/// hardest case — its relay deltas are forwarded multi-hop across the
+/// host boundary every round.
+#[test]
+fn tcp_split_hosting_matches_sequential() {
+    let topo = Topology::ring(6);
+    let rounds = 20usize;
+    let kind = AlgorithmKind::DsbaSparse;
+    let p = ridge_world(6, 17);
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let mut params = AlgoParams::new(0.25, p.dim(), 99);
+    params.inner_tol = 1e-11;
+
+    // sequential oracle
+    let mut seq = build(kind, p.clone(), &mix, &topo, &params);
+    let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+    for _ in 0..rounds {
+        seq.step(&mut net_s);
+    }
+
+    // bind both endpoints first so addresses are known to each other
+    let l_a = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let l_b = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr_a = l_a.local_addr().to_string();
+    let addr_b = l_b.local_addr().to_string();
+    let peers_a: HashMap<usize, String> =
+        [(3, addr_b.clone()), (5, addr_b.clone())].into_iter().collect();
+    let peers_b: HashMap<usize, String> =
+        [(0, addr_a.clone()), (2, addr_a.clone())].into_iter().collect();
+
+    let run_half = |listener,
+                    hosted: Vec<usize>,
+                    peers: HashMap<usize, String>,
+                    topo: Topology,
+                    p: Arc<dyn Problem>,
+                    mix: MixingMatrix,
+                    params: AlgoParams| {
+        std::thread::spawn(move || {
+            let transport = TcpTransport::establish(listener, &topo, params.seed, hosted, &peers)
+                .expect("split establish");
+            let mut eng = ParallelEngine::new_with_transport(
+                kind,
+                p,
+                &mix,
+                &topo,
+                &params,
+                2,
+                Box::new(transport),
+            );
+            let mut net = Network::new(topo.clone(), CommCostModel::default());
+            for _ in 0..rounds {
+                eng.step(&mut net);
+            }
+            let hosted = eng.hosted().to_vec();
+            let iterates: Vec<Vec<f64>> = eng.iterates().to_vec();
+            let sent: Vec<f64> = (0..topo.n).map(|n| net.sent_by(n)).collect();
+            let received: Vec<f64> = (0..topo.n).map(|n| net.received_by(n)).collect();
+            (hosted, iterates, sent, received, eng.message_stats())
+        })
+    };
+    let ha = run_half(
+        l_a,
+        vec![0, 1, 2],
+        peers_a,
+        topo.clone(),
+        p.clone(),
+        mix.clone(),
+        params.clone(),
+    );
+    let hb = run_half(
+        l_b,
+        vec![3, 4, 5],
+        peers_b,
+        topo.clone(),
+        p.clone(),
+        mix.clone(),
+        params.clone(),
+    );
+    let (hosted_a, z_a, sent_a, recv_a, stats_a) = ha.join().expect("engine A panicked");
+    let (hosted_b, z_b, sent_b, recv_b, stats_b) = hb.join().expect("engine B panicked");
+
+    for (&n, z) in hosted_a.iter().map(|n| (n, &z_a)).chain(hosted_b.iter().map(|n| (n, &z_b))) {
+        assert_eq!(
+            seq.iterates()[n],
+            z[n],
+            "node {n}: split-hosted iterate != sequential"
+        );
+    }
+    // per-node DOUBLE accounting for each engine's own share is exact:
+    // outflow via send-side events, inflow from the remote half via
+    // receive-side events (merged into the same canonical replay)
+    for &n in hosted_a.iter() {
+        assert_eq!(net_s.sent_by(n), sent_a[n], "node {n}: sent DOUBLEs diverged");
+        assert_eq!(net_s.received_by(n), recv_a[n], "node {n}: received DOUBLEs diverged");
+    }
+    for &n in hosted_b.iter() {
+        assert_eq!(net_s.sent_by(n), sent_b[n], "node {n}: sent DOUBLEs diverged");
+        assert_eq!(net_s.received_by(n), recv_b[n], "node {n}: received DOUBLEs diverged");
+    }
+    // conservation across the pair: every sent envelope delivered once
+    assert_eq!(
+        stats_a.0 + stats_b.0,
+        stats_a.1 + stats_b.1,
+        "split engines lost or duplicated messages"
+    );
+    assert!(stats_a.0 > 0 && stats_b.0 > 0, "both halves must have sent messages");
+}
+
+/// Mispaired endpoints must refuse each other: the handshake carries the
+/// experiment seed, so two engines launched with different seeds fail
+/// fast instead of silently diverging.
+#[test]
+fn tcp_handshake_rejects_seed_mismatch() {
+    let topo = Topology::path(2);
+    let l_a = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let l_b = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr_a = l_a.local_addr().to_string();
+    let addr_b = l_b.local_addr().to_string();
+    let topo_b = topo.clone();
+    let hb = std::thread::spawn(move || {
+        let peers: HashMap<usize, String> = [(0, addr_a)].into_iter().collect();
+        TcpTransport::establish(l_b, &topo_b, 2, vec![1], &peers)
+    });
+    let peers: HashMap<usize, String> = [(1, addr_b)].into_iter().collect();
+    let ra = TcpTransport::establish(l_a, &topo, 1, vec![0], &peers);
+    let rb = hb.join().unwrap();
+    assert!(
+        ra.is_err() && rb.is_err(),
+        "seed-mismatched endpoints must both fail (a: {}, b: {})",
+        ra.is_ok(),
+        rb.is_ok()
+    );
 }
 
 /// Concurrency stress: random (nodes, threads, topology, method) triples

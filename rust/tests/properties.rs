@@ -179,13 +179,63 @@ fn prop_message_wire_roundtrip_lossless() {
                 tail: (0..tail_len).map(|_| rng.normal()).collect(),
             })
         };
-        let decoded = Message::decode(&msg.encode()).map_err(|e| e)?;
+        let decoded = Message::decode(&msg.encode())?;
         if decoded != msg {
             return Err("roundtrip mismatch".into());
         }
         // bit-exactness beyond PartialEq (e.g. signed zeros)
         if decoded.encode() != msg.encode() {
             return Err("re-encode not bit-identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_message_decode_total_on_corrupt_frames() {
+    // Wire-codec robustness (the cross-process transport reads frames
+    // from untrusted sockets): `decode` must return `Err` — never panic,
+    // never blindly allocate — on every truncation of a valid frame, and
+    // any mutated frame it *does* accept must be canonical (re-encoding
+    // reproduces the accepted bytes exactly, so no invalid SparseVec or
+    // phantom payload can enter a node).
+    use dsba::comm::{Message, RelayDelta};
+    prop_check("decode total on corrupt frames", 40, |rng| {
+        let msg = if rng.bernoulli(0.5) {
+            let len = rng.below(40);
+            Message::dense((0..len).map(|_| rng.normal()).collect())
+        } else {
+            let dim = 1 + rng.below(60);
+            let nnz = rng.below(dim.min(12) + 1);
+            let pairs: Vec<(u32, f64)> =
+                (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+            Message::Sparse(RelayDelta {
+                src: rng.below(100) as u32,
+                t: rng.below(1000) as u32,
+                vec: SparseVec::from_pairs(dim, pairs),
+                tail: (0..rng.below(4)).map(|_| rng.normal()).collect(),
+            })
+        };
+        let enc = msg.encode();
+        for k in 0..enc.len() {
+            if Message::decode(&enc[..k]).is_ok() {
+                return Err(format!("prefix {k}/{} bytes decoded Ok", enc.len()));
+            }
+        }
+        for _ in 0..25 {
+            let mut mutated = enc.clone();
+            let flips = 1 + rng.below(3);
+            for _ in 0..flips {
+                let pos = rng.below(mutated.len());
+                mutated[pos] ^= 1u8 << rng.below(8);
+            }
+            if let Ok(decoded) = Message::decode(&mutated) {
+                if decoded.encode() != mutated {
+                    return Err(format!(
+                        "accepted a non-canonical mutated frame ({flips} bit flips)"
+                    ));
+                }
+            }
         }
         Ok(())
     });
@@ -270,9 +320,9 @@ fn prop_json_roundtrip() {
             }
         }
         let v = gen(rng, 0);
-        let parsed = parse(&v.to_string()).map_err(|e| e)?;
+        let parsed = parse(&v.to_string())?;
         if parsed != v {
-            return Err(format!("roundtrip mismatch: {}", v.to_string()));
+            return Err(format!("roundtrip mismatch: {v}"));
         }
         Ok(())
     });
