@@ -36,14 +36,15 @@ fn main() {
         (AlgorithmKind::Extra, 0.05),
     ] {
         let part = ds.partition(10);
-        let mut exp = Experiment::new(
+        let mut exp = Experiment::builder(
             AucProblem::new(part, lambda),
             topo.clone(),
             kind,
         )
-        .with_step_size(alpha)
-        .with_passes(10.0)
-        .with_record_points(8);
+        .step_size(alpha)
+        .passes(10.0)
+        .record_points(8)
+        .build();
         let trace = exp.run();
         println!(
             "{:>7}: AUC {:.4} after {:>5.1} passes | suboptimality {:.2e} | comm {:.2e} doubles",

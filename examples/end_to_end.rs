@@ -95,11 +95,12 @@ fn main() {
         (AlgorithmKind::DsbaSparse, 2.0),
         (AlgorithmKind::Dsa, 0.3),
     ] {
-        let mut exp = Experiment::from_arc(ridge.clone(), topo.clone(), kind)
-            .with_step_size(alpha)
-            .with_passes(15.0)
-            .with_record_points(6)
-            .with_z_star(z_star.clone());
+        let mut exp = Experiment::builder_from_arc(ridge.clone(), topo.clone(), kind)
+            .step_size(alpha)
+            .passes(15.0)
+            .record_points(6)
+            .z_star(z_star.clone())
+            .build();
         let trace = exp.run();
         println!("--- {} ---\n{}", kind.name(), format_table(&trace.rows));
     }
@@ -111,14 +112,15 @@ fn main() {
         .generate(2025);
     let part_log = ds_log.partition(10);
     let lam_log = 1e-3;
-    let mut exp = Experiment::new(
+    let mut exp = Experiment::builder(
         LogisticProblem::new(part_log, lam_log),
         topo.clone(),
         AlgorithmKind::Dsba,
     )
-    .with_step_size(2.0)
-    .with_passes(15.0)
-    .with_record_points(6);
+    .step_size(2.0)
+    .passes(15.0)
+    .record_points(6)
+    .build();
     let trace = exp.run();
     println!("--- logistic / DSBA ---\n{}", format_table(&trace.rows));
     assert!(trace.last_suboptimality() < 1e-5, "logistic did not converge");
@@ -130,14 +132,15 @@ fn main() {
         .generate(2026);
     let part_auc = ds_auc.partition(10);
     let lam_auc = 1.0 / (10.0 * part_auc.total_samples() as f64);
-    let mut exp = Experiment::new(
+    let mut exp = Experiment::builder(
         AucProblem::new(part_auc, lam_auc),
         topo,
         AlgorithmKind::Dsba,
     )
-    .with_step_size(0.5)
-    .with_passes(10.0)
-    .with_record_points(6);
+    .step_size(0.5)
+    .passes(10.0)
+    .record_points(6)
+    .build();
     let trace = exp.run();
     println!("--- AUC / DSBA ---\n{}", format_table(&trace.rows));
     assert!(trace.last_auc() > 0.75, "AUC too low: {}", trace.last_auc());

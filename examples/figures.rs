@@ -11,7 +11,6 @@
 
 use dsba::algorithms::AlgorithmKind;
 use dsba::bench_harness::{summarize, write_results, FigureSpec};
-use dsba::config::ProblemKind;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -19,11 +18,11 @@ fn main() {
     let fast = args.iter().any(|a| a == "--fast");
     let run = |n: &str| {
         let (title, problem, methods): (_, _, Option<Vec<AlgorithmKind>>) = match n {
-            "1" => ("Figure 1: Ridge Regression", ProblemKind::Ridge, None),
-            "2" => ("Figure 2: Logistic Regression", ProblemKind::Logistic, None),
+            "1" => ("Figure 1: Ridge Regression", "ridge", None),
+            "2" => ("Figure 2: Logistic Regression", "logistic", None),
             "3" => (
                 "Figure 3: AUC maximization",
-                ProblemKind::Auc,
+                "auc",
                 Some(vec![
                     AlgorithmKind::Dsba,
                     AlgorithmKind::Dsa,
@@ -47,7 +46,7 @@ fn main() {
             spec.datasets = vec!["rcv1-like"];
         }
         let runs = spec.run();
-        summarize(&runs, problem == ProblemKind::Auc);
+        summarize(&runs, spec.auc_scored());
         write_results(&format!("fig{n}"), &runs);
     };
     match which.as_deref() {

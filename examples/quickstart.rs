@@ -40,10 +40,11 @@ fn main() {
     let problem = RidgeProblem::new(part, lambda);
 
     // 4. run DSBA for 40 effective passes
-    let mut exp = Experiment::new(problem, topo, AlgorithmKind::Dsba)
-        .with_step_size(2.0)
-        .with_passes(40.0)
-        .with_record_points(10);
+    let mut exp = Experiment::builder(problem, topo, AlgorithmKind::Dsba)
+        .step_size(2.0)
+        .passes(40.0)
+        .record_points(10)
+        .build();
     let trace = exp.run();
     println!("{}", format_table(&trace.rows));
     println!(

@@ -97,10 +97,11 @@ fn main() {
         for kind in [AlgorithmKind::Dsba, AlgorithmKind::Dsa] {
             let part = ds.partition_seeded(8, 2);
             let mut exp =
-                Experiment::new(RidgeProblem::new(part, 0.02), topo.clone(), kind)
-                    .with_step_size(alpha)
-                    .with_passes(20.0)
-                    .with_z_star(z_star.clone());
+                Experiment::builder(RidgeProblem::new(part, 0.02), topo.clone(), kind)
+                    .step_size(alpha)
+                    .passes(20.0)
+                    .z_star(z_star.clone())
+                    .build();
             let s = exp.run().last_suboptimality();
             subs.push(if s.is_finite() { format!("{s:>14.2e}") } else { format!("{:>14}", "diverged") });
         }
@@ -134,15 +135,16 @@ fn main() {
         ("lazy metropolis", MixingMatrix::metropolis(&topo)),
     ] {
         let part = ds.partition_seeded(8, 2);
-        let mut exp = Experiment::new(
+        let mut exp = Experiment::builder(
             RidgeProblem::new(part, 0.02),
             topo.clone(),
             AlgorithmKind::Dsba,
         )
-        .with_step_size(1.0)
-        .with_passes(30.0)
-        .with_z_star(z_star.clone())
-        .with_mixing(mix.clone());
+        .step_size(1.0)
+        .passes(30.0)
+        .z_star(z_star.clone())
+        .mixing(mix.clone())
+        .build();
         let s = exp.run().last_suboptimality();
         println!("{name:>20}: kappa_g {:>7.1} -> suboptimality {s:.3e}", mix.kappa_g);
     }

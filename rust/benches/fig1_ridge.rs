@@ -6,11 +6,10 @@
 //!     cargo bench --bench fig1_ridge -- fast  (single dataset, short)
 
 use dsba::bench_harness::{summarize, write_results, FigureSpec};
-use dsba::config::ProblemKind;
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
-    let mut spec = FigureSpec::defaults(ProblemKind::Ridge);
+    let mut spec = FigureSpec::defaults("ridge");
     spec.title = "Figure 1: Ridge Regression";
     if fast {
         spec.datasets = vec!["rcv1-like"];

@@ -4,11 +4,10 @@
 //!     cargo bench --bench fig2_logistic [-- fast]
 
 use dsba::bench_harness::{summarize, write_results, FigureSpec};
-use dsba::config::ProblemKind;
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
-    let mut spec = FigureSpec::defaults(ProblemKind::Logistic);
+    let mut spec = FigureSpec::defaults("logistic");
     spec.title = "Figure 2: Logistic Regression";
     if fast {
         spec.datasets = vec!["rcv1-like"];

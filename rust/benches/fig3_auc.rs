@@ -6,11 +6,10 @@
 
 use dsba::algorithms::AlgorithmKind;
 use dsba::bench_harness::{summarize, write_results, FigureSpec};
-use dsba::config::ProblemKind;
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
-    let mut spec = FigureSpec::defaults(ProblemKind::Auc);
+    let mut spec = FigureSpec::defaults("auc");
     spec.title = "Figure 3: AUC maximization";
     spec.methods = vec![
         AlgorithmKind::Dsba,

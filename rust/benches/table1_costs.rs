@@ -28,11 +28,12 @@ fn passes_to_tol(
     let part = ds.partition_seeded(nodes, 2);
     let problem = RidgeProblem::new(part, lambda);
     let z_star = dsba::coordinator::solve_optimum(&problem, tol * 1e-3);
-    let mut exp = Experiment::new(problem, topo.clone(), kind)
-        .with_step_size(alpha)
-        .with_passes(max_passes)
-        .with_record_points(400)
-        .with_z_star(z_star);
+    let mut exp = Experiment::builder(problem, topo.clone(), kind)
+        .step_size(alpha)
+        .passes(max_passes)
+        .record_points(400)
+        .z_star(z_star)
+        .build();
     let trace = exp.run();
     trace.passes_to_tol(tol).unwrap_or(f64::NAN)
 }

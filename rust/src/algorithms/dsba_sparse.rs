@@ -19,6 +19,15 @@
 //! reconstruction advances every remote node by one step per round, in
 //! decreasing-distance order, using a 3-deep history ring per remote node.
 //!
+//! Problems with a separable l1 term ([`crate::operators::Problem::l1_weight`])
+//! stay delta-closed: the linear sum above reconstructs
+//! `X = (1 + alpha lambda) z + alpha l1 u` with `u` the subgradient the
+//! remote prox chose, and soft-thresholding `X / (1 + alpha lambda)` by
+//! `beta l1` is exactly the resolvent inverting that relation, so the
+//! replay recovers the remote iterate (up to the same floating-point
+//! reconstruction error as the smooth case) without communicating the
+//! (dense) subgradient.
+//!
 //! Relaying is now *literally* message passing: a node's
 //! [`NodeState::outgoing`] forwards the deltas received last round (plus
 //! its own fresh delta) to the neighbors for which it is the designated
@@ -163,6 +172,12 @@ impl DsbaSparseNode {
         let d_feat = p.feature_dim();
         let dim = p.dim();
         let scale = 1.0 / (1.0 + alpha * lam);
+        // proximal problems (Problem::l1_weight): the delta-closed sum
+        // reconstructs X = (1 + alpha lam) z + alpha l1 u with u the
+        // prox-chosen subgradient, and the soft-threshold is exactly the
+        // resolvent that inverts that relation — z = S_{beta l1}(X scale)
+        // — so the replay stays exact with no extra communication
+        let prox_t = alpha * scale * p.l1_weight();
         // write into the ring slot being retired (time target-3): it is
         // dead, and all reads below touch times target-1/target-2 of m or
         // other nodes' buffers, so no aliasing. Avoids an O(d) alloc per
@@ -181,7 +196,6 @@ impl DsbaSparseNode {
             new_row.copy_from_slice(self.replay[m].row(0)); // z^0
             d0.axpy(-alpha, &mut new_row, d_feat);
             crate::linalg::axpy(-alpha, &self.phibar0[m], &mut new_row);
-            crate::linalg::scale(&mut new_row, scale);
         } else {
             let tau = target - 1;
             // mixing over m's neighborhood at times (tau, tau-1)
@@ -216,7 +230,12 @@ impl DsbaSparseNode {
             if lam != 0.0 {
                 crate::linalg::axpy(alpha * lam, self.replay[m].row(tau), &mut new_row);
             }
-            crate::linalg::scale(&mut new_row, scale);
+        }
+        crate::linalg::scale(&mut new_row, scale);
+        if prox_t != 0.0 {
+            for v in new_row.iter_mut() {
+                *v = crate::solvers::soft_threshold(*v, prox_t);
+            }
         }
         *self.replay[m].advance_into(target) = new_row;
     }

@@ -126,34 +126,49 @@ pub enum AlgorithmKind {
     PointSaga,
 }
 
+/// The single alias table behind [`AlgorithmKind::parse`],
+/// [`AlgorithmKind::name`], [`AlgorithmKind::all`] and the CLI's method
+/// listing: `(kind, canonical display name, extra accepted spellings)`.
+/// The canonical name itself always parses (case-insensitively), so the
+/// `parse(name(k)) == Some(k)` round trip is structural.
+const ALGORITHM_TABLE: &[(AlgorithmKind, &str, &[&str])] = &[
+    (AlgorithmKind::Dsba, "DSBA", &[]),
+    (AlgorithmKind::DsbaSparse, "DSBA-s", &["dsba_sparse", "dsbas"]),
+    (AlgorithmKind::Dsa, "DSA", &[]),
+    (AlgorithmKind::Extra, "EXTRA", &[]),
+    (AlgorithmKind::PExtra, "P-EXTRA", &["pextra"]),
+    (AlgorithmKind::Dlm, "DLM", &[]),
+    (AlgorithmKind::Ssda, "SSDA", &[]),
+    (AlgorithmKind::Dgd, "DGD", &[]),
+    (AlgorithmKind::PointSaga, "Point-SAGA", &["pointsaga"]),
+];
+
 impl AlgorithmKind {
     pub fn parse(s: &str) -> Option<AlgorithmKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "dsba" => AlgorithmKind::Dsba,
-            "dsba-s" | "dsba_sparse" | "dsbas" => AlgorithmKind::DsbaSparse,
-            "dsa" => AlgorithmKind::Dsa,
-            "extra" => AlgorithmKind::Extra,
-            "p-extra" | "pextra" => AlgorithmKind::PExtra,
-            "dlm" => AlgorithmKind::Dlm,
-            "ssda" => AlgorithmKind::Ssda,
-            "dgd" => AlgorithmKind::Dgd,
-            "point-saga" | "pointsaga" => AlgorithmKind::PointSaga,
-            _ => return None,
-        })
+        ALGORITHM_TABLE
+            .iter()
+            .find(|(_, name, aliases)| {
+                name.eq_ignore_ascii_case(s)
+                    || aliases.iter().any(|a| a.eq_ignore_ascii_case(s))
+            })
+            .map(|&(k, _, _)| k)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            AlgorithmKind::Dsba => "DSBA",
-            AlgorithmKind::DsbaSparse => "DSBA-s",
-            AlgorithmKind::Dsa => "DSA",
-            AlgorithmKind::Extra => "EXTRA",
-            AlgorithmKind::PExtra => "P-EXTRA",
-            AlgorithmKind::Dlm => "DLM",
-            AlgorithmKind::Ssda => "SSDA",
-            AlgorithmKind::Dgd => "DGD",
-            AlgorithmKind::PointSaga => "Point-SAGA",
-        }
+        ALGORITHM_TABLE
+            .iter()
+            .find(|(k, _, _)| k == self)
+            .map(|&(_, name, _)| name)
+            .expect("every AlgorithmKind is in ALGORITHM_TABLE")
+    }
+
+    /// Extra accepted spellings beyond the canonical name.
+    pub fn aliases(&self) -> &'static [&'static str] {
+        ALGORITHM_TABLE
+            .iter()
+            .find(|(k, _, _)| k == self)
+            .map(|&(_, _, aliases)| aliases)
+            .expect("every AlgorithmKind is in ALGORITHM_TABLE")
     }
 
     /// Stochastic methods progress 1/q of a pass per round.
@@ -167,18 +182,23 @@ impl AlgorithmKind {
         )
     }
 
+    /// Methods whose component evaluations go through the resolvent
+    /// (`Problem::backward`): the only ones that handle a declared
+    /// separable l1 term ([`crate::operators::Problem::l1_weight`])
+    /// exactly — forward and inner-solver baselines optimize the smooth
+    /// part only.
+    pub fn is_proximal(&self) -> bool {
+        matches!(
+            self,
+            AlgorithmKind::Dsba | AlgorithmKind::DsbaSparse | AlgorithmKind::PointSaga
+        )
+    }
+
+    /// Every kind, derived from `ALGORITHM_TABLE` so the listing can
+    /// never drift from the parse/name source of truth.
     pub fn all() -> &'static [AlgorithmKind] {
-        &[
-            AlgorithmKind::Dsba,
-            AlgorithmKind::DsbaSparse,
-            AlgorithmKind::Dsa,
-            AlgorithmKind::Extra,
-            AlgorithmKind::PExtra,
-            AlgorithmKind::Dlm,
-            AlgorithmKind::Ssda,
-            AlgorithmKind::Dgd,
-            AlgorithmKind::PointSaga,
-        ]
+        static ALL: std::sync::OnceLock<Vec<AlgorithmKind>> = std::sync::OnceLock::new();
+        ALL.get_or_init(|| ALGORITHM_TABLE.iter().map(|&(k, _, _)| k).collect())
     }
 }
 

@@ -4,10 +4,11 @@
 //! `harness = false` binaries built on this module).
 
 use crate::algorithms::AlgorithmKind;
-use crate::config::{ExperimentConfig, ProblemKind};
+use crate::config::ExperimentConfig;
 use crate::coordinator::Trace;
 use crate::metrics::format_table;
-use crate::runtime::{EngineKind, TransportKind};
+use crate::operators::ProblemRegistry;
+use crate::runtime::EngineSpec;
 use crate::util::json::Json;
 
 /// Print a bench section header.
@@ -15,38 +16,22 @@ pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
 
-/// Step sizes per (problem, method): the paper tunes per-method; these
-/// are the tuned values for the synthetic profiles (see EXPERIMENTS.md).
-pub fn tuned_alpha(problem: ProblemKind, method: AlgorithmKind) -> f64 {
-    use AlgorithmKind::*;
-    match (problem, method) {
-        (ProblemKind::Ridge, Dsba | DsbaSparse) => 2.0,
-        (ProblemKind::Ridge, Dsa) => 0.3,
-        (ProblemKind::Ridge, Extra) => 0.45,
-        (ProblemKind::Ridge, PExtra) => 2.0,
-        (ProblemKind::Ridge, Dlm) => 0.0, // uses dlm_c / dlm_rho
-        (ProblemKind::Ridge, Ssda) => 0.9,
-        (ProblemKind::Ridge, Dgd) => 0.4,
-        (ProblemKind::Ridge, PointSaga) => 2.0,
-        (ProblemKind::Logistic, Dsba | DsbaSparse) => 2.0,
-        (ProblemKind::Logistic, Dsa) => 1.0,
-        (ProblemKind::Logistic, Extra) => 1.8,
-        (ProblemKind::Logistic, PExtra) => 4.0,
-        (ProblemKind::Logistic, Dlm) => 0.0,
-        (ProblemKind::Logistic, Ssda) => 0.9,
-        (ProblemKind::Logistic, Dgd) => 1.5,
-        (ProblemKind::Logistic, PointSaga) => 2.0,
-        (ProblemKind::Auc, Dsba | DsbaSparse) => 0.5,
-        (ProblemKind::Auc, Dsa) => 0.05,
-        (ProblemKind::Auc, Extra) => 0.05,
-        (ProblemKind::Auc, _) => 0.05,
-    }
+/// Tuned step size per (problem, method), resolved from the problem's
+/// registry entry (the paper tunes per method; entries carry the tuned
+/// values for the synthetic profiles — see EXPERIMENTS.md).  Unknown
+/// problem names fall back to a conservative 0.1.
+pub fn tuned_alpha(problem: &str, method: AlgorithmKind) -> f64 {
+    ProblemRegistry::builtin()
+        .resolve(problem)
+        .map(|e| (e.meta.tuned_alpha)(method))
+        .unwrap_or(0.1)
 }
 
 /// One figure run: a (dataset, method-list) grid at fixed passes.
 pub struct FigureSpec {
     pub title: &'static str,
-    pub problem: ProblemKind,
+    /// problem name or alias, resolved through the registry
+    pub problem: &'static str,
     pub datasets: Vec<&'static str>,
     pub methods: Vec<AlgorithmKind>,
     pub passes: f64,
@@ -54,19 +39,15 @@ pub struct FigureSpec {
     pub dim: usize,
     pub nodes: usize,
     pub seed: u64,
-    /// round driver for every run in the grid (engine parity means the
-    /// figures are identical either way; parallel is just faster)
-    pub engine: EngineKind,
-    /// parallel-engine worker threads (0 = auto)
-    pub threads: usize,
-    /// parallel-engine edge channels (transport parity means figures are
-    /// identical either way; tcp adds the measured socket overhead)
-    pub transport: TransportKind,
+    /// execution engine for every run in the grid (engine and transport
+    /// parity mean the figures are identical either way; parallel is
+    /// just faster, tcp adds the measured socket overhead)
+    pub engine: EngineSpec,
 }
 
 impl FigureSpec {
     /// CI-scale defaults shared by the three figures.
-    pub fn defaults(problem: ProblemKind) -> FigureSpec {
+    pub fn defaults(problem: &'static str) -> FigureSpec {
         FigureSpec {
             title: "",
             problem,
@@ -83,10 +64,17 @@ impl FigureSpec {
             dim: 2048,
             nodes: 10,
             seed: 42,
-            engine: EngineKind::Sequential,
-            threads: 0,
-            transport: TransportKind::Local,
+            engine: EngineSpec::default(),
         }
+    }
+
+    /// The configured problem is scored by the AUC statistic rather than
+    /// an objective (drives the summary direction).
+    pub fn auc_scored(&self) -> bool {
+        ProblemRegistry::builtin()
+            .resolve(self.problem)
+            .map(|e| !e.meta.has_objective)
+            .unwrap_or(false)
     }
 
     /// Run the full grid, printing each series and returning
@@ -98,8 +86,8 @@ impl FigureSpec {
             // share the optimum across methods on the same dataset
             let mut z_star: Option<Vec<f64>> = None;
             for &m in &self.methods {
-                let mut cfg = ExperimentConfig {
-                    problem: self.problem,
+                let cfg = ExperimentConfig {
+                    problem: self.problem.to_string(),
                     dataset: ds.to_string(),
                     samples: self.samples,
                     dim: self.dim,
@@ -109,14 +97,9 @@ impl FigureSpec {
                     passes: self.passes,
                     seed: self.seed,
                     record_points: 25,
-                    engine: self.engine,
-                    threads: self.threads,
-                    transport: self.transport,
+                    engine: self.engine.clone(),
                     ..Default::default()
                 };
-                if m == AlgorithmKind::Dlm {
-                    cfg.alpha = 0.0;
-                }
                 let mut exp = match cfg.build() {
                     Ok(e) => e,
                     Err(err) => {
@@ -124,13 +107,11 @@ impl FigureSpec {
                         continue;
                     }
                 };
-                exp = exp.with_params(|p| {
-                    p.dlm_c = 0.4;
-                    p.dlm_rho = 1.5;
-                    p.inner_tol = 1e-11;
-                });
+                exp.params.dlm_c = 0.4;
+                exp.params.dlm_rho = 1.5;
+                exp.params.inner_tol = 1e-11;
                 if let Some(z) = &z_star {
-                    exp = exp.with_z_star(z.clone());
+                    exp.z_star = Some(z.clone());
                 }
                 let trace = exp.run();
                 if z_star.is_none() {

@@ -2,18 +2,27 @@
 //! not in the vendor set.
 //!
 //! Subcommands:
-//!   run       --config <file.json> | inline flags     run one experiment
-//!   figure    <1|2|3>                                  regenerate a figure
-//!   info      --dataset <name> --nodes <n> ...         print problem stats
-//!   artifacts                                          check XLA artifacts
-//!   help
+//!
+//! ```text
+//! run       --config <file.json> | inline flags     run one experiment
+//! figure    <1|2|3>                                  regenerate a figure
+//! info      --dataset <name> --nodes <n> ...         problem/method/dataset info
+//! artifacts                                          check XLA artifacts
+//! help
+//! ```
+//!
+//! The problem and method listings in `help` and `info` are generated
+//! from [`ProblemRegistry`] and [`AlgorithmKind::all`], so the text
+//! cannot drift from what the binary actually accepts.
 
 use crate::algorithms::AlgorithmKind;
 use crate::bench_harness::FigureSpec;
-use crate::config::{ExperimentConfig, ProblemKind};
+use crate::config::ExperimentConfig;
 use crate::graph::TopologyKind;
 use crate::metrics::format_table;
+use crate::operators::{Problem, ProblemRegistry};
 use crate::runtime::{EngineKind, TransportKind};
+use crate::util::json;
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -39,13 +48,29 @@ fn dispatch(args: &[String]) -> i32 {
     }
 }
 
+/// Registry-derived list of accepted problem names.
+fn problem_list() -> String {
+    ProblemRegistry::builtin().names().join("|")
+}
+
+/// Table-derived list of accepted method names.
+fn method_list() -> String {
+    AlgorithmKind::all()
+        .iter()
+        .map(|k| k.name())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
 fn print_help() {
     println!(
         "dsba — decentralized stochastic backward aggregation (ICML 2018 reproduction)
 
 USAGE:
-  dsba run [--config FILE] [--problem ridge|logistic|auc] [--dataset NAME]
-           [--algorithm NAME] [--alpha X] [--passes X] [--nodes N]
+  dsba run [--config FILE] [--problem {problems}]
+           [--params JSON] [--dataset NAME]
+           [--algorithm {methods}]
+           [--alpha X] [--passes X] [--nodes N]
            [--topology KIND] [--samples N] [--dim N] [--seed N]
            [--engine sequential|parallel] [--threads N]
            [--transport local|tcp] [--listen ADDR] [--peers N=ADDR,..]
@@ -55,9 +80,11 @@ USAGE:
             --peers \"5=host:port,...\" splits one run across engine
             processes, each reporting metrics for its own nodes)
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
-  dsba info [--dataset NAME] [--nodes N]   dataset & graph statistics
+  dsba info [--dataset NAME] [--nodes N]   problem registry, methods, dataset stats
   dsba artifacts          verify the XLA artifact directory
-  dsba help"
+  dsba help",
+        problems = problem_list(),
+        methods = method_list(),
     );
 }
 
@@ -98,10 +125,19 @@ fn cmd_run(args: &[String]) -> i32 {
         ExperimentConfig::default()
     };
     if let Some(v) = f.get("problem") {
-        match ProblemKind::parse(v) {
-            Some(p) => cfg.problem = p,
+        match ProblemRegistry::builtin().canonical(v) {
+            Some(name) => cfg.problem = name.to_string(),
             None => {
-                eprintln!("bad --problem {v}");
+                eprintln!("bad --problem {v} (available: {})", problem_list());
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = f.get("params") {
+        match json::parse(v) {
+            Ok(p) => cfg.problem_params = p,
+            Err(e) => {
+                eprintln!("bad --params {v}: {e}");
                 return 2;
             }
         }
@@ -113,7 +149,7 @@ fn cmd_run(args: &[String]) -> i32 {
         match AlgorithmKind::parse(v) {
             Some(a) => cfg.algorithm = a,
             None => {
-                eprintln!("bad --algorithm {v}");
+                eprintln!("bad --algorithm {v} (available: {})", method_list());
                 return 2;
             }
         }
@@ -129,7 +165,7 @@ fn cmd_run(args: &[String]) -> i32 {
     }
     if let Some(v) = f.get("engine") {
         match EngineKind::parse(v) {
-            Some(e) => cfg.engine = e,
+            Some(e) => cfg.engine.kind = e,
             None => {
                 eprintln!("bad --engine {v} (sequential|parallel)");
                 return 2;
@@ -138,7 +174,7 @@ fn cmd_run(args: &[String]) -> i32 {
     }
     if let Some(v) = f.get("transport") {
         match TransportKind::parse(v) {
-            Some(t) => cfg.transport = t,
+            Some(t) => cfg.engine.transport = t,
             None => {
                 eprintln!("bad --transport {v} (local|tcp)");
                 return 2;
@@ -146,13 +182,13 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     }
     if let Some(v) = f.get("listen") {
-        cfg.listen = v.clone();
+        cfg.engine.tcp.listen = v.clone();
     }
     if let Some(v) = f.get("peers") {
-        cfg.peers = v.clone();
+        cfg.engine.tcp.peers = v.clone();
     }
     if let Some(v) = f.get("hosted") {
-        cfg.hosted = v.clone();
+        cfg.engine.tcp.hosted = v.clone();
     }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
@@ -174,7 +210,7 @@ fn cmd_run(args: &[String]) -> i32 {
     num!("dim", cfg.dim, usize);
     num!("seed", cfg.seed, u64);
     num!("lambda", cfg.lambda, f64);
-    num!("threads", cfg.threads, usize);
+    num!("threads", cfg.engine.threads, usize);
 
     println!("config: {}", cfg.to_json());
     let mut exp = match cfg.build() {
@@ -190,25 +226,32 @@ fn cmd_run(args: &[String]) -> i32 {
         exp.topo.diameter,
         exp.topo.max_degree()
     );
-    if cfg.engine == EngineKind::Parallel {
-        let t = if cfg.threads == 0 {
+    if cfg.engine.kind == EngineKind::Parallel {
+        let t = if cfg.engine.threads == 0 {
             crate::runtime::engine::auto_threads(cfg.nodes)
         } else {
-            cfg.threads
+            cfg.engine.threads
         };
         println!(
             "engine: parallel, {t} worker thread(s), {} transport",
-            cfg.transport.name()
+            cfg.engine.transport.name()
         );
-    } else if cfg.transport == TransportKind::Tcp {
+    } else if cfg.engine.transport == TransportKind::Tcp {
         eprintln!("note: --transport tcp only applies to --engine parallel; ignored");
     }
-    if cfg.transport == TransportKind::Local
-        && !(cfg.hosted.is_empty() && cfg.peers.is_empty() && cfg.listen.is_empty())
-    {
+    if cfg.engine.transport == TransportKind::Local && !cfg.engine.tcp.is_empty() {
         eprintln!(
             "note: --hosted/--peers/--listen only apply to --transport tcp; \
              ignored (this process will simulate ALL nodes in-process)"
+        );
+    }
+    if exp.problem.l1_weight() > 0.0 && !cfg.algorithm.is_proximal() {
+        eprintln!(
+            "note: {} is not a proximal (backward) method — the problem's l1 \
+             term is resolved only by DSBA/DSBA-s/Point-SAGA; this run \
+             optimizes the smooth part and is scored against the l1-aware \
+             optimum",
+            cfg.algorithm.name()
         );
     }
     let trace = match exp.try_run() {
@@ -230,11 +273,11 @@ fn cmd_run(args: &[String]) -> i32 {
 fn cmd_figure(args: &[String]) -> i32 {
     let which = args.first().map(String::as_str).unwrap_or("1");
     let (title, problem, methods) = match which {
-        "1" => ("Figure 1: Ridge Regression", ProblemKind::Ridge, None),
-        "2" => ("Figure 2: Logistic Regression", ProblemKind::Logistic, None),
+        "1" => ("Figure 1: Ridge Regression", "ridge", None),
+        "2" => ("Figure 2: Logistic Regression", "logistic", None),
         "3" => (
             "Figure 3: AUC maximization",
-            ProblemKind::Auc,
+            "auc",
             Some(vec![AlgorithmKind::Dsba, AlgorithmKind::Dsa, AlgorithmKind::Extra]),
         ),
         _ => {
@@ -248,12 +291,33 @@ fn cmd_figure(args: &[String]) -> i32 {
         spec.methods = m;
     }
     let runs = spec.run();
-    crate::bench_harness::summarize(&runs, problem == ProblemKind::Auc);
+    crate::bench_harness::summarize(&runs, spec.auc_scored());
     0
 }
 
 fn cmd_info(args: &[String]) -> i32 {
     let f = flags(args);
+
+    // problem registry and method table first: `info` is the live
+    // answer to "what can this binary run?"
+    println!("registered problems:");
+    print!("{}", ProblemRegistry::builtin().describe());
+    println!("\nmethods:");
+    for k in AlgorithmKind::all() {
+        let aliases = k.aliases();
+        println!(
+            "  {:<11} {}{}",
+            k.name(),
+            if k.is_stochastic() { "stochastic" } else { "deterministic" },
+            if aliases.is_empty() {
+                String::new()
+            } else {
+                format!("  (aliases: {})", aliases.join(", "))
+            }
+        );
+    }
+    println!();
+
     let mut cfg = ExperimentConfig::default();
     if let Some(v) = f.get("dataset") {
         cfg.dataset = v.clone();
@@ -350,5 +414,24 @@ mod tests {
     #[test]
     fn help_succeeds() {
         assert_eq!(dispatch(&["help".to_string()]), 0);
+    }
+
+    #[test]
+    fn info_enumerates_registries() {
+        // `info` must succeed with no flags, enumerating problems and
+        // methods straight from the registries
+        assert_eq!(dispatch(&["info".to_string()]), 0);
+    }
+
+    #[test]
+    fn listings_cover_every_registration() {
+        let problems = problem_list();
+        for name in ProblemRegistry::builtin().names() {
+            assert!(problems.contains(name), "{name} missing from help text");
+        }
+        let methods = method_list();
+        for k in AlgorithmKind::all() {
+            assert!(methods.contains(k.name()), "{} missing from help text", k.name());
+        }
     }
 }

@@ -1,48 +1,28 @@
 //! Experiment configuration: JSON-serializable description of a full run
-//! (dataset profile, topology, problem, method, hyper-parameters) plus
-//! presets for every figure of the paper.
+//! (dataset profile, topology, problem, method, hyper-parameters).
+//!
+//! Problems are resolved by name through
+//! [`crate::operators::ProblemRegistry`] — the config layer holds no
+//! problem list of its own, so registering a new workload automatically
+//! makes it reachable from JSON configs and every CLI flag.
 
 use crate::algorithms::AlgorithmKind;
 use crate::comm::CommCostModel;
 use crate::coordinator::Experiment;
 use crate::data::{load_libsvm, Dataset, SyntheticSpec};
 use crate::graph::{Topology, TopologyKind};
-use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
-use crate::runtime::{EngineKind, TransportKind};
+use crate::operators::{ProblemEntry, ProblemRegistry, ProblemSpec};
+use crate::runtime::{EngineKind, EngineSpec, TransportKind};
 use crate::util::json::{parse, Json};
-use std::sync::Arc;
-
-/// Which learning problem of §7 to instantiate.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ProblemKind {
-    Ridge,
-    Logistic,
-    Auc,
-}
-
-impl ProblemKind {
-    pub fn parse(s: &str) -> Option<ProblemKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "ridge" => ProblemKind::Ridge,
-            "logistic" => ProblemKind::Logistic,
-            "auc" => ProblemKind::Auc,
-            _ => return None,
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            ProblemKind::Ridge => "ridge",
-            ProblemKind::Logistic => "logistic",
-            ProblemKind::Auc => "auc",
-        }
-    }
-}
 
 /// Full experiment description.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
-    pub problem: ProblemKind,
+    /// problem name or alias, resolved through the registry
+    pub problem: String,
+    /// problem-specific knobs forwarded verbatim to the registry
+    /// constructor (e.g. `{"l1": 0.01}`); `Json::Null` = all defaults
+    pub problem_params: Json,
     /// synthetic profile name (news20/rcv1/sector/tiny) or libsvm: path
     pub dataset: String,
     /// override sample count (0 = profile default)
@@ -62,24 +42,15 @@ pub struct ExperimentConfig {
     pub record_points: usize,
     /// count sparse index/value pairs as 2 doubles (default) or 1
     pub charitable_sparse: bool,
-    /// round driver: sequential reference oracle or parallel engine
-    pub engine: EngineKind,
-    /// parallel-engine worker threads (0 = auto: cores capped by nodes)
-    pub threads: usize,
-    /// parallel-engine edge channels: in-process mpsc or per-edge TCP
-    pub transport: TransportKind,
-    /// TCP listen address ("" = ephemeral loopback port)
-    pub listen: String,
-    /// TCP peers spec: comma-separated `node=host:port` for remote nodes
-    pub peers: String,
-    /// TCP hosted-node spec ("" = host all nodes in this process)
-    pub hosted: String,
+    /// execution engine: round driver, threads, transport, endpoints
+    pub engine: EngineSpec,
 }
 
 impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
-            problem: ProblemKind::Ridge,
+            problem: "ridge".into(),
+            problem_params: Json::Null,
             dataset: "rcv1-like".into(),
             samples: 0,
             dim: 0,
@@ -93,23 +64,42 @@ impl Default for ExperimentConfig {
             seed: 42,
             record_points: 40,
             charitable_sparse: false,
-            engine: EngineKind::Sequential,
-            threads: 0,
-            transport: TransportKind::Local,
-            listen: String::new(),
-            peers: String::new(),
-            hosted: String::new(),
+            engine: EngineSpec::default(),
         }
     }
 }
 
 impl ExperimentConfig {
+    /// Registry entry for the configured problem (resolves aliases).
+    pub fn problem_entry(&self) -> Result<&'static ProblemEntry, String> {
+        ProblemRegistry::builtin().resolve(&self.problem).ok_or_else(|| {
+            format!(
+                "unknown problem {:?} (available: {})",
+                self.problem,
+                ProblemRegistry::builtin().names().join(", ")
+            )
+        })
+    }
+
     /// Parse from a JSON document (missing keys keep defaults).
+    ///
+    /// The engine accepts both the nested object form written by
+    /// [`ExperimentConfig::to_json`] and the legacy flat keys
+    /// (`"engine"` as a bare string plus top-level `threads` /
+    /// `transport` / `listen` / `peers` / `hosted`).
     pub fn from_json(src: &str) -> Result<ExperimentConfig, String> {
         let v = parse(src)?;
         let mut c = ExperimentConfig::default();
         if let Some(s) = v.get("problem").and_then(Json::as_str) {
-            c.problem = ProblemKind::parse(s).ok_or(format!("bad problem {s}"))?;
+            // resolve eagerly so bad names fail at parse time, and store
+            // the canonical spelling so serialization round-trips
+            c.problem = ProblemRegistry::builtin()
+                .canonical(s)
+                .ok_or(format!("bad problem {s}"))?
+                .to_string();
+        }
+        if let Some(p) = v.get("params") {
+            c.problem_params = p.clone();
         }
         if let Some(s) = v.get("dataset").and_then(Json::as_str) {
             c.dataset = s.to_string();
@@ -151,30 +141,36 @@ impl ExperimentConfig {
         if let Some(b) = v.get("charitable_sparse").and_then(|j| j.as_bool()) {
             c.charitable_sparse = b;
         }
-        if let Some(s) = v.get("engine").and_then(Json::as_str) {
-            c.engine = EngineKind::parse(s).ok_or(format!("bad engine {s}"))?;
+        if let Some(e) = v.get("engine") {
+            c.engine = EngineSpec::from_json(e)?;
         }
+        // legacy flat engine keys (pre-EngineSpec config files)
         if let Some(n) = v.get("threads").and_then(Json::as_usize) {
-            c.threads = n;
+            c.engine.threads = n;
         }
         if let Some(s) = v.get("transport").and_then(Json::as_str) {
-            c.transport = TransportKind::parse(s).ok_or(format!("bad transport {s}"))?;
+            c.engine.transport =
+                TransportKind::parse(s).ok_or(format!("bad transport {s}"))?;
         }
         if let Some(s) = v.get("listen").and_then(Json::as_str) {
-            c.listen = s.to_string();
+            c.engine.tcp.listen = s.to_string();
         }
         if let Some(s) = v.get("peers").and_then(Json::as_str) {
-            c.peers = s.to_string();
+            c.engine.tcp.peers = s.to_string();
         }
         if let Some(s) = v.get("hosted").and_then(Json::as_str) {
-            c.hosted = s.to_string();
+            c.engine.tcp.hosted = s.to_string();
         }
         Ok(c)
     }
 
+    /// Serialize every field; `from_json(to_json(c)) == c` is pinned by
+    /// a property test so a field added on one side cannot be silently
+    /// dropped by the other.
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
-            ("problem", Json::Str(self.problem.name().into())),
+            ("problem", Json::Str(self.problem.clone())),
+            ("params", self.problem_params.clone()),
             ("dataset", Json::Str(self.dataset.clone())),
             ("samples", Json::Num(self.samples as f64)),
             ("dim", Json::Num(self.dim as f64)),
@@ -188,17 +184,13 @@ impl ExperimentConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("record_points", Json::Num(self.record_points as f64)),
             ("charitable_sparse", Json::Bool(self.charitable_sparse)),
-            ("engine", Json::Str(self.engine.name().into())),
-            ("threads", Json::Num(self.threads as f64)),
-            ("transport", Json::Str(self.transport.name().into())),
-            ("listen", Json::Str(self.listen.clone())),
-            ("peers", Json::Str(self.peers.clone())),
-            ("hosted", Json::Str(self.hosted.clone())),
+            ("engine", self.engine.to_json()),
         ])
     }
 
     /// Materialize the dataset (synthetic profile or `libsvm:<path>`).
     pub fn build_dataset(&self) -> Result<Dataset, String> {
+        let entry = self.problem_entry()?;
         let mut ds = if let Some(path) = self.dataset.strip_prefix("libsvm:") {
             let mut d = load_libsvm(path, self.dim)?;
             d.normalize_rows();
@@ -212,7 +204,7 @@ impl ExperimentConfig {
             if self.dim > 0 {
                 spec = spec.with_dim(self.dim);
             }
-            if self.problem == ProblemKind::Ridge {
+            if entry.meta.regression_targets {
                 spec = spec.with_regression(true);
             }
             spec.generate(self.seed ^ 0xda7a)
@@ -233,8 +225,10 @@ impl ExperimentConfig {
         }
     }
 
-    /// Build problem + topology + experiment.
+    /// Build problem + topology + experiment, resolving the problem
+    /// through the registry.
     pub fn build(&self) -> Result<Experiment, String> {
+        let entry = self.problem_entry()?;
         let ds = self.build_dataset()?;
         let part = ds.partition_seeded(self.nodes, self.seed ^ 0x9a47);
         let lam = self.effective_lambda(part.total_samples());
@@ -244,39 +238,43 @@ impl ExperimentConfig {
         // clean error path, so only genuine socket failures can surface
         // later inside `run()` — the sequential oracle ignores the
         // transport entirely, so don't gate it on these specs
-        if self.engine == EngineKind::Parallel && self.transport == TransportKind::Tcp {
-            crate::runtime::transport::validate_tcp_spec(&topo, &self.hosted, &self.peers)?;
+        if self.engine.kind == EngineKind::Parallel
+            && self.engine.transport == TransportKind::Tcp
+        {
+            crate::runtime::transport::validate_tcp_spec(
+                &topo,
+                &self.engine.tcp.hosted,
+                &self.engine.tcp.peers,
+            )?;
         }
-        let problem: Arc<dyn Problem> = match self.problem {
-            ProblemKind::Ridge => Arc::new(RidgeProblem::new(part, lam)),
-            ProblemKind::Logistic => Arc::new(LogisticProblem::new(part, lam)),
-            ProblemKind::Auc => Arc::new(AucProblem::new(part, lam)),
-        };
+        let spec = ProblemSpec::new(entry.meta.name, lam)
+            .with_params(self.problem_params.clone());
+        let problem = entry.build(&spec, &ds, part)?;
         let cost = if self.charitable_sparse {
             CommCostModel::values_only()
         } else {
             CommCostModel::default()
         };
-        Ok(Experiment::from_arc(problem, topo, self.algorithm)
-            .with_step_size(self.alpha)
-            .with_passes(self.passes)
-            .with_seed(self.seed)
-            .with_record_points(self.record_points)
-            .with_cost_model(cost)
-            .with_engine(self.engine, self.threads)
-            .with_transport(self.transport)
-            .with_tcp_endpoints(&self.listen, &self.peers, &self.hosted))
+        Ok(Experiment::builder_from_arc(problem, topo, self.algorithm)
+            .step_size(self.alpha)
+            .passes(self.passes)
+            .seed(self.seed)
+            .record_points(self.record_points)
+            .cost_model(cost)
+            .engine(self.engine.clone())
+            .build())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::TcpSpec;
 
     #[test]
     fn json_roundtrip() {
         let c = ExperimentConfig {
-            problem: ProblemKind::Auc,
+            problem: "auc".into(),
             dataset: "tiny".into(),
             alpha: 0.25,
             nodes: 4,
@@ -284,9 +282,13 @@ mod tests {
         };
         let j = c.to_json().to_string();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
-        assert_eq!(c2.problem, ProblemKind::Auc);
-        assert_eq!(c2.alpha, 0.25);
-        assert_eq!(c2.nodes, 4);
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn problem_aliases_canonicalize_at_parse_time() {
+        let c = ExperimentConfig::from_json("{\"problem\":\"LogReg\"}").unwrap();
+        assert_eq!(c.problem, "logistic");
     }
 
     #[test]
@@ -316,43 +318,76 @@ mod tests {
         assert!(ExperimentConfig::from_json("{\"algorithm\":\"nope\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"engine\":\"warp\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"transport\":\"pigeon\"}").is_err());
+        assert!(
+            ExperimentConfig::from_json("{\"engine\":{\"transport\":\"pigeon\"}}").is_err()
+        );
         assert!(ExperimentConfig::from_json("not json").is_err());
         // malformed TCP specs fail at build(), not as a panic inside run()
         let base = ExperimentConfig {
             dataset: "tiny".into(),
             nodes: 4,
-            engine: EngineKind::Parallel,
-            transport: TransportKind::Tcp,
+            engine: EngineSpec::parallel(0).with_transport(TransportKind::Tcp),
             ..Default::default()
         };
-        let bad_hosted =
-            ExperimentConfig { hosted: "0-4000000000".into(), ..base.clone() };
+        let bad_hosted = ExperimentConfig {
+            engine: base.engine.clone().with_tcp(TcpSpec {
+                hosted: "0-4000000000".into(),
+                ..TcpSpec::default()
+            }),
+            ..base.clone()
+        };
         assert!(bad_hosted.build().is_err());
-        let bad_peers = ExperimentConfig { peers: "5=".into(), ..base.clone() };
+        let bad_peers = ExperimentConfig {
+            engine: base.engine.clone().with_tcp(TcpSpec {
+                peers: "5=".into(),
+                ..TcpSpec::default()
+            }),
+            ..base.clone()
+        };
         assert!(bad_peers.build().is_err());
         // hosting a subset without addresses for the remote neighbors
         // must also fail at build(), not panic during run()
-        let missing_peers = ExperimentConfig { hosted: "0-1".into(), ..base };
+        let missing_peers = ExperimentConfig {
+            engine: base.engine.clone().with_tcp(TcpSpec {
+                hosted: "0-1".into(),
+                ..TcpSpec::default()
+            }),
+            ..base
+        };
         assert!(missing_peers.build().is_err());
     }
 
     #[test]
     fn engine_fields_roundtrip() {
         let c = ExperimentConfig {
-            engine: EngineKind::Parallel,
-            threads: 3,
-            transport: TransportKind::Tcp,
-            listen: "127.0.0.1:9100".into(),
-            peers: "5=10.0.0.2:9100".into(),
-            hosted: "0-4".into(),
+            engine: EngineSpec {
+                kind: EngineKind::Parallel,
+                threads: 3,
+                transport: TransportKind::Tcp,
+                tcp: TcpSpec {
+                    listen: "127.0.0.1:9100".into(),
+                    peers: "5=10.0.0.2:9100".into(),
+                    hosted: "0-4".into(),
+                },
+            },
             ..Default::default()
         };
         let c2 = ExperimentConfig::from_json(&c.to_json().to_string()).unwrap();
-        assert_eq!(c2.engine, EngineKind::Parallel);
-        assert_eq!(c2.threads, 3);
-        assert_eq!(c2.transport, TransportKind::Tcp);
-        assert_eq!(c2.listen, "127.0.0.1:9100");
-        assert_eq!(c2.peers, "5=10.0.0.2:9100");
-        assert_eq!(c2.hosted, "0-4");
+        assert_eq!(c2.engine, c.engine);
+    }
+
+    #[test]
+    fn legacy_flat_engine_keys_accepted() {
+        let c = ExperimentConfig::from_json(
+            "{\"engine\":\"parallel\",\"threads\":3,\"transport\":\"tcp\",\
+             \"listen\":\"127.0.0.1:9100\",\"peers\":\"5=h:1\",\"hosted\":\"0-4\"}",
+        )
+        .unwrap();
+        assert_eq!(c.engine.kind, EngineKind::Parallel);
+        assert_eq!(c.engine.threads, 3);
+        assert_eq!(c.engine.transport, TransportKind::Tcp);
+        assert_eq!(c.engine.tcp.listen, "127.0.0.1:9100");
+        assert_eq!(c.engine.tcp.peers, "5=h:1");
+        assert_eq!(c.engine.tcp.hosted, "0-4");
     }
 }

@@ -14,11 +14,12 @@ use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{auc_score, suboptimality, MetricsRow};
 use crate::operators::Problem;
 use crate::runtime::transport::tcp_from_spec;
-use crate::runtime::{EngineKind, ParallelEngine, TransportKind};
+use crate::runtime::{EngineKind, EngineSpec, ParallelEngine, TcpSpec, TransportKind};
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
 /// A full experiment run: one (problem, topology, algorithm) triple.
+/// Constructed through [`ExperimentBuilder`] (`Experiment::builder`).
 pub struct Experiment {
     pub problem: Arc<dyn Problem>,
     pub topo: Topology,
@@ -34,109 +35,82 @@ pub struct Experiment {
     pub z_star: Option<Vec<f64>>,
     /// hard cap on rounds (safety)
     pub max_rounds: usize,
-    /// which driver runs the rounds (sequential oracle or parallel engine)
-    pub engine: EngineKind,
-    /// worker threads for the parallel engine (0 = auto)
-    pub threads: usize,
-    /// edge-channel backend for the parallel engine (ignored by the
-    /// sequential oracle)
-    pub transport: TransportKind,
-    /// TCP listen address ("" = ephemeral loopback port)
-    pub tcp_listen: String,
-    /// TCP peers spec, comma-separated `node=host:port`
-    pub tcp_peers: String,
-    /// TCP hosted-node spec ("" = host all nodes)
-    pub tcp_hosted: String,
+    /// execution engine: round driver, threads, transport, endpoints
+    pub engine: EngineSpec,
 }
 
-impl Experiment {
-    pub fn new<P: Problem + 'static>(
-        problem: P,
-        topo: Topology,
-        kind: AlgorithmKind,
-    ) -> Experiment {
-        Self::from_arc(Arc::new(problem), topo, kind)
-    }
+/// Builder for [`Experiment`]: the only construction path, so every
+/// layer (config JSON, CLI flags, benches, tests) assembles runs with
+/// the same typed vocabulary — engine and transport options travel as
+/// one [`EngineSpec`] instead of loose strings.
+pub struct ExperimentBuilder {
+    exp: Experiment,
+}
 
-    pub fn from_arc(
-        problem: Arc<dyn Problem>,
-        topo: Topology,
-        kind: AlgorithmKind,
-    ) -> Experiment {
-        assert_eq!(problem.nodes(), topo.n, "partition/topology node mismatch");
-        let mix = MixingMatrix::laplacian(&topo, 1.0);
-        let params = AlgoParams::new(0.5, problem.dim(), 0xa15e);
-        Experiment {
-            problem,
-            topo,
-            mix,
-            kind,
-            params,
-            cost_model: CommCostModel::default(),
-            passes_target: 20.0,
-            record_points: 40,
-            z_star: None,
-            max_rounds: usize::MAX,
-            engine: EngineKind::Sequential,
-            threads: 0,
-            transport: TransportKind::Local,
-            tcp_listen: String::new(),
-            tcp_peers: String::new(),
-            tcp_hosted: String::new(),
-        }
-    }
-
-    pub fn with_step_size(mut self, alpha: f64) -> Self {
-        self.params.alpha = alpha;
+impl ExperimentBuilder {
+    pub fn step_size(mut self, alpha: f64) -> Self {
+        self.exp.params.alpha = alpha;
         self
     }
 
-    pub fn with_passes(mut self, p: f64) -> Self {
-        self.passes_target = p;
+    pub fn passes(mut self, p: f64) -> Self {
+        self.exp.passes_target = p;
         self
     }
 
-    pub fn with_seed(mut self, seed: u64) -> Self {
-        self.params.seed = seed;
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.exp.params.seed = seed;
         self
     }
 
-    pub fn with_cost_model(mut self, c: CommCostModel) -> Self {
-        self.cost_model = c;
+    pub fn cost_model(mut self, c: CommCostModel) -> Self {
+        self.exp.cost_model = c;
         self
     }
 
-    pub fn with_z_star(mut self, z: Vec<f64>) -> Self {
-        self.z_star = Some(z);
+    /// Supply a pre-solved reference optimum (skips the lazy pre-solve).
+    pub fn z_star(mut self, z: Vec<f64>) -> Self {
+        self.exp.z_star = Some(z);
         self
     }
 
-    pub fn with_record_points(mut self, n: usize) -> Self {
-        self.record_points = n;
+    pub fn record_points(mut self, n: usize) -> Self {
+        self.exp.record_points = n;
         self
     }
 
-    pub fn with_mixing(mut self, mix: MixingMatrix) -> Self {
-        self.mix = mix;
+    pub fn max_rounds(mut self, n: usize) -> Self {
+        self.exp.max_rounds = n;
         self
     }
 
-    pub fn with_params<F: FnOnce(&mut AlgoParams)>(mut self, f: F) -> Self {
-        f(&mut self.params);
+    pub fn mixing(mut self, mix: MixingMatrix) -> Self {
+        self.exp.mix = mix;
         self
     }
 
-    /// Select the execution engine (and worker count for the parallel
-    /// one; `threads = 0` = all available cores, capped by node count).
-    pub fn with_engine(mut self, engine: EngineKind, threads: usize) -> Self {
-        self.engine = engine;
-        self.threads = threads;
+    pub fn params<F: FnOnce(&mut AlgoParams)>(mut self, f: F) -> Self {
+        f(&mut self.exp.params);
+        self
+    }
+
+    /// Full engine configuration in one value.
+    pub fn engine(mut self, spec: EngineSpec) -> Self {
+        self.exp.engine = spec;
+        self
+    }
+
+    /// Select the round driver (and worker count for the parallel one;
+    /// `threads = 0` = all available cores, capped by node count).
+    pub fn engine_kind(mut self, kind: EngineKind, threads: usize) -> Self {
+        self.exp.engine.kind = kind;
+        self.exp.engine.threads = threads;
         self
     }
 
     /// Select the parallel engine's edge-channel backend.
-    pub fn with_transport(mut self, transport: TransportKind) -> Self {
-        self.transport = transport;
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.exp.engine.transport = transport;
         self
     }
 
@@ -145,11 +119,48 @@ impl Experiment {
     /// and hosted-node spec ("" = host everything — the single-process
     /// loopback mode). A partial `hosted` splits the run across engine
     /// processes; this process then reports metrics for its share only.
-    pub fn with_tcp_endpoints(mut self, listen: &str, peers: &str, hosted: &str) -> Self {
-        self.tcp_listen = listen.to_string();
-        self.tcp_peers = peers.to_string();
-        self.tcp_hosted = hosted.to_string();
+    pub fn tcp(mut self, tcp: TcpSpec) -> Self {
+        self.exp.engine.tcp = tcp;
         self
+    }
+
+    pub fn build(self) -> Experiment {
+        self.exp
+    }
+}
+
+impl Experiment {
+    pub fn builder<P: Problem + 'static>(
+        problem: P,
+        topo: Topology,
+        kind: AlgorithmKind,
+    ) -> ExperimentBuilder {
+        Self::builder_from_arc(Arc::new(problem), topo, kind)
+    }
+
+    pub fn builder_from_arc(
+        problem: Arc<dyn Problem>,
+        topo: Topology,
+        kind: AlgorithmKind,
+    ) -> ExperimentBuilder {
+        assert_eq!(problem.nodes(), topo.n, "partition/topology node mismatch");
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(0.5, problem.dim(), 0xa15e);
+        ExperimentBuilder {
+            exp: Experiment {
+                problem,
+                topo,
+                mix,
+                kind,
+                params,
+                cost_model: CommCostModel::default(),
+                passes_target: 20.0,
+                record_points: 40,
+                z_star: None,
+                max_rounds: usize::MAX,
+                engine: EngineSpec::default(),
+            },
+        }
     }
 
     /// Pre-solve the reference optimum if not supplied.
@@ -186,7 +197,7 @@ impl Experiment {
         // set when a TCP transport hosts only part of the node set: the
         // remote rows never move, so metrics must cover our share only
         let mut hosted_rows: Option<Vec<usize>> = None;
-        let mut alg: Box<dyn Algorithm> = match self.engine {
+        let mut alg: Box<dyn Algorithm> = match self.engine.kind {
             EngineKind::Sequential => algorithms::build(
                 self.kind,
                 self.problem.clone(),
@@ -194,22 +205,22 @@ impl Experiment {
                 &self.topo,
                 &self.params,
             ),
-            EngineKind::Parallel => match self.transport {
+            EngineKind::Parallel => match self.engine.transport {
                 TransportKind::Local => Box::new(ParallelEngine::new(
                     self.kind,
                     self.problem.clone(),
                     &self.mix,
                     &self.topo,
                     &self.params,
-                    self.threads,
+                    self.engine.threads,
                 )),
                 TransportKind::Tcp => {
                     let transport = tcp_from_spec(
                         &self.topo,
                         self.params.seed,
-                        &self.tcp_hosted,
-                        &self.tcp_listen,
-                        &self.tcp_peers,
+                        &self.engine.tcp.hosted,
+                        &self.engine.tcp.listen,
+                        &self.engine.tcp.peers,
                     )
                     .map_err(|e| format!("tcp transport setup failed: {e}"))?;
                     let eng = ParallelEngine::new_with_transport(
@@ -218,7 +229,7 @@ impl Experiment {
                         &self.mix,
                         &self.topo,
                         &self.params,
-                        self.threads,
+                        self.engine.threads,
                         Box::new(transport),
                     );
                     if eng.hosted().len() < self.topo.n {
@@ -271,7 +282,7 @@ impl Experiment {
             None => all,
         };
         let avg = average_iterate(zs);
-        let is_auc = self.problem.tail_dims() == 3;
+        let is_auc = self.problem.auc_metric();
         MetricsRow {
             iter: alg.iteration(),
             passes: alg.passes(),
@@ -352,10 +363,11 @@ mod tests {
         let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
         let part = ds.partition_seeded(4, 3);
         let topo = Topology::erdos_renyi(4, 0.6, 5);
-        let mut exp = Experiment::new(RidgeProblem::new(part, 0.05), topo, AlgorithmKind::Dsba)
-            .with_step_size(0.5)
-            .with_passes(40.0)
-            .with_record_points(10);
+        let mut exp = Experiment::builder(RidgeProblem::new(part, 0.05), topo, AlgorithmKind::Dsba)
+            .step_size(0.5)
+            .passes(40.0)
+            .record_points(10)
+            .build();
         let trace = exp.run();
         assert!(trace.rows.len() >= 10);
         assert!(
@@ -382,12 +394,13 @@ mod tests {
         let run = |engine: EngineKind| {
             let part = ds.partition_seeded(4, 3);
             let mut exp =
-                Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
-                    .with_step_size(0.5)
-                    .with_passes(8.0)
-                    .with_record_points(8)
-                    .with_z_star(z_star.clone())
-                    .with_engine(engine, 2);
+                Experiment::builder(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+                    .step_size(0.5)
+                    .passes(8.0)
+                    .record_points(8)
+                    .z_star(z_star.clone())
+                    .engine_kind(engine, 2)
+                    .build();
             exp.run()
         };
         let seq = run(EngineKind::Sequential);
@@ -412,13 +425,14 @@ mod tests {
         let run = |engine: EngineKind, transport: TransportKind| {
             let part = ds.partition_seeded(4, 3);
             let mut exp =
-                Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
-                    .with_step_size(0.5)
-                    .with_passes(6.0)
-                    .with_record_points(6)
-                    .with_z_star(z_star.clone())
-                    .with_engine(engine, 2)
-                    .with_transport(transport);
+                Experiment::builder(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+                    .step_size(0.5)
+                    .passes(6.0)
+                    .record_points(6)
+                    .z_star(z_star.clone())
+                    .engine_kind(engine, 2)
+                    .transport(transport)
+                    .build();
             exp.run()
         };
         let seq = run(EngineKind::Sequential, TransportKind::Local);
@@ -437,16 +451,18 @@ mod tests {
         let part = ds.partition_seeded(2, 3);
         let q = part.q;
         let topo = Topology::complete(2);
-        let exp = Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
-            .with_passes(3.0);
+        let exp = Experiment::builder(RidgeProblem::new(part, 0.05), topo.clone(), AlgorithmKind::Dsba)
+            .passes(3.0)
+            .build();
         assert_eq!(exp.rounds_for_target(), 3 * q);
         let ds2 = SyntheticSpec::tiny().generate(62);
-        let exp2 = Experiment::new(
+        let exp2 = Experiment::builder(
             RidgeProblem::new(ds2.partition_seeded(2, 3), 0.05),
             topo,
             AlgorithmKind::Extra,
         )
-        .with_passes(3.0);
+        .passes(3.0)
+        .build();
         assert_eq!(exp2.rounds_for_target(), 3);
     }
 }

@@ -9,43 +9,22 @@
 
 use crate::algorithms::{AlgoParams, PointSaga};
 use crate::data::Partition;
-use crate::operators::{AucProblem, LogisticProblem, Problem, RidgeProblem};
+use crate::operators::{l1_kkt_residual, Problem};
+use crate::solvers::soft_threshold;
 use std::sync::Arc;
 
-/// Build the pooled single-node twin of a problem. The global root is
-/// unchanged: `sum_n (B_n + lambda I)(z) = 0` iff
-/// `(B_pooled + lambda I)(z) = 0`.
+/// Build the pooled single-node twin of a problem via
+/// [`Problem::rebuild`] (same hyper-parameters, pooled partition). The
+/// global root is unchanged: `sum_n (B_n + lambda I)(z) = 0` iff
+/// `(B_pooled + lambda I)(z) = 0`, and a per-component l1 term carries
+/// over with the same weight (component means preserve it).
 fn pooled_twin(p: &dyn Problem) -> Arc<dyn Problem> {
     let pooled = p.partition().pooled();
-    let part = Partition::equal_random(&pooled, 1, 0);
-    let lam = p.lambda();
-    if p.tail_dims() == 3 {
-        Arc::new(AucProblem::new(part, lam))
-    } else if p.coef_width() == 1 && is_ridge_like(p) {
-        Arc::new(RidgeProblem::new(part, lam))
-    } else {
-        Arc::new(LogisticProblem::new(part, lam))
-    }
+    p.rebuild(Partition::equal_random(&pooled, 1, 0))
 }
 
-/// Distinguish ridge from logistic through the operator itself: ridge
-/// coefficients are affine in z with slope ||a||^2 along a; logistic
-/// saturates. Probe one component.
-fn is_ridge_like(p: &dyn Problem) -> bool {
-    let dim = p.dim();
-    let z0 = vec![0.0; dim];
-    let mut big = vec![0.0; dim];
-    // push far along the first data row; logistic coef is bounded by 1
-    let row = p.partition().shards[0].row_sparse(0);
-    row.axpy_into(1e6, &mut big);
-    let mut c0 = vec![0.0; p.coef_width()];
-    let mut c1 = vec![0.0; p.coef_width()];
-    p.coefs(0, 0, &z0, &mut c0);
-    p.coefs(0, 0, &big, &mut c1);
-    (c1[0] - c0[0]).abs() > 10.0
-}
-
-/// Solve the root-finding problem to `||sum B^lambda(z)|| <= tol`.
+/// Solve the root-finding problem to `global_residual(z) <= tol` (the
+/// KKT inclusion residual for problems with an l1 term).
 pub fn solve_optimum(p: &dyn Problem, tol: f64) -> Vec<f64> {
     let twin = pooled_twin(p);
     let (l, mu) = twin.l_mu();
@@ -61,17 +40,27 @@ pub fn solve_optimum(p: &dyn Problem, tol: f64) -> Vec<f64> {
     let inner_tol = tol / n_factor.max(1.0) * 0.5;
     let (mut z, _) = solver.solve_to_residual(inner_tol, 4 * q_total, 3000 * q_total);
 
-    // polish: damped full-operator (Picard) iterations on the pooled twin,
-    // safe for strongly monotone operators with step < 2 mu / L^2
+    // polish: damped full-operator (Picard) iterations on the pooled
+    // twin, safe for strongly monotone operators with step < 2 mu / L^2.
+    // With an l1 term the smooth part is a gradient field and the Picard
+    // step becomes proximal-gradient: the soft-threshold resolvent
+    // absorbs the nonsmooth term exactly.
+    let l1 = twin.l1_weight();
     let step = (mu / (l * l)).min(1.0 / l);
     let mut g = vec![0.0; twin.dim()];
     for _ in 0..2000 {
         twin.full_operator(0, &z, &mut g);
-        let r = crate::linalg::norm2(&g) * n_factor;
+        let r = l1_kkt_residual(&z, &g, l1) * n_factor;
         if r <= tol {
             break;
         }
-        crate::linalg::axpy(-step, &g, &mut z);
+        if l1 == 0.0 {
+            crate::linalg::axpy(-step, &g, &mut z);
+        } else {
+            for (zk, gk) in z.iter_mut().zip(&g) {
+                *zk = soft_threshold(*zk - step * gk, step * l1);
+            }
+        }
     }
     z
 }
@@ -80,6 +69,7 @@ pub fn solve_optimum(p: &dyn Problem, tol: f64) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::data::SyntheticSpec;
+    use crate::operators::{AucProblem, LogisticProblem, RidgeProblem};
 
     #[test]
     fn ridge_optimum_residual_small() {

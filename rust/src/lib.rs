@@ -27,12 +27,20 @@
 //!     .generate(7);
 //! let topo = Topology::erdos_renyi(10, 0.4, 42);
 //! let problem = RidgeProblem::new(ds.partition(10), 1e-3);
-//! let mut exp = Experiment::new(problem, topo, AlgorithmKind::Dsba)
-//!     .with_step_size(0.5)
-//!     .with_passes(20.0);
+//! let mut exp = Experiment::builder(problem, topo, AlgorithmKind::Dsba)
+//!     .step_size(0.5)
+//!     .passes(20.0)
+//!     .build();
 //! let trace = exp.run();
 //! println!("final suboptimality: {:.3e}", trace.last_suboptimality());
 //! ```
+//!
+//! Problems are pluggable: anything expressible as component monotone
+//! operators registers itself in [`operators::ProblemRegistry`] (name,
+//! aliases, capability metadata, constructor) and is then reachable from
+//! JSON configs, every CLI subcommand, and the bench harness with no
+//! change to the algorithms, runtime, or communication layers — see the
+//! registry module docs for the recipe.
 
 pub mod util;
 pub mod linalg;
@@ -55,14 +63,17 @@ pub mod prelude {
     pub use crate::algorithms::{Algorithm, AlgorithmKind};
     pub use crate::comm::{CommCostModel, Network};
     pub use crate::config::ExperimentConfig;
-    pub use crate::coordinator::{Experiment, Trace};
+    pub use crate::coordinator::{Experiment, ExperimentBuilder, Trace};
     pub use crate::data::{Dataset, Partition, SyntheticSpec};
     pub use crate::graph::{MixingMatrix, Topology};
     pub use crate::linalg::{CsrMatrix, DenseMatrix, SparseVec};
     pub use crate::metrics::MetricsRow;
     pub use crate::operators::{
-        AucProblem, LogisticProblem, Problem, RidgeProblem,
+        AucProblem, LogisticProblem, Problem, ProblemRegistry, ProblemSpec,
+        RidgeProblem,
     };
-    pub use crate::runtime::{EngineKind, ParallelEngine, TcpTransport, TransportKind};
+    pub use crate::runtime::{
+        EngineKind, EngineSpec, ParallelEngine, TcpSpec, TcpTransport, TransportKind,
+    };
     pub use crate::util::rng::Rng;
 }

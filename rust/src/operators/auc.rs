@@ -10,9 +10,47 @@
 //! The resolvent reduces to a 4x4 linear solve in `(m, a, b, theta)`
 //! (appendix eqs. (77)-(82), generalized to `||a_{n,i}||^2 = c`).
 
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
 use super::Problem;
-use crate::data::Partition;
+use crate::algorithms::AlgorithmKind;
+use crate::data::{Dataset, Partition};
 use crate::linalg::DenseMatrix;
+use std::sync::Arc;
+
+/// Registry entry (canonical `auc`): saddle problem (no objective —
+/// scored by the AUC ranking statistic), 3 dense tail dims, 4 scalar
+/// coefficients per component.
+pub(crate) fn entry() -> ProblemEntry {
+    fn tuned(method: AlgorithmKind) -> f64 {
+        use AlgorithmKind::*;
+        match method {
+            Dsba | DsbaSparse => 0.5,
+            Dlm => 0.0, // uses dlm_c / dlm_rho
+            _ => 0.05,
+        }
+    }
+    fn ctor(
+        spec: &ProblemSpec,
+        _ds: &Dataset,
+        part: Partition,
+    ) -> Result<Arc<dyn Problem>, String> {
+        Ok(Arc::new(AucProblem::new(part, spec.lambda)))
+    }
+    ProblemEntry {
+        meta: ProblemMeta {
+            name: "auc",
+            aliases: &["auc-max"],
+            summary: "l2-relaxed AUC maximization saddle operator (paper §7.3)",
+            has_objective: false,
+            tail_dims: 3,
+            coef_width: 4,
+            regression_targets: false,
+            params_help: "-",
+            tuned_alpha: tuned,
+        },
+        ctor,
+    }
+}
 
 /// Decentralized l2-relaxed AUC maximization.
 pub struct AucProblem {
@@ -186,6 +224,14 @@ impl Problem for AucProblem {
 
     fn l_mu(&self) -> (f64, f64) {
         (self.l_estimate + self.lambda, self.lambda)
+    }
+
+    fn rebuild(&self, part: Partition) -> Arc<dyn Problem> {
+        Arc::new(AucProblem::new(part, self.lambda))
+    }
+
+    fn auc_metric(&self) -> bool {
+        true
     }
 }
 

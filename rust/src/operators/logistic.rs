@@ -7,8 +7,49 @@
 //! generalized to `||a||^2 = c`; 20 iterations suffice, as the paper
 //! notes).
 
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
 use super::Problem;
-use crate::data::Partition;
+use crate::algorithms::AlgorithmKind;
+use crate::data::{Dataset, Partition};
+use std::sync::Arc;
+
+/// Registry entry (canonical `logistic`): ±1 labels, 1 scalar
+/// coefficient, safeguarded-Newton resolvent.
+pub(crate) fn entry() -> ProblemEntry {
+    fn tuned(method: AlgorithmKind) -> f64 {
+        use AlgorithmKind::*;
+        match method {
+            Dsba | DsbaSparse | PointSaga => 2.0,
+            Dsa => 1.0,
+            Extra => 1.8,
+            PExtra => 4.0,
+            Dlm => 0.0, // uses dlm_c / dlm_rho
+            Ssda => 0.9,
+            Dgd => 1.5,
+        }
+    }
+    fn ctor(
+        spec: &ProblemSpec,
+        _ds: &Dataset,
+        part: Partition,
+    ) -> Result<Arc<dyn Problem>, String> {
+        Ok(Arc::new(LogisticProblem::new(part, spec.lambda)))
+    }
+    ProblemEntry {
+        meta: ProblemMeta {
+            name: "logistic",
+            aliases: &["logreg", "log"],
+            summary: "decentralized l2-regularized logistic regression (paper §7.2)",
+            has_objective: true,
+            tail_dims: 0,
+            coef_width: 1,
+            regression_targets: false,
+            params_help: "-",
+            tuned_alpha: tuned,
+        },
+        ctor,
+    }
+}
 
 /// Decentralized l2-regularized logistic regression.
 pub struct LogisticProblem {
@@ -145,6 +186,12 @@ impl Problem for LogisticProblem {
             .flatten()
             .fold(0.0f64, |acc, &c| acc.max(c));
         (0.25 * cmax + self.lambda, self.lambda)
+    }
+
+    fn rebuild(&self, part: Partition) -> Arc<dyn Problem> {
+        let mut p = LogisticProblem::new(part, self.lambda);
+        p.newton_iters = self.newton_iters;
+        Arc::new(p)
     }
 }
 

@@ -17,12 +17,15 @@
 mod ridge;
 mod logistic;
 mod auc;
+pub mod registry;
 
 pub use auc::AucProblem;
 pub use logistic::LogisticProblem;
+pub use registry::{ProblemEntry, ProblemMeta, ProblemRegistry, ProblemSpec};
 pub use ridge::RidgeProblem;
 
 use crate::data::Partition;
+use std::sync::Arc;
 
 /// A decentralized monotone-operator root-finding problem (13).
 pub trait Problem: Send + Sync {
@@ -71,8 +74,33 @@ pub trait Problem: Send + Sync {
     /// reports the AUC statistic through `Metrics` instead).
     fn objective(&self, z: &[f64]) -> Option<f64>;
 
-    /// (L, mu) of the regularized components `B_{n,i} + lambda I`.
+    /// (L, mu) of the regularized components `B_{n,i} + lambda I`
+    /// (smooth part for problems with an l1 term).
     fn l_mu(&self) -> (f64, f64);
+
+    /// Rebuild this problem on a different partition with identical
+    /// hyper-parameters — the coordinator's pooled-twin optimum
+    /// pre-solve uses this instead of guessing the concrete type.
+    fn rebuild(&self, part: Partition) -> Arc<dyn Problem>;
+
+    /// Weight of a separable l1 term `l1 ||z||_1` folded into each
+    /// component operator.  It is handled *proximally*: `backward`
+    /// resolves it through its soft-threshold resolvent, while the
+    /// coefficient-encoded forward path (`coefs`/`scatter`/`apply`)
+    /// covers the smooth part only — mirroring how `lambda` is applied
+    /// analytically rather than baked into the raw components.  The
+    /// effective global operator gains `N * l1 * d||z||_1`, which
+    /// [`check_resolvent`] and [`Problem::global_residual`] account for.
+    fn l1_weight(&self) -> f64 {
+        0.0
+    }
+
+    /// Saddle problems that are scored by the AUC ranking statistic
+    /// instead of an objective value (capability flag for metrics — no
+    /// more `tail_dims() == 3` sniffing in the coordinator).
+    fn auc_metric(&self) -> bool {
+        false
+    }
 
     // ---- provided ----
 
@@ -102,8 +130,11 @@ pub trait Problem: Send + Sync {
         }
     }
 
-    /// Residual `|| sum_n (B_n(z) + lambda z) ||` — 0 at the solution of
-    /// (13). Used by optimum pre-solves and convergence checks.
+    /// Optimality residual of (13): `|| sum_n (B_n(z) + lambda z) ||`
+    /// for smooth problems, and the KKT inclusion residual
+    /// `dist(-sum_n(B_n + lambda z), N l1 d||z||_1)` when an l1 term is
+    /// present.  0 exactly at the solution either way.  Used by optimum
+    /// pre-solves and convergence checks.
     fn global_residual(&self, z: &[f64]) -> f64 {
         let mut acc = vec![0.0; self.dim()];
         let mut tmp = vec![0.0; self.dim()];
@@ -113,7 +144,7 @@ pub trait Problem: Send + Sync {
                 *a += t;
             }
         }
-        crate::linalg::norm2(&acc)
+        l1_kkt_residual(z, &acc, self.nodes() as f64 * self.l1_weight())
     }
 
     /// nnz of the sparse part of component (n,i)'s output — the §5.1
@@ -129,8 +160,30 @@ pub trait Problem: Send + Sync {
     }
 }
 
+/// KKT residual of the inclusion `0 in g + t d||z||_1`: the Euclidean
+/// distance from `-g` to the (scaled) l1 subdifferential at `z`.
+/// Reduces to `||g||` at `t = 0`.
+pub fn l1_kkt_residual(z: &[f64], g: &[f64], t: f64) -> f64 {
+    if t == 0.0 {
+        return crate::linalg::norm2(g);
+    }
+    let mut acc = 0.0;
+    for (&zk, &gk) in z.iter().zip(g) {
+        let s = if zk != 0.0 {
+            gk + t * zk.signum()
+        } else {
+            (gk.abs() - t).max(0.0)
+        };
+        acc += s * s;
+    }
+    acc.sqrt()
+}
+
 /// Numerically verify monotonicity of components at random pairs —
-/// shared test/diagnostic helper.
+/// shared test/diagnostic helper.  Covers the coefficient-encoded
+/// (smooth) part of the operators; a declared l1 term is itself
+/// monotone and checked separately through [`check_resolvent`]'s
+/// subdifferential inclusion.
 pub fn check_monotone<P: Problem + ?Sized>(
     p: &P,
     seed: u64,
@@ -168,6 +221,12 @@ pub fn check_monotone<P: Problem + ?Sized>(
 /// Numerically verify the resolvent identity `z + alpha (B + lambda I)(z)
 /// = psi` at random points — the core correctness check for every
 /// backward implementation.
+///
+/// For problems with a declared [`Problem::l1_weight`], the identity
+/// becomes the inclusion `psi - (1 + alpha lambda) z - alpha B(z) in
+/// alpha l1 d||z||_1`, which is verified coordinatewise: thresholded
+/// coordinates must leave a residual inside `[-alpha l1, alpha l1]` and
+/// surviving coordinates must leave exactly `alpha l1 sign(z_k)`.
 pub fn check_resolvent<P: Problem + ?Sized>(
     p: &P,
     alpha: f64,
@@ -176,6 +235,7 @@ pub fn check_resolvent<P: Problem + ?Sized>(
 ) -> Result<(), String> {
     let mut rng = crate::util::rng::Rng::new(seed);
     let dim = p.dim();
+    let l1 = p.l1_weight();
     let mut z = vec![0.0; dim];
     let mut coefs = vec![0.0; p.coef_width()];
     for t in 0..trials {
@@ -189,16 +249,35 @@ pub fn check_resolvent<P: Problem + ?Sized>(
             *r *= 1.0 + alpha * p.lambda();
         }
         p.apply(n, i, &z, alpha, &mut recon);
-        let err: f64 = recon
-            .iter()
-            .zip(&psi)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f64>()
-            .sqrt();
-        if err > 1e-8 {
-            return Err(format!(
-                "trial {t}: resolvent identity violated on ({n},{i}): err {err}"
-            ));
+        if l1 == 0.0 {
+            let err: f64 = recon
+                .iter()
+                .zip(&psi)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            if err > 1e-8 {
+                return Err(format!(
+                    "trial {t}: resolvent identity violated on ({n},{i}): err {err}"
+                ));
+            }
+        } else {
+            for k in 0..dim {
+                let r = psi[k] - recon[k]; // must equal alpha*l1*u_k
+                let bad = if z[k] != 0.0 {
+                    (r - alpha * l1 * z[k].signum()).abs() > 1e-8
+                } else {
+                    r.abs() > alpha * l1 + 1e-8
+                };
+                if bad {
+                    return Err(format!(
+                        "trial {t}: prox inclusion violated on ({n},{i}) coord {k}: \
+                         z={} residual={r} bound={}",
+                        z[k],
+                        alpha * l1
+                    ));
+                }
+            }
         }
         // check coefs_out really are the coefs at the new point
         let mut fresh = vec![0.0; p.coef_width()];

@@ -1,0 +1,265 @@
+//! Open problem registry: the extension point that makes `dsba` a
+//! monotone-operator *framework* rather than a three-problem benchmark.
+//!
+//! A workload is registered as a [`ProblemEntry`]: a canonical name plus
+//! aliases, capability metadata ([`ProblemMeta`]), per-method tuned step
+//! sizes for the figure harness, and a constructor from a
+//! [`ProblemSpec`] (the config layer's resolved hyper-parameters) and a
+//! data [`Partition`].  `config`, the CLI (`run`/`info`/`figure`) and
+//! `bench_harness` resolve problems exclusively through
+//! [`ProblemRegistry::builtin`], so adding a workload means writing one
+//! `operators/<name>.rs` module with a `Problem` impl and an `entry()`
+//! function, and listing that entry here — no `match` in any core file.
+
+use super::Problem;
+use crate::algorithms::AlgorithmKind;
+use crate::data::{Dataset, Partition};
+use crate::util::json::Json;
+use std::sync::{Arc, OnceLock};
+
+/// Resolved problem hyper-parameters handed to a registry constructor.
+///
+/// `lambda` is the *effective* l2 weight (the config layer resolves the
+/// paper's `1/(10 Q)` default before construction); `params` carries
+/// problem-specific knobs as free-form JSON (e.g. `{"l1": 0.01}` for
+/// elastic net).  Constructors read the keys they know and ignore the
+/// rest, so one generic params object can drive every problem.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// canonical problem name (as registered)
+    pub name: String,
+    /// effective l2 regularization weight
+    pub lambda: f64,
+    /// problem-specific knobs (JSON object; `Json::Null` = all defaults)
+    pub params: Json,
+}
+
+impl ProblemSpec {
+    pub fn new(name: &str, lambda: f64) -> ProblemSpec {
+        ProblemSpec { name: name.to_string(), lambda, params: Json::Null }
+    }
+
+    pub fn with_params(mut self, params: Json) -> ProblemSpec {
+        self.params = params;
+        self
+    }
+
+    /// Read a numeric knob from `params` (None = key absent / not a
+    /// number — caller applies its default).
+    pub fn param_f64(&self, key: &str) -> Option<f64> {
+        self.params.get(key).and_then(Json::as_f64)
+    }
+}
+
+/// Capability metadata of a registered problem — everything the generic
+/// layers (metrics, dataset generation, CLI listings, property suites)
+/// need to know without downcasting the `Problem` object.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemMeta {
+    /// canonical name (`dsba run --problem <name>`)
+    pub name: &'static str,
+    /// accepted alternative spellings (case-insensitive, like `name`)
+    pub aliases: &'static [&'static str],
+    /// one-line description for `dsba info`
+    pub summary: &'static str,
+    /// `Problem::objective` returns `Some` (false = saddle problem
+    /// scored by a ranking statistic instead)
+    pub has_objective: bool,
+    /// dense tail dimensions appended to the feature block
+    pub tail_dims: usize,
+    /// scalar coefficients per component operator
+    pub coef_width: usize,
+    /// synthetic datasets should generate regression targets (vs ±1
+    /// classification labels)
+    pub regression_targets: bool,
+    /// human-readable list of `params` keys the constructor reads
+    pub params_help: &'static str,
+    /// per-method tuned step size for the figure/bench harness (the
+    /// paper tunes alpha per (problem, method))
+    pub tuned_alpha: fn(AlgorithmKind) -> f64,
+}
+
+/// Constructor signature every registered problem provides.
+pub type ProblemCtor =
+    fn(&ProblemSpec, &Dataset, Partition) -> Result<Arc<dyn Problem>, String>;
+
+/// One registered workload: metadata + constructor.
+#[derive(Clone)]
+pub struct ProblemEntry {
+    pub meta: ProblemMeta,
+    pub ctor: ProblemCtor,
+}
+
+impl ProblemEntry {
+    /// Build the problem from resolved hyper-parameters and a partition.
+    pub fn build(
+        &self,
+        spec: &ProblemSpec,
+        ds: &Dataset,
+        part: Partition,
+    ) -> Result<Arc<dyn Problem>, String> {
+        (self.ctor)(spec, ds, part)
+    }
+
+    fn matches(&self, lower: &str) -> bool {
+        self.meta.name.eq_ignore_ascii_case(lower)
+            || self.meta.aliases.iter().any(|a| a.eq_ignore_ascii_case(lower))
+    }
+}
+
+/// Name/alias-indexed set of problem entries.
+pub struct ProblemRegistry {
+    entries: Vec<ProblemEntry>,
+}
+
+impl ProblemRegistry {
+    /// Build a registry, rejecting duplicate names or aliases (two
+    /// entries answering to one spelling would make resolution
+    /// order-dependent).
+    pub fn new(entries: Vec<ProblemEntry>) -> Result<ProblemRegistry, String> {
+        let mut seen: Vec<String> = Vec::new();
+        for e in &entries {
+            for s in std::iter::once(e.meta.name).chain(e.meta.aliases.iter().copied()) {
+                let lower = s.to_ascii_lowercase();
+                if seen.contains(&lower) {
+                    return Err(format!("duplicate problem name/alias {s:?}"));
+                }
+                seen.push(lower);
+            }
+        }
+        Ok(ProblemRegistry { entries })
+    }
+
+    /// The process-wide registry of built-in workloads. Adding a problem
+    /// to the system means adding exactly one `entry()` line here (plus
+    /// its `operators/<name>.rs` module).
+    pub fn builtin() -> &'static ProblemRegistry {
+        static BUILTIN: OnceLock<ProblemRegistry> = OnceLock::new();
+        BUILTIN.get_or_init(|| {
+            ProblemRegistry::new(vec![
+                super::ridge::entry(),
+                super::logistic::entry(),
+                super::auc::entry(),
+            ])
+            .expect("builtin problem registry is well-formed")
+        })
+    }
+
+    /// Resolve a name or alias (case-insensitive).
+    pub fn resolve(&self, name: &str) -> Option<&ProblemEntry> {
+        let lower = name.to_ascii_lowercase();
+        self.entries.iter().find(|e| e.matches(&lower))
+    }
+
+    /// Canonical name for any accepted spelling.
+    pub fn canonical(&self, name: &str) -> Option<&'static str> {
+        self.resolve(name).map(|e| e.meta.name)
+    }
+
+    pub fn entries(&self) -> &[ProblemEntry] {
+        &self.entries
+    }
+
+    /// Canonical names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.meta.name).collect()
+    }
+
+    /// Aligned text table for `dsba info` — generated from the entries
+    /// so the CLI text cannot drift from the code.
+    pub fn describe(&self) -> String {
+        let mut out = String::from(
+            "problem       aliases                  metric     tail  coefs  params\n",
+        );
+        for e in &self.entries {
+            let m = &e.meta;
+            out.push_str(&format!(
+                "{:<12}  {:<23}  {:<9}  {:>4}  {:>5}  {}\n",
+                m.name,
+                m.aliases.join(", "),
+                if m.has_objective { "objective" } else { "saddle" },
+                m.tail_dims,
+                m.coef_width,
+                m.params_help,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+
+    #[test]
+    fn builtin_resolves_names_and_aliases_case_insensitively() {
+        let reg = ProblemRegistry::builtin();
+        for e in reg.entries() {
+            let canon = reg.resolve(e.meta.name).unwrap();
+            assert_eq!(canon.meta.name, e.meta.name);
+            let upper = e.meta.name.to_ascii_uppercase();
+            assert_eq!(reg.canonical(&upper), Some(e.meta.name));
+            for alias in e.meta.aliases {
+                assert_eq!(
+                    reg.canonical(alias),
+                    Some(e.meta.name),
+                    "alias {alias} must resolve to {}",
+                    e.meta.name
+                );
+            }
+        }
+        assert!(reg.resolve("no-such-problem").is_none());
+    }
+
+    #[test]
+    fn duplicate_aliases_rejected() {
+        let reg = ProblemRegistry::builtin();
+        let mut entries: Vec<ProblemEntry> = reg.entries().to_vec();
+        entries.push(entries[0].clone());
+        assert!(ProblemRegistry::new(entries).is_err());
+    }
+
+    #[test]
+    fn entries_build_and_match_their_metadata() {
+        let reg = ProblemRegistry::builtin();
+        for e in reg.entries() {
+            let ds = SyntheticSpec::tiny()
+                .with_regression(e.meta.regression_targets)
+                .generate(11);
+            let part = ds.partition_seeded(2, 5);
+            let spec = ProblemSpec::new(e.meta.name, 0.05);
+            let p = e.build(&spec, &ds, part).expect("builtin entry builds");
+            assert_eq!(p.tail_dims(), e.meta.tail_dims, "{}", e.meta.name);
+            assert_eq!(p.coef_width(), e.meta.coef_width, "{}", e.meta.name);
+            let z = vec![0.0; p.dim()];
+            assert_eq!(
+                p.objective(&z).is_some(),
+                e.meta.has_objective,
+                "{}: has_objective metadata disagrees with objective()",
+                e.meta.name
+            );
+            assert_eq!(p.lambda(), 0.05);
+            // rebuild keeps every hyper-parameter (the coordinator's
+            // pooled-twin pre-solve depends on this)
+            let twin = p.rebuild(Partition::equal_random(&p.partition().pooled(), 1, 0));
+            assert_eq!(twin.lambda(), p.lambda());
+            assert_eq!(twin.l1_weight(), p.l1_weight());
+            assert_eq!(twin.coef_width(), p.coef_width());
+            assert_eq!(twin.tail_dims(), p.tail_dims());
+        }
+    }
+
+    #[test]
+    fn tuned_alpha_positive_for_stochastic_methods() {
+        for e in ProblemRegistry::builtin().entries() {
+            for &k in AlgorithmKind::all() {
+                let a = (e.meta.tuned_alpha)(k);
+                assert!(a.is_finite() && a >= 0.0, "{} / {}", e.meta.name, k.name());
+                if k.is_stochastic() {
+                    assert!(a > 0.0, "{} / {}", e.meta.name, k.name());
+                }
+            }
+        }
+    }
+}

@@ -7,8 +7,48 @@
 //! `J_{alpha B}(psi) = psi - alpha (m - y) a`,
 //! which for `c = 1` reduces to the paper's expression.
 
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
 use super::Problem;
-use crate::data::Partition;
+use crate::algorithms::AlgorithmKind;
+use crate::data::{Dataset, Partition};
+use std::sync::Arc;
+
+/// Registry entry (canonical `ridge`): regression targets, 1 scalar
+/// coefficient, closed-form resolvent.
+pub(crate) fn entry() -> ProblemEntry {
+    fn tuned(method: AlgorithmKind) -> f64 {
+        use AlgorithmKind::*;
+        match method {
+            Dsba | DsbaSparse | PExtra | PointSaga => 2.0,
+            Dsa => 0.3,
+            Extra => 0.45,
+            Dlm => 0.0, // uses dlm_c / dlm_rho
+            Ssda => 0.9,
+            Dgd => 0.4,
+        }
+    }
+    fn ctor(
+        spec: &ProblemSpec,
+        _ds: &Dataset,
+        part: Partition,
+    ) -> Result<Arc<dyn Problem>, String> {
+        Ok(Arc::new(RidgeProblem::new(part, spec.lambda)))
+    }
+    ProblemEntry {
+        meta: ProblemMeta {
+            name: "ridge",
+            aliases: &["least-squares", "l2"],
+            summary: "decentralized ridge regression (paper §7.1)",
+            has_objective: true,
+            tail_dims: 0,
+            coef_width: 1,
+            regression_targets: true,
+            params_help: "-",
+            tuned_alpha: tuned,
+        },
+        ctor,
+    }
+}
 
 /// Decentralized ridge regression.
 pub struct RidgeProblem {
@@ -115,6 +155,10 @@ impl Problem for RidgeProblem {
             .flatten()
             .fold(0.0f64, |acc, &c| acc.max(c));
         (cmax + self.lambda, self.lambda)
+    }
+
+    fn rebuild(&self, part: Partition) -> Arc<dyn Problem> {
+        Arc::new(RidgeProblem::new(part, self.lambda))
     }
 }
 

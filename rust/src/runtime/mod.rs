@@ -16,20 +16,22 @@
 //! * The **XLA/PJRT artifact runtime** — loads the AOT artifacts produced
 //!   by `python/compile/aot.py` (HLO text) and executes them on the PJRT
 //!   CPU client. The real executor needs the vendored `xla` crate and is
-//!   gated behind the `pjrt` cargo feature ([`pjrt`] module); the default
-//!   build ships a manifest-only stub ([`xla_stub`]) that validates the
+//!   gated behind the `pjrt` cargo feature (`pjrt` module); the default
+//!   build ships a manifest-only stub (`xla_stub`) that validates the
 //!   artifact directory but reports no execution backend
 //!   (`has_backend() == false`), so XLA-dependent tests and benches skip
 //!   cleanly instead of hard-failing when artifacts or the backend are
 //!   absent.
 
 pub mod engine;
+pub mod spec;
 pub mod transport;
 
 mod registry;
 
 pub use engine::{EngineKind, ParallelEngine};
 pub use registry::{ArtifactEntry, Manifest};
+pub use spec::{EngineSpec, TcpSpec};
 pub use transport::{LocalTransport, NodePort, TcpTransport, Transport, TransportKind};
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,185 @@
+//! Typed execution-engine configuration: which driver runs the rounds,
+//! how many worker threads, which edge-channel transport, and — for TCP
+//! — the endpoint strings.  One [`EngineSpec`] value travels intact from
+//! JSON config / CLI flags through `ExperimentConfig` into `Experiment`,
+//! instead of six loose fields leaking through every layer.
+
+use super::engine::EngineKind;
+use super::transport::TransportKind;
+use crate::util::json::Json;
+
+/// TCP endpoint configuration for [`TransportKind::Tcp`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TcpSpec {
+    /// listen address ("" = ephemeral loopback port)
+    pub listen: String,
+    /// comma-separated `node=host:port` addresses of remote nodes
+    pub peers: String,
+    /// hosted-node spec ("" = host all nodes in this process)
+    pub hosted: String,
+}
+
+impl TcpSpec {
+    pub fn is_empty(&self) -> bool {
+        self.listen.is_empty() && self.peers.is_empty() && self.hosted.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("listen", Json::Str(self.listen.clone())),
+            ("peers", Json::Str(self.peers.clone())),
+            ("hosted", Json::Str(self.hosted.clone())),
+        ])
+    }
+
+    /// Parse from a JSON object (missing keys keep defaults).
+    pub fn from_json(v: &Json) -> Result<TcpSpec, String> {
+        let mut t = TcpSpec::default();
+        if let Some(s) = v.get("listen").and_then(Json::as_str) {
+            t.listen = s.to_string();
+        }
+        if let Some(s) = v.get("peers").and_then(Json::as_str) {
+            t.peers = s.to_string();
+        }
+        if let Some(s) = v.get("hosted").and_then(Json::as_str) {
+            t.hosted = s.to_string();
+        }
+        Ok(t)
+    }
+}
+
+/// Execution engine selection: round driver + transport + endpoints.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineSpec {
+    /// round driver: sequential reference oracle or parallel engine
+    pub kind: EngineKind,
+    /// parallel-engine worker threads (0 = auto: cores capped by nodes)
+    pub threads: usize,
+    /// parallel-engine edge channels: in-process mpsc or per-edge TCP
+    pub transport: TransportKind,
+    /// endpoints for [`TransportKind::Tcp`]
+    pub tcp: TcpSpec,
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec {
+            kind: EngineKind::Sequential,
+            threads: 0,
+            transport: TransportKind::Local,
+            tcp: TcpSpec::default(),
+        }
+    }
+}
+
+impl EngineSpec {
+    /// The sequential reference oracle.
+    pub fn sequential() -> EngineSpec {
+        EngineSpec::default()
+    }
+
+    /// The multi-threaded engine over in-process channels
+    /// (`threads = 0` = auto).
+    pub fn parallel(threads: usize) -> EngineSpec {
+        EngineSpec { kind: EngineKind::Parallel, threads, ..EngineSpec::default() }
+    }
+
+    pub fn with_transport(mut self, transport: TransportKind) -> EngineSpec {
+        self.transport = transport;
+        self
+    }
+
+    pub fn with_tcp(mut self, tcp: TcpSpec) -> EngineSpec {
+        self.transport = TransportKind::Tcp;
+        self.tcp = tcp;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("transport", Json::Str(self.transport.name().into())),
+            ("tcp", self.tcp.to_json()),
+        ])
+    }
+
+    /// Parse from JSON.  Accepts the nested object form emitted by
+    /// [`EngineSpec::to_json`], or — for backward compatibility with
+    /// pre-registry config files — a bare string (`"parallel"`) naming
+    /// just the engine kind.
+    pub fn from_json(v: &Json) -> Result<EngineSpec, String> {
+        if let Some(s) = v.as_str() {
+            let kind = EngineKind::parse(s).ok_or(format!("bad engine {s}"))?;
+            return Ok(EngineSpec { kind, ..EngineSpec::default() });
+        }
+        let mut e = EngineSpec::default();
+        if let Some(s) = v.get("kind").and_then(Json::as_str) {
+            e.kind = EngineKind::parse(s).ok_or(format!("bad engine kind {s}"))?;
+        }
+        if let Some(n) = v.get("threads").and_then(Json::as_usize) {
+            e.threads = n;
+        }
+        if let Some(s) = v.get("transport").and_then(Json::as_str) {
+            e.transport =
+                TransportKind::parse(s).ok_or(format!("bad transport {s}"))?;
+        }
+        if let Some(t) = v.get("tcp") {
+            e.tcp = TcpSpec::from_json(t)?;
+        }
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let spec = EngineSpec {
+            kind: EngineKind::Parallel,
+            threads: 3,
+            transport: TransportKind::Tcp,
+            tcp: TcpSpec {
+                listen: "127.0.0.1:9100".into(),
+                peers: "5=10.0.0.2:9100".into(),
+                hosted: "0-4".into(),
+            },
+        };
+        let j = spec.to_json().to_string();
+        let back = EngineSpec::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn legacy_bare_string_form_accepted() {
+        let e = EngineSpec::from_json(&Json::Str("parallel".into())).unwrap();
+        assert_eq!(e.kind, EngineKind::Parallel);
+        assert_eq!(e, EngineSpec::parallel(0));
+        assert!(EngineSpec::from_json(&Json::Str("warp".into())).is_err());
+    }
+
+    #[test]
+    fn constructors_compose() {
+        let e = EngineSpec::parallel(4).with_tcp(TcpSpec {
+            listen: "127.0.0.1:0".into(),
+            ..TcpSpec::default()
+        });
+        assert_eq!(e.kind, EngineKind::Parallel);
+        assert_eq!(e.transport, TransportKind::Tcp);
+        assert!(!e.tcp.is_empty());
+        assert!(TcpSpec::default().is_empty());
+        assert_eq!(EngineSpec::sequential(), EngineSpec::default());
+    }
+
+    #[test]
+    fn missing_keys_keep_defaults() {
+        let e = EngineSpec::from_json(&parse("{\"kind\":\"parallel\"}").unwrap()).unwrap();
+        assert_eq!(e.threads, 0);
+        assert_eq!(e.transport, TransportKind::Local);
+        assert!(e.tcp.is_empty());
+        assert!(EngineSpec::from_json(&parse("{\"transport\":\"pigeon\"}").unwrap()).is_err());
+    }
+}

@@ -5,7 +5,7 @@
 //! offline; every execution entry point returns an error and
 //! [`XlaRuntime::has_backend`] is `false`, which the XLA cross-check tests
 //! use to skip cleanly. Build with `--features pjrt` (and the vendored
-//! `xla` crate) for the executing runtime in [`super::pjrt`].
+//! `xla` crate) for the executing runtime in `super::pjrt`.
 
 use super::registry::{ArtifactEntry, Manifest};
 use crate::linalg::CsrMatrix;

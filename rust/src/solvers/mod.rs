@@ -8,4 +8,4 @@ mod cg;
 mod prox;
 
 pub use cg::{cg_solve, LinearOperator};
-pub use prox::agd_minimize;
+pub use prox::{agd_minimize, soft_threshold};

@@ -35,14 +35,15 @@ fn all_linear_methods_agree_on_the_optimum() {
     ];
     for (kind, alpha, passes) in runs {
         let part = ds.partition_seeded(4, 2);
-        let mut exp = Experiment::new(RidgeProblem::new(part, 0.05), topo.clone(), kind)
-            .with_step_size(alpha)
-            .with_passes(passes)
-            .with_z_star(z_star.clone())
-            .with_params(|p| {
+        let mut exp = Experiment::builder(RidgeProblem::new(part, 0.05), topo.clone(), kind)
+            .step_size(alpha)
+            .passes(passes)
+            .z_star(z_star.clone())
+            .params(|p| {
                 p.dlm_c = 0.5;
                 p.dlm_rho = 1.5;
-            });
+            })
+            .build();
         let trace = exp.run();
         assert!(
             trace.last_suboptimality() < 1e-6,
@@ -66,10 +67,11 @@ fn stochastic_methods_beat_deterministic_per_pass_ridge() {
     let mut results = std::collections::HashMap::new();
     for (kind, alpha) in [(Dsba, 1.0), (Dsa, 0.3), (Extra, 0.45)] {
         let part = ds.partition_seeded(4, 2);
-        let mut exp = Experiment::new(RidgeProblem::new(part, 0.01), topo.clone(), kind)
-            .with_step_size(alpha)
-            .with_passes(passes)
-            .with_z_star(z_star.clone());
+        let mut exp = Experiment::builder(RidgeProblem::new(part, 0.01), topo.clone(), kind)
+            .step_size(alpha)
+            .passes(passes)
+            .z_star(z_star.clone())
+            .build();
         results.insert(kind.name(), exp.run().last_suboptimality());
     }
     let (dsba, dsa, extra) = (results["DSBA"], results["DSA"], results["EXTRA"]);
@@ -82,23 +84,25 @@ fn dsba_handles_logistic_and_auc() {
     let ds = SyntheticSpec::tiny().with_samples(160).generate(105);
     let topo = Topology::erdos_renyi(4, 0.6, 7);
 
-    let mut exp = Experiment::new(
+    let mut exp = Experiment::builder(
         LogisticProblem::new(ds.partition_seeded(4, 2), 0.05),
         topo.clone(),
         Dsba,
     )
-    .with_step_size(2.0)
-    .with_passes(60.0);
+    .step_size(2.0)
+    .passes(60.0)
+    .build();
     let t = exp.run();
     assert!(t.last_suboptimality() < 1e-8, "logistic: {:.3e}", t.last_suboptimality());
 
-    let mut exp = Experiment::new(
+    let mut exp = Experiment::builder(
         AucProblem::new(ds.partition_seeded(4, 2), 0.05),
         topo,
         Dsba,
     )
-    .with_step_size(0.5)
-    .with_passes(60.0);
+    .step_size(0.5)
+    .passes(60.0)
+    .build();
     let t = exp.run();
     assert!(t.last_suboptimality() < 1e-7, "auc: {:.3e}", t.last_suboptimality());
     assert!(t.last_auc() > 0.8, "AUC {:.3}", t.last_auc());
@@ -109,23 +113,25 @@ fn dgd_stalls_where_linear_methods_converge() {
     let (ds, topo) = ridge_world(107);
     let problem = RidgeProblem::new(ds.partition_seeded(4, 2), 0.05);
     let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
-    let mut dgd = Experiment::new(
+    let mut dgd = Experiment::builder(
         RidgeProblem::new(ds.partition_seeded(4, 2), 0.05),
         topo.clone(),
         Dgd,
     )
-    .with_step_size(0.4)
-    .with_passes(120.0)
-    .with_z_star(z_star.clone());
+    .step_size(0.4)
+    .passes(120.0)
+    .z_star(z_star.clone())
+    .build();
     let t_dgd = dgd.run();
-    let mut extra = Experiment::new(
+    let mut extra = Experiment::builder(
         RidgeProblem::new(ds.partition_seeded(4, 2), 0.05),
         topo,
         Extra,
     )
-    .with_step_size(0.4)
-    .with_passes(120.0)
-    .with_z_star(z_star);
+    .step_size(0.4)
+    .passes(120.0)
+    .z_star(z_star)
+    .build();
     let t_extra = extra.run();
     assert!(
         t_extra.last_suboptimality() < t_dgd.last_suboptimality() * 1e-2,
@@ -149,11 +155,12 @@ fn larger_kappa_g_slows_dsba() {
         let part = ds.partition_seeded(8, 2);
         let problem = RidgeProblem::new(part, 0.05);
         let z_star = dsba::coordinator::solve_optimum(&problem, 1e-12);
-        let mut exp = Experiment::new(problem, topo, Dsba)
-            .with_step_size(0.8)
-            .with_passes(300.0)
-            .with_record_points(300)
-            .with_z_star(z_star);
+        let mut exp = Experiment::builder(problem, topo, Dsba)
+            .step_size(0.8)
+            .passes(300.0)
+            .record_points(300)
+            .z_star(z_star)
+            .build();
         let trace = exp.run();
         passes_needed.push(trace.passes_to_tol(tol).unwrap_or(f64::INFINITY));
     }

@@ -4,7 +4,7 @@
 //! with the XLA artifact path cross-checked when artifacts exist.
 
 use dsba::algorithms::AlgorithmKind;
-use dsba::config::{ExperimentConfig, ProblemKind};
+use dsba::config::ExperimentConfig;
 use dsba::coordinator::Experiment;
 use dsba::prelude::*;
 use std::sync::Arc;
@@ -12,7 +12,7 @@ use std::sync::Arc;
 #[test]
 fn full_stack_ridge_through_config() {
     let cfg = ExperimentConfig {
-        problem: ProblemKind::Ridge,
+        problem: "ridge".into(),
         dataset: "rcv1-like".into(),
         samples: 400,
         dim: 1024,
@@ -72,9 +72,10 @@ fn full_stack_dsba_s_and_xla_cross_check() {
         }
     }
 
-    let mut exp = Experiment::from_arc(problem, topo, AlgorithmKind::DsbaSparse)
-        .with_step_size(2.0)
-        .with_passes(30.0);
+    let mut exp = Experiment::builder_from_arc(problem, topo, AlgorithmKind::DsbaSparse)
+        .step_size(2.0)
+        .passes(30.0)
+        .build();
     let trace = exp.run();
     assert!(
         trace.last_suboptimality() < 1e-4,
@@ -86,7 +87,7 @@ fn full_stack_dsba_s_and_xla_cross_check() {
 #[test]
 fn full_stack_auc_reaches_good_ranking() {
     let cfg = ExperimentConfig {
-        problem: ProblemKind::Auc,
+        problem: "auc".into(),
         dataset: "sector-like".into(),
         samples: 400,
         dim: 1024,

@@ -38,6 +38,19 @@ fn assert_parity_on(
     threads: usize,
     backend: Backend,
 ) {
+    assert_parity_with(kind, topo, rounds, threads, backend, &|n| ridge_world(n, 17));
+}
+
+/// Problem-parametric core of the parity suite: `world(nodes)` builds the
+/// problem under test (registry-built workloads plug in here too).
+fn assert_parity_with(
+    kind: AlgorithmKind,
+    topo: Topology,
+    rounds: usize,
+    threads: usize,
+    backend: Backend,
+    world: &dyn Fn(usize) -> Arc<dyn Problem>,
+) {
     // Point-SAGA is single-node by construction (Remark 5.1); the engine
     // degenerates to one worker on the trivial topology.
     let topo = if kind == AlgorithmKind::PointSaga {
@@ -45,7 +58,7 @@ fn assert_parity_on(
     } else {
         topo
     };
-    let p = ridge_world(topo.n, 17);
+    let p = world(topo.n);
     let mix = if kind == AlgorithmKind::PointSaga {
         MixingMatrix::from_w(dsba::linalg::DenseMatrix::identity(1))
     } else {

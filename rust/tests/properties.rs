@@ -242,38 +242,111 @@ fn prop_message_decode_total_on_corrupt_frames() {
 }
 
 #[test]
-fn prop_resolvents_hold_across_random_problems() {
-    prop_check("resolvent identity (all problems)", 12, |rng| {
-        let ds = SyntheticSpec::tiny()
-            .with_samples(40 + rng.below(40))
-            .with_dim(20 + rng.below(30))
-            .generate(rng.next_u64());
-        let part = ds.partition_seeded(2, rng.next_u64());
-        let lam = rng.uniform() * 0.2;
-        let alpha = 0.05 + rng.uniform() * 3.0;
-        let seed = rng.next_u64();
-        match rng.below(3) {
-            0 => check_resolvent(&RidgeProblem::new(part, lam), alpha, seed, 10),
-            1 => check_resolvent(&LogisticProblem::new(part, lam), alpha, seed, 10),
-            _ => check_resolvent(&AucProblem::new(part, lam), alpha, seed, 10),
+fn prop_registered_problems_resolvent_and_monotone() {
+    // Every problem in the registry — including ones future PRs add —
+    // passes the resolvent-identity and monotonicity checks on random
+    // instances with randomized hyper-parameters.  No hand-listed trio:
+    // registering a workload automatically enrolls it here.
+    use dsba::operators::ProblemSpec;
+    use dsba::util::json::Json;
+    prop_check("resolvent + monotonicity (every registered problem)", 10, |rng| {
+        for entry in ProblemRegistry::builtin().entries() {
+            let ds = SyntheticSpec::tiny()
+                .with_samples(40 + rng.below(40))
+                .with_dim(20 + rng.below(30))
+                .with_regression(entry.meta.regression_targets)
+                .generate(rng.next_u64());
+            let part = ds.partition_seeded(2, rng.next_u64());
+            let lam = rng.uniform() * 0.2;
+            // generic knobs: constructors read the keys they know
+            let params = Json::from_pairs(vec![
+                ("l1", Json::Num(0.002 + 0.05 * rng.uniform())),
+                ("gamma", Json::Num(0.2 + rng.uniform())),
+            ]);
+            let spec =
+                ProblemSpec::new(entry.meta.name, lam).with_params(params);
+            let p = entry
+                .build(&spec, &ds, part)
+                .map_err(|e| format!("{}: ctor failed: {e}", entry.meta.name))?;
+            let alpha = 0.05 + rng.uniform() * 3.0;
+            check_resolvent(p.as_ref(), alpha, rng.next_u64(), 10)
+                .map_err(|e| format!("{}: {e}", entry.meta.name))?;
+            check_monotone(p.as_ref(), rng.next_u64(), 30)
+                .map_err(|e| format!("{}: {e}", entry.meta.name))?;
         }
+        Ok(())
     });
 }
 
 #[test]
-fn prop_operators_monotone() {
-    prop_check("component monotonicity", 10, |rng| {
-        let ds = SyntheticSpec::tiny()
-            .with_samples(30)
-            .with_dim(25)
-            .generate(rng.next_u64());
-        let part = ds.partition_seeded(3, rng.next_u64());
-        let seed = rng.next_u64();
-        match rng.below(3) {
-            0 => check_monotone(&RidgeProblem::new(part, 0.01), seed, 30),
-            1 => check_monotone(&LogisticProblem::new(part, 0.01), seed, 30),
-            _ => check_monotone(&AucProblem::new(part, 0.01), seed, 30),
+fn prop_experiment_config_json_roundtrip() {
+    // `from_json(to_json(c)) == c` over randomized configs covering every
+    // field — a field added on one side but forgotten on the other (the
+    // PR 2 tcp trio was nearly droppable) fails this immediately.
+    use dsba::graph::TopologyKind;
+    use dsba::runtime::{EngineKind, EngineSpec, TcpSpec, TransportKind};
+    use dsba::util::json::Json;
+    // dyadic rationals survive decimal printing exactly
+    fn dyadic(rng: &mut Rng, scale: f64) -> f64 {
+        (rng.normal() * scale * 16.0).round() / 16.0
+    }
+    prop_check("ExperimentConfig json roundtrip", 40, |rng| {
+        let problems = ProblemRegistry::builtin().names();
+        let problem = problems[rng.below(problems.len())].to_string();
+        let topologies = [
+            TopologyKind::ErdosRenyi,
+            TopologyKind::Ring,
+            TopologyKind::Grid2d,
+            TopologyKind::SmallWorld,
+        ];
+        let methods = AlgorithmKind::all();
+        let engine = EngineSpec {
+            kind: if rng.bernoulli(0.5) {
+                EngineKind::Sequential
+            } else {
+                EngineKind::Parallel
+            },
+            threads: rng.below(8),
+            transport: if rng.bernoulli(0.5) {
+                TransportKind::Local
+            } else {
+                TransportKind::Tcp
+            },
+            tcp: TcpSpec {
+                listen: format!("127.0.0.1:{}", rng.below(65536)),
+                peers: format!("{}=10.0.0.2:{}", rng.below(8), rng.below(65536)),
+                hosted: format!("0-{}", rng.below(8)),
+            },
+        };
+        let params = if rng.bernoulli(0.5) {
+            Json::Null
+        } else {
+            Json::from_pairs(vec![("l1", Json::Num(dyadic(rng, 0.01).abs()))])
+        };
+        let c = ExperimentConfig {
+            problem,
+            problem_params: params,
+            dataset: ["tiny", "rcv1-like", "news20-like"][rng.below(3)].into(),
+            samples: rng.below(5000),
+            dim: rng.below(4096),
+            lambda: dyadic(rng, 0.1),
+            nodes: 1 + rng.below(32),
+            topology: topologies[rng.below(topologies.len())],
+            edge_prob: (rng.below(17) as f64) / 16.0,
+            algorithm: methods[rng.below(methods.len())],
+            alpha: dyadic(rng, 1.0),
+            passes: dyadic(rng, 50.0).abs(),
+            seed: rng.below(1 << 31) as u64,
+            record_points: rng.below(500),
+            charitable_sparse: rng.bernoulli(0.5),
+            engine,
+        };
+        let back = ExperimentConfig::from_json(&c.to_json().to_string())
+            .map_err(|e| format!("serialized config failed to parse: {e}"))?;
+        if back != c {
+            return Err(format!("roundtrip mismatch:\n  in:  {c:?}\n  out: {back:?}"));
         }
+        Ok(())
     });
 }
 

@@ -1,0 +1,134 @@
+//! Name/alias round-trip pins for every selector in the system: each
+//! kind's `parse(name(k)) == Some(k)`, every documented alias parses to
+//! the same kind, and the problem registry resolves every registered
+//! spelling.  These tables are the single source behind the CLI listings,
+//! so this suite is what keeps `dsba help`/`dsba info` truthful.
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::graph::TopologyKind;
+use dsba::operators::{ProblemRegistry, ProblemSpec};
+use dsba::prelude::*;
+use dsba::util::json::Json;
+
+#[test]
+fn algorithm_kind_name_parse_roundtrip_including_aliases() {
+    for &k in AlgorithmKind::all() {
+        assert_eq!(
+            AlgorithmKind::parse(k.name()),
+            Some(k),
+            "canonical name {} must parse",
+            k.name()
+        );
+        // case-insensitive
+        assert_eq!(AlgorithmKind::parse(&k.name().to_ascii_lowercase()), Some(k));
+        assert_eq!(AlgorithmKind::parse(&k.name().to_ascii_uppercase()), Some(k));
+        for alias in k.aliases() {
+            assert_eq!(
+                AlgorithmKind::parse(alias),
+                Some(k),
+                "alias {alias} must parse to {}",
+                k.name()
+            );
+        }
+    }
+    // historical spellings stay accepted
+    assert_eq!(AlgorithmKind::parse("dsba-s"), Some(AlgorithmKind::DsbaSparse));
+    assert_eq!(AlgorithmKind::parse("dsba_sparse"), Some(AlgorithmKind::DsbaSparse));
+    assert_eq!(AlgorithmKind::parse("p-extra"), Some(AlgorithmKind::PExtra));
+    assert_eq!(AlgorithmKind::parse("point-saga"), Some(AlgorithmKind::PointSaga));
+    assert_eq!(AlgorithmKind::parse("nope"), None);
+}
+
+#[test]
+fn engine_transport_topology_kinds_roundtrip() {
+    for k in [EngineKind::Sequential, EngineKind::Parallel] {
+        assert_eq!(EngineKind::parse(k.name()), Some(k));
+    }
+    for k in [TransportKind::Local, TransportKind::Tcp] {
+        assert_eq!(TransportKind::parse(k.name()), Some(k));
+    }
+    for k in [
+        TopologyKind::ErdosRenyi,
+        TopologyKind::Ring,
+        TopologyKind::Path,
+        TopologyKind::Star,
+        TopologyKind::Complete,
+        TopologyKind::Grid2d,
+        TopologyKind::SmallWorld,
+    ] {
+        assert_eq!(TopologyKind::parse(k.name()), Some(k));
+    }
+}
+
+#[test]
+fn problem_registry_resolves_every_registered_spelling() {
+    let reg = ProblemRegistry::builtin();
+    // names are present and unique
+    let names = reg.names();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), names.len(), "duplicate canonical names");
+    for e in reg.entries() {
+        assert_eq!(reg.canonical(e.meta.name), Some(e.meta.name));
+        assert_eq!(reg.canonical(&e.meta.name.to_ascii_uppercase()), Some(e.meta.name));
+        for alias in e.meta.aliases {
+            assert_eq!(
+                reg.canonical(alias),
+                Some(e.meta.name),
+                "alias {alias} must resolve"
+            );
+        }
+        // the describe() table covers every entry (CLI cannot drift)
+        assert!(
+            reg.describe().contains(e.meta.name),
+            "{} missing from describe()",
+            e.meta.name
+        );
+    }
+    assert!(reg.resolve("not-a-problem").is_none());
+}
+
+#[test]
+fn registry_problems_run_one_round_through_the_experiment_driver() {
+    // every registered problem is actually runnable end to end (build ->
+    // topology -> algorithm -> metrics) straight from a config that names
+    // it — the registry is an execution surface, not just a lookup table
+    for e in ProblemRegistry::builtin().entries() {
+        let cfg = ExperimentConfig {
+            problem: e.meta.name.into(),
+            dataset: "tiny".into(),
+            nodes: 4,
+            passes: 1.0,
+            ..Default::default()
+        };
+        let mut exp = cfg.build().unwrap_or_else(|err| {
+            panic!("{}: config build failed: {err}", e.meta.name)
+        });
+        let trace = exp.run();
+        assert!(!trace.rows.is_empty(), "{}: no metrics rows", e.meta.name);
+        let auc = trace.last_auc();
+        if !e.meta.has_objective {
+            assert!(auc.is_finite(), "{}: saddle problem must report AUC", e.meta.name);
+        }
+    }
+}
+
+#[test]
+fn registry_constructors_reject_bad_params_with_clean_errors() {
+    // constructors must return Err (never panic) on out-of-range knobs
+    let reg = ProblemRegistry::builtin();
+    let ds = SyntheticSpec::tiny().generate(3);
+    for (name, key) in [("elastic-net", "l1"), ("smoothed-hinge", "gamma")] {
+        let Some(e) = reg.resolve(name) else {
+            continue; // workload not registered yet in this build
+        };
+        let part = ds.partition_seeded(2, 1);
+        let spec = ProblemSpec::new(name, 0.05)
+            .with_params(Json::from_pairs(vec![(key, Json::Num(-1.0))]));
+        assert!(
+            e.build(&spec, &ds, part).is_err(),
+            "{name}: negative {key} must be rejected"
+        );
+    }
+}

@@ -125,13 +125,14 @@ fn sparse_comm_wins_on_sparse_data_loses_on_dense() {
 fn dsba_s_through_experiment_driver() {
     let ds = SyntheticSpec::tiny().with_regression(true).generate(8);
     let topo = Topology::erdos_renyi(5, 0.5, 13);
-    let mut exp = Experiment::new(
+    let mut exp = Experiment::builder(
         RidgeProblem::new(ds.partition_seeded(5, 2), 0.05),
         topo,
         AlgorithmKind::DsbaSparse,
     )
-    .with_step_size(0.7)
-    .with_passes(50.0);
+    .step_size(0.7)
+    .passes(50.0)
+    .build();
     let t = exp.run();
     assert!(t.last_suboptimality() < 1e-7, "{:.3e}", t.last_suboptimality());
 }
