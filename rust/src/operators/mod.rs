@@ -17,9 +17,11 @@
 mod ridge;
 mod logistic;
 mod auc;
+mod elastic_net;
 pub mod registry;
 
 pub use auc::AucProblem;
+pub use elastic_net::ElasticNetProblem;
 pub use logistic::LogisticProblem;
 pub use registry::{ProblemEntry, ProblemMeta, ProblemRegistry, ProblemSpec};
 pub use ridge::RidgeProblem;

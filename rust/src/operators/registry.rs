@@ -140,6 +140,7 @@ impl ProblemRegistry {
                 super::ridge::entry(),
                 super::logistic::entry(),
                 super::auc::entry(),
+                super::elastic_net::entry(),
             ])
             .expect("builtin problem registry is well-formed")
         })

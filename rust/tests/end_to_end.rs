@@ -85,6 +85,39 @@ fn full_stack_dsba_s_and_xla_cross_check() {
 }
 
 #[test]
+fn full_stack_elastic_net_through_registry() {
+    // registry-built workload end to end: DSBA's proximal backward must
+    // drive the l1-aware suboptimality down against the KKT reference
+    // optimum, with zero changes to algorithms/runtime/comm
+    let cfg = ExperimentConfig {
+        problem: "elastic-net".into(),
+        problem_params: dsba::util::json::parse("{\"l1\": 0.001}").unwrap(),
+        dataset: "rcv1-like".into(),
+        samples: 400,
+        dim: 1024,
+        nodes: 10,
+        algorithm: AlgorithmKind::Dsba,
+        lambda: 1e-3,
+        alpha: 2.0,
+        passes: 70.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut exp = cfg.build().expect("registry config builds");
+    let trace = exp.run();
+    assert!(
+        trace.last_suboptimality() < 1e-4,
+        "suboptimality {:.3e}",
+        trace.last_suboptimality()
+    );
+    // the reference optimum of a real l1 problem carries exact zeros
+    assert!(
+        trace.z_star.iter().any(|&v| v == 0.0),
+        "elastic-net z* should be sparse"
+    );
+}
+
+#[test]
 fn full_stack_auc_reaches_good_ranking() {
     let cfg = ExperimentConfig {
         problem: "auc".into(),

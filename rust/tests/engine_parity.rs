@@ -10,6 +10,7 @@
 use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
 use dsba::comm::{CommCostModel, Network};
 use dsba::graph::MixingMatrix;
+use dsba::operators::{ProblemRegistry, ProblemSpec};
 use dsba::prelude::*;
 use dsba::runtime::transport::TcpTransport;
 use dsba::runtime::ParallelEngine;
@@ -21,6 +22,22 @@ use std::time::Duration;
 fn ridge_world(nodes: usize, seed: u64) -> Arc<dyn Problem> {
     let ds = SyntheticSpec::tiny().with_regression(true).generate(seed);
     Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 3), 0.05))
+}
+
+/// Registry-built elastic net: parity must hold for problems constructed
+/// purely through the open registry (proximal backward included), not
+/// just for the hand-built seed trio.
+fn elastic_world(nodes: usize) -> Arc<dyn Problem> {
+    use dsba::util::json::Json;
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(23);
+    let entry = ProblemRegistry::builtin()
+        .resolve("elastic-net")
+        .expect("elastic-net is registered");
+    let spec = ProblemSpec::new("elastic-net", 0.05)
+        .with_params(Json::from_pairs(vec![("l1", Json::Num(0.02))]));
+    entry
+        .build(&spec, &ds, ds.partition_seeded(nodes, 3))
+        .expect("registry builds elastic-net")
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -192,6 +209,25 @@ fn parity_all_kinds_random_graph_tcp() {
             4,
             Backend::Tcp,
         );
+    }
+}
+
+/// Registry-built elastic net, local transport: the proximal backward
+/// (soft-threshold exact zeros included) must be bit-for-bit identical
+/// across drivers for both the dense method and the sparse relay.
+#[test]
+fn parity_registry_elastic_net_local() {
+    for kind in [AlgorithmKind::Dsba, AlgorithmKind::DsbaSparse] {
+        assert_parity_with(kind, Topology::ring(6), 40, 3, Backend::Local, &elastic_world);
+    }
+}
+
+/// Same, over loopback TCP sockets (the thresholded iterates and sparse
+/// deltas cross the framed wire codec).
+#[test]
+fn parity_registry_elastic_net_tcp() {
+    for kind in [AlgorithmKind::Dsba, AlgorithmKind::DsbaSparse] {
+        assert_parity_with(kind, Topology::ring(6), 20, 3, Backend::Tcp, &elastic_world);
     }
 }
 

@@ -76,6 +76,24 @@ fn equivalence_path_graph_max_diameter() {
 }
 
 #[test]
+fn equivalence_elastic_net_prox_replay() {
+    // proximal backward (l1 soft-threshold): the sparse relay's replay
+    // must apply the same resolvent when reconstructing remote rows, or
+    // every reconstruction drifts by ~alpha*l1 per coordinate per round
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(6);
+    check_equivalence(
+        Arc::new(dsba::operators::ElasticNetProblem::new(
+            ds.partition_seeded(5, 2),
+            0.05,
+            0.02,
+        )),
+        Topology::erdos_renyi(5, 0.5, 3),
+        0.7,
+        120,
+    );
+}
+
+#[test]
 fn equivalence_with_zero_lambda() {
     let ds = SyntheticSpec::tiny().with_regression(true).generate(5);
     check_equivalence(
