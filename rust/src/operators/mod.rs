@@ -18,10 +18,12 @@ mod ridge;
 mod logistic;
 mod auc;
 mod elastic_net;
+mod hinge;
 pub mod registry;
 
 pub use auc::AucProblem;
 pub use elastic_net::ElasticNetProblem;
+pub use hinge::SmoothedHingeProblem;
 pub use logistic::LogisticProblem;
 pub use registry::{ProblemEntry, ProblemMeta, ProblemRegistry, ProblemSpec};
 pub use ridge::RidgeProblem;

@@ -141,6 +141,7 @@ impl ProblemRegistry {
                 super::logistic::entry(),
                 super::auc::entry(),
                 super::elastic_net::entry(),
+                super::hinge::entry(),
             ])
             .expect("builtin problem registry is well-formed")
         })

@@ -118,6 +118,33 @@ fn full_stack_elastic_net_through_registry() {
 }
 
 #[test]
+fn full_stack_smoothed_hinge_through_registry() {
+    let cfg = ExperimentConfig {
+        problem: "smoothed-hinge".into(),
+        dataset: "rcv1-like".into(),
+        samples: 400,
+        dim: 1024,
+        nodes: 10,
+        algorithm: AlgorithmKind::Dsba,
+        lambda: 1e-2,
+        alpha: 1.0,
+        passes: 70.0,
+        seed: 11,
+        ..Default::default()
+    };
+    let mut exp = cfg.build().expect("registry config builds");
+    let trace = exp.run();
+    assert!(
+        trace.last_suboptimality() < 1e-3,
+        "suboptimality {:.3e}",
+        trace.last_suboptimality()
+    );
+    // hinge objective at the final averaged iterate beats the zero model
+    let last = trace.rows.last().unwrap();
+    assert!(last.objective < trace.rows[0].objective, "objective did not improve");
+}
+
+#[test]
 fn full_stack_auc_reaches_good_ranking() {
     let cfg = ExperimentConfig {
         problem: "auc".into(),
