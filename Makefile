@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt lint bench-engine bench-transport artifacts clean
+.PHONY: verify build test fmt lint doc bench-engine bench-transport artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -20,6 +20,10 @@ fmt:
 ## clippy over lib + bins + tests + benches, warnings are errors (CI gate)
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings
+
+## rustdoc with warnings denied (broken intra-doc links fail; CI gate)
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 ## parallel-engine scaling table (wall-clock vs thread count)
 bench-engine:
