@@ -2,7 +2,8 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt lint doc bench-engine bench-transport artifacts clean
+.PHONY: verify build test fmt lint doc bench-engine bench-transport bench-saddle \
+        smoke artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -32,6 +33,19 @@ bench-engine:
 ## local vs loopback-TCP transport throughput (DOUBLEs/sec)
 bench-transport:
 	$(CARGO) bench --bench transport_overhead
+
+## saddle-workload figure bench (robust-ls + dro-bilinear, fig3-style)
+bench-saddle:
+	$(CARGO) bench --bench fig_saddle
+
+## one tiny end-to-end run per registered problem, enumerated from the
+## live registry (`dsba problems`) — the CI smoke gate for new entries
+smoke: build
+	set -e; for p in $$(target/release/dsba problems); do \
+	  echo "--- smoke: $$p ---"; \
+	  target/release/dsba run --problem $$p --dataset tiny --nodes 4 \
+	    --passes 1 --engine parallel --threads 2; \
+	done
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
 artifacts:

@@ -46,7 +46,7 @@ fn main() {
             spec.datasets = vec!["rcv1-like"];
         }
         let runs = spec.run();
-        summarize(&runs, spec.auc_scored());
+        summarize(&runs, spec.score_stat());
         write_results(&format!("fig{n}"), &runs);
     };
     match which.as_deref() {

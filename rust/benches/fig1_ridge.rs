@@ -5,7 +5,7 @@
 //!     cargo bench --bench fig1_ridge          (full grid)
 //!     cargo bench --bench fig1_ridge -- fast  (single dataset, short)
 
-use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::bench_harness::{summarize, write_results, FigureSpec, ScoreStat};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
@@ -18,7 +18,7 @@ fn main() {
         spec.dim = 1024;
     }
     let runs = spec.run();
-    summarize(&runs, false);
+    summarize(&runs, ScoreStat::Suboptimality);
     write_results("fig1_ridge", &runs);
 
     // shape check mirrored from the paper: stochastic methods dominate

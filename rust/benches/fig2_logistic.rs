@@ -3,7 +3,7 @@
 //!
 //!     cargo bench --bench fig2_logistic [-- fast]
 
-use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::bench_harness::{summarize, write_results, FigureSpec, ScoreStat};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
@@ -16,6 +16,6 @@ fn main() {
         spec.dim = 1024;
     }
     let runs = spec.run();
-    summarize(&runs, false);
+    summarize(&runs, ScoreStat::Suboptimality);
     write_results("fig2_logistic", &runs);
 }

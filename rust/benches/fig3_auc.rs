@@ -5,7 +5,7 @@
 //!     cargo bench --bench fig3_auc [-- fast]
 
 use dsba::algorithms::AlgorithmKind;
-use dsba::bench_harness::{summarize, write_results, FigureSpec};
+use dsba::bench_harness::{summarize, write_results, FigureSpec, ScoreStat};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "fast");
@@ -23,7 +23,7 @@ fn main() {
         spec.dim = 1024;
     }
     let runs = spec.run();
-    summarize(&runs, true);
+    summarize(&runs, ScoreStat::Auc);
     write_results("fig3_auc", &runs);
 
     for (ds, m, t) in &runs {

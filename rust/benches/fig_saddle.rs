@@ -1,0 +1,50 @@
+//! Saddle-workload figure bench: the two minimax registry entries
+//! (robust-ls, dro-bilinear) under DSBA / DSBA-s / DSA / EXTRA, printing
+//! the saddle-residual series against passes and C_max DOUBLEs — the
+//! fig3-style panels generalized from the AUC statistic to the generic
+//! saddle merit. The residual must shrink geometrically under DSBA
+//! (Theorem 6.1's monotone-operator statement covers saddle operators);
+//! `rust/tests/saddle.rs` pins that on CI-sized configs.
+//!
+//!     cargo bench --bench fig_saddle [-- fast]
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::bench_harness::{summarize, write_results, FigureSpec, ScoreStat};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    for problem in ["robust-ls", "dro-bilinear"] {
+        let mut spec = FigureSpec::defaults(problem);
+        spec.title = match problem {
+            "robust-ls" => "Saddle figure: robust least squares",
+            _ => "Saddle figure: DRO bilinear margin game",
+        };
+        spec.methods = vec![
+            AlgorithmKind::Dsba,
+            AlgorithmKind::DsbaSparse,
+            AlgorithmKind::Dsa,
+            AlgorithmKind::Extra,
+        ];
+        spec.samples = 300;
+        spec.dim = 1024;
+        spec.passes = 10.0;
+        if fast {
+            spec.datasets = vec!["sector-like"];
+            spec.passes = 4.0;
+            spec.samples = 200;
+            spec.dim = 512;
+        }
+        let runs = spec.run();
+        summarize(&runs, ScoreStat::SaddleResidual);
+        write_results(&format!("fig_saddle_{problem}"), &runs);
+        for (ds, m, t) in &runs {
+            let first = t.rows.first().map(|r| r.saddle_res).unwrap_or(f64::NAN);
+            println!(
+                "[{ds}] {} saddle residual {:.3e} -> {:.3e}",
+                m.name(),
+                first,
+                t.last_saddle_res()
+            );
+        }
+    }
+}

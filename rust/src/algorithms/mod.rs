@@ -54,6 +54,7 @@ pub use ssda::Ssda;
 
 use crate::comm::{Message, Network, Outgoing};
 use crate::graph::MixingMatrix;
+use crate::metrics::GlobalStats;
 use crate::operators::Problem;
 use std::sync::Arc;
 
@@ -77,6 +78,20 @@ pub trait Algorithm {
     fn iteration(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Split-hosted engines override this: exchange per-node stat rows
+    /// (iterate, eval count, and the caller-supplied received-DOUBLE
+    /// totals, indexed by node) with the peer engines hosting the rest
+    /// of the topology, and return the complete global row set. `None`
+    /// — the default — means this driver already executes every node,
+    /// so the caller computes metrics locally. Lockstep contract: in a
+    /// split run every process must call this at the same rounds (the
+    /// coordinator's sampling schedule is derived from shared config,
+    /// which guarantees it).
+    fn global_stats(&mut self, received: &[f64]) -> Option<GlobalStats> {
+        let _ = received;
+        None
+    }
 }
 
 /// One node's slice of a decentralized method: the unit both the

@@ -7,9 +7,21 @@ use crate::algorithms::AlgorithmKind;
 use crate::config::ExperimentConfig;
 use crate::coordinator::Trace;
 use crate::metrics::format_table;
-use crate::operators::ProblemRegistry;
+use crate::operators::{ProblemRegistry, SaddleStat};
 use crate::runtime::EngineSpec;
 use crate::util::json::Json;
+
+/// Which final statistic ranks methods in a figure summary — derived
+/// from the problem's registry metadata (see [`FigureSpec::score_stat`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreStat {
+    /// lowest final suboptimality wins (objective problems)
+    Suboptimality,
+    /// highest final AUC wins (`SaddleStat::AucRanking` problems)
+    Auc,
+    /// lowest final saddle residual wins (generic saddle problems)
+    SaddleResidual,
+}
 
 /// Print a bench section header.
 pub fn header(title: &str) {
@@ -68,13 +80,19 @@ impl FigureSpec {
         }
     }
 
-    /// The configured problem is scored by the AUC statistic rather than
-    /// an objective (drives the summary direction).
-    pub fn auc_scored(&self) -> bool {
-        ProblemRegistry::builtin()
+    /// Summary statistic for the configured problem, resolved from its
+    /// registry capability metadata: AUC-scored saddles rank by AUC,
+    /// generic saddles by the saddle residual, everything else by
+    /// suboptimality.
+    pub fn score_stat(&self) -> ScoreStat {
+        match ProblemRegistry::builtin()
             .resolve(self.problem)
-            .map(|e| !e.meta.has_objective)
-            .unwrap_or(false)
+            .map(|e| e.meta.saddle_stat)
+        {
+            Some(Some(SaddleStat::AucRanking)) => ScoreStat::Auc,
+            Some(Some(SaddleStat::Residual)) => ScoreStat::SaddleResidual,
+            _ => ScoreStat::Suboptimality,
+        }
     }
 
     /// Run the full grid, printing each series and returning
@@ -149,29 +167,39 @@ pub fn write_results(name: &str, runs: &[(String, AlgorithmKind, Trace)]) {
     }
 }
 
-/// Summarize winners: lowest suboptimality (or highest AUC) per dataset.
-pub fn summarize(runs: &[(String, AlgorithmKind, Trace)], auc: bool) {
+/// Summarize winners per dataset: lowest suboptimality, highest AUC, or
+/// lowest saddle residual, per the figure's [`ScoreStat`].
+pub fn summarize(runs: &[(String, AlgorithmKind, Trace)], stat: ScoreStat) {
     header("summary");
     let mut datasets: Vec<&String> = runs.iter().map(|(d, _, _)| d).collect();
     datasets.dedup();
+    let key = |t: &Trace| match stat {
+        ScoreStat::Auc => -t.last_auc(),
+        ScoreStat::SaddleResidual => t.last_saddle_res(),
+        ScoreStat::Suboptimality => t.last_suboptimality(),
+    };
     for ds in datasets {
         let best = runs
             .iter()
             .filter(|(d, _, _)| d == ds)
-            .min_by(|a, b| {
-                let ka = if auc { -a.2.last_auc() } else { a.2.last_suboptimality() };
-                let kb = if auc { -b.2.last_auc() } else { b.2.last_suboptimality() };
-                ka.partial_cmp(&kb).unwrap()
-            })
+            .min_by(|a, b| key(&a.2).partial_cmp(&key(&b.2)).unwrap())
             .unwrap();
-        if auc {
-            println!("{ds}: best final AUC = {} ({:.4})", best.1.name(), best.2.last_auc());
-        } else {
-            println!(
+        match stat {
+            ScoreStat::Auc => println!(
+                "{ds}: best final AUC = {} ({:.4})",
+                best.1.name(),
+                best.2.last_auc()
+            ),
+            ScoreStat::SaddleResidual => println!(
+                "{ds}: best final saddle residual = {} ({:.3e})",
+                best.1.name(),
+                best.2.last_saddle_res()
+            ),
+            ScoreStat::Suboptimality => println!(
                 "{ds}: best final suboptimality = {} ({:.3e})",
                 best.1.name(),
                 best.2.last_suboptimality()
-            );
+            ),
         }
     }
 }

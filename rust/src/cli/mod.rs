@@ -35,6 +35,14 @@ fn dispatch(args: &[String]) -> i32 {
         Some("run") => cmd_run(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
+        Some("problems") => {
+            // machine-readable canonical names, one per line — the
+            // registry-driven loop behind `make smoke`
+            for name in ProblemRegistry::builtin().names() {
+                println!("{name}");
+            }
+            0
+        }
         Some("artifacts") => cmd_artifacts(),
         Some("help") | None => {
             print_help();
@@ -80,7 +88,9 @@ USAGE:
             --peers \"5=host:port,...\" splits one run across engine
             processes, each reporting metrics for its own nodes)
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
-  dsba info [--dataset NAME] [--nodes N]   problem registry, methods, dataset stats
+  dsba info [--dataset NAME] [--nodes N]   registry capability table, methods,
+                          dataset stats (saddle / l1 / resolvent per problem)
+  dsba problems           canonical problem names, one per line (for scripting)
   dsba artifacts          verify the XLA artifact directory
   dsba help",
         problems = problem_list(),
@@ -291,7 +301,7 @@ fn cmd_figure(args: &[String]) -> i32 {
         spec.methods = m;
     }
     let runs = spec.run();
-    crate::bench_harness::summarize(&runs, spec.auc_scored());
+    crate::bench_harness::summarize(&runs, spec.score_stat());
     0
 }
 
@@ -421,6 +431,30 @@ mod tests {
         // `info` must succeed with no flags, enumerating problems and
         // methods straight from the registries
         assert_eq!(dispatch(&["info".to_string()]), 0);
+    }
+
+    #[test]
+    fn problems_lists_canonical_names() {
+        assert_eq!(dispatch(&["problems".to_string()]), 0);
+    }
+
+    #[test]
+    fn info_capability_table_covers_every_entry() {
+        // the `dsba info` capability table is generated from live
+        // registry metadata: every entry's resolvent kind shows up, and
+        // saddle entries are marked
+        let table = ProblemRegistry::builtin().describe();
+        for e in ProblemRegistry::builtin().entries() {
+            assert!(table.contains(e.meta.name), "{} missing", e.meta.name);
+            assert!(
+                table.contains(e.meta.resolvent.name()),
+                "{} resolvent kind missing",
+                e.meta.name
+            );
+        }
+        for col in ["saddle", "l1", "resolvent"] {
+            assert!(table.contains(col), "capability column {col} missing");
+        }
     }
 
     #[test]

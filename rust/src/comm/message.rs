@@ -107,7 +107,7 @@ impl Message {
     /// invalid [`SparseVec`]. Accepted frames are canonical:
     /// `decode(b)?.encode() == b`.
     pub fn decode(buf: &[u8]) -> Result<Message, String> {
-        let mut r = Reader { buf, pos: 0 };
+        let mut r = Reader::new(buf);
         let tag = r.u8()?;
         let msg = match tag {
             TAG_DENSE => {
@@ -172,12 +172,20 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_bits().to_le_bytes());
 }
 
-struct Reader<'a> {
+/// Bounds-checked little-endian reader behind every wire codec in the
+/// system ([`Message::decode`] here, the metrics layer's STATS-payload
+/// codec): length fields are always validated against the remaining
+/// buffer before any allocation.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         // checked: a huge `n` must fail cleanly, not wrap the bound below
         let end = self
@@ -192,14 +200,14 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
     /// Read a u64 element-count field and bound it by the bytes actually
     /// left in the buffer (`elem_bytes` per element), so corrupt frames
     /// can never drive an over-allocation.
-    fn count(&mut self, what: &str, elem_bytes: usize) -> Result<usize, String> {
+    pub(crate) fn count(&mut self, what: &str, elem_bytes: usize) -> Result<usize, String> {
         let raw = self.u64()?;
         let max = (self.remaining() / elem_bytes) as u64;
         if raw > max {
@@ -214,15 +222,15 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, String> {
+    pub(crate) fn f64(&mut self) -> Result<f64, String> {
         Ok(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())))
     }
 }

@@ -12,5 +12,8 @@ mod network;
 mod relay;
 
 pub use message::{Message, Outgoing};
+// the bounded wire reader is shared with the metrics STATS-payload codec
+// so every frame family gets the same corrupt-frame hardening
+pub(crate) use message::Reader;
 pub use network::{CommCostModel, Network};
 pub use relay::{RelayDelta, RelayProtocol};

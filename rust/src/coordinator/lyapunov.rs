@@ -6,6 +6,13 @@
 //! `E[H^{t+1}] <= (1 - min{gamma/12, mu/48L, 1/3q, 1/4}) E[H^t]` for
 //! `alpha <= 1/(24 L)`; the `theorem61` bench measures the empirical
 //! per-step contraction against that bound.
+//!
+//! The probe is operator-generic (its terms read only `coefs`,
+//! `full_operator` and the row norms), so it applies verbatim to saddle
+//! registry entries — the theorem's monotone-operator statement is what
+//! lets DSBA keep the same geometric-rate verification story on minimax
+//! workloads (cf. DSA, arXiv:1506.04216, for the gradient special
+//! case).
 
 use crate::algorithms::{Algorithm, Dsba};
 use crate::graph::MixingMatrix;
@@ -235,5 +242,36 @@ mod tests {
             "measured contraction {measured} vs bound {bound}"
         );
         assert!(h.last().unwrap() < &(h[0] * 1e-3));
+    }
+
+    #[test]
+    fn lyapunov_decreases_on_a_saddle_workload() {
+        // the probe applied to a minimax registry entry: H^t must decay
+        // under DSBA at the theorem's step size (well-conditioned
+        // instance so the run length stays CI-sized)
+        use crate::operators::RobustLsProblem;
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(83);
+        let part = ds.partition_seeded(4, 3);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let p: Arc<dyn Problem> = Arc::new(RobustLsProblem::new(part, 1.0, 2.0));
+        let z_star = solve_optimum(p.as_ref(), 1e-12);
+        let mut probe = LyapunovProbe::new(p.clone(), &mix, z_star, 0.0);
+        let alpha = probe.max_alpha();
+        let params = AlgoParams::new(alpha, p.dim(), 7);
+        let mut alg = crate::algorithms::Dsba::new(p.clone(), mix, topo.clone(), &params);
+        let mut net = Network::new(topo, CommCostModel::default());
+        let mut h = Vec::new();
+        for _ in 0..60 * p.q() {
+            alg.step(&mut net);
+            h.push(probe.observe(&alg));
+        }
+        assert!(h.iter().all(|v| v.is_finite()));
+        assert!(
+            h.last().unwrap() < &(h[0] * 0.5),
+            "H did not decay: {} -> {}",
+            h[0],
+            h.last().unwrap()
+        );
     }
 }

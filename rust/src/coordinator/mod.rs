@@ -11,8 +11,8 @@ pub use optimum::solve_optimum;
 use crate::algorithms::{self, AlgoParams, Algorithm, AlgorithmKind};
 use crate::comm::{CommCostModel, Network};
 use crate::graph::{MixingMatrix, Topology};
-use crate::metrics::{auc_score, suboptimality, MetricsRow};
-use crate::operators::Problem;
+use crate::metrics::{auc_score, suboptimality, GlobalStats, MetricsRow};
+use crate::operators::{Problem, SaddleStat, SaddleStructure};
 use crate::runtime::transport::tcp_from_spec;
 use crate::runtime::{EngineKind, EngineSpec, ParallelEngine, TcpSpec, TransportKind};
 use crate::util::timer::Timer;
@@ -244,20 +244,28 @@ impl Experiment {
         let stride = (total_rounds / self.record_points.max(1)).max(1);
         let timer = Timer::start();
         let mut rows = Vec::new();
-        let hosted = hosted_rows.as_deref();
-        rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs(), hosted));
+        let hosted = hosted_rows;
+        rows.push(self.sample(alg.as_mut(), &net, &z_star, timer.secs(), hosted.as_deref()));
         let mut round = 0;
         // split-hosted processes must run the exact same number of rounds
         // (they are socket-lockstepped), so the share-local passes()
         // early-exit — which can diverge across processes for
         // inner-solver methods — is disabled; total_rounds is computed
-        // identically from the shared config on every process
+        // identically from the shared config on every process. The same
+        // lockstep makes the per-sample stats exchange safe: every
+        // process samples at identical rounds.
         let split = hosted.is_some();
         while round < total_rounds && (split || alg.passes() < self.passes_target) {
             alg.step(&mut net);
             round += 1;
             if round % stride == 0 || round == total_rounds {
-                rows.push(self.sample(alg.as_ref(), &net, &z_star, timer.secs(), hosted));
+                rows.push(self.sample(
+                    alg.as_mut(),
+                    &net,
+                    &z_star,
+                    timer.secs(),
+                    hosted.as_deref(),
+                ));
             }
         }
         Ok(Trace { method: self.kind, rows, z_star })
@@ -265,14 +273,33 @@ impl Experiment {
 
     fn sample(
         &self,
-        alg: &dyn Algorithm,
+        alg: &mut dyn Algorithm,
         net: &Network,
         z_star: &[f64],
         wall: f64,
         hosted: Option<&[usize]>,
     ) -> MetricsRow {
+        // split-hosted runs: piggyback per-node stat rows on the
+        // transport's end-of-round control channel so the reported
+        // series is global, not a per-process share
+        if hosted.is_some() {
+            let received: Vec<f64> =
+                (0..self.topo.n).map(|m| net.received_by(m)).collect();
+            if let Some(gs) = alg.global_stats(&received) {
+                return global_metrics_row(
+                    self.problem.as_ref(),
+                    &gs,
+                    z_star,
+                    alg.iteration(),
+                    wall,
+                );
+            }
+        }
+        let iter = alg.iteration();
+        let passes = alg.passes();
         let all = alg.iterates();
-        // split-hosted runs: score only the rows this engine steps
+        // defensive fallback: a driver without a stats exchange scores
+        // its own share only
         let hosted_view: Vec<Vec<f64>>;
         let zs: &[Vec<f64>] = match hosted {
             Some(rows) => {
@@ -281,29 +308,104 @@ impl Experiment {
             }
             None => all,
         };
-        let avg = average_iterate(zs);
-        let is_auc = self.problem.auc_metric();
-        MetricsRow {
-            iter: alg.iteration(),
-            passes: alg.passes(),
-            // split-hosted: C_max over this engine's share (receive-side
-            // events keep hosted rows exact; remote rows are partial)
-            comm_doubles: match hosted {
-                Some(rows) => {
-                    rows.iter().map(|&n| net.received_by(n)).fold(0.0, f64::max)
-                }
-                None => net.max_received(),
-            },
-            suboptimality: suboptimality(zs, z_star),
-            objective: self.problem.objective(&avg).unwrap_or(f64::NAN),
-            auc: if is_auc {
-                auc_score(self.problem.partition(), &avg)
-            } else {
-                f64::NAN
-            },
-            wall_secs: wall,
-        }
+        let comm = match hosted {
+            Some(rows) => rows.iter().map(|&n| net.received_by(n)).fold(0.0, f64::max),
+            None => net.max_received(),
+        };
+        metrics_row_from(self.problem.as_ref(), zs, z_star, iter, passes, comm, wall)
     }
+}
+
+/// Assemble one metrics row from a complete iterate set — the shared
+/// core of local sampling and split-run aggregation. Branches on the
+/// problem's declared [`SaddleStructure`] (never on `auc_metric()`): a
+/// saddle split turns on the residual and restricted-gap series, and
+/// only `SaddleStat::AucRanking` turns on the ranking statistic.
+fn metrics_row_from(
+    problem: &dyn Problem,
+    zs: &[Vec<f64>],
+    z_star: &[f64],
+    iter: usize,
+    passes: f64,
+    comm_doubles: f64,
+    wall: f64,
+) -> MetricsRow {
+    let avg = average_iterate(zs);
+    let saddle = problem.saddle();
+    MetricsRow {
+        iter,
+        passes,
+        comm_doubles,
+        suboptimality: suboptimality(zs, z_star),
+        objective: problem.objective(&avg).unwrap_or(f64::NAN),
+        auc: if saddle.is_some_and(|s| s.stat == SaddleStat::AucRanking) {
+            auc_score(problem.partition(), &avg)
+        } else {
+            f64::NAN
+        },
+        saddle_res: if saddle.is_some() {
+            problem.global_residual(&avg)
+        } else {
+            f64::NAN
+        },
+        saddle_gap: match saddle {
+            Some(s) => restricted_gap(problem, &s, &avg, z_star).unwrap_or(f64::NAN),
+            None => f64::NAN,
+        },
+        wall_secs: wall,
+    }
+}
+
+/// Restricted duality gap `L(x, y*) - L(x*, y)`: nonnegative by the
+/// saddle-point property of `(x*, y*)`, zero exactly at the saddle
+/// point, and O(||z - z*||) for smooth couplings — so it inherits
+/// DSBA's geometric rate. `None` when the problem does not expose
+/// [`Problem::saddle_value`].
+pub fn restricted_gap(
+    problem: &dyn Problem,
+    s: &SaddleStructure,
+    z: &[f64],
+    z_star: &[f64],
+) -> Option<f64> {
+    let pd = s.primal_dims;
+    let mut x_ystar = z.to_vec();
+    x_ystar[pd..].copy_from_slice(&z_star[pd..]);
+    let mut xstar_y = z_star.to_vec();
+    xstar_y[pd..].copy_from_slice(&z[pd..]);
+    Some(problem.saddle_value(&x_ystar)? - problem.saddle_value(&xstar_y)?)
+}
+
+/// Metrics row of a split-hosted run, computed from the aggregated
+/// global stat rows (every node's iterate, eval count and received
+/// DOUBLEs — sorted by node index). Identical arithmetic to the
+/// single-process path, so a split run's series is bit-for-bit the
+/// sequential oracle's.
+pub fn global_metrics_row(
+    problem: &dyn Problem,
+    gs: &GlobalStats,
+    z_star: &[f64],
+    iter: usize,
+    wall: f64,
+) -> MetricsRow {
+    assert_eq!(
+        gs.rows.len(),
+        problem.nodes(),
+        "split-run metrics aggregation incomplete: {} of {} node rows",
+        gs.rows.len(),
+        problem.nodes()
+    );
+    let zs: Vec<Vec<f64>> = gs.rows.iter().map(|r| r.z.clone()).collect();
+    let comm = gs.rows.iter().map(|r| r.received).fold(0.0, f64::max);
+    let evals: u64 = gs.rows.iter().map(|r| r.evals).sum();
+    metrics_row_from(
+        problem,
+        &zs,
+        z_star,
+        iter,
+        evals as f64 / gs.pass_denom,
+        comm,
+        wall,
+    )
 }
 
 /// Node-averaged iterate (metrics evaluation point).
@@ -331,6 +433,11 @@ impl Trace {
 
     pub fn last_auc(&self) -> f64 {
         self.rows.last().map(|r| r.auc).unwrap_or(f64::NAN)
+    }
+
+    /// Final saddle residual (NaN for non-saddle problems).
+    pub fn last_saddle_res(&self) -> f64 {
+        self.rows.last().map(|r| r.saddle_res).unwrap_or(f64::NAN)
     }
 
     pub fn final_comm(&self) -> f64 {

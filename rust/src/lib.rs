@@ -69,8 +69,8 @@ pub mod prelude {
     pub use crate::linalg::{CsrMatrix, DenseMatrix, SparseVec};
     pub use crate::metrics::MetricsRow;
     pub use crate::operators::{
-        AucProblem, LogisticProblem, Problem, ProblemRegistry, ProblemSpec,
-        RidgeProblem,
+        AucProblem, DroBilinearProblem, LogisticProblem, Problem, ProblemRegistry,
+        ProblemSpec, RidgeProblem, RobustLsProblem, SaddleStat, SaddleStructure,
     };
     pub use crate::runtime::{
         EngineKind, EngineSpec, ParallelEngine, TcpSpec, TcpTransport, TransportKind,

@@ -6,6 +6,17 @@
 //!   (x-axis of the right panels, §7).
 //! * suboptimality `sum_n ||z_n - z*||^2 / N` (objective-style problems)
 //!   and the AUC statistic (§7.3).
+//! * the saddle merit series for minimax problems
+//!   ([`crate::operators::SaddleStructure`]): the saddle residual
+//!   `||sum_n (B_n + lambda I)(z_avg)||` and — when the problem exposes
+//!   [`crate::operators::Problem::saddle_value`] — the restricted
+//!   duality gap `L(x, y*) - L(x*, y)`, both 0 exactly at the saddle
+//!   point and geometrically decreasing under DSBA.
+//!
+//! The module also defines [`NodeStatRow`]: the per-node metric row
+//! split-hosted engines exchange over the transport's STATS control
+//! frames so a cross-process run reports *global* series (its codec is
+//! property-tested like the message wire codec).
 
 use crate::data::Partition;
 use crate::util::json::Json;
@@ -23,8 +34,15 @@ pub struct MetricsRow {
     pub suboptimality: f64,
     /// global objective value (NaN for saddle problems)
     pub objective: f64,
-    /// AUC statistic at the averaged iterate (NaN unless AUC problem)
+    /// AUC statistic at the averaged iterate (NaN unless the problem
+    /// declares `SaddleStat::AucRanking`)
     pub auc: f64,
+    /// saddle residual at the averaged iterate (NaN unless the problem
+    /// declares a saddle split)
+    pub saddle_res: f64,
+    /// restricted duality gap `L(x, y*) - L(x*, y)` at the averaged
+    /// iterate (NaN unless the problem exposes `saddle_value`)
+    pub saddle_gap: f64,
     /// wall-clock seconds since experiment start
     pub wall_secs: f64,
 }
@@ -38,9 +56,80 @@ impl MetricsRow {
             ("suboptimality", Json::Num(self.suboptimality)),
             ("objective", Json::Num(self.objective)),
             ("auc", Json::Num(self.auc)),
+            ("saddle_res", Json::Num(self.saddle_res)),
+            ("saddle_gap", Json::Num(self.saddle_gap)),
             ("wall_secs", Json::Num(self.wall_secs)),
         ])
     }
+}
+
+/// One node's contribution to a split run's global metrics: the owning
+/// engine process fills these for its hosted nodes and peers exchange
+/// them over the transport's end-of-round STATS control frames.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeStatRow {
+    /// topology node index
+    pub node: u32,
+    /// component evaluations so far on this node (drives global passes)
+    pub evals: u64,
+    /// DOUBLEs received so far (exact: each process charges its hosted
+    /// nodes' inflow through receive-side cost events)
+    pub received: f64,
+    /// the node's current iterate
+    pub z: Vec<f64>,
+}
+
+/// Complete global row set of a split run plus the *global*
+/// effective-pass denominator (`N q`, unscaled by the hosted share).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalStats {
+    /// one row per topology node, sorted by node index
+    pub rows: Vec<NodeStatRow>,
+    /// `N * q` — global passes = sum of row evals / this
+    pub pass_denom: f64,
+}
+
+/// Serialize stat rows for a STATS control frame (little-endian, f64 via
+/// `to_bits` so the roundtrip is bit-exact — property-pinned).
+pub fn encode_stat_rows(rows: &[NodeStatRow]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+    for r in rows {
+        out.extend_from_slice(&r.node.to_le_bytes());
+        out.extend_from_slice(&r.evals.to_le_bytes());
+        out.extend_from_slice(&r.received.to_bits().to_le_bytes());
+        out.extend_from_slice(&(r.z.len() as u64).to_le_bytes());
+        for &v in &r.z {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a STATS payload. Total on arbitrary bytes — it reuses the
+/// bounded wire reader behind `Message::decode`, so every length field
+/// is validated against the remaining buffer before any allocation and
+/// trailing bytes are rejected.
+pub fn decode_stat_rows(buf: &[u8]) -> Result<Vec<NodeStatRow>, String> {
+    let mut r = crate::comm::Reader::new(buf);
+    // one row is at least node(4) + evals(8) + received(8) + z len(8)
+    let n_rows = r.count("stat row count", 28)?;
+    let mut rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let node = r.u32()?;
+        let evals = r.u64()?;
+        let received = r.f64()?;
+        let z_len = r.count("iterate length", 8)?;
+        let mut z = Vec::with_capacity(z_len);
+        for _ in 0..z_len {
+            z.push(r.f64()?);
+        }
+        rows.push(NodeStatRow { node, evals, received, z });
+    }
+    if r.remaining() != 0 {
+        return Err(format!("{} trailing bytes after stat rows", r.remaining()));
+    }
+    Ok(rows)
 }
 
 /// Exact AUC of the linear scores `A w` over all samples in the
@@ -114,12 +203,19 @@ pub fn write_trace_json(
 /// format, one row per sampled point).
 pub fn format_table(rows: &[MetricsRow]) -> String {
     let mut out = String::from(
-        "  iter      passes   comm_doubles   suboptimality      objective        auc\n",
+        "  iter      passes   comm_doubles   suboptimality      objective     \
+         saddle_res        auc\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{:>6}  {:>10.2}  {:>13.3e}  {:>14.6e}  {:>13.6e}  {:>9.4}\n",
-            r.iter, r.passes, r.comm_doubles, r.suboptimality, r.objective, r.auc
+            "{:>6}  {:>10.2}  {:>13.3e}  {:>14.6e}  {:>13.6e}  {:>13.6e}  {:>9.4}\n",
+            r.iter,
+            r.passes,
+            r.comm_doubles,
+            r.suboptimality,
+            r.objective,
+            r.saddle_res,
+            r.auc
         ));
     }
     out
@@ -176,10 +272,55 @@ mod tests {
             suboptimality: 1e-5,
             objective: 0.5,
             auc: f64::NAN,
+            saddle_res: 1e-3,
+            saddle_gap: f64::NAN,
             wall_secs: 0.1,
         }];
         let t = format_table(&rows);
         assert!(t.contains("passes"));
+        assert!(t.contains("saddle_res"));
         assert_eq!(t.lines().count(), 2);
+    }
+
+    #[test]
+    fn stat_rows_roundtrip_bit_exact() {
+        let rows = vec![
+            NodeStatRow {
+                node: 0,
+                evals: 41,
+                received: 1234.5,
+                z: vec![0.0, -0.0, 1.5, f64::MIN_POSITIVE],
+            },
+            NodeStatRow { node: 3, evals: 0, received: 0.0, z: vec![] },
+        ];
+        let enc = encode_stat_rows(&rows);
+        let back = decode_stat_rows(&enc).unwrap();
+        assert_eq!(back, rows);
+        // bit-exactness beyond PartialEq (signed zeros)
+        assert_eq!(encode_stat_rows(&back), enc);
+        // empty set roundtrips too
+        assert_eq!(decode_stat_rows(&encode_stat_rows(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn stat_row_decode_rejects_corrupt_payloads() {
+        let rows = vec![NodeStatRow {
+            node: 7,
+            evals: 9,
+            received: 2.5,
+            z: vec![1.0, 2.0],
+        }];
+        let enc = encode_stat_rows(&rows);
+        for k in 0..enc.len() {
+            assert!(decode_stat_rows(&enc[..k]).is_err(), "prefix {k} decoded Ok");
+        }
+        // huge row count must error before allocating
+        let mut b = enc.clone();
+        b[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_stat_rows(&b).is_err());
+        // trailing garbage rejected
+        let mut b = enc.clone();
+        b.push(0);
+        assert!(decode_stat_rows(&b).is_err());
     }
 }

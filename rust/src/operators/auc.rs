@@ -10,16 +10,16 @@
 //! The resolvent reduces to a 4x4 linear solve in `(m, a, b, theta)`
 //! (appendix eqs. (77)-(82), generalized to `||a_{n,i}||^2 = c`).
 
-use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
-use super::Problem;
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec, ResolventKind};
+use super::{Problem, SaddleStat, SaddleStructure};
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
 use crate::linalg::DenseMatrix;
 use std::sync::Arc;
 
 /// Registry entry (canonical `auc`): saddle problem (no objective —
-/// scored by the AUC ranking statistic), 3 dense tail dims, 4 scalar
-/// coefficients per component.
+/// scored by the AUC ranking statistic through the generic saddle
+/// subsystem), 3 dense tail dims, 4 scalar coefficients per component.
 pub(crate) fn entry() -> ProblemEntry {
     fn tuned(method: AlgorithmKind) -> f64 {
         use AlgorithmKind::*;
@@ -42,6 +42,9 @@ pub(crate) fn entry() -> ProblemEntry {
             aliases: &["auc-max"],
             summary: "l2-relaxed AUC maximization saddle operator (paper §7.3)",
             has_objective: false,
+            saddle_stat: Some(SaddleStat::AucRanking),
+            l1: false,
+            resolvent: ResolventKind::ClosedForm,
             tail_dims: 3,
             coef_width: 4,
             regression_targets: false,
@@ -230,8 +233,48 @@ impl Problem for AucProblem {
         Arc::new(AucProblem::new(part, self.lambda))
     }
 
-    fn auc_metric(&self) -> bool {
-        true
+    /// AUC is a client of the generic saddle subsystem: min over
+    /// `(w, a, b)` (the leading `d + 2` coordinates), max over `theta`
+    /// (the last), scored by the ranking statistic. The legacy
+    /// `auc_metric()` shim derives from this declaration.
+    fn saddle(&self) -> Option<SaddleStructure> {
+        Some(SaddleStructure {
+            primal_dims: self.d() + 2,
+            dual_dims: 1,
+            stat: SaddleStat::AucRanking,
+        })
+    }
+
+    /// The l2-relaxed AUC saddle function (Ying et al.'s F, per-sample
+    /// form behind eqs. (75)/(76)):
+    /// `(1-p)(m-a)^2 - 2(1-p)(1+theta) m - p(1-p) theta^2` for positives,
+    /// `p(m-b)^2 + 2p(1+theta) m - p(1-p) theta^2` for negatives,
+    /// averaged per node and summed, plus the analytic
+    /// `N lambda/2 (||w,a,b||^2 - theta^2)` split.
+    fn saddle_value(&self, z: &[f64]) -> Option<f64> {
+        let d = self.d();
+        let p = self.p;
+        let (a, b, theta) = (z[d], z[d + 1], z[d + 2]);
+        let mut total = 0.0;
+        for n in 0..self.nodes() {
+            let shard = self.shard(n);
+            let mut local = 0.0;
+            for i in 0..self.q() {
+                let m = shard.row_dot(i, z);
+                let class_term = if self.part.labels[n][i] > 0.0 {
+                    let dm = m - a;
+                    (1.0 - p) * dm * dm - 2.0 * (1.0 - p) * (1.0 + theta) * m
+                } else {
+                    let dm = m - b;
+                    p * dm * dm + 2.0 * p * (1.0 + theta) * m
+                };
+                local += class_term - p * (1.0 - p) * theta * theta;
+            }
+            total += local / self.q() as f64;
+        }
+        let primal_sq: f64 = z[..d + 2].iter().map(|v| v * v).sum();
+        total += self.nodes() as f64 * self.lambda / 2.0 * (primal_sq - theta * theta);
+        Some(total)
     }
 }
 
@@ -256,6 +299,19 @@ mod tests {
     fn components_monotone() {
         // per-sample saddle operator of a convex-concave function
         check_monotone(&problem(), 3, 200).unwrap();
+    }
+
+    #[test]
+    fn saddle_declaration_consistent_with_operator() {
+        // AUC as a *client* of the generic saddle subsystem: the declared
+        // split covers the variable, the shim derives the ranking stat,
+        // and the saddle function's gradient field is the operator
+        let p = problem();
+        let s = p.saddle().expect("AUC declares a saddle split");
+        assert_eq!(s.primal_dims, p.feature_dim() + 2);
+        assert_eq!(s.dual_dims, 1);
+        assert!(p.auc_metric());
+        crate::operators::check_saddle(&p, 11, 10).unwrap();
     }
 
     #[test]

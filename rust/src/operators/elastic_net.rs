@@ -22,7 +22,7 @@
 //! monotone bisection over the `2 nnz` activity breakpoints and solved
 //! exactly in closed form — `O(nnz log nnz)`, no iteration tolerance.
 
-use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec, ResolventKind};
 use super::Problem;
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
@@ -62,6 +62,9 @@ pub(crate) fn entry() -> ProblemEntry {
             aliases: &["elasticnet", "enet", "l1-ridge"],
             summary: "ridge + l1 (soft-threshold resolvent, proximal backward)",
             has_objective: true,
+            saddle_stat: None,
+            l1: true,
+            resolvent: ResolventKind::Proximal,
             tail_dims: 0,
             coef_width: 1,
             regression_targets: true,

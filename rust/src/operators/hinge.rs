@@ -17,7 +17,7 @@
 //! three segments are mutually exclusive and exhaustive in `v`, so the
 //! backward step needs no Newton iteration at all.
 
-use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec, ResolventKind};
 use super::Problem;
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
@@ -58,6 +58,9 @@ pub(crate) fn entry() -> ProblemEntry {
             aliases: &["hinge", "svm", "smooth-hinge"],
             summary: "smoothed-hinge SVM (closed-form piecewise resolvent)",
             has_objective: true,
+            saddle_stat: None,
+            l1: false,
+            resolvent: ResolventKind::ClosedForm,
             tail_dims: 0,
             coef_width: 1,
             regression_targets: false,

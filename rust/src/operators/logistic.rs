@@ -7,7 +7,7 @@
 //! generalized to `||a||^2 = c`; 20 iterations suffice, as the paper
 //! notes).
 
-use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec, ResolventKind};
 use super::Problem;
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
@@ -41,6 +41,9 @@ pub(crate) fn entry() -> ProblemEntry {
             aliases: &["logreg", "log"],
             summary: "decentralized l2-regularized logistic regression (paper §7.2)",
             has_objective: true,
+            saddle_stat: None,
+            l1: false,
+            resolvent: ResolventKind::Newton,
             tail_dims: 0,
             coef_width: 1,
             regression_targets: false,

@@ -19,17 +19,68 @@ mod logistic;
 mod auc;
 mod elastic_net;
 mod hinge;
+mod robust_ls;
+mod dro;
 pub mod registry;
 
 pub use auc::AucProblem;
+pub use dro::DroBilinearProblem;
 pub use elastic_net::ElasticNetProblem;
 pub use hinge::SmoothedHingeProblem;
 pub use logistic::LogisticProblem;
-pub use registry::{ProblemEntry, ProblemMeta, ProblemRegistry, ProblemSpec};
+pub use registry::{
+    ProblemEntry, ProblemMeta, ProblemRegistry, ProblemSpec, ResolventKind,
+};
 pub use ridge::RidgeProblem;
+pub use robust_ls::RobustLsProblem;
 
 use crate::data::Partition;
 use std::sync::Arc;
+
+/// How the metrics layer scores iterates of a saddle problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SaddleStat {
+    /// Generic merit: the saddle (first-order optimality) residual
+    /// [`Problem::global_residual`], reported by the metrics layer as
+    /// `saddle_res` — 0 exactly at the saddle point.
+    Residual,
+    /// The AUC ranking statistic (§7.3's workload-specific score; the
+    /// saddle residual is still reported alongside it).
+    AucRanking,
+}
+
+/// Declared primal/dual coordinate split of a saddle (minimax) problem.
+///
+/// The augmented variable is laid out `z = [x; y]` with the **leading**
+/// `primal_dims` coordinates holding the min block and the **trailing**
+/// `dual_dims` coordinates the max block, so the component operators are
+/// `B_{n,i} = [grad_x L_{n,i}; -grad_y L_{n,i}]` and the framework's
+/// analytic l2 term `lambda z` regularizes the saddle function as
+/// `+ lambda/2 ||x||^2 - lambda/2 ||y||^2` (what makes the operator
+/// strongly monotone). AUC declares `primal = d + 2` (w, a, b) and
+/// `dual = 1` (theta).
+///
+/// Note the §5.1 sparse relay additionally requires the coefficient
+/// layout shared by every workload here: `coefs[0]` scales the data row
+/// into the feature block and `coefs[1..]` map one-to-one onto the
+/// dense tail, so declaring a saddle split never changes the wire
+/// format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SaddleStructure {
+    /// leading coordinates of `z` holding the primal (min) block
+    pub primal_dims: usize,
+    /// trailing coordinates holding the dual (max) block
+    pub dual_dims: usize,
+    /// statistic the metrics layer scores iterates with
+    pub stat: SaddleStat,
+}
+
+impl SaddleStructure {
+    /// Split a full iterate into its (primal, dual) blocks.
+    pub fn split<'a>(&self, z: &'a [f64]) -> (&'a [f64], &'a [f64]) {
+        z.split_at(self.primal_dims)
+    }
+}
 
 /// A decentralized monotone-operator root-finding problem (13).
 pub trait Problem: Send + Sync {
@@ -74,8 +125,10 @@ pub trait Problem: Send + Sync {
         coefs_out: &mut [f64],
     );
 
-    /// Global objective for metrics (None for saddle problems; AUC
-    /// reports the AUC statistic through `Metrics` instead).
+    /// Global objective for metrics (None for saddle problems, which
+    /// are scored through the saddle merit layer instead: the residual,
+    /// the restricted gap via [`Problem::saddle_value`], and — for AUC —
+    /// the ranking statistic).
     fn objective(&self, z: &[f64]) -> Option<f64>;
 
     /// (L, mu) of the regularized components `B_{n,i} + lambda I`
@@ -99,11 +152,36 @@ pub trait Problem: Send + Sync {
         0.0
     }
 
-    /// Saddle problems that are scored by the AUC ranking statistic
-    /// instead of an objective value (capability flag for metrics — no
-    /// more `tail_dims() == 3` sniffing in the coordinator).
+    /// Declared primal/dual split of a saddle (minimax) problem; `None`
+    /// for pure minimization. The generic capability behind the saddle
+    /// merit layer: the coordinator reports the saddle residual (and the
+    /// restricted duality gap when [`Problem::saddle_value`] is
+    /// available) for every problem that declares a split, and scores
+    /// with the AUC statistic only when the declared
+    /// [`SaddleStructure::stat`] asks for it.
+    fn saddle(&self) -> Option<SaddleStructure> {
+        None
+    }
+
+    /// Global saddle function value
+    /// `L(z) = sum_n (1/q) sum_i L_{n,i}(z) + N lambda/2 (||x||^2 - ||y||^2)`
+    /// (regularization included analytically, mirroring
+    /// [`Problem::objective`]'s convention), so the global operator is
+    /// exactly `[grad_x L; -grad_y L]` — pinned numerically by
+    /// [`check_saddle`]. `None` when not cheaply evaluable; used by the
+    /// metrics layer for the restricted duality gap
+    /// `L(x, y*) - L(x*, y)`.
+    fn saddle_value(&self, z: &[f64]) -> Option<f64> {
+        let _ = z;
+        None
+    }
+
+    /// Thin shim kept for saddle-subsystem clients: scored by the AUC
+    /// ranking statistic iff the declared [`SaddleStructure::stat`] says
+    /// so. Derived — problems declare [`Problem::saddle`] instead of
+    /// overriding this.
     fn auc_metric(&self) -> bool {
-        false
+        self.saddle().is_some_and(|s| s.stat == SaddleStat::AucRanking)
     }
 
     // ---- provided ----
@@ -290,6 +368,81 @@ pub fn check_resolvent<P: Problem + ?Sized>(
             if (a - b).abs() > 1e-8 {
                 return Err(format!(
                     "trial {t}: stale coefs from backward ({a} vs {b})"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Numerically verify a declared [`Problem::saddle`] capability:
+///
+/// * the split is well-formed (`primal_dims + dual_dims == dim`, a
+///   nonempty dual block);
+/// * when [`Problem::saddle_value`] is available, the global operator
+///   `sum_n (B_n + lambda I)` really is the primal-dual gradient field of
+///   it — `+dL/dz_k` on primal coordinates, `-dL/dz_k` on dual ones —
+///   checked by central differences at random points (exact up to
+///   rounding for the quadratic couplings every built-in saddle workload
+///   uses).
+///
+/// Trivially `Ok` for problems without a saddle declaration, so the
+/// registry-wide property suite can enroll every entry unconditionally.
+pub fn check_saddle<P: Problem + ?Sized>(
+    p: &P,
+    seed: u64,
+    trials: usize,
+) -> Result<(), String> {
+    let Some(ss) = p.saddle() else {
+        return Ok(());
+    };
+    let dim = p.dim();
+    if ss.primal_dims + ss.dual_dims != dim {
+        return Err(format!(
+            "saddle split {} + {} != dim {}",
+            ss.primal_dims, ss.dual_dims, dim
+        ));
+    }
+    if ss.dual_dims == 0 {
+        return Err("saddle declaration with an empty dual block".to_string());
+    }
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut g = vec![0.0; dim];
+    let mut tmp = vec![0.0; dim];
+    for t in 0..trials {
+        let z: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        if p.saddle_value(&z).is_none() {
+            return Ok(()); // split validated; no value to cross-check
+        }
+        // G(z) = sum_n (B_n(z) + lambda z)
+        g.fill(0.0);
+        for n in 0..p.nodes() {
+            p.full_operator(n, &z, &mut tmp);
+            for (a, b) in g.iter_mut().zip(&tmp) {
+                *a += b;
+            }
+        }
+        // a few random coordinates per trial keep the check O(dim)-free
+        for _ in 0..6 {
+            let k = rng.below(dim);
+            let h = 1e-4;
+            let mut zp = z.clone();
+            zp[k] += h;
+            let mut zm = z.clone();
+            zm[k] -= h;
+            let (lp, lm) = match (p.saddle_value(&zp), p.saddle_value(&zm)) {
+                (Some(a), Some(b)) => (a, b),
+                _ => return Err("saddle_value not defined near a random point".into()),
+            };
+            let fd = (lp - lm) / (2.0 * h);
+            let sign = if k < ss.primal_dims { 1.0 } else { -1.0 };
+            let err = (sign * fd - g[k]).abs();
+            if err > 1e-5 * (1.0 + g[k].abs()) {
+                return Err(format!(
+                    "trial {t}: saddle_value gradient mismatch at coord {k} \
+                     ({} block): fd {fd} vs operator {}",
+                    if k < ss.primal_dims { "primal" } else { "dual" },
+                    g[k]
                 ));
             }
         }

@@ -11,11 +11,33 @@
 //! `operators/<name>.rs` module with a `Problem` impl and an `entry()`
 //! function, and listing that entry here — no `match` in any core file.
 
-use super::Problem;
+use super::{Problem, SaddleStat};
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
 use crate::util::json::Json;
 use std::sync::{Arc, OnceLock};
+
+/// How a registered problem implements its backward step — one of the
+/// capability columns `dsba info` prints straight from the registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolventKind {
+    /// Exact closed form (scalar formula or a small linear solve).
+    ClosedForm,
+    /// Scalar Newton iteration to machine precision.
+    Newton,
+    /// Closed-form smooth part plus a proximal (soft-threshold) l1 stage.
+    Proximal,
+}
+
+impl ResolventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResolventKind::ClosedForm => "closed-form",
+            ResolventKind::Newton => "newton",
+            ResolventKind::Proximal => "prox",
+        }
+    }
+}
 
 /// Resolved problem hyper-parameters handed to a registry constructor.
 ///
@@ -63,8 +85,16 @@ pub struct ProblemMeta {
     /// one-line description for `dsba info`
     pub summary: &'static str,
     /// `Problem::objective` returns `Some` (false = saddle problem
-    /// scored by a ranking statistic instead)
+    /// scored through the saddle merit layer instead)
     pub has_objective: bool,
+    /// saddle (minimax) problems declare how they are scored; `None` =
+    /// pure minimization. Must agree with the built problem's
+    /// `Problem::saddle()` declaration (pinned by the registry tests).
+    pub saddle_stat: Option<SaddleStat>,
+    /// the problem supports a separable l1 term (`Problem::l1_weight`)
+    pub l1: bool,
+    /// how the backward step is implemented
+    pub resolvent: ResolventKind,
     /// dense tail dimensions appended to the feature block
     pub tail_dims: usize,
     /// scalar coefficients per component operator
@@ -142,6 +172,8 @@ impl ProblemRegistry {
                 super::auc::entry(),
                 super::elastic_net::entry(),
                 super::hinge::entry(),
+                super::robust_ls::entry(),
+                super::dro::entry(),
             ])
             .expect("builtin problem registry is well-formed")
         })
@@ -167,19 +199,39 @@ impl ProblemRegistry {
         self.entries.iter().map(|e| e.meta.name).collect()
     }
 
-    /// Aligned text table for `dsba info` — generated from the entries
-    /// so the CLI text cannot drift from the code.
+    /// Aligned capability table for `dsba info` — generated from the
+    /// entries' live metadata (saddle / l1 / resolvent kind included) so
+    /// the CLI text cannot drift from the code.
     pub fn describe(&self) -> String {
-        let mut out = String::from(
-            "problem       aliases                  metric     tail  coefs  params\n",
+        // aliases column sized to the longest registered alias list so
+        // the capability rows stay aligned as entries grow
+        let alias_w = self
+            .entries
+            .iter()
+            .map(|e| e.meta.aliases.join(", ").len())
+            .max()
+            .unwrap_or(0)
+            .max("aliases".len());
+        let mut out = format!(
+            "problem       {:<alias_w$}  metric      saddle  l1  \
+             resolvent    tail  coefs  params\n",
+            "aliases",
         );
         for e in &self.entries {
             let m = &e.meta;
+            let metric = match m.saddle_stat {
+                None => "objective",
+                Some(SaddleStat::AucRanking) => "auc-stat",
+                Some(SaddleStat::Residual) => "saddle-res",
+            };
             out.push_str(&format!(
-                "{:<12}  {:<23}  {:<9}  {:>4}  {:>5}  {}\n",
+                "{:<12}  {:<alias_w$}  {:<10}  {:<6}  {:<2}  {:<11}  {:>4}  {:>5}  {}\n",
                 m.name,
                 m.aliases.join(", "),
-                if m.has_objective { "objective" } else { "saddle" },
+                metric,
+                if m.saddle_stat.is_some() { "y" } else { "-" },
+                if m.l1 { "y" } else { "-" },
+                m.resolvent.name(),
                 m.tail_dims,
                 m.coef_width,
                 m.params_help,
@@ -241,6 +293,35 @@ mod tests {
                 "{}: has_objective metadata disagrees with objective()",
                 e.meta.name
             );
+            // capability metadata must agree with the built problem
+            assert_eq!(
+                p.saddle().map(|s| s.stat),
+                e.meta.saddle_stat,
+                "{}: saddle_stat metadata disagrees with saddle()",
+                e.meta.name
+            );
+            if let Some(s) = p.saddle() {
+                assert_eq!(
+                    s.primal_dims + s.dual_dims,
+                    p.dim(),
+                    "{}: saddle split does not cover the variable",
+                    e.meta.name
+                );
+                assert_eq!(
+                    p.auc_metric(),
+                    s.stat == crate::operators::SaddleStat::AucRanking,
+                    "{}: auc_metric shim disagrees with the declared stat",
+                    e.meta.name
+                );
+            }
+            if !e.meta.l1 {
+                assert_eq!(
+                    p.l1_weight(),
+                    0.0,
+                    "{}: l1 capability not declared but l1_weight > 0",
+                    e.meta.name
+                );
+            }
             assert_eq!(p.lambda(), 0.05);
             // rebuild keeps every hyper-parameter (the coordinator's
             // pooled-twin pre-solve depends on this)

@@ -7,7 +7,7 @@
 //! `J_{alpha B}(psi) = psi - alpha (m - y) a`,
 //! which for `c = 1` reduces to the paper's expression.
 
-use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec};
+use super::registry::{ProblemEntry, ProblemMeta, ProblemSpec, ResolventKind};
 use super::Problem;
 use crate::algorithms::AlgorithmKind;
 use crate::data::{Dataset, Partition};
@@ -40,6 +40,9 @@ pub(crate) fn entry() -> ProblemEntry {
             aliases: &["least-squares", "l2"],
             summary: "decentralized ridge regression (paper §7.1)",
             has_objective: true,
+            saddle_stat: None,
+            l1: false,
+            resolvent: ResolventKind::ClosedForm,
             tail_dims: 0,
             coef_width: 1,
             regression_targets: true,

@@ -57,9 +57,10 @@ use crate::algorithms::{
 };
 use crate::comm::{Message, Network};
 use crate::graph::{MixingMatrix, Topology};
+use crate::metrics::{decode_stat_rows, encode_stat_rows, GlobalStats, NodeStatRow};
 use crate::operators::Problem;
 use crate::runtime::transport::{LocalTransport, NodePort, Transport};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
@@ -96,9 +97,17 @@ pub fn auto_threads(n_nodes: usize) -> usize {
     cores.clamp(1, n_nodes.max(1))
 }
 
-/// One hosted node scheduled on a worker: (node index, state machine,
-/// its transport port).
-type HostedNode = (usize, Box<dyn NodeState>, Box<dyn NodePort>);
+/// One hosted node scheduled on a worker.
+struct HostedNode {
+    /// topology node index
+    idx: usize,
+    state: Box<dyn NodeState>,
+    port: Box<dyn NodePort>,
+    /// neighbors hosted by a peer engine process — the links split-run
+    /// STATS control frames cross during a metrics exchange (empty for
+    /// single-process runs, so the stats phase is a no-op)
+    cross: Vec<usize>,
+}
 
 #[derive(Clone, Copy, Debug)]
 enum CostKind {
@@ -133,6 +142,16 @@ struct Shared {
     /// first transport failure observed by a worker (None when the
     /// poisoning was a genuine node-code panic)
     failure: Mutex<Option<String>>,
+    /// when true, the next barrier cycle is a split-run stats-exchange
+    /// hop instead of a compute round (set/cleared by the launcher while
+    /// workers are parked at the round-start barrier)
+    stats_mode: AtomicBool,
+    /// hop index of the current stats exchange (stamped into frames)
+    stats_hop: AtomicU32,
+    /// outbound row payload for the current hop (set by the launcher)
+    stats_out: Mutex<Vec<u8>>,
+    /// payloads collected from peer engines during the current hop
+    stats_in: Mutex<Vec<Vec<u8>>>,
 }
 
 impl Shared {
@@ -156,16 +175,59 @@ fn worker_loop(
 ) {
     let mut t = 0usize;
     loop {
-        barrier.wait(); // round start
+        barrier.wait(); // round (or stats hop) start
         if stop.load(Ordering::SeqCst) {
             break;
+        }
+        // split-run stats-exchange hop: same three-barrier cycle as a
+        // compute round, but the payload is the launcher's row set and
+        // only cross-process links carry anything; `t` does not advance
+        if shared.stats_mode.load(Ordering::SeqCst) {
+            let hop = shared.stats_hop.load(Ordering::SeqCst);
+            if !shared.panicked.load(Ordering::SeqCst) {
+                let send = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let payload = shared.stats_out.lock().unwrap().clone();
+                    for hn in nodes.iter_mut() {
+                        for &m in &hn.cross {
+                            if let Err(e) = hn.port.send_stats(t, hop, m, &payload) {
+                                shared.transport_failure(e);
+                            }
+                        }
+                    }
+                }));
+                if send.is_err() {
+                    shared.panicked.store(true, Ordering::SeqCst);
+                }
+            }
+            barrier.wait(); // all stats sends complete
+            if !shared.panicked.load(Ordering::SeqCst) {
+                let recv = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut got: Vec<Vec<u8>> = Vec::new();
+                    for hn in nodes.iter_mut() {
+                        for &m in &hn.cross {
+                            match hn.port.recv_stats(t, hop, m) {
+                                Ok(p) => got.push(p),
+                                Err(e) => shared.transport_failure(e),
+                            }
+                        }
+                    }
+                    if !got.is_empty() {
+                        shared.stats_in.lock().unwrap().extend(got);
+                    }
+                }));
+                if recv.is_err() {
+                    shared.panicked.store(true, Ordering::SeqCst);
+                }
+            }
+            barrier.wait(); // hop end
+            continue;
         }
         // phase A: emit this round's messages
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut cost_batch: Vec<CostEvent> = Vec::new();
-                for (idx, node, port) in nodes.iter_mut() {
-                    let outs = node.outgoing(t);
+                for hn in nodes.iter_mut() {
+                    let outs = hn.state.outgoing(t);
                     for (seq, out) in outs.into_iter().enumerate() {
                         let kind = match &out.msg {
                             Message::Dense(v) => CostKind::Dense(v.len()),
@@ -174,17 +236,17 @@ fn worker_loop(
                             }
                         };
                         cost_batch.push(CostEvent {
-                            from: *idx,
+                            from: hn.idx,
                             seq: seq as u32,
                             to: out.to,
                             kind,
                         });
                         shared.sent.fetch_add(1, Ordering::Relaxed);
-                        if let Err(e) = port.send(t, out.to, seq as u32, out.msg) {
+                        if let Err(e) = hn.port.send(t, out.to, seq as u32, out.msg) {
                             shared.transport_failure(e);
                         }
                     }
-                    if let Err(e) = port.finish_round(t) {
+                    if let Err(e) = hn.port.finish_round(t) {
                         shared.transport_failure(e);
                     }
                 }
@@ -201,8 +263,8 @@ fn worker_loop(
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_b = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut recv_batch: Vec<CostEvent> = Vec::new();
-                for (idx, node, port) in nodes.iter_mut() {
-                    let mut msgs = match port.drain_round(t) {
+                for hn in nodes.iter_mut() {
+                    let mut msgs = match hn.port.drain_round(t) {
                         Ok(m) => m,
                         Err(e) => shared.transport_failure(e),
                     };
@@ -221,13 +283,16 @@ fn worker_loop(
                                     CostKind::Sparse(d.vec.nnz(), d.tail.len())
                                 }
                             };
-                            recv_batch.push(CostEvent { from, seq, to: *idx, kind });
+                            recv_batch.push(CostEvent { from, seq, to: hn.idx, kind });
                         }
-                        node.on_receive(from, msg);
+                        hn.state.on_receive(from, msg);
                     }
-                    node.local_step(t);
-                    shared.slots[*idx].lock().unwrap().copy_from_slice(node.iterate());
-                    shared.evals[*idx].store(node.evals(), Ordering::Relaxed);
+                    hn.state.local_step(t);
+                    shared.slots[hn.idx]
+                        .lock()
+                        .unwrap()
+                        .copy_from_slice(hn.state.iterate());
+                    shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
                 }
                 if !recv_batch.is_empty() {
                     shared.costs.lock().unwrap().extend(recv_batch);
@@ -253,6 +318,9 @@ pub struct ParallelEngine {
     hosted: Vec<usize>,
     setup: Vec<(usize, usize, usize)>,
     pass_denom: f64,
+    /// global `N * q` (unscaled by the hosted share) — the denominator
+    /// split-run metrics aggregation reports global passes with
+    pass_denom_full: f64,
     t: usize,
     /// launching-thread mirror of the per-node iterates
     z: Vec<Vec<f64>>,
@@ -341,6 +409,10 @@ impl ParallelEngine {
             delivered: AtomicU64::new(0),
             panicked: AtomicBool::new(false),
             failure: Mutex::new(None),
+            stats_mode: AtomicBool::new(false),
+            stats_hop: AtomicU32::new(0),
+            stats_out: Mutex::new(Vec::new()),
+            stats_in: Mutex::new(Vec::new()),
         });
         let barrier = Arc::new(Barrier::new(threads + 1));
         let stop = Arc::new(AtomicBool::new(false));
@@ -355,7 +427,13 @@ impl ParallelEngine {
                 continue; // built for RNG parity, stepped by a peer engine
             }
             let port = port_iter.next().unwrap();
-            buckets[k * threads / h].push((idx, node, port));
+            let cross: Vec<usize> = topo
+                .neighbors(idx)
+                .iter()
+                .copied()
+                .filter(|&m| !is_hosted[m])
+                .collect();
+            buckets[k * threads / h].push(HostedNode { idx, state: node, port, cross });
             k += 1;
         }
         let mut workers = Vec::with_capacity(threads);
@@ -375,6 +453,7 @@ impl ParallelEngine {
             .into_iter()
             .filter(|&(from, to, _)| is_hosted[from] || is_hosted[to])
             .collect();
+        let pass_denom_full = program.pass_denom;
         let pass_denom = if h == n {
             program.pass_denom
         } else {
@@ -387,6 +466,7 @@ impl ParallelEngine {
             hosted,
             setup,
             pass_denom,
+            pass_denom_full,
             t: 0,
             z,
             shared,
@@ -486,6 +566,76 @@ impl Algorithm for ParallelEngine {
 
     fn name(&self) -> &'static str {
         self.kind.name()
+    }
+
+    /// Split-run metrics aggregation: flood per-node stat rows (iterate,
+    /// eval count, caller-supplied received-DOUBLE totals) across the
+    /// transport's STATS control frames for `diameter` lockstepped hops,
+    /// so every engine process ends up with the complete global row set
+    /// — even processes that share no direct topology edge. `None` when
+    /// this engine hosts every node (metrics are already global).
+    fn global_stats(&mut self, received: &[f64]) -> Option<GlobalStats> {
+        let n = self.z.len();
+        if self.hosted.len() == n {
+            return None;
+        }
+        let mut rows: Vec<NodeStatRow> = self
+            .hosted
+            .iter()
+            .map(|&nd| NodeStatRow {
+                node: nd as u32,
+                evals: self.shared.evals[nd].load(Ordering::Relaxed),
+                received: received.get(nd).copied().unwrap_or(0.0),
+                z: self.z[nd].clone(),
+            })
+            .collect();
+        // rows propagate one process hop per exchange hop; the topology
+        // diameter bounds the process-graph diameter, and every peer
+        // runs the same deterministic hop count, so the socket lockstep
+        // that orders rounds orders the hops too
+        let hops = self.topo.diameter.max(1);
+        for hop in 0..hops {
+            *self.shared.stats_out.lock().unwrap() = encode_stat_rows(&rows);
+            self.shared.stats_hop.store(hop as u32, Ordering::SeqCst);
+            self.shared.stats_mode.store(true, Ordering::SeqCst);
+            self.barrier.wait(); // release the hop
+            self.barrier.wait(); // stats sends complete
+            self.barrier.wait(); // stats receives complete
+            if self.shared.panicked.load(Ordering::SeqCst) {
+                let transport_err = self.shared.failure.lock().unwrap().take();
+                match transport_err {
+                    Some(e) => panic!(
+                        "ParallelEngine: stats exchange failed at sample round {} \
+                         of {}: {e}",
+                        self.t,
+                        self.kind.name()
+                    ),
+                    None => panic!(
+                        "ParallelEngine: a worker panicked during the stats \
+                         exchange at round {} of {}",
+                        self.t,
+                        self.kind.name()
+                    ),
+                }
+            }
+            let got = {
+                let mut guard = self.shared.stats_in.lock().unwrap();
+                std::mem::take(&mut *guard)
+            };
+            for payload in got {
+                let more = decode_stat_rows(&payload).unwrap_or_else(|e| {
+                    panic!("ParallelEngine: corrupt STATS payload from a peer: {e}")
+                });
+                for r in more {
+                    if !rows.iter().any(|x| x.node == r.node) {
+                        rows.push(r);
+                    }
+                }
+            }
+        }
+        self.shared.stats_mode.store(false, Ordering::SeqCst);
+        rows.sort_by_key(|r| r.node);
+        Some(GlobalStats { rows, pass_denom: self.pass_denom_full })
     }
 }
 
@@ -633,6 +783,17 @@ mod tests {
         }));
         assert!(result.is_err(), "expected fail-fast panic");
         drop(eng); // must not hang
+    }
+
+    #[test]
+    fn single_process_engine_reports_no_stats_exchange() {
+        // hosted == all nodes: metrics are already global, so the
+        // split-run aggregation hook must be a no-op (None)
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut eng =
+            ParallelEngine::new(AlgorithmKind::Dsba, p, &mix, &topo, &params, 2);
+        assert!(eng.global_stats(&[0.0; 4]).is_none());
     }
 
     #[test]

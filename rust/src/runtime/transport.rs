@@ -21,9 +21,18 @@
 //! ## Wire framing (little-endian, after the handshake)
 //!
 //! ```text
-//! MSG frame:  0x4D | t: u64 | seq: u32 | len: u64 | len bytes (Message::encode)
-//! END frame:  0x45 | t: u64                         (round t emissions complete)
+//! MSG frame:   0x4D | t: u64 | seq: u32 | len: u64 | len bytes (Message::encode)
+//! END frame:   0x45 | t: u64                         (round t emissions complete)
+//! STATS frame: 0x53 | t: u64 | hop: u32 | len: u64 | len bytes (opaque payload)
 //! ```
+//!
+//! STATS frames ride the end-of-round control channel between rounds:
+//! split-hosted engines exchange per-node metric rows on them
+//! (`metrics::encode_stat_rows`) so a cross-process run can report
+//! *global* series. They are flooded for `hop = 0..diameter` sub-rounds
+//! at a sample point `t`, which reaches every peer process even when
+//! two processes share no topology edge; the same socket lockstep that
+//! orders rounds orders the hops.
 //!
 //! ## Handshake (29 bytes each way, dialer first)
 //!
@@ -100,6 +109,23 @@ pub trait NodePort: Send {
     /// Cross-process backends must instead block until each neighbor's
     /// round-`t` end-of-round marker arrives (with a failure timeout).
     fn drain_round(&mut self, t: usize) -> Result<Vec<Envelope>, String>;
+
+    /// Send an opaque stats payload (split-run metrics piggyback) to
+    /// neighbor `to` for sample point `(t, hop)` — `t` counts completed
+    /// rounds. The engine only issues these toward neighbors hosted by
+    /// a *peer* process, so single-process backends never see the call;
+    /// the default rejects it.
+    fn send_stats(&mut self, t: usize, hop: u32, to: usize, payload: &[u8]) -> Result<(), String> {
+        let _ = (t, hop, to, payload);
+        Err("stats exchange unsupported on this transport".to_string())
+    }
+
+    /// Block until the `(t, hop)` stats payload from neighbor `from`
+    /// arrives. Same caller contract as [`NodePort::send_stats`].
+    fn recv_stats(&mut self, t: usize, hop: u32, from: usize) -> Result<Vec<u8>, String> {
+        let _ = (t, hop, from);
+        Err("stats exchange unsupported on this transport".to_string())
+    }
 }
 
 /// A connected communication backend for one engine instance: the set of
@@ -196,6 +222,7 @@ const HANDSHAKE_MAGIC: [u8; 4] = *b"DSBA";
 const WIRE_VERSION: u8 = 1;
 const FRAME_MSG: u8 = 0x4D; // 'M'
 const FRAME_END: u8 = 0x45; // 'E'
+const FRAME_STATS: u8 = 0x53; // 'S'
 /// Hard upper bound on one frame's payload; a corrupt length field fails
 /// fast instead of stalling the reader for gigabytes.
 const MAX_FRAME_BYTES: u64 = 1 << 30;
@@ -242,6 +269,7 @@ impl BoundListener {
 enum TcpEvent {
     Msg { from: usize, t: u64, seq: u32, msg: Message },
     End { from: usize, t: u64 },
+    Stats { from: usize, t: u64, hop: u32, payload: Vec<u8> },
     Closed { from: usize, reason: String },
 }
 
@@ -537,6 +565,12 @@ impl NodePort for TcpPort {
                         ));
                     }
                 }
+                TcpEvent::Stats { from, t: et, hop, payload } => {
+                    // stats frames belong to a sample point, not a round:
+                    // a remote engine that finished round t may emit them
+                    // while we are still draining — carry for recv_stats
+                    self.carry.push(TcpEvent::Stats { from, t: et, hop, payload });
+                }
                 TcpEvent::Closed { from, reason } => {
                     // a peer that already delivered this round's END and
                     // then closed is tearing down, not failing — defer the
@@ -565,6 +599,63 @@ impl NodePort for TcpPort {
             self.carry.splice(0..0, queue);
         }
         Ok(out)
+    }
+
+    fn send_stats(&mut self, t: usize, hop: u32, to: usize, payload: &[u8]) -> Result<(), String> {
+        let id = self.id;
+        let j = self
+            .writers
+            .binary_search_by_key(&to, |&(m, _)| m)
+            .map_err(|_| format!("node {id} has no link to {to}"))?;
+        let w = &mut self.writers[j].1;
+        write_stats_frame(w, t as u64, hop, payload)
+            .and_then(|_| w.flush())
+            .map_err(|e| format!("node {id}: stats frame to {to} failed: {e}"))
+    }
+
+    fn recv_stats(&mut self, t: usize, hop: u32, from: usize) -> Result<Vec<u8>, String> {
+        let t64 = t as u64;
+        // carried events first (stats can arrive during a round drain)
+        if let Some(pos) = self.carry.iter().position(|ev| {
+            matches!(ev, TcpEvent::Stats { from: f, t: et, hop: eh, .. }
+                if *f == from && *et == t64 && *eh == hop)
+        }) {
+            match self.carry.remove(pos) {
+                TcpEvent::Stats { payload, .. } => return Ok(payload),
+                _ => unreachable!("position matched a Stats event"),
+            }
+        }
+        loop {
+            let ev = self.inbox.recv_timeout(self.drain_timeout).map_err(|_| {
+                format!(
+                    "node {}: stats exchange ({t}, hop {hop}) timed out \
+                     waiting on {from} (remote engine dead or sampling \
+                     schedules diverged)",
+                    self.id
+                )
+            })?;
+            match ev {
+                TcpEvent::Stats { from: f, t: et, hop: eh, payload } => {
+                    if f == from && et == t64 && eh == hop {
+                        return Ok(payload);
+                    }
+                    // another link's payload, or a later sample point
+                    self.carry.push(TcpEvent::Stats { from: f, t: et, hop: eh, payload });
+                }
+                TcpEvent::Closed { from: f, reason } => {
+                    if f == from {
+                        return Err(format!(
+                            "node {}: link to {from} closed during stats \
+                             exchange: {reason}",
+                            self.id
+                        ));
+                    }
+                    self.carry.push(TcpEvent::Closed { from: f, reason });
+                }
+                // next-round MSG/END frames running ahead of our exchange
+                other => self.carry.push(other),
+            }
+        }
     }
 }
 
@@ -759,6 +850,19 @@ fn write_end_frame(w: &mut BufWriter<TcpStream>, t: u64) -> std::io::Result<()> 
     w.write_all(&t.to_le_bytes())
 }
 
+fn write_stats_frame(
+    w: &mut BufWriter<TcpStream>,
+    t: u64,
+    hop: u32,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    w.write_all(&[FRAME_STATS])?;
+    w.write_all(&t.to_le_bytes())?;
+    w.write_all(&hop.to_le_bytes())?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)
+}
+
 fn read_u32(s: &mut TcpStream) -> Result<u32, String> {
     let mut b = [0u8; 4];
     s.read_exact(&mut b).map_err(|e| e.to_string())?;
@@ -798,6 +902,23 @@ fn read_frame(s: &mut TcpStream, from: usize) -> Result<Option<TcpEvent>, String
             Ok(Some(TcpEvent::Msg { from, t, seq, msg }))
         }
         FRAME_END => Ok(Some(TcpEvent::End { from, t: read_u64(s)? })),
+        FRAME_STATS => {
+            let t = read_u64(s)?;
+            let hop = read_u32(s)?;
+            let len = read_u64(s)?;
+            if len > MAX_FRAME_BYTES {
+                return Err(format!("oversized stats frame ({len} bytes)"));
+            }
+            let mut payload = Vec::new();
+            let got = (&mut *s)
+                .take(len)
+                .read_to_end(&mut payload)
+                .map_err(|e| e.to_string())?;
+            if got as u64 != len {
+                return Err("truncated stats frame".to_string());
+            }
+            Ok(Some(TcpEvent::Stats { from, t, hop, payload }))
+        }
         other => Err(format!("unknown frame tag {other:#04x}")),
     }
 }
@@ -1035,6 +1156,44 @@ mod tests {
         let r1 = ports[1].drain_round(1).unwrap();
         assert_eq!(r1.len(), 1);
         assert_eq!(r1[0].2, Message::dense(vec![2.0]));
+    }
+
+    #[test]
+    fn tcp_stats_frames_cross_links_and_interleave_with_rounds() {
+        let topo = Topology::path(2);
+        let t = Box::new(TcpTransport::loopback(&topo, 3).unwrap());
+        let mut ports = t.into_ports();
+        // round 0 traffic plus an early stats frame from node 0: the
+        // stats frame must be carried across the drain, not lost
+        ports[0].send(0, 1, 0, Message::dense(vec![1.0])).unwrap();
+        ports[0].finish_round(0).unwrap();
+        ports[1].finish_round(0).unwrap();
+        ports[0].send_stats(1, 0, 1, b"rows-hop0").unwrap();
+        let r0 = ports[1].drain_round(0).unwrap();
+        assert_eq!(r0.len(), 1);
+        assert!(ports[0].drain_round(0).unwrap().is_empty());
+        assert_eq!(ports[1].recv_stats(1, 0, 0).unwrap(), b"rows-hop0");
+        // hops are matched exactly, both directions cross the same link
+        ports[1].send_stats(1, 1, 0, b"rows-hop1-b").unwrap();
+        ports[0].send_stats(1, 1, 1, b"rows-hop1-a").unwrap();
+        assert_eq!(ports[1].recv_stats(1, 1, 0).unwrap(), b"rows-hop1-a");
+        assert_eq!(ports[0].recv_stats(1, 1, 1).unwrap(), b"rows-hop1-b");
+        // the round channel still works after the exchange
+        ports[1].send(1, 0, 0, Message::dense(vec![2.0])).unwrap();
+        ports[1].finish_round(1).unwrap();
+        ports[0].finish_round(1).unwrap();
+        let r1 = ports[0].drain_round(1).unwrap();
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r1[0].2, Message::dense(vec![2.0]));
+        assert!(ports[1].drain_round(1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn local_port_rejects_stats_exchange() {
+        let t = Box::new(LocalTransport::new(2));
+        let mut ports = t.into_ports();
+        assert!(ports[0].send_stats(0, 0, 1, b"x").is_err());
+        assert!(ports[0].recv_stats(0, 0, 1).is_err());
     }
 
     #[test]

@@ -40,6 +40,24 @@ fn elastic_world(nodes: usize) -> Arc<dyn Problem> {
         .expect("registry builds elastic-net")
 }
 
+/// Registry-built minimax workloads: the saddle subsystem's dense tail
+/// coupling (adversarial shift / per-class duals) must survive both
+/// transports bit-for-bit, like every other problem.
+fn saddle_world(name: &'static str) -> impl Fn(usize) -> Arc<dyn Problem> {
+    move |nodes| {
+        let entry = ProblemRegistry::builtin()
+            .resolve(name)
+            .unwrap_or_else(|| panic!("{name} is registered"));
+        let ds = SyntheticSpec::tiny()
+            .with_regression(entry.meta.regression_targets)
+            .generate(29);
+        let spec = ProblemSpec::new(name, 0.05);
+        entry
+            .build(&spec, &ds, ds.partition_seeded(nodes, 3))
+            .unwrap_or_else(|e| panic!("registry builds {name}: {e}"))
+    }
+}
+
 #[derive(Clone, Copy, PartialEq)]
 enum Backend {
     Local,
@@ -231,6 +249,31 @@ fn parity_registry_elastic_net_tcp() {
     }
 }
 
+/// Both minimax registry entries under DSBA and DSBA-s on the local
+/// transport: parallel engine bit-for-bit equal to the sequential
+/// oracle, sparse relay tails included.
+#[test]
+fn parity_registry_saddle_workloads_local() {
+    for name in ["robust-ls", "dro-bilinear"] {
+        let world = saddle_world(name);
+        for kind in [AlgorithmKind::Dsba, AlgorithmKind::DsbaSparse] {
+            assert_parity_with(kind, Topology::ring(6), 40, 3, Backend::Local, &world);
+        }
+    }
+}
+
+/// Same grid over loopback TCP sockets: the saddle tails cross the
+/// framed wire codec.
+#[test]
+fn parity_registry_saddle_workloads_tcp() {
+    for name in ["robust-ls", "dro-bilinear"] {
+        let world = saddle_world(name);
+        for kind in [AlgorithmKind::Dsba, AlgorithmKind::DsbaSparse] {
+            assert_parity_with(kind, Topology::ring(6), 20, 3, Backend::Tcp, &world);
+        }
+    }
+}
+
 #[test]
 fn parity_holds_at_every_thread_count() {
     // thread count must never leak into the arithmetic
@@ -294,14 +337,33 @@ fn tcp_split_hosting_matches_sequential() {
                 Box::new(transport),
             );
             let mut net = Network::new(topo.clone(), CommCostModel::default());
-            for _ in 0..rounds {
+            // mid-run metrics aggregation: both halves exchange at the
+            // same round, like the coordinator's lockstepped sampling
+            let mut gs_mid = None;
+            for round in 0..rounds {
                 eng.step(&mut net);
+                if round + 1 == rounds / 2 {
+                    let recv: Vec<f64> =
+                        (0..topo.n).map(|n| net.received_by(n)).collect();
+                    gs_mid =
+                        Some(eng.global_stats(&recv).expect("split engine aggregates"));
+                }
             }
+            let recv: Vec<f64> = (0..topo.n).map(|n| net.received_by(n)).collect();
+            let gs_final = eng.global_stats(&recv).expect("split engine aggregates");
             let hosted = eng.hosted().to_vec();
             let iterates: Vec<Vec<f64>> = eng.iterates().to_vec();
             let sent: Vec<f64> = (0..topo.n).map(|n| net.sent_by(n)).collect();
             let received: Vec<f64> = (0..topo.n).map(|n| net.received_by(n)).collect();
-            (hosted, iterates, sent, received, eng.message_stats())
+            (
+                hosted,
+                iterates,
+                sent,
+                received,
+                eng.message_stats(),
+                gs_mid.unwrap(),
+                gs_final,
+            )
         })
     };
     let ha = run_half(
@@ -322,8 +384,41 @@ fn tcp_split_hosting_matches_sequential() {
         mix.clone(),
         params.clone(),
     );
-    let (hosted_a, z_a, sent_a, recv_a, stats_a) = ha.join().expect("engine A panicked");
-    let (hosted_b, z_b, sent_b, recv_b, stats_b) = hb.join().expect("engine B panicked");
+    let (hosted_a, z_a, sent_a, recv_a, stats_a, gs_mid_a, gs_a) =
+        ha.join().expect("engine A panicked");
+    let (hosted_b, z_b, sent_b, recv_b, stats_b, gs_mid_b, gs_b) =
+        hb.join().expect("engine B panicked");
+
+    // metrics aggregation: both halves hold the complete, identical
+    // global row set — at the mid-run sample point and at the end
+    assert_eq!(gs_mid_a, gs_mid_b, "mid-run aggregated rows diverged");
+    assert_eq!(gs_a, gs_b, "final aggregated rows diverged");
+    assert_eq!(gs_a.rows.len(), topo.n);
+    for (n, row) in gs_a.rows.iter().enumerate() {
+        assert_eq!(row.node as usize, n, "rows must be sorted by node");
+        assert_eq!(
+            row.z,
+            seq.iterates()[n],
+            "node {n}: aggregated iterate != sequential"
+        );
+        assert_eq!(
+            row.received,
+            net_s.received_by(n),
+            "node {n}: aggregated received DOUBLEs != sequential"
+        );
+    }
+    let evals: u64 = gs_a.rows.iter().map(|r| r.evals).sum();
+    assert_eq!(evals as f64 / gs_a.pass_denom, seq.passes());
+    // the assembled global metrics row reproduces the single-process
+    // numbers exactly (what a split coordinator reports)
+    let z_star = dsba::coordinator::solve_optimum(p.as_ref(), 1e-11);
+    let row = dsba::coordinator::global_metrics_row(p.as_ref(), &gs_a, &z_star, rounds, 0.0);
+    assert_eq!(
+        row.suboptimality,
+        dsba::metrics::suboptimality(seq.iterates(), &z_star)
+    );
+    assert_eq!(row.comm_doubles, net_s.max_received());
+    assert_eq!(row.passes, seq.passes());
 
     for (&n, z) in hosted_a.iter().map(|n| (n, &z_a)).chain(hosted_b.iter().map(|n| (n, &z_b))) {
         assert_eq!(

@@ -3,7 +3,7 @@
 
 use dsba::graph::MixingMatrix;
 use dsba::linalg::{CsrMatrix, SparseVec};
-use dsba::operators::{check_monotone, check_resolvent};
+use dsba::operators::{check_monotone, check_resolvent, check_saddle};
 use dsba::prelude::*;
 use dsba::testing::prop_check;
 
@@ -242,14 +242,15 @@ fn prop_message_decode_total_on_corrupt_frames() {
 }
 
 #[test]
-fn prop_registered_problems_resolvent_and_monotone() {
+fn prop_registered_problems_resolvent_monotone_and_saddle() {
     // Every problem in the registry — including ones future PRs add —
-    // passes the resolvent-identity and monotonicity checks on random
-    // instances with randomized hyper-parameters.  No hand-listed trio:
-    // registering a workload automatically enrolls it here.
+    // passes the resolvent-identity, monotonicity, and saddle-capability
+    // checks on random instances with randomized hyper-parameters.  No
+    // hand-listed trio: registering a workload (saddle entries included)
+    // automatically enrolls it here.
     use dsba::operators::ProblemSpec;
     use dsba::util::json::Json;
-    prop_check("resolvent + monotonicity (every registered problem)", 10, |rng| {
+    prop_check("resolvent + monotonicity + saddle (every registered problem)", 10, |rng| {
         for entry in ProblemRegistry::builtin().entries() {
             let ds = SyntheticSpec::tiny()
                 .with_samples(40 + rng.below(40))
@@ -262,6 +263,8 @@ fn prop_registered_problems_resolvent_and_monotone() {
             let params = Json::from_pairs(vec![
                 ("l1", Json::Num(0.002 + 0.05 * rng.uniform())),
                 ("gamma", Json::Num(0.2 + rng.uniform())),
+                ("rho", Json::Num(1.2 + 2.0 * rng.uniform())),
+                ("nu", Json::Num(0.2 + 2.0 * rng.uniform())),
             ]);
             let spec =
                 ProblemSpec::new(entry.meta.name, lam).with_params(params);
@@ -273,6 +276,51 @@ fn prop_registered_problems_resolvent_and_monotone() {
                 .map_err(|e| format!("{}: {e}", entry.meta.name))?;
             check_monotone(p.as_ref(), rng.next_u64(), 30)
                 .map_err(|e| format!("{}: {e}", entry.meta.name))?;
+            // trivially Ok for non-saddle entries; for saddle entries it
+            // validates the declared split and cross-checks the operator
+            // against the saddle function's gradient field
+            check_saddle(p.as_ref(), rng.next_u64(), 3)
+                .map_err(|e| format!("{}: {e}", entry.meta.name))?;
+            if p.saddle().is_some() != entry.meta.saddle_stat.is_some() {
+                return Err(format!(
+                    "{}: registry saddle metadata disagrees with the problem",
+                    entry.meta.name
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stat_row_wire_roundtrip_lossless() {
+    // The split-run metrics rows that ride the STATS control frames
+    // survive serialize -> deliver -> reconstruct bit-for-bit, and every
+    // truncation of a valid payload is rejected — same contract as the
+    // message wire codec.
+    use dsba::metrics::{decode_stat_rows, encode_stat_rows, NodeStatRow};
+    prop_check("stat-row encode/decode identity", 40, |rng| {
+        let n_rows = rng.below(6);
+        let rows: Vec<NodeStatRow> = (0..n_rows)
+            .map(|_| NodeStatRow {
+                node: rng.below(64) as u32,
+                evals: rng.below(1 << 20) as u64,
+                received: rng.normal() * 10f64.powi(rng.below(7) as i32 - 3),
+                z: (0..rng.below(40)).map(|_| rng.normal()).collect(),
+            })
+            .collect();
+        let enc = encode_stat_rows(&rows);
+        let back = decode_stat_rows(&enc)?;
+        if back != rows {
+            return Err("roundtrip mismatch".into());
+        }
+        if encode_stat_rows(&back) != enc {
+            return Err("re-encode not bit-identical".into());
+        }
+        for k in 0..enc.len() {
+            if decode_stat_rows(&enc[..k]).is_ok() {
+                return Err(format!("prefix {k}/{} decoded Ok", enc.len()));
+            }
         }
         Ok(())
     });

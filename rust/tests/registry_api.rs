@@ -6,7 +6,7 @@
 
 use dsba::algorithms::AlgorithmKind;
 use dsba::graph::TopologyKind;
-use dsba::operators::{ProblemRegistry, ProblemSpec};
+use dsba::operators::{ProblemRegistry, ProblemSpec, SaddleStat};
 use dsba::prelude::*;
 use dsba::util::json::Json;
 
@@ -107,9 +107,35 @@ fn registry_problems_run_one_round_through_the_experiment_driver() {
         });
         let trace = exp.run();
         assert!(!trace.rows.is_empty(), "{}: no metrics rows", e.meta.name);
-        let auc = trace.last_auc();
-        if !e.meta.has_objective {
-            assert!(auc.is_finite(), "{}: saddle problem must report AUC", e.meta.name);
+        match e.meta.saddle_stat {
+            Some(stat) => {
+                // every saddle entry reports the generic saddle residual…
+                assert!(
+                    trace.last_saddle_res().is_finite(),
+                    "{}: saddle problem must report the saddle residual",
+                    e.meta.name
+                );
+                // …and only AUC-scored ones additionally report AUC
+                assert_eq!(
+                    trace.last_auc().is_finite(),
+                    stat == SaddleStat::AucRanking,
+                    "{}: AUC column disagrees with the declared saddle stat",
+                    e.meta.name
+                );
+            }
+            None => {
+                let last = trace.rows.last().unwrap();
+                assert!(
+                    last.objective.is_finite(),
+                    "{}: objective problem must report an objective",
+                    e.meta.name
+                );
+                assert!(
+                    last.saddle_res.is_nan(),
+                    "{}: non-saddle problem must not report a saddle residual",
+                    e.meta.name
+                );
+            }
         }
     }
 }
@@ -119,7 +145,12 @@ fn registry_constructors_reject_bad_params_with_clean_errors() {
     // constructors must return Err (never panic) on out-of-range knobs
     let reg = ProblemRegistry::builtin();
     let ds = SyntheticSpec::tiny().generate(3);
-    for (name, key) in [("elastic-net", "l1"), ("smoothed-hinge", "gamma")] {
+    for (name, key) in [
+        ("elastic-net", "l1"),
+        ("smoothed-hinge", "gamma"),
+        ("robust-ls", "rho"),
+        ("dro-bilinear", "nu"),
+    ] {
         let Some(e) = reg.resolve(name) else {
             continue; // workload not registered yet in this build
         };

@@ -1,0 +1,175 @@
+//! End-to-end tests of the saddle subsystem: both minimax registry
+//! entries run under DSBA and DSBA-s on both engines, the reported
+//! saddle residual decreases geometrically, the restricted duality gap
+//! tracks it, and AUC behaves as a plain client of the same machinery.
+
+use dsba::algorithms::AlgorithmKind;
+use dsba::operators::{ProblemRegistry, SaddleStat};
+use dsba::prelude::*;
+use dsba::runtime::{EngineKind, TransportKind};
+
+fn saddle_cfg(problem: &str, alg: AlgorithmKind) -> ExperimentConfig {
+    ExperimentConfig {
+        problem: problem.into(),
+        dataset: "tiny".into(),
+        nodes: 4,
+        lambda: 0.1,
+        algorithm: alg,
+        alpha: 0.5,
+        passes: 80.0,
+        record_points: 10,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn saddle_residual_decreases_geometrically_under_dsba_and_dsba_s() {
+    for problem in ["robust-ls", "dro-bilinear"] {
+        for alg in [AlgorithmKind::Dsba, AlgorithmKind::DsbaSparse] {
+            let mut exp = saddle_cfg(problem, alg).build().unwrap();
+            let trace = exp.run();
+            let first = trace.rows.first().unwrap();
+            let last = trace.rows.last().unwrap();
+            assert!(
+                first.saddle_res.is_finite() && first.saddle_res > 0.0,
+                "{problem}/{}: starting residual {}",
+                alg.name(),
+                first.saddle_res
+            );
+            assert!(
+                last.saddle_res < first.saddle_res * 1e-2,
+                "{problem}/{}: residual {} -> {} (not geometric)",
+                alg.name(),
+                first.saddle_res,
+                last.saddle_res
+            );
+            // mean per-sample contraction strictly < 1: the log-residual
+            // trend is a decaying line, not a plateau
+            let k = (trace.rows.len() - 1) as f64;
+            let rate = (last.saddle_res / first.saddle_res).powf(1.0 / k);
+            assert!(
+                rate < 0.9,
+                "{problem}/{}: mean contraction {rate}",
+                alg.name()
+            );
+            // the restricted duality gap is reported, nonnegative (up to
+            // rounding), and collapses alongside the residual
+            assert!(last.saddle_gap.is_finite());
+            assert!(
+                last.saddle_gap > -1e-8,
+                "{problem}/{}: gap went negative: {}",
+                alg.name(),
+                last.saddle_gap
+            );
+            if first.saddle_gap > 1e-9 {
+                assert!(
+                    last.saddle_gap < first.saddle_gap * 1e-2,
+                    "{problem}/{}: gap {} -> {}",
+                    alg.name(),
+                    first.saddle_gap,
+                    last.saddle_gap
+                );
+            }
+            // saddle problems have no objective; suboptimality collapses
+            assert!(last.objective.is_nan());
+            assert!(last.suboptimality < first.suboptimality * 1e-3);
+        }
+    }
+}
+
+#[test]
+fn saddle_workloads_match_sequential_on_both_engines_and_transports() {
+    // the engine x transport matrix on a minimax entry, driven through
+    // the config layer exactly as a user would: parallel local and
+    // parallel loopback-TCP traces must equal the sequential oracle's
+    for problem in ["robust-ls", "dro-bilinear"] {
+        let run = |engine: EngineKind, transport: TransportKind| {
+            let mut cfg = saddle_cfg(problem, AlgorithmKind::DsbaSparse);
+            cfg.passes = 6.0;
+            cfg.record_points = 6;
+            cfg.engine.kind = engine;
+            cfg.engine.threads = 2;
+            cfg.engine.transport = transport;
+            let mut exp = cfg.build().unwrap();
+            exp.run()
+        };
+        let seq = run(EngineKind::Sequential, TransportKind::Local);
+        let par = run(EngineKind::Parallel, TransportKind::Local);
+        let tcp = run(EngineKind::Parallel, TransportKind::Tcp);
+        for other in [&par, &tcp] {
+            assert_eq!(seq.rows.len(), other.rows.len());
+            for (a, b) in seq.rows.iter().zip(&other.rows) {
+                assert_eq!(a.iter, b.iter, "{problem}: sampling rounds diverged");
+                assert_eq!(
+                    a.suboptimality, b.suboptimality,
+                    "{problem}: iterates diverged across engines"
+                );
+                assert_eq!(
+                    a.saddle_res, b.saddle_res,
+                    "{problem}: saddle residual diverged across engines"
+                );
+                assert_eq!(a.comm_doubles, b.comm_doubles);
+            }
+        }
+    }
+}
+
+#[test]
+fn auc_is_a_client_of_the_generic_saddle_subsystem() {
+    // AUC runs through the same merit layer: the ranking statistic is
+    // driven by the declared SaddleStat, and the generic residual +
+    // restricted gap series are reported alongside it
+    let entry = ProblemRegistry::builtin().resolve("auc").unwrap();
+    assert_eq!(entry.meta.saddle_stat, Some(SaddleStat::AucRanking));
+    let mut cfg = saddle_cfg("auc", AlgorithmKind::Dsba);
+    cfg.lambda = 0.05;
+    cfg.passes = 40.0;
+    let mut exp = cfg.build().unwrap();
+    let trace = exp.run();
+    let first = trace.rows.first().unwrap();
+    let last = trace.rows.last().unwrap();
+    // the workload-specific statistic still works…
+    assert!(last.auc.is_finite());
+    assert!(last.auc > 0.55, "AUC {}", last.auc);
+    // …and the generic saddle merit layer reports on AUC too
+    assert!(last.saddle_res.is_finite());
+    assert!(
+        last.saddle_res < first.saddle_res * 1e-1,
+        "AUC saddle residual {} -> {}",
+        first.saddle_res,
+        last.saddle_res
+    );
+    assert!(last.saddle_gap.is_finite());
+    assert!(last.saddle_gap > -1e-8);
+    assert!(last.objective.is_nan());
+}
+
+#[test]
+fn forward_baselines_also_run_the_minimax_entries() {
+    // DSA and EXTRA (the fig3 baselines) execute the new saddle entries
+    // end to end with finite, decreasing residuals — the subsystem is
+    // not DSBA-specific
+    for problem in ["robust-ls", "dro-bilinear"] {
+        for alg in [AlgorithmKind::Dsa, AlgorithmKind::Extra] {
+            let mut cfg = saddle_cfg(problem, alg);
+            // forward steps on a (partly skew) saddle field spiral unless
+            // alpha stays below ~2 mu / (mu^2 + sigma^2); 0.08 is safely
+            // inside for both entries at lambda = 0.1
+            cfg.alpha = 0.08;
+            cfg.passes = 60.0;
+            let mut exp = cfg.build().unwrap();
+            let trace = exp.run();
+            let first = trace.rows.first().unwrap();
+            let last = trace.rows.last().unwrap();
+            assert!(last.saddle_res.is_finite());
+            assert!(
+                last.saddle_res < first.saddle_res,
+                "{problem}/{}: residual did not decrease ({} -> {})",
+                alg.name(),
+                first.saddle_res,
+                last.saddle_res
+            );
+        }
+    }
+}
