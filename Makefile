@@ -30,7 +30,8 @@ doc:
 bench-engine:
 	$(CARGO) bench --bench engine_scaling
 
-## local vs loopback-TCP transport throughput (DOUBLEs/sec)
+## local vs loopback-TCP transport throughput (DOUBLEs/sec), plus the
+## compression-ratio sweep that writes results/BENCH_transport.json
 bench-transport:
 	$(CARGO) bench --bench transport_overhead
 
@@ -46,6 +47,14 @@ smoke: build
 	  target/release/dsba run --problem $$p --dataset tiny --nodes 4 \
 	    --passes 1 --engine parallel --threads 2; \
 	done
+	# lossy wire compression end-to-end, once per transport (the
+	# sequential oracle rejects --compress by design)
+	echo "--- smoke: elastic-net + topk:4 (local) ---"
+	target/release/dsba run --problem elastic-net --dataset tiny --nodes 4 \
+	  --passes 1 --engine parallel --threads 2 --compress topk:4
+	echo "--- smoke: elastic-net + topk:4 (tcp) ---"
+	target/release/dsba run --problem elastic-net --dataset tiny --nodes 4 \
+	  --passes 1 --engine parallel --threads 2 --transport tcp --compress topk:4
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
 artifacts:

@@ -9,10 +9,11 @@
 
 use dsba::algorithms::{AlgoParams, AlgorithmKind};
 use dsba::bench_harness::header;
-use dsba::comm::{CommCostModel, Network};
+use dsba::comm::{CommCostModel, CompressionSpec, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
-use dsba::runtime::{ParallelEngine, TcpTransport};
+use dsba::runtime::{LocalTransport, ParallelEngine, TcpTransport};
+use dsba::util::json::Json;
 use dsba::util::timer::Timer;
 use std::sync::Arc;
 
@@ -29,6 +30,25 @@ fn time_rounds(eng: &mut ParallelEngine, topo: &Topology, rounds: usize) -> (f64
         eng.step(&mut net);
     }
     (t.secs(), net.total_received() - warm)
+}
+
+/// Same loop, also tracking declared bytes-on-wire (the COMP-frame sizes
+/// the cost model charges, 8 B/coordinate dense).
+fn time_rounds_bytes(eng: &mut ParallelEngine, topo: &Topology, rounds: usize) -> (f64, f64, f64) {
+    let mut net = Network::new(topo.clone(), CommCostModel::default());
+    for _ in 0..topo.diameter + 2 {
+        eng.step(&mut net);
+    }
+    let (warm_d, warm_b) = (net.total_received(), net.total_received_bytes());
+    let t = Timer::start();
+    for _ in 0..rounds {
+        eng.step(&mut net);
+    }
+    (
+        t.secs(),
+        net.total_received() - warm_d,
+        net.total_received_bytes() - warm_b,
+    )
 }
 
 fn main() {
@@ -96,5 +116,96 @@ fn main() {
     println!(
         "\n(overhead = local rate / tcp rate; the tcp column pays encode + \
          frame + loopback syscalls per edge, the real cross-process cost)"
+    );
+
+    compression_sweep();
+}
+
+/// Sweep `--compress` settings on a dense-broadcast method and record the
+/// declared bytes-on-wire vs DOUBLEs for each, emitting
+/// `results/BENCH_transport.json` — the repo's first machine-readable
+/// transport snapshot.
+fn compression_sweep() {
+    let nodes = 8;
+    let rounds = 20;
+    let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(40 * nodes)
+        .with_dim(4_096)
+        .with_regression(true)
+        .generate(3);
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let problem: Arc<dyn Problem> =
+        Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 2), 0.01));
+    let d = problem.dim();
+    let params = AlgoParams::new(0.3, d, 7);
+
+    header(&format!(
+        "compression sweep: extra @ N = {nodes} (d = {d}, local transport, {rounds} rounds)"
+    ));
+    println!(
+        "{:>10} {:>14} {:>16} {:>9} {:>9}",
+        "compress", "DOUBLEs", "bytes-on-wire", "ratio", "ms/round"
+    );
+
+    let specs = [
+        CompressionSpec::None,
+        CompressionSpec::TopK(d / 64),
+        CompressionSpec::TopK(d / 16),
+        CompressionSpec::TopK(d / 4),
+        CompressionSpec::Qsgd(64),
+    ];
+    let mut dense_bytes = 0.0_f64;
+    let mut sweep = Vec::new();
+    for spec in &specs {
+        let mut eng = ParallelEngine::new_full(
+            AlgorithmKind::Extra,
+            problem.clone(),
+            &mix,
+            &topo,
+            &params,
+            4,
+            Box::new(LocalTransport::new(topo.n)),
+            spec,
+        );
+        let (secs, doubles, bytes) = time_rounds_bytes(&mut eng, &topo, rounds);
+        if *spec == CompressionSpec::None {
+            dense_bytes = bytes;
+        }
+        let ratio = if dense_bytes > 0.0 {
+            bytes / dense_bytes
+        } else {
+            1.0
+        };
+        println!(
+            "{:>10} {:>14.0} {:>16.0} {:>9.3} {:>9.3}",
+            spec.name(),
+            doubles,
+            bytes,
+            ratio,
+            secs / rounds as f64 * 1e3
+        );
+        sweep.push(Json::from_pairs(vec![
+            ("compress", Json::Str(spec.name())),
+            ("rounds", Json::Num(rounds as f64)),
+            ("doubles", Json::Num(doubles)),
+            ("bytes_on_wire", Json::Num(bytes)),
+            ("secs", Json::Num(secs)),
+        ]));
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("transport".into())),
+        ("method", Json::Str("extra".into())),
+        ("nodes", Json::Num(nodes as f64)),
+        ("dim", Json::Num(d as f64)),
+        ("sweep", Json::Arr(sweep)),
+    ]);
+    std::fs::create_dir_all("results").expect("create results dir");
+    std::fs::write("results/BENCH_transport.json", doc.to_string())
+        .expect("write BENCH_transport.json");
+    println!(
+        "\n(ratio = bytes-on-wire / dense bytes at matched rounds; snapshot \
+         written to results/BENCH_transport.json)"
     );
 }

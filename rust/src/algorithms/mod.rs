@@ -88,8 +88,12 @@ pub trait Algorithm {
     /// split run every process must call this at the same rounds (the
     /// coordinator's sampling schedule is derived from shared config,
     /// which guarantees it).
-    fn global_stats(&mut self, received: &[f64]) -> Option<GlobalStats> {
-        let _ = received;
+    fn global_stats(
+        &mut self,
+        received: &[f64],
+        received_bytes: &[f64],
+    ) -> Option<GlobalStats> {
+        let _ = (received, received_bytes);
         None
     }
 }

@@ -83,6 +83,10 @@ USAGE:
            [--engine sequential|parallel] [--threads N]
            [--transport local|tcp] [--listen ADDR] [--peers N=ADDR,..]
            [--hosted SPEC]
+           [--compress none|identity|topk:K|randk:K|qsgd:L]
+           (wire compression with CHOCO error feedback at the transport
+            boundary; parallel engine only. comm_bytes in the output
+            tracks the declared bytes-on-wire next to the DOUBLE model)
            (tcp transport: every edge crosses a loopback/host socket;
             default hosts all nodes on loopback. --hosted \"0-4\" +
             --peers \"5=host:port,...\" splits one run across engine
@@ -200,6 +204,15 @@ fn cmd_run(args: &[String]) -> i32 {
     if let Some(v) = f.get("hosted") {
         cfg.engine.tcp.hosted = v.clone();
     }
+    if let Some(v) = f.get("compress") {
+        match crate::comm::CompressionSpec::parse(v) {
+            Ok(s) => cfg.engine.compress = s,
+            Err(e) => {
+                eprintln!("bad --compress: {e}");
+                return 2;
+            }
+        }
+    }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
             if let Some(v) = f.get($key) {
@@ -273,9 +286,10 @@ fn cmd_run(args: &[String]) -> i32 {
     };
     println!("{}", format_table(&trace.rows));
     println!(
-        "final: suboptimality {:.3e}, comm {:.3e} doubles",
+        "final: suboptimality {:.3e}, comm {:.3e} doubles, {:.3e} wire bytes",
         trace.last_suboptimality(),
-        trace.final_comm()
+        trace.final_comm(),
+        trace.final_comm_bytes()
     );
     0
 }

@@ -1,0 +1,593 @@
+//! Pluggable wire compression with CHOCO-style error feedback.
+//!
+//! DSBA-s (PAPER.md §5.1) shows the wire layer can carry *exact* sparse
+//! deltas; this module generalizes the idea to **lossy** schemes from the
+//! compressed-gossip literature — top-k / random-k sparsification and
+//! QSGD-style stochastic quantization — behind one [`Compressor`] trait.
+//! Each lossy stream is wrapped in per-edge [`ErrorFeedback`] memory
+//! (`x_hat += Q(x - x_hat)`, the CHOCO-SGD estimate-tracking scheme), so
+//! the quantization error of round `t` is re-sent at round `t + 1`
+//! instead of being lost, and dense-gossip methods (DGD / EXTRA / DSA /
+//! dense DSBA) keep converging under compression.
+//!
+//! The sender compresses the *difference* between its iterate and the
+//! shared estimate `x_hat`; every receiver holds a bit-identical replica
+//! of `x_hat` (both sides apply the same quantized delta, which travels
+//! verbatim on the wire as a `COMP` frame, f64 bits intact), so no RNG or
+//! compressor state is needed on the receive side. [`Identity`] is the
+//! exact member of the family: it ships the full vector and *assigns*
+//! `x_hat = x` on both ends, which is what makes the Identity parity pin
+//! bit-for-bit (an accumulate of `x - x_hat` would drift in the last ulp).
+//!
+//! Selection is a [`CompressionSpec`] (`none | identity | topk:K |
+//! randk:K | qsgd:L`) carried by [`crate::runtime::EngineSpec`]; `none`
+//! bypasses the machinery entirely. The sequential driver is always the
+//! uncompressed reference — compression applies to the parallel engine's
+//! transport boundary only.
+
+use crate::util::rng::Rng;
+
+/// A compressed vector as it travels on the wire: explicit support
+/// (`idx`, strictly increasing) with the quantized values, plus the
+/// *declared* honest wire size of the scheme's real binary encoding
+/// ([`Compressor::bytes_on_wire`]) so both endpoints account identical
+/// byte totals regardless of the in-memory representation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressedVec {
+    /// dimension of the (dense) vector this compresses
+    pub dim: usize,
+    /// support, strictly increasing, every entry `< dim`
+    pub idx: Vec<u32>,
+    /// quantized values, one per support entry
+    pub val: Vec<f64>,
+    /// declared bytes-on-wire of the scheme's binary encoding
+    pub bytes: u64,
+}
+
+impl CompressedVec {
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Scatter to a dense vector (zeros off-support).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// A (possibly lossy, possibly randomized) vector compression operator.
+///
+/// `compress` takes `&mut self` because the randomized members
+/// ([`RandomK`], [`Qsgd`]) advance a deterministic per-node RNG stream —
+/// which is what keeps lossy runs reproducible at any thread count.
+pub trait Compressor: Send {
+    /// Quantize `x` into its wire form.
+    fn compress(&mut self, x: &[f64]) -> CompressedVec;
+
+    /// Reconstruct the dense approximation the receiver sees.
+    fn decompress(&self, c: &CompressedVec) -> Vec<f64> {
+        c.to_dense()
+    }
+
+    /// Declared honest wire bytes for one dim-`dim` payload.
+    fn bytes_on_wire(&self, dim: usize) -> u64;
+
+    /// Contraction factor `c` with `||x - Q(x)||^2 <= c * ||x||^2`
+    /// (deterministic for [`TopK`] / [`Qsgd`], in expectation for
+    /// [`RandomK`]; `0` for [`Identity`]). Error feedback converges when
+    /// `c < 1` — the property suite pins `x_hat -> x` at this rate.
+    fn contraction(&self, dim: usize) -> f64;
+
+    /// Exact compressors ship the full vector bit-for-bit; error
+    /// feedback then *assigns* `x_hat = x` instead of accumulating.
+    fn is_exact(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Exact pass-through: full support, original f64 bits, `8 d` bytes.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&mut self, x: &[f64]) -> CompressedVec {
+        CompressedVec {
+            dim: x.len(),
+            idx: (0..x.len() as u32).collect(),
+            val: x.to_vec(),
+            bytes: self.bytes_on_wire(x.len()),
+        }
+    }
+
+    fn bytes_on_wire(&self, dim: usize) -> u64 {
+        8 * dim as u64
+    }
+
+    fn contraction(&self, _dim: usize) -> f64 {
+        0.0
+    }
+
+    fn is_exact(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+}
+
+/// Keep the `k` largest-magnitude coordinates (deterministic; ties break
+/// toward the lower index). `12 k` bytes (u32 index + f64 value each).
+pub struct TopK {
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, x: &[f64]) -> CompressedVec {
+        let k = self.k.min(x.len());
+        let mut order: Vec<u32> = (0..x.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            let (ma, mb) = (x[a as usize].abs(), x[b as usize].abs());
+            mb.partial_cmp(&ma)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut idx = order[..k].to_vec();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        CompressedVec { dim: x.len(), idx, val, bytes: self.bytes_on_wire(x.len()) }
+    }
+
+    fn bytes_on_wire(&self, dim: usize) -> u64 {
+        12 * self.k.min(dim) as u64
+    }
+
+    fn contraction(&self, dim: usize) -> f64 {
+        if dim == 0 {
+            return 0.0;
+        }
+        1.0 - self.k.min(dim) as f64 / dim as f64
+    }
+
+    fn name(&self) -> String {
+        format!("topk:{}", self.k)
+    }
+}
+
+/// Keep `k` uniformly random coordinates (kept values exact, like top-k,
+/// so a coordinate is reconstructed perfectly the round it is drawn).
+pub struct RandomK {
+    pub k: usize,
+    rng: Rng,
+}
+
+impl RandomK {
+    pub fn new(k: usize, seed: u64) -> RandomK {
+        RandomK { k, rng: Rng::new(seed) }
+    }
+}
+
+impl Compressor for RandomK {
+    fn compress(&mut self, x: &[f64]) -> CompressedVec {
+        let k = self.k.min(x.len());
+        let mut idx: Vec<u32> = self
+            .rng
+            .sample_indices(x.len(), k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        CompressedVec { dim: x.len(), idx, val, bytes: self.bytes_on_wire(x.len()) }
+    }
+
+    fn bytes_on_wire(&self, dim: usize) -> u64 {
+        12 * self.k.min(dim) as u64
+    }
+
+    fn contraction(&self, dim: usize) -> f64 {
+        if dim == 0 {
+            return 0.0;
+        }
+        1.0 - self.k.min(dim) as f64 / dim as f64
+    }
+
+    fn name(&self) -> String {
+        format!("randk:{}", self.k)
+    }
+}
+
+/// QSGD-style stochastic quantization with `levels` uniform levels per
+/// sign: each coordinate is dithered to `sign(x_i) * ||x||_2 * l / s`
+/// with `l` the stochastic rounding of `|x_i| / ||x||_2 * s`. Wire cost
+/// is the scheme's real encoding — the f64 norm plus
+/// `ceil(log2(2s + 1))` bits per coordinate (level + sign, dense
+/// bitmap), independent of how many levels round to zero.
+pub struct Qsgd {
+    pub levels: u32,
+    rng: Rng,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32, seed: u64) -> Qsgd {
+        assert!(levels >= 1, "qsgd needs at least one level");
+        Qsgd { levels, rng: Rng::new(seed) }
+    }
+
+    fn bits_per_coord(&self) -> u64 {
+        // ceil(log2(2s + 1)) distinct states: levels 0..=s, two signs
+        let states = 2 * self.levels as u64 + 1;
+        (64 - (states - 1).leading_zeros()) as u64
+    }
+}
+
+impl Compressor for Qsgd {
+    fn compress(&mut self, x: &[f64]) -> CompressedVec {
+        let s = self.levels as f64;
+        let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        if norm > 0.0 && norm.is_finite() {
+            for (i, &v) in x.iter().enumerate() {
+                let u = v.abs() / norm * s;
+                let base = u.floor();
+                let up = self.rng.uniform() < u - base;
+                let lvl = if up { base + 1.0 } else { base };
+                if lvl > 0.0 {
+                    idx.push(i as u32);
+                    val.push(v.signum() * norm * lvl / s);
+                }
+            }
+        }
+        CompressedVec { dim: x.len(), idx, val, bytes: self.bytes_on_wire(x.len()) }
+    }
+
+    fn bytes_on_wire(&self, dim: usize) -> u64 {
+        8 + (dim as u64 * self.bits_per_coord() + 7) / 8
+    }
+
+    /// Per-realization bound: dithering moves each coordinate by at most
+    /// `||x|| / s`, so `||x - Q(x)||^2 <= (d / s^2) ||x||^2`. Only a
+    /// contraction when `s > sqrt(d)` — pick levels accordingly.
+    fn contraction(&self, dim: usize) -> f64 {
+        dim as f64 / (self.levels as f64 * self.levels as f64)
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd:{}", self.levels)
+    }
+}
+
+/// Per-edge CHOCO error-feedback state. `x_hat` is the shared estimate
+/// both endpoints of a directed edge track; `memory` is the residual
+/// `x - x_hat` left after the round's quantized delta was absorbed — the
+/// error that the *next* compression round gets to re-send.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    pub x_hat: Vec<f64>,
+    pub memory: Vec<f64>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> ErrorFeedback {
+        ErrorFeedback { x_hat: vec![0.0; dim], memory: vec![0.0; dim] }
+    }
+
+    /// Sender side: quantize `x - x_hat`, absorb the delta into `x_hat`
+    /// (assign for exact compressors), refresh `memory`, and return the
+    /// wire payload.
+    pub fn encode(&mut self, comp: &mut dyn Compressor, x: &[f64]) -> CompressedVec {
+        assert_eq!(
+            x.len(),
+            self.x_hat.len(),
+            "error-feedback dim {} but payload dim {}",
+            self.x_hat.len(),
+            x.len()
+        );
+        let c = if comp.is_exact() {
+            let c = comp.compress(x);
+            self.apply(&c, true);
+            c
+        } else {
+            let delta: Vec<f64> =
+                x.iter().zip(&self.x_hat).map(|(a, b)| a - b).collect();
+            let c = comp.compress(&delta);
+            self.apply(&c, false);
+            c
+        };
+        for (m, (a, b)) in self.memory.iter_mut().zip(x.iter().zip(&self.x_hat)) {
+            *m = a - b;
+        }
+        c
+    }
+
+    /// Receiver side (and the shared half of [`ErrorFeedback::encode`]):
+    /// absorb a wire delta into `x_hat`. Both endpoints run exactly this
+    /// arithmetic on exactly these bits, so the replicas stay
+    /// bit-identical without any back-channel.
+    pub fn apply(&mut self, c: &CompressedVec, exact: bool) {
+        assert_eq!(
+            c.dim,
+            self.x_hat.len(),
+            "error-feedback dim {} but COMP frame dim {}",
+            self.x_hat.len(),
+            c.dim
+        );
+        if exact {
+            self.x_hat.fill(0.0);
+            for (&i, &v) in c.idx.iter().zip(&c.val) {
+                self.x_hat[i as usize] = v;
+            }
+        } else {
+            for (&i, &v) in c.idx.iter().zip(&c.val) {
+                self.x_hat[i as usize] += v;
+            }
+        }
+    }
+}
+
+/// Which compression runs on the parallel engine's transport boundary.
+/// `None` bypasses the machinery entirely (`--compress none`, the
+/// default, bit-for-bit identical to the uncompressed engine).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CompressionSpec {
+    None,
+    Identity,
+    TopK(usize),
+    RandK(usize),
+    Qsgd(u32),
+}
+
+impl Default for CompressionSpec {
+    fn default() -> CompressionSpec {
+        CompressionSpec::None
+    }
+}
+
+impl CompressionSpec {
+    /// Parse `none | identity | topk:K | randk:K | qsgd:L` (K, L >= 1).
+    pub fn parse(s: &str) -> Result<CompressionSpec, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "none" {
+            return Ok(CompressionSpec::None);
+        }
+        if s == "identity" {
+            return Ok(CompressionSpec::Identity);
+        }
+        let bad = || {
+            format!(
+                "bad compression spec '{s}' \
+                 (expected none | identity | topk:K | randk:K | qsgd:L)"
+            )
+        };
+        let (head, arg) = s.split_once(':').ok_or_else(bad)?;
+        match head {
+            "topk" | "randk" => {
+                let k: usize = arg.parse().map_err(|_| bad())?;
+                if k == 0 {
+                    return Err(format!("compression spec '{s}': K must be >= 1"));
+                }
+                Ok(if head == "topk" {
+                    CompressionSpec::TopK(k)
+                } else {
+                    CompressionSpec::RandK(k)
+                })
+            }
+            "qsgd" => {
+                let l: u32 = arg.parse().map_err(|_| bad())?;
+                if l == 0 {
+                    return Err(format!("compression spec '{s}': L must be >= 1"));
+                }
+                Ok(CompressionSpec::Qsgd(l))
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// Canonical spec string (`parse(name())` is the identity).
+    pub fn name(&self) -> String {
+        match self {
+            CompressionSpec::None => "none".to_string(),
+            CompressionSpec::Identity => "identity".to_string(),
+            CompressionSpec::TopK(k) => format!("topk:{k}"),
+            CompressionSpec::RandK(k) => format!("randk:{k}"),
+            CompressionSpec::Qsgd(l) => format!("qsgd:{l}"),
+        }
+    }
+
+    /// Whether the compressed stream carries the exact vector (error
+    /// feedback assigns instead of accumulating).
+    pub fn is_exact(&self) -> bool {
+        matches!(self, CompressionSpec::None | CompressionSpec::Identity)
+    }
+
+    /// Instantiate the per-node compressor (`None` for the bypass). The
+    /// RNG stream is derived from the experiment seed and the node index,
+    /// so split engine processes agree without communicating.
+    pub fn build_for_node(&self, seed: u64, node: usize) -> Option<Box<dyn Compressor>> {
+        let node_seed = seed ^ (node as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F);
+        match *self {
+            CompressionSpec::None => None,
+            CompressionSpec::Identity => Some(Box::new(Identity)),
+            CompressionSpec::TopK(k) => Some(Box::new(TopK { k })),
+            CompressionSpec::RandK(k) => Some(Box::new(RandomK::new(k, node_seed))),
+            CompressionSpec::Qsgd(l) => Some(Box::new(Qsgd::new(l, node_seed))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l2sq(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn spec_parse_and_name_roundtrip() {
+        for s in ["none", "identity", "topk:4", "randk:8", "qsgd:16"] {
+            let spec = CompressionSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+        }
+        assert_eq!(CompressionSpec::parse(" TopK:3 ").unwrap(), CompressionSpec::TopK(3));
+        for bad in ["", "topk", "topk:", "topk:0", "topk:-1", "qsgd:0", "gzip:9"] {
+            assert!(CompressionSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn identity_is_bit_exact() {
+        let x = vec![0.1, -0.0, 3.5e-300, f64::MAX, -2.0];
+        let mut c = Identity;
+        let q = c.compress(&x);
+        assert_eq!(q.nnz(), x.len());
+        let back = c.decompress(&q);
+        for (a, b) in x.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(q.bytes, 8 * x.len() as u64);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_contracts() {
+        let x = vec![1.0, -5.0, 0.5, 4.0, -0.25, 3.0];
+        let mut c = TopK { k: 3 };
+        let q = c.compress(&x);
+        assert_eq!(q.idx, vec![1, 3, 5]);
+        assert_eq!(q.val, vec![-5.0, 4.0, 3.0]);
+        assert_eq!(q.bytes, 36);
+        let err: Vec<f64> = x
+            .iter()
+            .zip(&c.decompress(&q))
+            .map(|(a, b)| a - b)
+            .collect();
+        assert!(l2sq(&err) <= c.contraction(x.len()) * l2sq(&x) + 1e-12);
+    }
+
+    #[test]
+    fn topk_truncates_k_to_dim() {
+        let x = vec![2.0, -1.0];
+        let mut c = TopK { k: 10 };
+        let q = c.compress(&x);
+        assert_eq!(q.idx, vec![0, 1]);
+        assert_eq!(q.bytes, 24);
+    }
+
+    #[test]
+    fn randk_support_is_valid_and_deterministic() {
+        let x: Vec<f64> = (0..40).map(|i| (i as f64).sin()).collect();
+        let mut a = RandomK::new(7, 99);
+        let mut b = RandomK::new(7, 99);
+        for _ in 0..20 {
+            let qa = a.compress(&x);
+            let qb = b.compress(&x);
+            assert_eq!(qa, qb, "same seed must give the same stream");
+            assert_eq!(qa.nnz(), 7);
+            assert!(qa.idx.windows(2).all(|w| w[0] < w[1]));
+            assert!(qa.idx.iter().all(|&i| (i as usize) < x.len()));
+            for (&i, &v) in qa.idx.iter().zip(&qa.val) {
+                assert_eq!(v, x[i as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_error_within_declared_contraction() {
+        let x: Vec<f64> = (0..32).map(|i| ((i * 37 % 13) as f64 - 6.0) / 3.0).collect();
+        let mut c = Qsgd::new(64, 5);
+        for _ in 0..10 {
+            let q = c.compress(&x);
+            let err: Vec<f64> = x
+                .iter()
+                .zip(&c.decompress(&q))
+                .map(|(a, b)| a - b)
+                .collect();
+            assert!(
+                l2sq(&err) <= c.contraction(x.len()) * l2sq(&x) + 1e-12,
+                "dithering moved a coordinate more than ||x||/s"
+            );
+        }
+    }
+
+    #[test]
+    fn qsgd_declared_bytes_match_bit_width() {
+        // 2*64 + 1 = 129 states -> 8 bits per coordinate
+        let c = Qsgd::new(64, 0);
+        assert_eq!(c.bytes_on_wire(100), 8 + 100);
+        // 2*1 + 1 = 3 states -> 2 bits per coordinate
+        let c = Qsgd::new(1, 0);
+        assert_eq!(c.bytes_on_wire(8), 8 + 2);
+    }
+
+    #[test]
+    fn qsgd_zero_vector_compresses_empty() {
+        let mut c = Qsgd::new(4, 1);
+        let q = c.compress(&[0.0; 6]);
+        assert_eq!(q.nnz(), 0);
+        assert_eq!(c.decompress(&q), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn error_feedback_identity_assigns_exactly() {
+        let x = vec![0.3, -1.7, 2.25];
+        let mut ef = ErrorFeedback::new(3);
+        let mut c = Identity;
+        // seed x_hat away from zero so accumulate-vs-assign would differ
+        ef.x_hat = vec![0.1, 0.1, 0.1];
+        let q = ef.encode(&mut c, &x);
+        for (a, b) in ef.x_hat.iter().zip(&x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(ef.memory.iter().all(|&m| m == 0.0));
+        // the receiver replica lands on the same bits
+        let mut rx = ErrorFeedback::new(3);
+        rx.apply(&q, true);
+        assert_eq!(rx.x_hat, ef.x_hat);
+    }
+
+    #[test]
+    fn error_feedback_topk_converges_to_constant_target() {
+        let x: Vec<f64> = (0..12).map(|i| (i as f64 - 5.5) / 4.0).collect();
+        let mut ef = ErrorFeedback::new(12);
+        let mut rx = ErrorFeedback::new(12);
+        let mut c = TopK { k: 4 };
+        // from x_hat = 0 every selected coordinate lands exactly on x_i,
+        // so ceil(d/k) rounds empty the residual completely
+        for _ in 0..4 {
+            let q = ef.encode(&mut c, &x);
+            rx.apply(&q, false);
+        }
+        assert_eq!(ef.x_hat, x);
+        assert_eq!(rx.x_hat, x, "receiver replica must track the sender");
+        assert!(l2sq(&ef.memory) == 0.0);
+    }
+
+    #[test]
+    fn error_feedback_memory_is_the_residual() {
+        let x = vec![4.0, 1.0, -3.0, 0.5];
+        let mut ef = ErrorFeedback::new(4);
+        let mut c = TopK { k: 2 };
+        ef.encode(&mut c, &x);
+        // top-2 absorbed {4.0, -3.0}; the memory holds what was dropped
+        assert_eq!(ef.memory, vec![0.0, 1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn build_for_node_streams_are_node_dependent() {
+        let spec = CompressionSpec::RandK(3);
+        let x: Vec<f64> = (0..30).map(|i| i as f64 + 1.0).collect();
+        let stream = |node: usize| -> Vec<u32> {
+            let mut c = spec.build_for_node(7, node).unwrap();
+            (0..5).flat_map(|_| c.compress(&x).idx).collect()
+        };
+        assert_eq!(stream(0), stream(0), "node stream must be reproducible");
+        assert_ne!(stream(0), stream(1), "distinct nodes should draw distinct supports");
+        assert!(CompressionSpec::None.build_for_node(7, 0).is_none());
+    }
+}

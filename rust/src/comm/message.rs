@@ -2,9 +2,11 @@
 //! lossless wire codec.
 //!
 //! The per-node runtime (sequential driver and parallel engine alike)
-//! moves exactly two payload families: dense iterate broadcasts (the
-//! EXTRA / DSA / dense-DSBA / DLM / SSDA / DGD exchange) and the §5.1
-//! sparse relay deltas of DSBA-s. Costs are priced through
+//! moves three payload families: dense iterate broadcasts (the
+//! EXTRA / DSA / dense-DSBA / DLM / SSDA / DGD exchange), the §5.1
+//! sparse relay deltas of DSBA-s, and `COMP` error-feedback deltas when
+//! the engine runs a lossy [`crate::comm::Compressor`] on the dense
+//! broadcast. Costs are priced through
 //! [`CommCostModel`] identically to the legacy `round_dense_exchange` /
 //! `RelayProtocol::round` accounting, so engine traffic is comparable
 //! DOUBLE-for-DOUBLE with the paper's `C_n^t` metric.
@@ -13,7 +15,7 @@
 //! round-tripping is bit-exact); `rust/tests/properties.rs` pins
 //! encode → decode as the identity.
 
-use crate::comm::{Network, RelayDelta};
+use crate::comm::{CompressedVec, Network, RelayDelta};
 use crate::linalg::SparseVec;
 use std::sync::Arc;
 
@@ -30,6 +32,10 @@ pub enum Message {
     Dense(Arc<Vec<f64>>),
     /// Sparse §5.1 relay delta (support of one data row + dense tail).
     Sparse(RelayDelta),
+    /// Compressed iterate delta (`comm::compressor` error-feedback
+    /// stream); `Arc`-shared like the dense broadcast it replaces, so a
+    /// node compresses and encodes once per round, not once per edge.
+    Comp(Arc<CompressedVec>),
 }
 
 /// A message addressed to one neighbor.
@@ -41,6 +47,7 @@ pub struct Outgoing {
 
 const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
+const TAG_COMP: u8 = 2;
 
 impl Message {
     /// Wrap an owned vector as a dense payload.
@@ -54,6 +61,7 @@ impl Message {
         match self {
             Message::Dense(v) => net.send_dense(from, to, v.len()),
             Message::Sparse(d) => net.send_sparse(from, to, d.vec.nnz(), d.tail.len()),
+            Message::Comp(c) => net.send_comp(from, to, c.nnz(), c.bytes),
         }
     }
 
@@ -62,6 +70,7 @@ impl Message {
         match self {
             Message::Dense(v) => cost.dense_cost(v.len()),
             Message::Sparse(d) => cost.sparse_cost(d.vec.nnz(), d.tail.len()),
+            Message::Comp(c) => cost.comp_cost(c.nnz()),
         }
     }
 
@@ -92,6 +101,18 @@ impl Message {
                 for &v in &d.tail {
                     put_f64(&mut out, v);
                 }
+            }
+            Message::Comp(c) => {
+                out.push(TAG_COMP);
+                put_u64(&mut out, c.dim as u64);
+                put_u64(&mut out, c.nnz() as u64);
+                for &i in &c.idx {
+                    put_u32(&mut out, i);
+                }
+                for &v in &c.val {
+                    put_f64(&mut out, v);
+                }
+                put_u64(&mut out, c.bytes);
             }
         }
         out
@@ -150,6 +171,33 @@ impl Message {
                     tail.push(r.f64()?);
                 }
                 Message::Sparse(RelayDelta { src, t, vec: SparseVec { dim, idx, val }, tail })
+            }
+            TAG_COMP => {
+                let dim_raw = r.u64()?;
+                let dim = usize::try_from(dim_raw)
+                    .map_err(|_| format!("dim {dim_raw} exceeds address space"))?;
+                // one support entry = 4 idx bytes + 8 val bytes
+                let nnz = r.count("comp nnz", 12)?;
+                if nnz > dim {
+                    return Err(format!("nnz {nnz} exceeds dim {dim}"));
+                }
+                let mut idx = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let i = r.u32()?;
+                    if i as usize >= dim {
+                        return Err(format!("idx {i} out of dim {dim}"));
+                    }
+                    if idx.last().is_some_and(|&prev| i <= prev) {
+                        return Err(format!("idx {i} not strictly increasing"));
+                    }
+                    idx.push(i);
+                }
+                let mut val = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    val.push(r.f64()?);
+                }
+                let bytes = r.u64()?;
+                Message::Comp(Arc::new(CompressedVec { dim, idx, val, bytes }))
             }
             other => return Err(format!("unknown message tag {other}")),
         };
@@ -333,6 +381,56 @@ mod tests {
         assert!(Message::decode(&sparse_frame(5, &[1, 3], &[1.0, 2.0])).is_ok());
     }
 
+    fn comp_msg() -> Message {
+        Message::Comp(Arc::new(CompressedVec {
+            dim: 20,
+            idx: vec![0, 7, 19],
+            val: vec![-0.5, 2.25, 1e-200],
+            bytes: 36,
+        }))
+    }
+
+    #[test]
+    fn comp_roundtrip_bit_exact() {
+        let m = comp_msg();
+        let back = Message::decode(&m.encode()).unwrap();
+        assert_eq!(back, m);
+        // canonical: re-encoding an accepted frame reproduces the bytes
+        assert_eq!(back.encode(), m.encode());
+    }
+
+    #[test]
+    fn decode_rejects_structurally_invalid_comp() {
+        fn comp_frame(dim: u64, idx: &[u32], val: &[f64], bytes: u64) -> Vec<u8> {
+            let mut b = vec![TAG_COMP];
+            put_u64(&mut b, dim);
+            put_u64(&mut b, idx.len() as u64);
+            for &i in idx {
+                put_u32(&mut b, i);
+            }
+            for &v in val {
+                put_f64(&mut b, v);
+            }
+            put_u64(&mut b, bytes);
+            b
+        }
+        // nnz > dim
+        assert!(Message::decode(&comp_frame(1, &[0, 1], &[1.0, 2.0], 24)).is_err());
+        // idx out of dim
+        assert!(Message::decode(&comp_frame(5, &[2, 5], &[1.0, 2.0], 24)).is_err());
+        // duplicate / unsorted idx
+        assert!(Message::decode(&comp_frame(5, &[2, 2], &[1.0, 2.0], 24)).is_err());
+        assert!(Message::decode(&comp_frame(5, &[3, 1], &[1.0, 2.0], 24)).is_err());
+        // huge nnz field must error before allocating
+        let mut b = vec![TAG_COMP];
+        put_u64(&mut b, 10);
+        put_u64(&mut b, u64::MAX);
+        assert!(Message::decode(&b).is_err());
+        // the well-formed variant (empty support included) still decodes
+        assert!(Message::decode(&comp_frame(5, &[1, 3], &[1.0, 2.0], 24)).is_ok());
+        assert!(Message::decode(&comp_frame(5, &[], &[], 9)).is_ok());
+    }
+
     #[test]
     fn decode_every_truncation_errs() {
         for msg in [
@@ -343,6 +441,7 @@ mod tests {
                 vec: SparseVec::from_pairs(16, vec![(2, 0.5), (7, -1.0)]),
                 tail: vec![4.0],
             }),
+            comp_msg(),
         ] {
             let enc = msg.encode();
             for k in 0..enc.len() {
@@ -373,7 +472,12 @@ mod tests {
         });
         sparse.charge(&mut net, 1, 2);
         assert_eq!(net.received_by(2), cost.sparse_cost(2, 1));
+        let comp = comp_msg();
+        comp.charge(&mut net, 2, 3);
+        assert_eq!(net.received_by(3), cost.comp_cost(3));
+        assert_eq!(net.bytes_received_by(3), 36.0);
         assert_eq!(dense.cost(&cost), cost.dense_cost(10));
         assert_eq!(sparse.cost(&cost), cost.sparse_cost(2, 1));
+        assert_eq!(comp.cost(&cost), cost.comp_cost(3));
     }
 }

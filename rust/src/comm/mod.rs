@@ -7,10 +7,15 @@
 //! all messages sent in round `t` are available to their receivers at the
 //! start of round `t+1` (neighbor-to-neighbor hops only).
 
+pub mod compressor;
 mod message;
 mod network;
 mod relay;
 
+pub use compressor::{
+    CompressedVec, CompressionSpec, Compressor, ErrorFeedback, Identity, Qsgd, RandomK,
+    TopK,
+};
 pub use message::{Message, Outgoing};
 // the bounded wire reader is shared with the metrics STATS-payload codec
 // so every frame family gets the same corrupt-frame hardening

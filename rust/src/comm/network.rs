@@ -35,9 +35,25 @@ impl CommCostModel {
     pub fn sparse_cost(&self, nnz: usize, tail: usize) -> f64 {
         self.header + self.sparse_pair * nnz as f64 + self.dense_double * tail as f64
     }
+
+    /// A compressed (`COMP`) payload in DOUBLE-equivalents: its support
+    /// travels as (index, value) pairs, priced like the sparse relay.
+    pub fn comp_cost(&self, nnz: usize) -> f64 {
+        self.header + self.sparse_pair * nnz as f64
+    }
 }
 
-/// Per-node received-DOUBLE counters over a topology.
+/// Honest payload bytes of a dense vector on the wire (8 per f64).
+pub fn dense_bytes(len: usize) -> f64 {
+    8.0 * len as f64
+}
+
+/// Honest payload bytes of a sparse (idx u32, val f64) message + tail.
+pub fn sparse_bytes(nnz: usize, tail: usize) -> f64 {
+    12.0 * nnz as f64 + 8.0 * tail as f64
+}
+
+/// Per-node received-DOUBLE (and bytes-on-wire) counters over a topology.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub topo: Topology,
@@ -46,6 +62,12 @@ pub struct Network {
     received: Vec<f64>,
     /// DOUBLEs sent by each node so far
     sent: Vec<f64>,
+    /// bytes-on-wire received by each node (honest payload bytes: 8 per
+    /// dense f64, 12 per sparse pair, a compressor's declared size for
+    /// `COMP` frames — the cost-model knobs do not rescale these)
+    received_bytes: Vec<f64>,
+    /// bytes-on-wire sent by each node
+    sent_bytes: Vec<f64>,
     /// messages delivered
     messages: u64,
 }
@@ -53,7 +75,15 @@ pub struct Network {
 impl Network {
     pub fn new(topo: Topology, cost: CommCostModel) -> Network {
         let n = topo.n;
-        Network { topo, cost, received: vec![0.0; n], sent: vec![0.0; n], messages: 0 }
+        Network {
+            topo,
+            cost,
+            received: vec![0.0; n],
+            sent: vec![0.0; n],
+            received_bytes: vec![0.0; n],
+            sent_bytes: vec![0.0; n],
+            messages: 0,
+        }
     }
 
     fn assert_edge(&self, from: usize, to: usize) {
@@ -70,6 +100,8 @@ impl Network {
         let c = self.cost.dense_cost(len);
         self.received[to] += c;
         self.sent[from] += c;
+        self.received_bytes[to] += dense_bytes(len);
+        self.sent_bytes[from] += dense_bytes(len);
         self.messages += 1;
     }
 
@@ -79,6 +111,20 @@ impl Network {
         let c = self.cost.sparse_cost(nnz, tail);
         self.received[to] += c;
         self.sent[from] += c;
+        self.received_bytes[to] += sparse_bytes(nnz, tail);
+        self.sent_bytes[from] += sparse_bytes(nnz, tail);
+        self.messages += 1;
+    }
+
+    /// Account a compressed (`COMP`) payload: `nnz` quantized support
+    /// pairs in DOUBLEs, plus the compressor's declared bytes-on-wire.
+    pub fn send_comp(&mut self, from: usize, to: usize, nnz: usize, bytes: u64) {
+        self.assert_edge(from, to);
+        let c = self.cost.comp_cost(nnz);
+        self.received[to] += c;
+        self.sent[from] += c;
+        self.received_bytes[to] += bytes as f64;
+        self.sent_bytes[from] += bytes as f64;
         self.messages += 1;
     }
 
@@ -91,6 +137,8 @@ impl Network {
         for &to in &self.topo.adj[from] {
             self.received[to] += c;
             self.sent[from] += c;
+            self.received_bytes[to] += dense_bytes(len);
+            self.sent_bytes[from] += dense_bytes(len);
             self.messages += 1;
         }
     }
@@ -121,6 +169,26 @@ impl Network {
     /// Total doubles moved (sum over receivers).
     pub fn total_received(&self) -> f64 {
         self.received.iter().sum()
+    }
+
+    /// Bytes-on-wire received by one node so far.
+    pub fn bytes_received_by(&self, n: usize) -> f64 {
+        self.received_bytes[n]
+    }
+
+    /// Bytes-on-wire sent by one node so far.
+    pub fn bytes_sent_by(&self, n: usize) -> f64 {
+        self.sent_bytes[n]
+    }
+
+    /// Byte analog of [`Network::max_received`].
+    pub fn max_received_bytes(&self) -> f64 {
+        self.received_bytes.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total bytes moved (sum over receivers).
+    pub fn total_received_bytes(&self) -> f64 {
+        self.received_bytes.iter().sum()
     }
 
     pub fn messages(&self) -> u64 {
@@ -159,6 +227,24 @@ mod tests {
         let topo = Topology::path(4); // 0-1-2-3
         let mut net = Network::new(topo, CommCostModel::default());
         net.send_dense(0, 3, 10);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_payload_kinds() {
+        let topo = Topology::path(3); // 0-1-2
+        let cost = CommCostModel::default();
+        let mut net = Network::new(topo, cost);
+        net.send_dense(0, 1, 10);
+        assert_eq!(net.bytes_received_by(1), 80.0);
+        net.send_sparse(1, 2, 3, 1);
+        assert_eq!(net.bytes_received_by(2), 44.0);
+        net.send_comp(2, 1, 4, 48);
+        assert_eq!(net.bytes_received_by(1), 128.0);
+        assert_eq!(net.received_by(1), cost.dense_cost(10) + cost.comp_cost(4));
+        assert_eq!(net.max_received_bytes(), 128.0);
+        assert_eq!(net.total_received_bytes(), 80.0 + 44.0 + 48.0);
+        assert_eq!(net.bytes_sent_by(0), 80.0);
+        assert_eq!(net.bytes_sent_by(2), 48.0);
     }
 
     #[test]

@@ -161,6 +161,9 @@ impl ExperimentConfig {
         if let Some(s) = v.get("hosted").and_then(Json::as_str) {
             c.engine.tcp.hosted = s.to_string();
         }
+        if let Some(s) = v.get("compress").and_then(Json::as_str) {
+            c.engine.compress = crate::comm::CompressionSpec::parse(s)?;
+        }
         Ok(c)
     }
 
@@ -369,6 +372,7 @@ mod tests {
                     peers: "5=10.0.0.2:9100".into(),
                     hosted: "0-4".into(),
                 },
+                compress: crate::comm::CompressionSpec::RandK(5),
             },
             ..Default::default()
         };
@@ -380,7 +384,8 @@ mod tests {
     fn legacy_flat_engine_keys_accepted() {
         let c = ExperimentConfig::from_json(
             "{\"engine\":\"parallel\",\"threads\":3,\"transport\":\"tcp\",\
-             \"listen\":\"127.0.0.1:9100\",\"peers\":\"5=h:1\",\"hosted\":\"0-4\"}",
+             \"listen\":\"127.0.0.1:9100\",\"peers\":\"5=h:1\",\"hosted\":\"0-4\",\
+             \"compress\":\"qsgd:32\"}",
         )
         .unwrap();
         assert_eq!(c.engine.kind, EngineKind::Parallel);
@@ -389,5 +394,7 @@ mod tests {
         assert_eq!(c.engine.tcp.listen, "127.0.0.1:9100");
         assert_eq!(c.engine.tcp.peers, "5=h:1");
         assert_eq!(c.engine.tcp.hosted, "0-4");
+        assert_eq!(c.engine.compress, crate::comm::CompressionSpec::Qsgd(32));
+        assert!(ExperimentConfig::from_json("{\"compress\":\"zip\"}").is_err());
     }
 }

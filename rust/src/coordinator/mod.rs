@@ -9,11 +9,11 @@ pub use lyapunov::LyapunovProbe;
 pub use optimum::solve_optimum;
 
 use crate::algorithms::{self, AlgoParams, Algorithm, AlgorithmKind};
-use crate::comm::{CommCostModel, Network};
+use crate::comm::{CommCostModel, CompressionSpec, Network};
 use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{auc_score, suboptimality, GlobalStats, MetricsRow};
 use crate::operators::{Problem, SaddleStat, SaddleStructure};
-use crate::runtime::transport::tcp_from_spec;
+use crate::runtime::transport::{tcp_from_spec, LocalTransport};
 use crate::runtime::{EngineKind, EngineSpec, ParallelEngine, TcpSpec, TransportKind};
 use crate::util::timer::Timer;
 use std::sync::Arc;
@@ -114,6 +114,14 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Wire compression at the transport boundary (parallel engine
+    /// only — the sequential oracle is always the uncompressed
+    /// reference, and `try_run` rejects the combination).
+    pub fn compress(mut self, spec: CompressionSpec) -> Self {
+        self.exp.engine.compress = spec;
+        self
+    }
+
     /// TCP endpoint configuration for `TransportKind::Tcp`: listen
     /// address ("" = ephemeral loopback), `node=host:port` peers spec,
     /// and hosted-node spec ("" = host everything — the single-process
@@ -192,6 +200,15 @@ impl Experiment {
     /// failures (port in use, peer unreachable, handshake timeout)
     /// surface as `Err` instead of a panic.
     pub fn try_run(&mut self) -> Result<Trace, String> {
+        if self.engine.kind == EngineKind::Sequential
+            && self.engine.compress != CompressionSpec::None
+        {
+            return Err(format!(
+                "--compress {} requires the parallel engine; the sequential \
+                 oracle is the uncompressed reference",
+                self.engine.compress.name()
+            ));
+        }
         self.ensure_z_star();
         let z_star = self.z_star.clone().unwrap();
         // set when a TCP transport hosts only part of the node set: the
@@ -206,13 +223,15 @@ impl Experiment {
                 &self.params,
             ),
             EngineKind::Parallel => match self.engine.transport {
-                TransportKind::Local => Box::new(ParallelEngine::new(
+                TransportKind::Local => Box::new(ParallelEngine::new_full(
                     self.kind,
                     self.problem.clone(),
                     &self.mix,
                     &self.topo,
                     &self.params,
                     self.engine.threads,
+                    Box::new(LocalTransport::new(self.topo.n)),
+                    &self.engine.compress,
                 )),
                 TransportKind::Tcp => {
                     let transport = tcp_from_spec(
@@ -223,7 +242,7 @@ impl Experiment {
                         &self.engine.tcp.peers,
                     )
                     .map_err(|e| format!("tcp transport setup failed: {e}"))?;
-                    let eng = ParallelEngine::new_with_transport(
+                    let eng = ParallelEngine::new_full(
                         self.kind,
                         self.problem.clone(),
                         &self.mix,
@@ -231,6 +250,7 @@ impl Experiment {
                         &self.params,
                         self.engine.threads,
                         Box::new(transport),
+                        &self.engine.compress,
                     );
                     if eng.hosted().len() < self.topo.n {
                         hosted_rows = Some(eng.hosted().to_vec());
@@ -285,7 +305,9 @@ impl Experiment {
         if hosted.is_some() {
             let received: Vec<f64> =
                 (0..self.topo.n).map(|m| net.received_by(m)).collect();
-            if let Some(gs) = alg.global_stats(&received) {
+            let received_bytes: Vec<f64> =
+                (0..self.topo.n).map(|m| net.bytes_received_by(m)).collect();
+            if let Some(gs) = alg.global_stats(&received, &received_bytes) {
                 return global_metrics_row(
                     self.problem.as_ref(),
                     &gs,
@@ -312,7 +334,22 @@ impl Experiment {
             Some(rows) => rows.iter().map(|&n| net.received_by(n)).fold(0.0, f64::max),
             None => net.max_received(),
         };
-        metrics_row_from(self.problem.as_ref(), zs, z_star, iter, passes, comm, wall)
+        let comm_bytes = match hosted {
+            Some(rows) => {
+                rows.iter().map(|&n| net.bytes_received_by(n)).fold(0.0, f64::max)
+            }
+            None => net.max_received_bytes(),
+        };
+        metrics_row_from(
+            self.problem.as_ref(),
+            zs,
+            z_star,
+            iter,
+            passes,
+            comm,
+            comm_bytes,
+            wall,
+        )
     }
 }
 
@@ -328,6 +365,7 @@ fn metrics_row_from(
     iter: usize,
     passes: f64,
     comm_doubles: f64,
+    comm_bytes: f64,
     wall: f64,
 ) -> MetricsRow {
     let avg = average_iterate(zs);
@@ -336,6 +374,7 @@ fn metrics_row_from(
         iter,
         passes,
         comm_doubles,
+        comm_bytes,
         suboptimality: suboptimality(zs, z_star),
         objective: problem.objective(&avg).unwrap_or(f64::NAN),
         auc: if saddle.is_some_and(|s| s.stat == SaddleStat::AucRanking) {
@@ -396,6 +435,7 @@ pub fn global_metrics_row(
     );
     let zs: Vec<Vec<f64>> = gs.rows.iter().map(|r| r.z.clone()).collect();
     let comm = gs.rows.iter().map(|r| r.received).fold(0.0, f64::max);
+    let comm_bytes = gs.rows.iter().map(|r| r.received_bytes).fold(0.0, f64::max);
     let evals: u64 = gs.rows.iter().map(|r| r.evals).sum();
     metrics_row_from(
         problem,
@@ -404,6 +444,7 @@ pub fn global_metrics_row(
         iter,
         evals as f64 / gs.pass_denom,
         comm,
+        comm_bytes,
         wall,
     )
 }
@@ -442,6 +483,11 @@ impl Trace {
 
     pub fn final_comm(&self) -> f64 {
         self.rows.last().map(|r| r.comm_doubles).unwrap_or(0.0)
+    }
+
+    /// Final declared bytes-on-wire received by the hottest node.
+    pub fn final_comm_bytes(&self) -> f64 {
+        self.rows.last().map(|r| r.comm_bytes).unwrap_or(0.0)
     }
 
     /// First recorded pass count at which suboptimality <= tol
@@ -550,6 +596,57 @@ mod tests {
             assert_eq!(a.suboptimality, b.suboptimality);
             assert_eq!(a.comm_doubles, b.comm_doubles);
         }
+    }
+
+    #[test]
+    fn builder_compression_reduces_reported_bytes() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let z_star = {
+            let p = RidgeProblem::new(ds.partition_seeded(4, 3), 0.05);
+            solve_optimum(&p, 1e-11)
+        };
+        let run = |spec: CompressionSpec| {
+            let part = ds.partition_seeded(4, 3);
+            let mut exp = Experiment::builder(
+                RidgeProblem::new(part, 0.05),
+                topo.clone(),
+                crate::algorithms::AlgorithmKind::Extra,
+            )
+            .step_size(0.5)
+            .passes(6.0)
+            .record_points(6)
+            .z_star(z_star.clone())
+            .engine_kind(EngineKind::Parallel, 2)
+            .compress(spec)
+            .build();
+            exp.run()
+        };
+        let dense = run(CompressionSpec::None);
+        let topk = run(CompressionSpec::TopK(4));
+        assert_eq!(dense.rows.len(), topk.rows.len());
+        // same DOUBLE-model schedule, strictly fewer declared wire bytes
+        assert!(topk.final_comm_bytes() > 0.0);
+        assert!(
+            topk.final_comm_bytes() < dense.final_comm_bytes(),
+            "topk moved {} bytes, dense moved {}",
+            topk.final_comm_bytes(),
+            dense.final_comm_bytes()
+        );
+        // bytes accumulate monotonically like the DOUBLE series
+        for w in dense.rows.windows(2) {
+            assert!(w[1].comm_bytes >= w[0].comm_bytes);
+        }
+        // the sequential oracle rejects compression outright
+        let mut seq = Experiment::builder(
+            RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+            topo,
+            crate::algorithms::AlgorithmKind::Extra,
+        )
+        .compress(CompressionSpec::TopK(2))
+        .build();
+        let err = seq.try_run().unwrap_err();
+        assert!(err.contains("parallel"), "{err}");
     }
 
     #[test]

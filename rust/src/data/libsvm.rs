@@ -23,8 +23,12 @@ pub fn parse_libsvm(src: &str, dim_hint: usize) -> Result<Dataset, String> {
             .ok_or_else(|| format!("line {}: empty", lineno + 1))?
             .parse()
             .map_err(|e| format!("line {}: bad label ({e})", lineno + 1))?;
+        // "nan"/"inf" parse as valid f64 but poison every downstream sum
+        if !label.is_finite() {
+            return Err(format!("line {}: non-finite label {label}", lineno + 1));
+        }
         let label = if label == 0.0 { -1.0 } else { label };
-        let mut pairs = Vec::new();
+        let mut pairs: Vec<(u32, f64)> = Vec::new();
         for tok in parts {
             if tok.starts_with('#') {
                 break; // trailing comment
@@ -41,10 +45,28 @@ pub fn parse_libsvm(src: &str, dim_hint: usize) -> Result<Dataset, String> {
             let v: f64 = vs
                 .parse()
                 .map_err(|e| format!("line {}: bad value ({e})", lineno + 1))?;
+            if !v.is_finite() {
+                return Err(format!(
+                    "line {}: non-finite value {v} at index {i}",
+                    lineno + 1
+                ));
+            }
+            // out-of-order indices are legal (sorted later); a repeated
+            // index on one line is a corrupt row, not a feature
+            if pairs.iter().any(|&(j, _)| j == i - 1) {
+                return Err(format!("line {}: duplicate index {i}", lineno + 1));
+            }
             max_idx = max_idx.max(i);
             pairs.push((i - 1, v));
         }
         rows_raw.push((label, pairs));
+    }
+    if rows_raw.is_empty() {
+        return Err(
+            "no data rows (empty or all-comment input parses to a degenerate \
+             0-sample dataset)"
+                .to_string(),
+        );
     }
     let dim = if dim_hint > 0 {
         if (max_idx as usize) > dim_hint {
@@ -119,5 +141,39 @@ mod tests {
         assert!(parse_libsvm("+1 0:1\n", 0).is_err());
         assert!(parse_libsvm("+1 x:1\n", 0).is_err());
         assert!(parse_libsvm("abc 1:1\n", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_labels_and_values_with_line_numbers() {
+        for (src, line) in [
+            ("+1 1:1\nnan 1:1\n", "line 2"),
+            ("inf 1:1\n", "line 1"),
+            ("-inf 1:1\n", "line 1"),
+            ("+1 1:0.5\n# note\n-1 2:nan\n", "line 3"),
+            ("+1 1:inf\n", "line 1"),
+            ("+1 1:-inf\n", "line 1"),
+        ] {
+            let err = parse_libsvm(src, 0).unwrap_err();
+            assert!(err.contains("non-finite"), "{src:?} -> {err}");
+            assert!(err.contains(line), "{src:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_all_comment_input() {
+        assert!(parse_libsvm("", 0).is_err());
+        assert!(parse_libsvm("\n\n", 0).is_err());
+        assert!(parse_libsvm("# only\n# comments\n", 0).is_err());
+    }
+
+    #[test]
+    fn out_of_order_tokens_parse_sorted_duplicates_rejected() {
+        // out-of-order indices on one line are fine — rows come out sorted
+        let ds = parse_libsvm("+1 3:3.0 1:1.0\n", 0).unwrap();
+        assert_eq!(ds.a.row_indices(0), &[0, 2]);
+        assert_eq!(ds.a.row_values(0), &[1.0, 3.0]);
+        // a repeated index on one line is rejected, with the line number
+        let err = parse_libsvm("+1 1:1.0\n-1 2:1.0 2:3.0\n", 0).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("duplicate index 2"), "{err}");
     }
 }

@@ -26,7 +26,10 @@ impl SparseVec {
         let mut idx = Vec::with_capacity(pairs.len());
         let mut val: Vec<f64> = Vec::with_capacity(pairs.len());
         for (i, v) in pairs {
-            debug_assert!((i as usize) < dim, "index {i} out of dim {dim}");
+            // unconditional: a release build constructing an out-of-dim
+            // vector would only surface later as a wire-codec rejection,
+            // far from the real cause
+            assert!((i as usize) < dim, "index {i} out of dim {dim}");
             if idx.last() == Some(&i) {
                 *val.last_mut().unwrap() += v;
             } else {
@@ -290,6 +293,12 @@ mod tests {
         let v = sv(10, &[(5, 1.0), (2, 2.0), (5, 3.0)]);
         assert_eq!(v.idx, vec![2, 5]);
         assert_eq!(v.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "index 7 out of dim 4")]
+    fn from_pairs_rejects_out_of_dim_in_release_too() {
+        sv(4, &[(1, 1.0), (7, 2.0)]);
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct MetricsRow {
     pub passes: f64,
     /// max over nodes of DOUBLEs received so far (paper's C_max^t)
     pub comm_doubles: f64,
+    /// max over nodes of declared wire bytes received so far; differs
+    /// from `8 * comm_doubles` exactly when `--compress` shrinks frames
+    pub comm_bytes: f64,
     /// mean over nodes of ||z_n - z*||^2 (consensus suboptimality)
     pub suboptimality: f64,
     /// global objective value (NaN for saddle problems)
@@ -53,6 +56,7 @@ impl MetricsRow {
             ("iter", Json::Num(self.iter as f64)),
             ("passes", Json::Num(self.passes)),
             ("comm_doubles", Json::Num(self.comm_doubles)),
+            ("comm_bytes", Json::Num(self.comm_bytes)),
             ("suboptimality", Json::Num(self.suboptimality)),
             ("objective", Json::Num(self.objective)),
             ("auc", Json::Num(self.auc)),
@@ -75,6 +79,9 @@ pub struct NodeStatRow {
     /// DOUBLEs received so far (exact: each process charges its hosted
     /// nodes' inflow through receive-side cost events)
     pub received: f64,
+    /// declared wire bytes received so far (tracks the compressed frame
+    /// sizes, not the abstract DOUBLE cost model)
+    pub received_bytes: f64,
     /// the node's current iterate
     pub z: Vec<f64>,
 }
@@ -98,6 +105,7 @@ pub fn encode_stat_rows(rows: &[NodeStatRow]) -> Vec<u8> {
         out.extend_from_slice(&r.node.to_le_bytes());
         out.extend_from_slice(&r.evals.to_le_bytes());
         out.extend_from_slice(&r.received.to_bits().to_le_bytes());
+        out.extend_from_slice(&r.received_bytes.to_bits().to_le_bytes());
         out.extend_from_slice(&(r.z.len() as u64).to_le_bytes());
         for &v in &r.z {
             out.extend_from_slice(&v.to_bits().to_le_bytes());
@@ -112,19 +120,21 @@ pub fn encode_stat_rows(rows: &[NodeStatRow]) -> Vec<u8> {
 /// trailing bytes are rejected.
 pub fn decode_stat_rows(buf: &[u8]) -> Result<Vec<NodeStatRow>, String> {
     let mut r = crate::comm::Reader::new(buf);
-    // one row is at least node(4) + evals(8) + received(8) + z len(8)
-    let n_rows = r.count("stat row count", 28)?;
+    // one row is at least node(4) + evals(8) + received(8) +
+    // received_bytes(8) + z len(8)
+    let n_rows = r.count("stat row count", 36)?;
     let mut rows = Vec::with_capacity(n_rows);
     for _ in 0..n_rows {
         let node = r.u32()?;
         let evals = r.u64()?;
         let received = r.f64()?;
+        let received_bytes = r.f64()?;
         let z_len = r.count("iterate length", 8)?;
         let mut z = Vec::with_capacity(z_len);
         for _ in 0..z_len {
             z.push(r.f64()?);
         }
-        rows.push(NodeStatRow { node, evals, received, z });
+        rows.push(NodeStatRow { node, evals, received, received_bytes, z });
     }
     if r.remaining() != 0 {
         return Err(format!("{} trailing bytes after stat rows", r.remaining()));
@@ -269,6 +279,7 @@ mod tests {
             iter: 10,
             passes: 1.0,
             comm_doubles: 1e4,
+            comm_bytes: 8e4,
             suboptimality: 1e-5,
             objective: 0.5,
             auc: f64::NAN,
@@ -289,9 +300,16 @@ mod tests {
                 node: 0,
                 evals: 41,
                 received: 1234.5,
+                received_bytes: 9876.0,
                 z: vec![0.0, -0.0, 1.5, f64::MIN_POSITIVE],
             },
-            NodeStatRow { node: 3, evals: 0, received: 0.0, z: vec![] },
+            NodeStatRow {
+                node: 3,
+                evals: 0,
+                received: 0.0,
+                received_bytes: 0.0,
+                z: vec![],
+            },
         ];
         let enc = encode_stat_rows(&rows);
         let back = decode_stat_rows(&enc).unwrap();
@@ -308,6 +326,7 @@ mod tests {
             node: 7,
             evals: 9,
             received: 2.5,
+            received_bytes: 52.0,
             z: vec![1.0, 2.0],
         }];
         let enc = encode_stat_rows(&rows);

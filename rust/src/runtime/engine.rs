@@ -55,7 +55,7 @@
 use crate::algorithms::{
     build_node_program, AlgoParams, Algorithm, AlgorithmKind, NodeProgram, NodeState,
 };
-use crate::comm::{Message, Network};
+use crate::comm::{CompressedVec, CompressionSpec, Compressor, ErrorFeedback, Message, Network};
 use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{decode_stat_rows, encode_stat_rows, GlobalStats, NodeStatRow};
 use crate::operators::Problem;
@@ -107,12 +107,76 @@ struct HostedNode {
     /// STATS control frames cross during a metrics exchange (empty for
     /// single-process runs, so the stats phase is a no-op)
     cross: Vec<usize>,
+    /// wire compression at the transport boundary (`None` = uncompressed,
+    /// the `--compress none` bypass)
+    comp: Option<CompState>,
+}
+
+/// Per-hosted-node compression state: the sender-side error feedback for
+/// this node's dense broadcast, plus one receiver-side `x_hat` replica
+/// per in-neighbor. Lives at the engine's transport boundary so both
+/// [`LocalTransport`] and [`crate::runtime::TcpTransport`] carry the same
+/// `COMP` frames, and node states keep seeing plain dense payloads.
+struct CompState {
+    comp: Box<dyn Compressor>,
+    /// exact compressors assign `x_hat = x` (bit-for-bit Identity pin)
+    exact: bool,
+    ef: ErrorFeedback,
+    /// receiver-side `x_hat` replicas, keyed by in-neighbor — they track
+    /// the *sender's* `ef.x_hat` bit-for-bit because both ends apply the
+    /// identical wire delta
+    replicas: std::collections::HashMap<usize, ErrorFeedback>,
+    /// this round's compressed broadcast, keyed on the `Arc` payload all
+    /// neighbors share — compress once per round, not once per edge
+    cache: Option<(Arc<Vec<f64>>, Message)>,
+}
+
+impl CompState {
+    /// Sender side: turn the round's dense broadcast into a `COMP` frame.
+    fn outbound(&mut self, v: &Arc<Vec<f64>>) -> Message {
+        if let Some((cached, msg)) = &self.cache {
+            if Arc::ptr_eq(cached, v) {
+                return msg.clone();
+            }
+            // a second distinct payload would advance the sender x_hat
+            // twice while each receiver replica absorbs only one delta
+            panic!(
+                "wire compression requires a uniform dense broadcast within \
+                 a round (got two distinct payloads from one node)"
+            );
+        }
+        let c = self.ef.encode(self.comp.as_mut(), v);
+        let msg = Message::Comp(Arc::new(c));
+        self.cache = Some((v.clone(), msg.clone()));
+        msg
+    }
+
+    /// Receiver side: absorb a `COMP` frame from `from` and hand back the
+    /// updated dense estimate the node state should see.
+    fn inbound(&mut self, from: usize, c: &CompressedVec) -> Vec<f64> {
+        let ef = self
+            .replicas
+            .entry(from)
+            .or_insert_with(|| ErrorFeedback::new(c.dim));
+        ef.apply(c, self.exact);
+        ef.x_hat.clone()
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
 enum CostKind {
     Dense(usize),
     Sparse(usize, usize),
+    /// quantized support size + declared bytes-on-wire
+    Comp(usize, u64),
+}
+
+fn cost_kind_of(msg: &Message) -> CostKind {
+    match msg {
+        Message::Dense(v) => CostKind::Dense(v.len()),
+        Message::Sparse(d) => CostKind::Sparse(d.vec.nnz(), d.tail.len()),
+        Message::Comp(c) => CostKind::Comp(c.nnz(), c.bytes),
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -227,14 +291,20 @@ fn worker_loop(
             let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut cost_batch: Vec<CostEvent> = Vec::new();
                 for hn in nodes.iter_mut() {
+                    if let Some(cs) = hn.comp.as_mut() {
+                        cs.cache = None; // the cache is per-round
+                    }
                     let outs = hn.state.outgoing(t);
                     for (seq, out) in outs.into_iter().enumerate() {
-                        let kind = match &out.msg {
-                            Message::Dense(v) => CostKind::Dense(v.len()),
-                            Message::Sparse(d) => {
-                                CostKind::Sparse(d.vec.nnz(), d.tail.len())
-                            }
+                        // compression happens here, at the transport
+                        // boundary: dense broadcasts become COMP frames,
+                        // sparse relay deltas (already exact and compact)
+                        // pass through untouched
+                        let msg = match (out.msg, hn.comp.as_mut()) {
+                            (Message::Dense(v), Some(cs)) => cs.outbound(&v),
+                            (m, _) => m,
                         };
+                        let kind = cost_kind_of(&msg);
                         cost_batch.push(CostEvent {
                             from: hn.idx,
                             seq: seq as u32,
@@ -242,7 +312,7 @@ fn worker_loop(
                             kind,
                         });
                         shared.sent.fetch_add(1, Ordering::Relaxed);
-                        if let Err(e) = hn.port.send(t, out.to, seq as u32, out.msg) {
+                        if let Err(e) = hn.port.send(t, out.to, seq as u32, msg) {
                             shared.transport_failure(e);
                         }
                     }
@@ -275,16 +345,31 @@ fn worker_loop(
                         // can't charge it into OUR network, so log the
                         // receive-side event — merged into the same
                         // canonical (sender, emit idx) replay, keeping
-                        // hosted received-DOUBLE totals exact
+                        // hosted received-DOUBLE totals exact. COMP costs
+                        // are charged on the wire form, before it is
+                        // reconstructed below
                         if !shared.hosted_mask[from] {
-                            let kind = match &msg {
-                                Message::Dense(v) => CostKind::Dense(v.len()),
-                                Message::Sparse(d) => {
-                                    CostKind::Sparse(d.vec.nnz(), d.tail.len())
-                                }
-                            };
-                            recv_batch.push(CostEvent { from, seq, to: hn.idx, kind });
+                            recv_batch.push(CostEvent {
+                                from,
+                                seq,
+                                to: hn.idx,
+                                kind: cost_kind_of(&msg),
+                            });
                         }
+                        // COMP frames update this node's per-sender x_hat
+                        // replica; the node state sees the reconstructed
+                        // dense estimate, never the wire form
+                        let msg = match (msg, hn.comp.as_mut()) {
+                            (Message::Comp(c), Some(cs)) => {
+                                Message::Dense(Arc::new(cs.inbound(from, &c)))
+                            }
+                            (Message::Comp(_), None) => panic!(
+                                "received a COMP frame but compression is \
+                                 disabled on this engine — peer engines must \
+                                 agree on --compress"
+                            ),
+                            (m, _) => m,
+                        };
                         hn.state.on_receive(from, msg);
                     }
                     hn.state.local_step(t);
@@ -361,6 +446,34 @@ impl ParallelEngine {
         Self::from_program_with_transport(program, topo.clone(), threads, transport)
     }
 
+    /// The fully-general constructor: explicit transport **and** wire
+    /// compression. With [`CompressionSpec::None`] this is exactly
+    /// [`ParallelEngine::new_with_transport`]; otherwise every hosted
+    /// node's dense broadcast crosses the transport as an error-feedback
+    /// `COMP` frame (per-node compressor streams seeded from
+    /// `params.seed`, so lossy runs are deterministic at any thread
+    /// count and across split processes).
+    pub fn new_full(
+        kind: AlgorithmKind,
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        topo: &Topology,
+        params: &AlgoParams,
+        threads: usize,
+        transport: Box<dyn Transport>,
+        compress: &CompressionSpec,
+    ) -> ParallelEngine {
+        let program = build_node_program(kind, problem, mix, topo, params);
+        Self::from_program_full(
+            program,
+            topo.clone(),
+            threads,
+            transport,
+            compress.clone(),
+            params.seed,
+        )
+    }
+
     /// Launch workers over an already-built node program (in-process
     /// transport).
     pub fn from_program(program: NodeProgram, topo: Topology, threads: usize) -> ParallelEngine {
@@ -383,6 +496,19 @@ impl ParallelEngine {
         topo: Topology,
         threads: usize,
         transport: Box<dyn Transport>,
+    ) -> ParallelEngine {
+        Self::from_program_full(program, topo, threads, transport, CompressionSpec::None, 0)
+    }
+
+    /// [`ParallelEngine::from_program_with_transport`] plus a wire
+    /// [`CompressionSpec`] (see [`ParallelEngine::new_full`]).
+    pub fn from_program_full(
+        program: NodeProgram,
+        topo: Topology,
+        threads: usize,
+        transport: Box<dyn Transport>,
+        compress: CompressionSpec,
+        seed: u64,
     ) -> ParallelEngine {
         let n = program.nodes.len();
         assert!(n > 0, "engine needs at least one node");
@@ -433,7 +559,14 @@ impl ParallelEngine {
                 .copied()
                 .filter(|&m| !is_hosted[m])
                 .collect();
-            buckets[k * threads / h].push(HostedNode { idx, state: node, port, cross });
+            let comp = compress.build_for_node(seed, idx).map(|c| CompState {
+                comp: c,
+                exact: compress.is_exact(),
+                ef: ErrorFeedback::new(z[idx].len()),
+                replicas: std::collections::HashMap::new(),
+                cache: None,
+            });
+            buckets[k * threads / h].push(HostedNode { idx, state: node, port, cross, comp });
             k += 1;
         }
         let mut workers = Vec::with_capacity(threads);
@@ -541,6 +674,7 @@ impl Algorithm for ParallelEngine {
             match e.kind {
                 CostKind::Dense(len) => net.send_dense(e.from, e.to, len),
                 CostKind::Sparse(nnz, tail) => net.send_sparse(e.from, e.to, nnz, tail),
+                CostKind::Comp(nnz, bytes) => net.send_comp(e.from, e.to, nnz, bytes),
             }
         }
         // mirror iterates for `iterates()`
@@ -574,7 +708,11 @@ impl Algorithm for ParallelEngine {
     /// so every engine process ends up with the complete global row set
     /// — even processes that share no direct topology edge. `None` when
     /// this engine hosts every node (metrics are already global).
-    fn global_stats(&mut self, received: &[f64]) -> Option<GlobalStats> {
+    fn global_stats(
+        &mut self,
+        received: &[f64],
+        received_bytes: &[f64],
+    ) -> Option<GlobalStats> {
         let n = self.z.len();
         if self.hosted.len() == n {
             return None;
@@ -586,6 +724,7 @@ impl Algorithm for ParallelEngine {
                 node: nd as u32,
                 evals: self.shared.evals[nd].load(Ordering::Relaxed),
                 received: received.get(nd).copied().unwrap_or(0.0),
+                received_bytes: received_bytes.get(nd).copied().unwrap_or(0.0),
                 z: self.z[nd].clone(),
             })
             .collect();
@@ -718,6 +857,65 @@ mod tests {
     }
 
     #[test]
+    fn identity_compression_is_bit_for_bit_against_sequential() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut seq = build(AlgorithmKind::Extra, p.clone(), &mix, &topo, &params);
+        let mut par = ParallelEngine::new_full(
+            AlgorithmKind::Extra,
+            p.clone(),
+            &mix,
+            &topo,
+            &params,
+            2,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::Identity,
+        );
+        let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+        let mut net_p = Network::new(topo.clone(), CommCostModel::default());
+        for round in 0..10 {
+            seq.step(&mut net_s);
+            par.step(&mut net_p);
+            for n in 0..topo.n {
+                assert_eq!(seq.iterates()[n], par.iterates()[n], "round {round} node {n}");
+            }
+        }
+        assert_eq!(net_s.messages(), net_p.messages());
+    }
+
+    #[test]
+    fn topk_compression_moves_strictly_fewer_bytes() {
+        let (p, mix, topo) = tiny_world(4);
+        let d = p.dim();
+        let params = AlgoParams::new(0.4, d, 5);
+        let run = |compress: &CompressionSpec| {
+            let mut eng = ParallelEngine::new_full(
+                AlgorithmKind::Extra,
+                p.clone(),
+                &mix,
+                &topo,
+                &params,
+                2,
+                Box::new(LocalTransport::new(topo.n)),
+                compress,
+            );
+            let mut net = Network::new(topo.clone(), CommCostModel::default());
+            for _ in 0..8 {
+                eng.step(&mut net);
+            }
+            (net.max_received_bytes(), net.messages())
+        };
+        let (dense_bytes, dense_msgs) = run(&CompressionSpec::None);
+        let k = (d / 4).max(1);
+        let (comp_bytes, comp_msgs) = run(&CompressionSpec::TopK(k));
+        assert_eq!(dense_msgs, comp_msgs, "compression must not change the schedule");
+        assert!(
+            comp_bytes < dense_bytes,
+            "topk:{k} moved {comp_bytes} bytes, dense moved {dense_bytes}"
+        );
+    }
+
+    #[test]
     fn drop_without_stepping_does_not_hang() {
         let (p, mix, topo) = tiny_world(4);
         let params = AlgoParams::new(0.4, p.dim(), 5);
@@ -793,7 +991,7 @@ mod tests {
         let params = AlgoParams::new(0.4, p.dim(), 5);
         let mut eng =
             ParallelEngine::new(AlgorithmKind::Dsba, p, &mix, &topo, &params, 2);
-        assert!(eng.global_stats(&[0.0; 4]).is_none());
+        assert!(eng.global_stats(&[0.0; 4], &[0.0; 4]).is_none());
     }
 
     #[test]

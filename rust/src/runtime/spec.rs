@@ -6,6 +6,7 @@
 
 use super::engine::EngineKind;
 use super::transport::TransportKind;
+use crate::comm::CompressionSpec;
 use crate::util::json::Json;
 
 /// TCP endpoint configuration for [`TransportKind::Tcp`].
@@ -59,6 +60,9 @@ pub struct EngineSpec {
     pub transport: TransportKind,
     /// endpoints for [`TransportKind::Tcp`]
     pub tcp: TcpSpec,
+    /// wire compression at the transport boundary (parallel engine only;
+    /// the sequential oracle is always the uncompressed reference)
+    pub compress: CompressionSpec,
 }
 
 impl Default for EngineSpec {
@@ -68,6 +72,7 @@ impl Default for EngineSpec {
             threads: 0,
             transport: TransportKind::Local,
             tcp: TcpSpec::default(),
+            compress: CompressionSpec::None,
         }
     }
 }
@@ -95,12 +100,18 @@ impl EngineSpec {
         self
     }
 
+    pub fn with_compress(mut self, compress: CompressionSpec) -> EngineSpec {
+        self.compress = compress;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("kind", Json::Str(self.kind.name().into())),
             ("threads", Json::Num(self.threads as f64)),
             ("transport", Json::Str(self.transport.name().into())),
             ("tcp", self.tcp.to_json()),
+            ("compress", Json::Str(self.compress.name())),
         ])
     }
 
@@ -127,6 +138,9 @@ impl EngineSpec {
         if let Some(t) = v.get("tcp") {
             e.tcp = TcpSpec::from_json(t)?;
         }
+        if let Some(s) = v.get("compress").and_then(Json::as_str) {
+            e.compress = CompressionSpec::parse(s)?;
+        }
         Ok(e)
     }
 }
@@ -147,6 +161,7 @@ mod tests {
                 peers: "5=10.0.0.2:9100".into(),
                 hosted: "0-4".into(),
             },
+            compress: CompressionSpec::TopK(7),
         };
         let j = spec.to_json().to_string();
         let back = EngineSpec::from_json(&parse(&j).unwrap()).unwrap();
@@ -180,6 +195,10 @@ mod tests {
         assert_eq!(e.threads, 0);
         assert_eq!(e.transport, TransportKind::Local);
         assert!(e.tcp.is_empty());
+        assert_eq!(e.compress, CompressionSpec::None);
         assert!(EngineSpec::from_json(&parse("{\"transport\":\"pigeon\"}").unwrap()).is_err());
+        assert!(EngineSpec::from_json(&parse("{\"compress\":\"topk:0\"}").unwrap()).is_err());
+        let q = EngineSpec::from_json(&parse("{\"compress\":\"qsgd:16\"}").unwrap()).unwrap();
+        assert_eq!(q.compress, CompressionSpec::Qsgd(16));
     }
 }

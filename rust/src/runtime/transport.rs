@@ -242,12 +242,42 @@ const DIAL_BACKOFF: Duration = Duration::from_millis(100);
 /// `DSBA_DRAIN_TIMEOUT_SECS` for faster failure detection.
 const DRAIN_TIMEOUT_DEFAULT: Duration = Duration::from_secs(180);
 
+/// Parse a `DSBA_DRAIN_TIMEOUT_SECS` override. Returns the timeout plus
+/// an optional diagnostic: `0` (an instant timeout would declare every
+/// peer dead on the first drain) and unparsable values both fall back to
+/// the default *with a warning* instead of silently.
+fn parse_drain_timeout(raw: Option<&str>) -> (Duration, Option<String>) {
+    let Some(raw) = raw else {
+        return (DRAIN_TIMEOUT_DEFAULT, None);
+    };
+    match raw.trim().parse::<u64>() {
+        Ok(0) => (
+            DRAIN_TIMEOUT_DEFAULT,
+            Some(
+                "DSBA_DRAIN_TIMEOUT_SECS=0 rejected (a zero-duration drain \
+                 timeout declares peers dead instantly); using the default"
+                    .to_string(),
+            ),
+        ),
+        Ok(secs) => (Duration::from_secs(secs), None),
+        Err(e) => (
+            DRAIN_TIMEOUT_DEFAULT,
+            Some(format!(
+                "DSBA_DRAIN_TIMEOUT_SECS={raw:?} is not a number of seconds \
+                 ({e}); using the default"
+            )),
+        ),
+    }
+}
+
 fn drain_timeout() -> Duration {
-    std::env::var("DSBA_DRAIN_TIMEOUT_SECS")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .map(Duration::from_secs)
-        .unwrap_or(DRAIN_TIMEOUT_DEFAULT)
+    let var = std::env::var("DSBA_DRAIN_TIMEOUT_SECS").ok();
+    let (timeout, warning) = parse_drain_timeout(var.as_deref());
+    if let Some(w) = warning {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| eprintln!("warning: {w}"));
+    }
+    timeout
 }
 
 /// A bound-but-not-yet-connected TCP endpoint. Binding is split from
@@ -420,6 +450,7 @@ impl TcpTransport {
                 inbox: inbox_rx,
                 carry: Vec::new(),
                 enc_cache: None,
+                comp_cache: None,
                 drain_timeout: drain_timeout(),
                 shutdown,
             });
@@ -460,6 +491,9 @@ struct TcpPort {
     /// allocation alive, so pointer identity can never alias a recycled
     /// address)
     enc_cache: Option<(Arc<Vec<f64>>, Vec<u8>)>,
+    /// same trick for `COMP` frames: the engine compresses the broadcast
+    /// once per round and hands every neighbor the same `Arc`
+    comp_cache: Option<(Arc<crate::comm::CompressedVec>, Vec<u8>)>,
     /// see [`drain_timeout`]
     drain_timeout: Duration,
     /// raw clones used only to shut the links down on drop, so blocked
@@ -486,6 +520,17 @@ impl NodePort for TcpPort {
                     self.enc_cache = Some((v.clone(), msg.encode()));
                 }
                 let (_, bytes) = self.enc_cache.as_ref().unwrap();
+                write_msg_frame(&mut self.writers[j].1, t as u64, seq, bytes)
+            }
+            Message::Comp(c) => {
+                let hit = self
+                    .comp_cache
+                    .as_ref()
+                    .is_some_and(|(cached, _)| Arc::ptr_eq(cached, c));
+                if !hit {
+                    self.comp_cache = Some((c.clone(), msg.encode()));
+                }
+                let (_, bytes) = self.comp_cache.as_ref().unwrap();
                 write_msg_frame(&mut self.writers[j].1, t as u64, seq, bytes)
             }
             Message::Sparse(_) => {
@@ -1067,6 +1112,30 @@ mod tests {
     }
 
     #[test]
+    fn drain_timeout_parsing() {
+        // unset: default, no diagnostic
+        let (t, w) = parse_drain_timeout(None);
+        assert_eq!(t, DRAIN_TIMEOUT_DEFAULT);
+        assert!(w.is_none());
+        // valid override
+        let (t, w) = parse_drain_timeout(Some("45"));
+        assert_eq!(t, Duration::from_secs(45));
+        assert!(w.is_none());
+        let (t, _) = parse_drain_timeout(Some(" 7 "));
+        assert_eq!(t, Duration::from_secs(7));
+        // zero: rejected with a warning, never a zero-duration timeout
+        let (t, w) = parse_drain_timeout(Some("0"));
+        assert_eq!(t, DRAIN_TIMEOUT_DEFAULT);
+        assert!(w.unwrap().contains("DSBA_DRAIN_TIMEOUT_SECS=0"));
+        // garbage: default plus a warning, not a silent fallback
+        for bad in ["ten", "-3", "1.5", ""] {
+            let (t, w) = parse_drain_timeout(Some(bad));
+            assert_eq!(t, DRAIN_TIMEOUT_DEFAULT, "{bad:?}");
+            assert!(w.unwrap().contains("not a number"), "{bad:?}");
+        }
+    }
+
+    #[test]
     fn hosted_spec_parses() {
         assert_eq!(parse_hosted("", 4).unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(parse_hosted("0-2", 4).unwrap(), vec![0, 1, 2]);
@@ -1109,7 +1178,7 @@ mod tests {
     }
 
     #[test]
-    fn tcp_loopback_ports_roundtrip_both_payload_families() {
+    fn tcp_loopback_ports_roundtrip_all_payload_families() {
         let topo = Topology::ring(3); // everyone neighbors everyone
         let t = Box::new(TcpTransport::loopback(&topo, 7).unwrap());
         assert_eq!(t.hosted(), &[0, 1, 2]);
@@ -1121,19 +1190,32 @@ mod tests {
             vec: SparseVec::from_pairs(10, vec![(1, 1.5), (7, -2.0)]),
             tail: vec![9.0],
         });
+        let comp = Message::Comp(Arc::new(crate::comm::CompressedVec {
+            dim: 6,
+            idx: vec![1, 4],
+            val: vec![-0.75, 2.5],
+            bytes: 24,
+        }));
         ports[0].send(0, 1, 0, dense.clone()).unwrap();
         ports[2].send(0, 1, 0, sparse.clone()).unwrap();
+        // send the same Arc twice to exercise the COMP encode cache
+        ports[2].send(0, 1, 1, comp.clone()).unwrap();
+        ports[2].send(0, 0, 2, comp.clone()).unwrap();
         for p in ports.iter_mut() {
             p.finish_round(0).unwrap();
         }
         let mut got = ports[1].drain_round(0).unwrap();
         got.sort_by_key(|&(from, seq, _)| (from, seq));
-        assert_eq!(got.len(), 2);
+        assert_eq!(got.len(), 3);
         assert_eq!(got[0].2, dense);
         // bit-exactness beyond PartialEq
         assert_eq!(got[0].2.encode(), dense.encode());
         assert_eq!(got[1].2, sparse);
-        assert!(ports[0].drain_round(0).unwrap().is_empty());
+        assert_eq!(got[2].2, comp);
+        assert_eq!(got[2].2.encode(), comp.encode());
+        let got0 = ports[0].drain_round(0).unwrap();
+        assert_eq!(got0.len(), 1);
+        assert_eq!(got0[0].2, comp);
         assert!(ports[2].drain_round(0).unwrap().is_empty());
     }
 

@@ -157,27 +157,45 @@ fn prop_mixing_doubly_stochastic_and_contractive() {
 #[test]
 fn prop_message_wire_roundtrip_lossless() {
     // Engine payloads survive serialize -> deliver -> reconstruct
-    // bit-for-bit (f64 via to_bits), for both dense iterates and sparse
-    // relay deltas.
-    use dsba::comm::{Message, RelayDelta};
+    // bit-for-bit (f64 via to_bits), for dense iterates, sparse relay
+    // deltas, and compressed (COMP) broadcast frames.
+    use dsba::comm::{CompressedVec, Message, RelayDelta};
+    use std::sync::Arc;
     prop_check("message encode/decode identity", 60, |rng| {
-        let msg = if rng.bernoulli(0.5) {
-            let len = rng.below(300);
-            Message::dense(
-                (0..len).map(|_| rng.normal() * 10f64.powi(rng.below(7) as i32 - 3)).collect(),
-            )
-        } else {
-            let dim = 1 + rng.below(500);
-            let nnz = rng.below(dim.min(40) + 1);
-            let pairs: Vec<(u32, f64)> =
-                (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
-            let tail_len = rng.below(4);
-            Message::Sparse(RelayDelta {
-                src: rng.below(1000) as u32,
-                t: rng.below(100_000) as u32,
-                vec: SparseVec::from_pairs(dim, pairs),
-                tail: (0..tail_len).map(|_| rng.normal()).collect(),
-            })
+        let msg = match rng.below(3) {
+            0 => {
+                let len = rng.below(300);
+                Message::dense(
+                    (0..len)
+                        .map(|_| rng.normal() * 10f64.powi(rng.below(7) as i32 - 3))
+                        .collect(),
+                )
+            }
+            1 => {
+                let dim = 1 + rng.below(500);
+                let nnz = rng.below(dim.min(40) + 1);
+                let pairs: Vec<(u32, f64)> =
+                    (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+                let tail_len = rng.below(4);
+                Message::Sparse(RelayDelta {
+                    src: rng.below(1000) as u32,
+                    t: rng.below(100_000) as u32,
+                    vec: SparseVec::from_pairs(dim, pairs),
+                    tail: (0..tail_len).map(|_| rng.normal()).collect(),
+                })
+            }
+            _ => {
+                let dim = 1 + rng.below(300);
+                let idx: Vec<u32> =
+                    (0..dim).filter(|_| rng.bernoulli(0.15)).map(|i| i as u32).collect();
+                let val: Vec<f64> = idx.iter().map(|_| rng.normal()).collect();
+                Message::Comp(Arc::new(CompressedVec {
+                    dim,
+                    idx,
+                    val,
+                    bytes: rng.below(1 << 20) as u64,
+                }))
+            }
         };
         let decoded = Message::decode(&msg.encode())?;
         if decoded != msg {
@@ -199,22 +217,38 @@ fn prop_message_decode_total_on_corrupt_frames() {
     // any mutated frame it *does* accept must be canonical (re-encoding
     // reproduces the accepted bytes exactly, so no invalid SparseVec or
     // phantom payload can enter a node).
-    use dsba::comm::{Message, RelayDelta};
+    use dsba::comm::{CompressedVec, Message, RelayDelta};
+    use std::sync::Arc;
     prop_check("decode total on corrupt frames", 40, |rng| {
-        let msg = if rng.bernoulli(0.5) {
-            let len = rng.below(40);
-            Message::dense((0..len).map(|_| rng.normal()).collect())
-        } else {
-            let dim = 1 + rng.below(60);
-            let nnz = rng.below(dim.min(12) + 1);
-            let pairs: Vec<(u32, f64)> =
-                (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
-            Message::Sparse(RelayDelta {
-                src: rng.below(100) as u32,
-                t: rng.below(1000) as u32,
-                vec: SparseVec::from_pairs(dim, pairs),
-                tail: (0..rng.below(4)).map(|_| rng.normal()).collect(),
-            })
+        let msg = match rng.below(3) {
+            0 => {
+                let len = rng.below(40);
+                Message::dense((0..len).map(|_| rng.normal()).collect())
+            }
+            1 => {
+                let dim = 1 + rng.below(60);
+                let nnz = rng.below(dim.min(12) + 1);
+                let pairs: Vec<(u32, f64)> =
+                    (0..nnz).map(|_| (rng.below(dim) as u32, rng.normal())).collect();
+                Message::Sparse(RelayDelta {
+                    src: rng.below(100) as u32,
+                    t: rng.below(1000) as u32,
+                    vec: SparseVec::from_pairs(dim, pairs),
+                    tail: (0..rng.below(4)).map(|_| rng.normal()).collect(),
+                })
+            }
+            _ => {
+                let dim = 1 + rng.below(60);
+                let idx: Vec<u32> =
+                    (0..dim).filter(|_| rng.bernoulli(0.2)).map(|i| i as u32).collect();
+                let val: Vec<f64> = idx.iter().map(|_| rng.normal()).collect();
+                Message::Comp(Arc::new(CompressedVec {
+                    dim,
+                    idx,
+                    val,
+                    bytes: rng.below(1 << 16) as u64,
+                }))
+            }
         };
         let enc = msg.encode();
         for k in 0..enc.len() {
@@ -306,6 +340,7 @@ fn prop_stat_row_wire_roundtrip_lossless() {
                 node: rng.below(64) as u32,
                 evals: rng.below(1 << 20) as u64,
                 received: rng.normal() * 10f64.powi(rng.below(7) as i32 - 3),
+                received_bytes: rng.below(1 << 24) as f64,
                 z: (0..rng.below(40)).map(|_| rng.normal()).collect(),
             })
             .collect();
@@ -320,6 +355,89 @@ fn prop_stat_row_wire_roundtrip_lossless() {
         for k in 0..enc.len() {
             if decode_stat_rows(&enc[..k]).is_ok() {
                 return Err(format!("prefix {k}/{} decoded Ok", enc.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_feedback_converges_on_constant_signal() {
+    // CHOCO error feedback: feeding the same target `x` into the encoder
+    // drives `x_hat -> x` at each compressor's declared contraction rate.
+    // Key exactness property exploited throughout: kept coordinates
+    // travel as exact f64 deltas, and `0 + x_i == x_i` exactly, so a
+    // coordinate first touched from the zero state is reproduced
+    // bit-for-bit (top-k therefore finishes in ceil(d/k) rounds).
+    use dsba::comm::{CompressionSpec, ErrorFeedback};
+    prop_check("error feedback x_hat -> x within contraction", 25, |rng| {
+        let d = 1 + rng.below(50);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let x2: f64 = x.iter().map(|v| v * v).sum();
+        let err = |ef: &ErrorFeedback| -> f64 {
+            x.iter().zip(&ef.x_hat).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        // Identity assigns: bit-for-bit after a single round
+        {
+            let mut comp = CompressionSpec::Identity.build_for_node(1, 0).unwrap();
+            let mut ef = ErrorFeedback::new(d);
+            ef.encode(comp.as_mut(), &x);
+            if ef.x_hat != x {
+                return Err("identity did not assign x_hat = x".into());
+            }
+        }
+        // TopK fixes up to k fresh coordinates exactly per round (zero
+        // deltas of already-exact coordinates are never preferred over
+        // live residuals), so ceil(d/k) rounds reach x bit-for-bit
+        {
+            let k = 1 + rng.below(d);
+            let mut comp = CompressionSpec::TopK(k).build_for_node(1, 0).unwrap();
+            let mut ef = ErrorFeedback::new(d);
+            for _ in 0..(d + k - 1) / k {
+                ef.encode(comp.as_mut(), &x);
+            }
+            if ef.x_hat != x {
+                return Err(format!("topk:{k} not exact after ceil(d/k) rounds"));
+            }
+        }
+        // RandK: a coordinate is exact from its first draw onward; enough
+        // rounds make a never-drawn coordinate astronomically unlikely
+        {
+            let k = 1 + rng.below(d);
+            let mut comp =
+                CompressionSpec::RandK(k).build_for_node(rng.next_u64(), 0).unwrap();
+            let mut ef = ErrorFeedback::new(d);
+            for _ in 0..40 * ((d + k - 1) / k) + 100 {
+                ef.encode(comp.as_mut(), &x);
+            }
+            let e = err(&ef);
+            if e > 1e-12 * (1.0 + x2) {
+                return Err(format!("randk:{k} residual {e:.3e}"));
+            }
+        }
+        // QSGD with s > 2 sqrt(d): per-realization contraction d/s^2 <
+        // 1/4 every round, so 30 rounds shrink the residual to FP noise
+        {
+            let levels = 2 * ((d as f64).sqrt().ceil() as u32) + 1;
+            let mut comp = CompressionSpec::Qsgd(levels)
+                .build_for_node(rng.next_u64(), 0)
+                .unwrap();
+            let c = d as f64 / (levels as f64 * levels as f64);
+            let mut ef = ErrorFeedback::new(d);
+            let mut prev = x2;
+            for round in 0..30 {
+                ef.encode(comp.as_mut(), &x);
+                let e = err(&ef);
+                if e > c * prev + 1e-12 * (1.0 + x2) {
+                    return Err(format!(
+                        "qsgd:{levels} round {round}: residual {e:.3e} broke the \
+                         c = {c:.3} envelope from {prev:.3e}"
+                    ));
+                }
+                prev = e;
+            }
+            if prev > 1e-12 * (1.0 + x2) {
+                return Err(format!("qsgd:{levels} final residual {prev:.3e}"));
             }
         }
         Ok(())
@@ -364,6 +482,16 @@ fn prop_experiment_config_json_roundtrip() {
                 listen: format!("127.0.0.1:{}", rng.below(65536)),
                 peers: format!("{}=10.0.0.2:{}", rng.below(8), rng.below(65536)),
                 hosted: format!("0-{}", rng.below(8)),
+            },
+            compress: {
+                use dsba::comm::CompressionSpec;
+                match rng.below(5) {
+                    0 => CompressionSpec::None,
+                    1 => CompressionSpec::Identity,
+                    2 => CompressionSpec::TopK(1 + rng.below(100)),
+                    3 => CompressionSpec::RandK(1 + rng.below(100)),
+                    _ => CompressionSpec::Qsgd(1 + rng.below(200) as u32),
+                }
             },
         };
         let params = if rng.bernoulli(0.5) {
