@@ -26,7 +26,9 @@ lint:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-## parallel-engine scaling table (wall-clock vs thread count)
+## parallel-engine scaling table (wall-clock vs thread count), plus the
+## sync vs async:{1,2} round-clock sweep that writes
+## results/BENCH_engine.json
 bench-engine:
 	$(CARGO) bench --bench engine_scaling
 
@@ -55,6 +57,13 @@ smoke: build
 	echo "--- smoke: elastic-net + topk:4 (tcp) ---"
 	target/release/dsba run --problem elastic-net --dataset tiny --nodes 4 \
 	  --passes 1 --engine parallel --threads 2 --transport tcp --compress topk:4
+	# bounded-staleness async round clock end-to-end, once per transport
+	echo "--- smoke: logistic + mode async:1 (local) ---"
+	target/release/dsba run --problem logistic --dataset tiny --nodes 4 \
+	  --passes 1 --engine parallel --threads 2 --mode async:1
+	echo "--- smoke: logistic + mode async:1 (tcp) ---"
+	target/release/dsba run --problem logistic --dataset tiny --nodes 4 \
+	  --passes 1 --engine parallel --threads 2 --transport tcp --mode async:1
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
 artifacts:

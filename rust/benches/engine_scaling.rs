@@ -4,6 +4,10 @@
 //! "fast path" claim. Output is identical either way (engine parity), so
 //! only time changes.
 //!
+//! A second sweep compares the two round clocks (`sync` vs `async:1`,
+//! `async:2`) at 8 and 16 nodes and writes the machine-readable snapshot
+//! `results/BENCH_engine.json` (wall-clock and rounds/sec per cell).
+//!
 //!     cargo bench --bench engine_scaling
 
 use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
@@ -97,4 +101,83 @@ fn main() {
         "\n(speedup > 1x expected for dense methods at N >= 8; the sparse \
          relay has lighter per-node compute, so it saturates earlier)"
     );
+
+    mode_sweep();
+}
+
+/// Round-clock sweep: the barrier-synced clock vs the bounded-staleness
+/// async clock at small windows, DSBA on the dense broadcast path. Async
+/// wins wall-clock only when per-node round times are uneven (stragglers,
+/// NUMA, shared cores); on an idle host the cells should be close —
+/// that's the point of snapshotting them.
+fn mode_sweep() {
+    use dsba::comm::CompressionSpec;
+    use dsba::runtime::{LocalTransport, ModeSpec};
+    use dsba::util::json::Json;
+
+    let threads = 4;
+    let rounds = 40usize;
+    let mut sweep = Vec::new();
+    for &nodes in &[8, 16] {
+        let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+        let ds = SyntheticSpec::rcv1_like()
+            .with_samples(40 * nodes)
+            .with_dim(8_192)
+            .with_regression(true)
+            .generate(3);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let problem: Arc<dyn Problem> =
+            Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 2), 0.01));
+        let params = AlgoParams::new(0.5, problem.dim(), 7);
+        header(&format!(
+            "round clocks @ N = {nodes} (dsba, d = 8192, x{threads} threads, local transport)"
+        ));
+        println!(
+            "{:>9} {:>12} {:>12} {:>14} {:>8}",
+            "mode", "per-round", "rounds/sec", "max staleness", "stalls"
+        );
+        for mode in [ModeSpec::Sync, ModeSpec::Async(1), ModeSpec::Async(2)] {
+            let mut eng = ParallelEngine::new_full_mode(
+                AlgorithmKind::Dsba,
+                problem.clone(),
+                &mix,
+                &topo,
+                &params,
+                threads,
+                Box::new(LocalTransport::new(topo.n)),
+                &CompressionSpec::None,
+                mode,
+            );
+            let secs = time_rounds(&mut eng, &topo, rounds) * rounds as f64;
+            let (max_staleness, stalls) = eng.staleness_stats();
+            println!(
+                "{:>9} {:>9.3} ms {:>12.1} {:>14} {:>8}",
+                mode.name(),
+                secs / rounds as f64 * 1e3,
+                rounds as f64 / secs,
+                max_staleness,
+                stalls
+            );
+            sweep.push(Json::from_pairs(vec![
+                ("nodes", Json::Num(nodes as f64)),
+                ("mode", Json::Str(mode.name())),
+                ("rounds", Json::Num(rounds as f64)),
+                ("secs", Json::Num(secs)),
+                ("rounds_per_sec", Json::Num(rounds as f64 / secs)),
+                ("max_staleness", Json::Num(max_staleness as f64)),
+                ("stalls", Json::Num(stalls as f64)),
+            ]));
+        }
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("engine".into())),
+        ("method", Json::Str("dsba".into())),
+        ("dim", Json::Num(8_192.0)),
+        ("threads", Json::Num(threads as f64)),
+        ("sweep", Json::Arr(sweep)),
+    ]);
+    std::fs::create_dir_all("results").expect("create results dir");
+    std::fs::write("results/BENCH_engine.json", doc.to_string())
+        .expect("write BENCH_engine.json");
+    println!("\n(snapshot written to results/BENCH_engine.json)");
 }

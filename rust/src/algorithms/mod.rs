@@ -96,6 +96,15 @@ pub trait Algorithm {
         let _ = (received, received_bytes);
         None
     }
+
+    /// `(max_staleness, stalls)` observed so far: the largest
+    /// rounds-behind of any neighbor iterate a node consumed, and how
+    /// many scheduler scans sat blocked on a lagging neighbor. Both are
+    /// zero for every synchronous driver — only the parallel engine's
+    /// bounded-staleness async clock overrides this.
+    fn staleness_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// One node's slice of a decentralized method: the unit both the

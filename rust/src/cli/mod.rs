@@ -21,7 +21,7 @@ use crate::config::ExperimentConfig;
 use crate::graph::TopologyKind;
 use crate::metrics::format_table;
 use crate::operators::{Problem, ProblemRegistry};
-use crate::runtime::{EngineKind, TransportKind};
+use crate::runtime::{EngineKind, ModeSpec, TransportKind};
 use crate::util::json;
 
 pub fn main() {
@@ -81,6 +81,10 @@ USAGE:
            [--alpha X] [--passes X] [--nodes N]
            [--topology KIND] [--samples N] [--dim N] [--seed N]
            [--engine sequential|parallel] [--threads N]
+           [--mode sync|async:TAU]
+           (round clock; parallel engine only. sync runs barrier
+            rounds; async:TAU lets nodes run ahead with bounded
+            staleness TAU — async:0 is bit-for-bit identical to sync)
            [--transport local|tcp] [--listen ADDR] [--peers N=ADDR,..]
            [--hosted SPEC]
            [--compress none|identity|topk:K|randk:K|qsgd:L]
@@ -213,6 +217,15 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     }
+    if let Some(v) = f.get("mode") {
+        match ModeSpec::parse(v) {
+            Some(m) => cfg.engine.mode = m,
+            None => {
+                eprintln!("bad --mode {v} (sync|async:TAU)");
+                return 2;
+            }
+        }
+    }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
             if let Some(v) = f.get($key) {
@@ -256,11 +269,21 @@ fn cmd_run(args: &[String]) -> i32 {
             cfg.engine.threads
         };
         println!(
-            "engine: parallel, {t} worker thread(s), {} transport",
-            cfg.engine.transport.name()
+            "engine: parallel, {t} worker thread(s), {} transport, {} clock",
+            cfg.engine.transport.name(),
+            cfg.engine.mode.name()
         );
-    } else if cfg.engine.transport == TransportKind::Tcp {
-        eprintln!("note: --transport tcp only applies to --engine parallel; ignored");
+    } else {
+        if cfg.engine.transport == TransportKind::Tcp {
+            eprintln!("note: --transport tcp only applies to --engine parallel; ignored");
+        }
+        if cfg.engine.mode.is_async() {
+            eprintln!(
+                "note: --mode {} only applies to --engine parallel; the \
+                 sequential oracle is synchronous by definition",
+                cfg.engine.mode.name()
+            );
+        }
     }
     if cfg.engine.transport == TransportKind::Local && !cfg.engine.tcp.is_empty() {
         eprintln!(

@@ -13,7 +13,9 @@
 //!
 //! The codec is an explicit little-endian layout (f64 via `to_bits`, so
 //! round-tripping is bit-exact); `rust/tests/properties.rs` pins
-//! encode → decode as the identity.
+//! encode → decode as the identity. Alongside the payload families the
+//! module defines the [`Watermark`] control frame — the versioned
+//! end-of-round progress announcement both engine clocks synchronize on.
 
 use crate::comm::{CompressedVec, Network, RelayDelta};
 use crate::linalg::SparseVec;
@@ -48,6 +50,91 @@ pub struct Outgoing {
 const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
 const TAG_COMP: u8 = 2;
+
+/// Codec version of the [`Watermark`] control frame (bumped independently
+/// of the transport's handshake `WIRE_VERSION`).
+const WATERMARK_VERSION: u8 = 1;
+const WM_KIND_ROUND: u8 = 0;
+const WM_KIND_STATS: u8 = 1;
+
+/// End-of-round control record: node `node` has finished emitting round
+/// `round`. This single versioned frame subsumes the two legacy control
+/// frames — the bare END marker (`kind = RoundComplete`) and the
+/// split-run STATS flood (`kind = Stats`, which rides the same
+/// progress-announcement channel with a payload).
+///
+/// Watermarks are what the engine's clocks synchronize on: the sync
+/// `RoundClock` consumes them as end-of-round markers, and the async
+/// `AsyncClock` admits a node into round `t` once every in-neighbor's
+/// watermark covers `t - tau` (see `runtime::engine`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Watermark {
+    /// Emitting node (global topology index).
+    pub node: u32,
+    /// Round the node has emitted through.
+    pub round: u64,
+    pub kind: WatermarkKind,
+}
+
+/// What a [`Watermark`] announces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WatermarkKind {
+    /// All of the node's round-`round` messages precede this frame.
+    RoundComplete,
+    /// Split-run stats flood: hop `hop` of the per-node stat rows
+    /// gathered at sample point `round` (see `metrics::encode_stat_rows`).
+    Stats { hop: u32, payload: Vec<u8> },
+}
+
+impl Watermark {
+    /// Serialize to the wire layout:
+    /// `version u8 | node u32 | round u64 | kind u8 [| hop u32 | len u64 | payload]`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![WATERMARK_VERSION];
+        put_u32(&mut out, self.node);
+        put_u64(&mut out, self.round);
+        match &self.kind {
+            WatermarkKind::RoundComplete => out.push(WM_KIND_ROUND),
+            WatermarkKind::Stats { hop, payload } => {
+                out.push(WM_KIND_STATS);
+                put_u32(&mut out, *hop);
+                put_u64(&mut out, payload.len() as u64);
+                out.extend_from_slice(payload);
+            }
+        }
+        out
+    }
+
+    /// Bit-exact inverse of [`Watermark::encode`]. Total on arbitrary
+    /// bytes (the stats payload length is bounded by the remaining buffer
+    /// before any allocation), trailing bytes are rejected, and accepted
+    /// frames are canonical: `decode(b)?.encode() == b`.
+    pub fn decode(buf: &[u8]) -> Result<Watermark, String> {
+        let mut r = Reader::new(buf);
+        let version = r.u8()?;
+        if version != WATERMARK_VERSION {
+            return Err(format!(
+                "unsupported watermark version {version} (expected {WATERMARK_VERSION})"
+            ));
+        }
+        let node = r.u32()?;
+        let round = r.u64()?;
+        let kind = match r.u8()? {
+            WM_KIND_ROUND => WatermarkKind::RoundComplete,
+            WM_KIND_STATS => {
+                let hop = r.u32()?;
+                let len = r.count("stats payload len", 1)?;
+                let payload = r.take(len)?.to_vec();
+                WatermarkKind::Stats { hop, payload }
+            }
+            other => return Err(format!("unknown watermark kind {other}")),
+        };
+        if r.pos != buf.len() {
+            return Err(format!("{} trailing bytes after watermark", buf.len() - r.pos));
+        }
+        Ok(Watermark { node, round, kind })
+    }
+}
 
 impl Message {
     /// Wrap an owned vector as a dense payload.
@@ -452,6 +539,70 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn watermark_roundtrip_both_kinds() {
+        let end = Watermark { node: 7, round: 42, kind: WatermarkKind::RoundComplete };
+        assert_eq!(Watermark::decode(&end.encode()).unwrap(), end);
+        let stats = Watermark {
+            node: 3,
+            round: u64::MAX,
+            kind: WatermarkKind::Stats { hop: 2, payload: vec![0xAB, 0, 0xFF, 17] },
+        };
+        let enc = stats.encode();
+        let back = Watermark::decode(&enc).unwrap();
+        assert_eq!(back, stats);
+        // canonical: re-encoding an accepted frame reproduces the bytes
+        assert_eq!(back.encode(), enc);
+    }
+
+    #[test]
+    fn watermark_decode_every_truncation_errs() {
+        for wm in [
+            Watermark { node: 1, round: 5, kind: WatermarkKind::RoundComplete },
+            Watermark {
+                node: 9,
+                round: 0,
+                kind: WatermarkKind::Stats { hop: 1, payload: vec![1, 2, 3] },
+            },
+        ] {
+            let enc = wm.encode();
+            for k in 0..enc.len() {
+                assert!(
+                    Watermark::decode(&enc[..k]).is_err(),
+                    "prefix {k}/{} decoded Ok",
+                    enc.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn watermark_decode_rejects_garbage() {
+        // bad version
+        let mut enc = Watermark { node: 0, round: 0, kind: WatermarkKind::RoundComplete }.encode();
+        enc[0] = WATERMARK_VERSION + 1;
+        assert!(Watermark::decode(&enc).is_err());
+        // unknown kind tag
+        let mut enc = Watermark { node: 0, round: 0, kind: WatermarkKind::RoundComplete }.encode();
+        let kind_at = enc.len() - 1;
+        enc[kind_at] = 9;
+        assert!(Watermark::decode(&enc).is_err());
+        // trailing byte
+        let mut enc = Watermark { node: 0, round: 3, kind: WatermarkKind::RoundComplete }.encode();
+        enc.push(0);
+        assert!(Watermark::decode(&enc).is_err());
+        // stats payload length exceeding the buffer must error, never allocate
+        let mut enc = Watermark {
+            node: 2,
+            round: 1,
+            kind: WatermarkKind::Stats { hop: 0, payload: vec![5; 4] },
+        }
+        .encode();
+        let len_at = enc.len() - 4 - 8;
+        enc[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Watermark::decode(&enc).is_err());
     }
 
     #[test]

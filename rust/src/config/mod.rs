@@ -86,7 +86,8 @@ impl ExperimentConfig {
     /// The engine accepts both the nested object form written by
     /// [`ExperimentConfig::to_json`] and the legacy flat keys
     /// (`"engine"` as a bare string plus top-level `threads` /
-    /// `transport` / `listen` / `peers` / `hosted`).
+    /// `transport` / `listen` / `peers` / `hosted` / `compress` /
+    /// `mode`).
     pub fn from_json(src: &str) -> Result<ExperimentConfig, String> {
         let v = parse(src)?;
         let mut c = ExperimentConfig::default();
@@ -163,6 +164,10 @@ impl ExperimentConfig {
         }
         if let Some(s) = v.get("compress").and_then(Json::as_str) {
             c.engine.compress = crate::comm::CompressionSpec::parse(s)?;
+        }
+        if let Some(s) = v.get("mode").and_then(Json::as_str) {
+            c.engine.mode = crate::runtime::ModeSpec::parse(s)
+                .ok_or(format!("bad mode {s} (sync|async:TAU)"))?;
         }
         Ok(c)
     }
@@ -373,6 +378,7 @@ mod tests {
                     hosted: "0-4".into(),
                 },
                 compress: crate::comm::CompressionSpec::RandK(5),
+                mode: crate::runtime::ModeSpec::Async(3),
             },
             ..Default::default()
         };
@@ -385,7 +391,7 @@ mod tests {
         let c = ExperimentConfig::from_json(
             "{\"engine\":\"parallel\",\"threads\":3,\"transport\":\"tcp\",\
              \"listen\":\"127.0.0.1:9100\",\"peers\":\"5=h:1\",\"hosted\":\"0-4\",\
-             \"compress\":\"qsgd:32\"}",
+             \"compress\":\"qsgd:32\",\"mode\":\"async:2\"}",
         )
         .unwrap();
         assert_eq!(c.engine.kind, EngineKind::Parallel);
@@ -395,6 +401,8 @@ mod tests {
         assert_eq!(c.engine.tcp.peers, "5=h:1");
         assert_eq!(c.engine.tcp.hosted, "0-4");
         assert_eq!(c.engine.compress, crate::comm::CompressionSpec::Qsgd(32));
+        assert_eq!(c.engine.mode, crate::runtime::ModeSpec::Async(2));
         assert!(ExperimentConfig::from_json("{\"compress\":\"zip\"}").is_err());
+        assert!(ExperimentConfig::from_json("{\"mode\":\"warp\"}").is_err());
     }
 }

@@ -14,7 +14,9 @@ use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{auc_score, suboptimality, GlobalStats, MetricsRow};
 use crate::operators::{Problem, SaddleStat, SaddleStructure};
 use crate::runtime::transport::{tcp_from_spec, LocalTransport};
-use crate::runtime::{EngineKind, EngineSpec, ParallelEngine, TcpSpec, TransportKind};
+use crate::runtime::{
+    EngineKind, EngineSpec, ModeSpec, ParallelEngine, TcpSpec, TransportKind,
+};
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
@@ -122,6 +124,16 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Round clock for the parallel engine: barrier-synced
+    /// [`ModeSpec::Sync`] (the default) or bounded-staleness
+    /// [`ModeSpec::Async`]. The sequential oracle is synchronous by
+    /// definition, and `try_run` rejects the combination; so is a
+    /// split-hosted TCP run (async requires hosting every node).
+    pub fn mode(mut self, mode: ModeSpec) -> Self {
+        self.exp.engine.mode = mode;
+        self
+    }
+
     /// TCP endpoint configuration for `TransportKind::Tcp`: listen
     /// address ("" = ephemeral loopback), `node=host:port` peers spec,
     /// and hosted-node spec ("" = host everything — the single-process
@@ -209,6 +221,13 @@ impl Experiment {
                 self.engine.compress.name()
             ));
         }
+        if self.engine.kind == EngineKind::Sequential && self.engine.mode.is_async() {
+            return Err(format!(
+                "--mode {} requires the parallel engine; the sequential \
+                 oracle is synchronous by definition",
+                self.engine.mode.name()
+            ));
+        }
         self.ensure_z_star();
         let z_star = self.z_star.clone().unwrap();
         // set when a TCP transport hosts only part of the node set: the
@@ -223,7 +242,7 @@ impl Experiment {
                 &self.params,
             ),
             EngineKind::Parallel => match self.engine.transport {
-                TransportKind::Local => Box::new(ParallelEngine::new_full(
+                TransportKind::Local => Box::new(ParallelEngine::new_full_mode(
                     self.kind,
                     self.problem.clone(),
                     &self.mix,
@@ -232,8 +251,10 @@ impl Experiment {
                     self.engine.threads,
                     Box::new(LocalTransport::new(self.topo.n)),
                     &self.engine.compress,
+                    self.engine.mode,
                 )),
                 TransportKind::Tcp => {
+                    use crate::runtime::Transport;
                     let transport = tcp_from_spec(
                         &self.topo,
                         self.params.seed,
@@ -242,7 +263,18 @@ impl Experiment {
                         &self.engine.tcp.peers,
                     )
                     .map_err(|e| format!("tcp transport setup failed: {e}"))?;
-                    let eng = ParallelEngine::new_full(
+                    if self.engine.mode.is_async()
+                        && transport.hosted().len() < self.topo.n
+                    {
+                        return Err(format!(
+                            "--mode {} requires hosting every node ({} of {} \
+                             hosted) — split-hosted runs are sync-only",
+                            self.engine.mode.name(),
+                            transport.hosted().len(),
+                            self.topo.n
+                        ));
+                    }
+                    let eng = ParallelEngine::new_full_mode(
                         self.kind,
                         self.problem.clone(),
                         &self.mix,
@@ -251,6 +283,7 @@ impl Experiment {
                         self.engine.threads,
                         Box::new(transport),
                         &self.engine.compress,
+                        self.engine.mode,
                     );
                     if eng.hosted().len() < self.topo.n {
                         hosted_rows = Some(eng.hosted().to_vec());
@@ -349,6 +382,7 @@ impl Experiment {
             comm,
             comm_bytes,
             wall,
+            alg.staleness_stats(),
         )
     }
 }
@@ -358,6 +392,7 @@ impl Experiment {
 /// problem's declared [`SaddleStructure`] (never on `auc_metric()`): a
 /// saddle split turns on the residual and restricted-gap series, and
 /// only `SaddleStat::AucRanking` turns on the ranking statistic.
+#[allow(clippy::too_many_arguments)]
 fn metrics_row_from(
     problem: &dyn Problem,
     zs: &[Vec<f64>],
@@ -367,6 +402,7 @@ fn metrics_row_from(
     comm_doubles: f64,
     comm_bytes: f64,
     wall: f64,
+    staleness: (u64, u64),
 ) -> MetricsRow {
     let avg = average_iterate(zs);
     let saddle = problem.saddle();
@@ -392,6 +428,8 @@ fn metrics_row_from(
             None => f64::NAN,
         },
         wall_secs: wall,
+        max_staleness: staleness.0,
+        stalls: staleness.1,
     }
 }
 
@@ -437,6 +475,8 @@ pub fn global_metrics_row(
     let comm = gs.rows.iter().map(|r| r.received).fold(0.0, f64::max);
     let comm_bytes = gs.rows.iter().map(|r| r.received_bytes).fold(0.0, f64::max);
     let evals: u64 = gs.rows.iter().map(|r| r.evals).sum();
+    // split-hosted runs are sync-only, so staleness is zero by
+    // construction
     metrics_row_from(
         problem,
         &zs,
@@ -446,6 +486,7 @@ pub fn global_metrics_row(
         comm,
         comm_bytes,
         wall,
+        (0, 0),
     )
 }
 
@@ -646,6 +687,52 @@ mod tests {
         .compress(CompressionSpec::TopK(2))
         .build();
         let err = seq.try_run().unwrap_err();
+        assert!(err.contains("parallel"), "{err}");
+    }
+
+    #[test]
+    fn builder_async_mode_runs_and_rejects_misuse() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let z_star = {
+            let p = RidgeProblem::new(ds.partition_seeded(4, 3), 0.05);
+            solve_optimum(&p, 1e-11)
+        };
+        // parallel + async:0 reproduces the sequential trace exactly
+        let run = |kind: EngineKind, mode: ModeSpec| {
+            let part = ds.partition_seeded(4, 3);
+            let mut exp = Experiment::builder(
+                RidgeProblem::new(part, 0.05),
+                topo.clone(),
+                AlgorithmKind::Dsba,
+            )
+            .step_size(0.5)
+            .passes(6.0)
+            .record_points(6)
+            .z_star(z_star.clone())
+            .engine_kind(kind, 2)
+            .mode(mode)
+            .build();
+            exp.run()
+        };
+        let seq = run(EngineKind::Sequential, ModeSpec::Sync);
+        let asy = run(EngineKind::Parallel, ModeSpec::Async(0));
+        assert_eq!(seq.rows.len(), asy.rows.len());
+        for (a, b) in seq.rows.iter().zip(&asy.rows) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.suboptimality, b.suboptimality);
+            assert_eq!(a.comm_doubles, b.comm_doubles);
+            assert_eq!(b.max_staleness, 0, "async:0 consumed stale data");
+        }
+        // the sequential oracle rejects async outright
+        let mut bad = Experiment::builder(
+            RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+            topo,
+            AlgorithmKind::Dsba,
+        )
+        .mode(ModeSpec::Async(1))
+        .build();
+        let err = bad.try_run().unwrap_err();
         assert!(err.contains("parallel"), "{err}");
     }
 

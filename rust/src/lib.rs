@@ -73,7 +73,8 @@ pub mod prelude {
         ProblemSpec, RidgeProblem, RobustLsProblem, SaddleStat, SaddleStructure,
     };
     pub use crate::runtime::{
-        EngineKind, EngineSpec, ParallelEngine, TcpSpec, TcpTransport, TransportKind,
+        EngineKind, EngineSpec, ModeSpec, ParallelEngine, ProgressProbe, TcpSpec,
+        TcpTransport, TransportKind,
     };
     pub use crate::util::rng::Rng;
 }

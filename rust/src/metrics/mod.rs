@@ -48,6 +48,12 @@ pub struct MetricsRow {
     pub saddle_gap: f64,
     /// wall-clock seconds since experiment start
     pub wall_secs: f64,
+    /// max rounds-behind of any neighbor iterate consumed so far (0 for
+    /// every synchronous driver; bounded by tau under `async:TAU`)
+    pub max_staleness: u64,
+    /// scheduler scans that sat blocked on a lagging neighbor so far
+    /// (async engine only — the straggler cost the mode is built to cut)
+    pub stalls: u64,
 }
 
 impl MetricsRow {
@@ -63,6 +69,8 @@ impl MetricsRow {
             ("saddle_res", Json::Num(self.saddle_res)),
             ("saddle_gap", Json::Num(self.saddle_gap)),
             ("wall_secs", Json::Num(self.wall_secs)),
+            ("max_staleness", Json::Num(self.max_staleness as f64)),
+            ("stalls", Json::Num(self.stalls as f64)),
         ])
     }
 }
@@ -286,6 +294,8 @@ mod tests {
             saddle_res: 1e-3,
             saddle_gap: f64::NAN,
             wall_secs: 0.1,
+            max_staleness: 0,
+            stalls: 0,
         }];
         let t = format_table(&rows);
         assert!(t.contains("passes"));

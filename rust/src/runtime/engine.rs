@@ -1,10 +1,9 @@
-//! Multi-threaded message-passing node engine.
+//! Multi-threaded message-passing node engine with two round clocks.
 //!
 //! Executes the per-node decomposition of any method
 //! ([`crate::algorithms::build_node_program`]) across worker threads, with
 //! a pluggable [`Transport`] carrying typed [`Message`]s along the
-//! topology's edges and `std::sync::Barrier`-synchronized rounds. The
-//! engine is the *fast path*; the sequential
+//! topology's edges. The engine is the *fast path*; the sequential
 //! [`crate::algorithms::node::RoundDriver`] behind each `Algorithm` impl
 //! is the reference oracle.
 //!
@@ -13,7 +12,29 @@
 //! [`crate::runtime::TcpTransport`] (per-edge loopback/host sockets with
 //! the framed wire codec). The determinism contract below holds for both.
 //!
-//! ## Determinism contract
+//! ## Round clocks
+//!
+//! [`ModeSpec`] selects how workers progress through rounds:
+//!
+//! * **Sync** (`RoundClock`, the default): `std::sync::Barrier`-paced
+//!   phases, bit-for-bit equal to the sequential oracle.
+//! * **Async(tau)** (`AsyncClock`): no barrier — a node is *admitted*
+//!   into round `t` once every in-neighbor's watermark
+//!   ([`crate::runtime::NodePort::poll_watermarks`]) covers round
+//!   `t - tau`, and it consumes the freshest available iterate per
+//!   neighbor (older dense payloads are superseded; compressed
+//!   error-feedback deltas are always applied in order, never skipped,
+//!   so the CHOCO replica invariant holds; sparse relay deltas are
+//!   delivered exactly once, in order). `tau = 0` admits only on fully
+//!   fresh data and reproduces the sync clock bit-for-bit (pinned by
+//!   `rust/tests/async_engine.rs`); `tau > 0` trades bounded staleness
+//!   for straggler immunity. Setting `DSBA_ASYNC_TRACE` switches the
+//!   admission schedule to a fixed per-edge staleness offset
+//!   (deterministic in node/neighbor indices), making async runs
+//!   replayable for debugging at any thread count and on both
+//!   transports.
+//!
+//! ## Determinism contract (sync clock)
 //!
 //! Given the same seed, the engine's iterates are **bit-for-bit equal** to
 //! the sequential driver's (pinned by `rust/tests/engine_parity.rs`):
@@ -25,7 +46,7 @@
 //!   runs its local step), barrier — so a round's messages are all
 //!   delivered before any local step runs, exactly the synchronous
 //!   model (the TCP backend additionally gates each drain on per-edge
-//!   end-of-round control frames, which is what keeps *separate engine
+//!   end-of-round watermark frames, which is what keeps *separate engine
 //!   processes* in lockstep);
 //! * each inbox is sorted by (sender, emit index) before delivery, so
 //!   handlers see the same order the sequential driver produces;
@@ -87,6 +108,53 @@ impl EngineKind {
             EngineKind::Sequential => "sequential",
             EngineKind::Parallel => "parallel",
         }
+    }
+}
+
+/// Round progression discipline of the engine's workers (see the module
+/// docs): the barrier-paced `RoundClock` or the watermark-driven
+/// `AsyncClock` with a bounded staleness window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModeSpec {
+    /// Barrier-synchronized rounds — bit-for-bit equal to the sequential
+    /// oracle (the default).
+    Sync,
+    /// Bounded-staleness rounds: a node enters round `t` once every
+    /// in-neighbor's watermark covers round `t - tau`. `Async(0)` still
+    /// reproduces the sync iterates bit-for-bit; larger windows trade
+    /// staleness for straggler immunity.
+    Async(u32),
+}
+
+impl Default for ModeSpec {
+    fn default() -> ModeSpec {
+        ModeSpec::Sync
+    }
+}
+
+impl ModeSpec {
+    /// Accepts `sync`, `async` (window 0), or `async:TAU`.
+    pub fn parse(s: &str) -> Option<ModeSpec> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "sync" => Some(ModeSpec::Sync),
+            "async" => Some(ModeSpec::Async(0)),
+            _ => {
+                let tau = s.strip_prefix("async:")?;
+                tau.trim().parse().ok().map(ModeSpec::Async)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ModeSpec::Sync => "sync".to_string(),
+            ModeSpec::Async(tau) => format!("async:{tau}"),
+        }
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, ModeSpec::Async(_))
     }
 }
 
@@ -181,6 +249,9 @@ fn cost_kind_of(msg: &Message) -> CostKind {
 
 #[derive(Clone, Copy, Debug)]
 struct CostEvent {
+    /// round the message belongs to — the async clock lets fast nodes
+    /// emit ahead of the launcher, so replay must hold late rounds back
+    t: u64,
     from: usize,
     seq: u32,
     to: usize,
@@ -216,6 +287,19 @@ struct Shared {
     stats_out: Mutex<Vec<u8>>,
     /// payloads collected from peer engines during the current hop
     stats_in: Mutex<Vec<Vec<u8>>>,
+    /// rounds completed per node (round `t` done ⇒ value `t + 1`) — the
+    /// progress watermark [`ProgressProbe`] and the async launcher read
+    completed: Vec<AtomicU64>,
+    /// async clock only: workers may work on any round `< target`; the
+    /// launcher advances it to `t + 1 + tau` each step, bounding how far
+    /// fast nodes run ahead of the round being reported
+    target: AtomicU64,
+    /// async clock only: scans where some node sat emitted-but-unadmitted
+    /// (waiting on a lagging in-neighbor) and no node progressed
+    stalls: AtomicU64,
+    /// async clock only: max rounds-behind of any consumed neighbor
+    /// iterate (0 under the sync clock and `async:0` by construction)
+    max_staleness: AtomicU64,
 }
 
 impl Shared {
@@ -231,11 +315,90 @@ impl Shared {
     }
 }
 
-fn worker_loop(
+/// Test-only straggler injection: `DSBA_INJECT_DELAY_MS=<node>:<ms>`
+/// sleeps the named node for `ms` milliseconds at the start of every
+/// round emission, on both clocks. Invalid specs are ignored with a
+/// warning rather than failing a run.
+fn parse_inject_delay(raw: Option<&str>) -> Option<(usize, u64)> {
+    let (node, ms) = raw?.trim().split_once(':')?;
+    Some((node.trim().parse().ok()?, ms.trim().parse().ok()?))
+}
+
+fn inject_delay() -> Option<(usize, u64)> {
+    let var = std::env::var("DSBA_INJECT_DELAY_MS").ok();
+    let parsed = parse_inject_delay(var.as_deref());
+    if var.is_some() && parsed.is_none() {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!("warning: DSBA_INJECT_DELAY_MS must be <node>:<ms>; ignoring")
+        });
+    }
+    parsed
+}
+
+/// splitmix64 finalizer — mixes an edge id into the deterministic
+/// per-edge staleness schedule of `DSBA_ASYNC_TRACE`.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Fixed staleness offset of the edge `from -> node` under the
+/// deterministic trace: round-independent, so each node consumes exactly
+/// round `r - s` from each in-neighbor regardless of thread scheduling.
+fn trace_staleness(node: usize, from: usize, tau: u64) -> u64 {
+    if tau == 0 {
+        return 0;
+    }
+    mix64(((node as u64) << 32) ^ (from as u64) ^ 0x5eed_cafe) % (tau + 1)
+}
+
+/// Emit one node's round-`t` messages plus the end-of-round watermark
+/// (phase A of the sync clock; the emission half of an async scan).
+fn emit_round(hn: &mut HostedNode, t: usize, shared: &Shared) {
+    if let Some(cs) = hn.comp.as_mut() {
+        cs.cache = None; // the cache is per-round
+    }
+    let outs = hn.state.outgoing(t);
+    let mut batch: Vec<CostEvent> = Vec::with_capacity(outs.len());
+    for (seq, out) in outs.into_iter().enumerate() {
+        // compression happens here, at the transport boundary: dense
+        // broadcasts become COMP frames, sparse relay deltas (already
+        // exact and compact) pass through untouched
+        let msg = match (out.msg, hn.comp.as_mut()) {
+            (Message::Dense(v), Some(cs)) => cs.outbound(&v),
+            (m, _) => m,
+        };
+        batch.push(CostEvent {
+            t: t as u64,
+            from: hn.idx,
+            seq: seq as u32,
+            to: out.to,
+            kind: cost_kind_of(&msg),
+        });
+        shared.sent.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = hn.port.send(t, out.to, seq as u32, msg) {
+            shared.transport_failure(e);
+        }
+    }
+    if let Err(e) = hn.port.finish_round(t) {
+        shared.transport_failure(e);
+    }
+    if !batch.is_empty() {
+        shared.costs.lock().unwrap().extend(batch);
+    }
+}
+
+/// The sync clock: today's three-barrier round protocol, bit-for-bit
+/// preserved.
+fn round_clock_loop(
     mut nodes: Vec<HostedNode>,
     shared: Arc<Shared>,
     barrier: Arc<Barrier>,
     stop: Arc<AtomicBool>,
+    delay: Option<(usize, u64)>,
 ) {
     let mut t = 0usize;
     loop {
@@ -289,39 +452,13 @@ fn worker_loop(
         // phase A: emit this round's messages
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                let mut cost_batch: Vec<CostEvent> = Vec::new();
                 for hn in nodes.iter_mut() {
-                    if let Some(cs) = hn.comp.as_mut() {
-                        cs.cache = None; // the cache is per-round
-                    }
-                    let outs = hn.state.outgoing(t);
-                    for (seq, out) in outs.into_iter().enumerate() {
-                        // compression happens here, at the transport
-                        // boundary: dense broadcasts become COMP frames,
-                        // sparse relay deltas (already exact and compact)
-                        // pass through untouched
-                        let msg = match (out.msg, hn.comp.as_mut()) {
-                            (Message::Dense(v), Some(cs)) => cs.outbound(&v),
-                            (m, _) => m,
-                        };
-                        let kind = cost_kind_of(&msg);
-                        cost_batch.push(CostEvent {
-                            from: hn.idx,
-                            seq: seq as u32,
-                            to: out.to,
-                            kind,
-                        });
-                        shared.sent.fetch_add(1, Ordering::Relaxed);
-                        if let Err(e) = hn.port.send(t, out.to, seq as u32, msg) {
-                            shared.transport_failure(e);
+                    if let Some((node, ms)) = delay {
+                        if hn.idx == node {
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
                         }
                     }
-                    if let Err(e) = hn.port.finish_round(t) {
-                        shared.transport_failure(e);
-                    }
-                }
-                if !cost_batch.is_empty() {
-                    shared.costs.lock().unwrap().extend(cost_batch);
+                    emit_round(hn, t, &shared);
                 }
             }));
             if phase_a.is_err() {
@@ -350,6 +487,7 @@ fn worker_loop(
                         // reconstructed below
                         if !shared.hosted_mask[from] {
                             recv_batch.push(CostEvent {
+                                t: t as u64,
                                 from,
                                 seq,
                                 to: hn.idx,
@@ -378,6 +516,7 @@ fn worker_loop(
                         .unwrap()
                         .copy_from_slice(hn.state.iterate());
                     shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
+                    shared.completed[hn.idx].store(t as u64 + 1, Ordering::SeqCst);
                 }
                 if !recv_batch.is_empty() {
                     shared.costs.lock().unwrap().extend(recv_batch);
@@ -392,11 +531,229 @@ fn worker_loop(
     }
 }
 
+/// Per-node bookkeeping of the async clock.
+struct AsyncCtl {
+    /// round this node is currently working on
+    r: u64,
+    /// round-`r` messages are out; the node is waiting for admission
+    emitted: bool,
+    /// in-neighbors (ascending, so delivery order matches the sync
+    /// clock's global `(sender, emit index)` sort)
+    in_nbrs: Vec<usize>,
+    /// fixed per-edge staleness offsets, aligned with `in_nbrs` (all
+    /// zero unless `DSBA_ASYNC_TRACE` is set)
+    trace_s: Vec<u64>,
+    /// received-but-unconsumed messages: sender -> round -> (seq, msg)
+    pending: std::collections::HashMap<
+        usize,
+        std::collections::BTreeMap<u64, Vec<(u32, Message)>>,
+    >,
+    /// when this node first found itself blocked on admission
+    wait_since: Option<std::time::Instant>,
+}
+
+/// Admission check for `ctl`'s current round: every in-neighbor's
+/// watermark must cover round `r - tau` (trace mode: exactly round
+/// `r - s_edge`). Blocking past `deadline` trips a transport failure
+/// naming each lagging in-neighbor with its last-seen watermark.
+fn async_admit(
+    hn: &mut HostedNode,
+    ctl: &mut AsyncCtl,
+    tau: u64,
+    trace: bool,
+    deadline: std::time::Duration,
+    shared: &Shared,
+) -> bool {
+    let wms = match hn.port.poll_watermarks() {
+        Ok(w) => w,
+        Err(e) => shared.transport_failure(e),
+    };
+    let wm_of =
+        |m: usize| wms.iter().find(|&&(node, _)| node == m).map(|&(_, w)| w).unwrap_or(0);
+    let need = |k: usize| {
+        if trace {
+            ctl.r.saturating_sub(ctl.trace_s[k]) + 1
+        } else {
+            (ctl.r + 1).saturating_sub(tau)
+        }
+    };
+    if ctl.in_nbrs.iter().enumerate().all(|(k, &m)| wm_of(m) >= need(k)) {
+        ctl.wait_since = None;
+        return true;
+    }
+    let since = *ctl.wait_since.get_or_insert_with(std::time::Instant::now);
+    if since.elapsed() > deadline {
+        let lagging: Vec<String> = ctl
+            .in_nbrs
+            .iter()
+            .enumerate()
+            .filter(|&(k, &m)| wm_of(m) < need(k))
+            .map(|(_, &m)| match wm_of(m) {
+                0 => format!("peer {m} (no watermark yet)"),
+                w => format!("peer {m} (last watermark: round {})", w - 1),
+            })
+            .collect();
+        shared.transport_failure(format!(
+            "node {}: async round {} admission timed out after {:?} — \
+             waiting on {}",
+            hn.idx,
+            ctl.r,
+            deadline,
+            lagging.join(", ")
+        ));
+    }
+    false
+}
+
+/// Consume everything admissible at the node's current round and run the
+/// local step. Per-sender rules: dense iterates are superseded (only the
+/// freshest within the limit is delivered — re-delivering a stale one
+/// would wrongly rotate the receiver's `NeighborBuf` generations); COMP
+/// error-feedback deltas are all applied in `(round, seq)` order, never
+/// skipped (the CHOCO replica invariant), with one reconstructed dense
+/// delivery at the last delta's position; sparse relay deltas are
+/// delivered exactly once, in order. A neighbor with nothing fresh is
+/// left untouched, exactly like a quiet neighbor under the sync clock.
+fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shared) {
+    let r = ctl.r;
+    let drained = match hn.port.drain_up_to(r as usize) {
+        Ok(d) => d,
+        Err(e) => shared.transport_failure(e),
+    };
+    for (from, rt, seq, msg) in drained {
+        shared.delivered.fetch_add(1, Ordering::Relaxed);
+        ctl.pending.entry(from).or_default().entry(rt).or_default().push((seq, msg));
+    }
+    for k in 0..ctl.in_nbrs.len() {
+        let m = ctl.in_nbrs[k];
+        // trace mode consumes exactly round r - s per edge; the free
+        // schedule consumes everything that has arrived
+        let limit = r.saturating_sub(ctl.trace_s[k]);
+        let Some(rounds) = ctl.pending.get_mut(&m) else { continue };
+        let ready: Vec<u64> = rounds.range(..=limit).map(|(&rt, _)| rt).collect();
+        if ready.is_empty() {
+            continue;
+        }
+        let mut batch: Vec<(u64, u32, Message)> = Vec::new();
+        for rt in ready {
+            for (seq, msg) in rounds.remove(&rt).unwrap() {
+                batch.push((rt, seq, msg));
+            }
+        }
+        batch.sort_by_key(|&(rt, seq, _)| (rt, seq));
+        let dense_last = batch
+            .iter()
+            .rev()
+            .find(|e| matches!(e.2, Message::Dense(_)))
+            .map(|e| (e.0, e.1));
+        let comp_last = batch
+            .iter()
+            .rev()
+            .find(|e| matches!(e.2, Message::Comp(_)))
+            .map(|e| (e.0, e.1));
+        for (rt, seq, msg) in batch {
+            match msg {
+                Message::Sparse(_) => hn.state.on_receive(m, msg),
+                Message::Comp(c) => {
+                    let cs = hn.comp.as_mut().unwrap_or_else(|| {
+                        panic!(
+                            "received a COMP frame but compression is \
+                             disabled on this engine — peer engines must \
+                             agree on --compress"
+                        )
+                    });
+                    let v = cs.inbound(m, &c);
+                    if Some((rt, seq)) == comp_last {
+                        hn.state.on_receive(m, Message::Dense(Arc::new(v)));
+                        shared.max_staleness.fetch_max(r - rt, Ordering::Relaxed);
+                    }
+                }
+                Message::Dense(_) => {
+                    if Some((rt, seq)) == dense_last {
+                        hn.state.on_receive(m, msg);
+                        shared.max_staleness.fetch_max(r - rt, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+    hn.state.local_step(r as usize);
+    shared.slots[hn.idx].lock().unwrap().copy_from_slice(hn.state.iterate());
+    shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
+    shared.completed[hn.idx].store(r + 1, Ordering::SeqCst);
+    ctl.r += 1;
+    ctl.emitted = false;
+}
+
+/// The async clock: no barrier. Each scan walks the worker's nodes —
+/// emitting any node whose round is below the launcher's target, then
+/// admitting and stepping any node whose in-neighbor watermarks cover
+/// its staleness window. A scan with no progress sleeps briefly;
+/// blocked-and-idle scans are counted as stalls.
+fn async_clock_loop(
+    mut nodes: Vec<HostedNode>,
+    mut ctls: Vec<AsyncCtl>,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    tau: u64,
+    trace: bool,
+    delay: Option<(usize, u64)>,
+    deadline: std::time::Duration,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if shared.panicked.load(Ordering::SeqCst) {
+            // poisoned: park cheaply until the launcher drops the engine
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
+        let target = shared.target.load(Ordering::SeqCst);
+        let mut progress = false;
+        let mut blocked = false;
+        let scan = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for (hn, ctl) in nodes.iter_mut().zip(ctls.iter_mut()) {
+                if !ctl.emitted && ctl.r < target {
+                    if let Some((node, ms)) = delay {
+                        if hn.idx == node {
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
+                        }
+                    }
+                    emit_round(hn, ctl.r as usize, &shared);
+                    ctl.emitted = true;
+                    progress = true;
+                }
+                if !ctl.emitted {
+                    continue; // capped by the launcher's target
+                }
+                if !async_admit(hn, ctl, tau, trace, deadline, &shared) {
+                    blocked = true;
+                    continue;
+                }
+                async_deliver_and_step(hn, ctl, &shared);
+                progress = true;
+            }
+        }));
+        if scan.is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+            continue;
+        }
+        if !progress {
+            if blocked {
+                shared.stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
 /// The multi-threaded engine. Implements [`Algorithm`], so the
 /// coordinator, CLI, and benches drive it exactly like the sequential
 /// methods.
 pub struct ParallelEngine {
     kind: AlgorithmKind,
+    mode: ModeSpec,
     topo: Topology,
     threads: usize,
     /// nodes this engine hosts (all of them for single-process runs)
@@ -409,6 +766,9 @@ pub struct ParallelEngine {
     t: usize,
     /// launching-thread mirror of the per-node iterates
     z: Vec<Vec<f64>>,
+    /// async clock only: cost events from rounds the launcher has not
+    /// reported yet (fast nodes emit up to `tau` rounds ahead)
+    pending_costs: Vec<CostEvent>,
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     barrier: Arc<Barrier>,
@@ -474,6 +834,33 @@ impl ParallelEngine {
         )
     }
 
+    /// [`ParallelEngine::new_full`] plus a [`ModeSpec`] selecting the
+    /// round clock. Async mode requires the transport to host every node
+    /// (split-hosted runs are sync-only for now).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_full_mode(
+        kind: AlgorithmKind,
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        topo: &Topology,
+        params: &AlgoParams,
+        threads: usize,
+        transport: Box<dyn Transport>,
+        compress: &CompressionSpec,
+        mode: ModeSpec,
+    ) -> ParallelEngine {
+        let program = build_node_program(kind, problem, mix, topo, params);
+        Self::from_program_full_mode(
+            program,
+            topo.clone(),
+            threads,
+            transport,
+            compress.clone(),
+            params.seed,
+            mode,
+        )
+    }
+
     /// Launch workers over an already-built node program (in-process
     /// transport).
     pub fn from_program(program: NodeProgram, topo: Topology, threads: usize) -> ParallelEngine {
@@ -510,6 +897,28 @@ impl ParallelEngine {
         compress: CompressionSpec,
         seed: u64,
     ) -> ParallelEngine {
+        Self::from_program_full_mode(
+            program,
+            topo,
+            threads,
+            transport,
+            compress,
+            seed,
+            ModeSpec::Sync,
+        )
+    }
+
+    /// [`ParallelEngine::from_program_full`] plus the round-clock
+    /// [`ModeSpec`] (see [`ParallelEngine::new_full_mode`]).
+    pub fn from_program_full_mode(
+        program: NodeProgram,
+        topo: Topology,
+        threads: usize,
+        transport: Box<dyn Transport>,
+        compress: CompressionSpec,
+        seed: u64,
+        mode: ModeSpec,
+    ) -> ParallelEngine {
         let n = program.nodes.len();
         assert!(n > 0, "engine needs at least one node");
         let hosted = transport.hosted().to_vec();
@@ -524,6 +933,11 @@ impl ParallelEngine {
             is_hosted[h] = true;
         }
         let h = hosted.len();
+        assert!(
+            !mode.is_async() || h == n,
+            "async mode requires hosting every node ({h} of {n} hosted) — \
+             split-hosted runs are sync-only"
+        );
         let threads = if threads == 0 { auto_threads(h) } else { threads }.clamp(1, h);
         let z: Vec<Vec<f64>> = program.nodes.iter().map(|nd| nd.iterate().to_vec()).collect();
         let shared = Arc::new(Shared {
@@ -539,6 +953,10 @@ impl ParallelEngine {
             stats_hop: AtomicU32::new(0),
             stats_out: Mutex::new(Vec::new()),
             stats_in: Mutex::new(Vec::new()),
+            completed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            target: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            max_staleness: AtomicU64::new(0),
         });
         let barrier = Arc::new(Barrier::new(threads + 1));
         let stop = Arc::new(AtomicBool::new(false));
@@ -569,14 +987,56 @@ impl ParallelEngine {
             buckets[k * threads / h].push(HostedNode { idx, state: node, port, cross, comp });
             k += 1;
         }
+        // both env knobs are read once, at construction, so a run's
+        // behavior can't change mid-flight
+        let trace = std::env::var("DSBA_ASYNC_TRACE").is_ok();
+        let delay = inject_delay();
         let mut workers = Vec::with_capacity(threads);
         for bucket in buckets {
             let shared = shared.clone();
-            let barrier = barrier.clone();
             let stop = stop.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(bucket, shared, barrier, stop)
-            }));
+            match mode {
+                ModeSpec::Sync => {
+                    let barrier = barrier.clone();
+                    workers.push(std::thread::spawn(move || {
+                        round_clock_loop(bucket, shared, barrier, stop, delay)
+                    }));
+                }
+                ModeSpec::Async(tau) => {
+                    let tau = tau as u64;
+                    let ctls: Vec<AsyncCtl> = bucket
+                        .iter()
+                        .map(|hn| {
+                            let mut in_nbrs = topo.neighbors(hn.idx).to_vec();
+                            in_nbrs.sort_unstable();
+                            let trace_s = in_nbrs
+                                .iter()
+                                .map(|&m| {
+                                    if trace {
+                                        trace_staleness(hn.idx, m, tau)
+                                    } else {
+                                        0
+                                    }
+                                })
+                                .collect();
+                            AsyncCtl {
+                                r: 0,
+                                emitted: false,
+                                in_nbrs,
+                                trace_s,
+                                pending: std::collections::HashMap::new(),
+                                wait_since: None,
+                            }
+                        })
+                        .collect();
+                    let deadline = crate::runtime::transport::drain_timeout();
+                    workers.push(std::thread::spawn(move || {
+                        async_clock_loop(
+                            bucket, ctls, shared, stop, tau, trace, delay, deadline,
+                        )
+                    }));
+                }
+            }
         }
         // setup accounting and effective-pass denominator cover this
         // engine's share of the nodes: keep every setup send that touches
@@ -594,6 +1054,7 @@ impl ParallelEngine {
         };
         ParallelEngine {
             kind: program.kind,
+            mode,
             topo,
             threads,
             hosted,
@@ -602,6 +1063,7 @@ impl ParallelEngine {
             pass_denom_full,
             t: 0,
             z,
+            pending_costs: Vec::new(),
             shared,
             workers,
             barrier,
@@ -611,6 +1073,40 @@ impl ParallelEngine {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Which round clock drives the workers.
+    pub fn mode(&self) -> ModeSpec {
+        self.mode
+    }
+
+    /// A detached observer over the per-node progress watermarks (see
+    /// [`ProgressProbe`]).
+    pub fn progress_probe(&self) -> ProgressProbe {
+        ProgressProbe { shared: self.shared.clone() }
+    }
+
+    /// Fail fast (with an error instead of a deadlock) if a worker hit
+    /// trouble — the engine is poisoned either way, but a transport
+    /// failure (peer died, drain timed out) must not be reported as node
+    /// code panicking.
+    fn propagate_worker_failure(&self) {
+        if self.shared.panicked.load(Ordering::SeqCst) {
+            let transport_err = self.shared.failure.lock().unwrap().take();
+            match transport_err {
+                Some(e) => panic!(
+                    "ParallelEngine: transport failure during round {} of {}: {e}",
+                    self.t,
+                    self.kind.name()
+                ),
+                None => panic!(
+                    "ParallelEngine: a node panicked on a worker thread during \
+                     round {} of {} — engine state is poisoned",
+                    self.t,
+                    self.kind.name()
+                ),
+            }
+        }
     }
 
     pub fn topology(&self) -> &Topology {
@@ -640,36 +1136,47 @@ impl Algorithm for ParallelEngine {
                 net.send_dense(from, to, len);
             }
         }
-        self.barrier.wait(); // release the round
-        self.barrier.wait(); // phase A complete
-        self.barrier.wait(); // phase B complete
-        // fail fast (with an error instead of a barrier deadlock) if a
-        // worker hit trouble — the engine is poisoned either way, but a
-        // transport failure (peer died, drain timed out) must not be
-        // reported as node code panicking
-        if self.shared.panicked.load(Ordering::SeqCst) {
-            let transport_err = self.shared.failure.lock().unwrap().take();
-            match transport_err {
-                Some(e) => panic!(
-                    "ParallelEngine: transport failure during round {} of {}: {e}",
-                    self.t,
-                    self.kind.name()
-                ),
-                None => panic!(
-                    "ParallelEngine: a node panicked on a worker thread during \
-                     round {} of {} — engine state is poisoned",
-                    self.t,
-                    self.kind.name()
-                ),
+        match self.mode {
+            ModeSpec::Sync => {
+                self.barrier.wait(); // release the round
+                self.barrier.wait(); // phase A complete
+                self.barrier.wait(); // phase B complete
+            }
+            ModeSpec::Async(tau) => {
+                // let workers run rounds up to t + tau; report once every
+                // node's completion watermark covers round t
+                self.shared
+                    .target
+                    .store(self.t as u64 + 1 + tau as u64, Ordering::SeqCst);
+                loop {
+                    self.propagate_worker_failure();
+                    let t64 = self.t as u64;
+                    let done = self
+                        .hosted
+                        .iter()
+                        .all(|&nd| self.shared.completed[nd].load(Ordering::SeqCst) > t64);
+                    if done {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
             }
         }
-        // replay cost events in canonical (sender, emit index) order —
-        // identical to the sequential driver's charging order
+        self.propagate_worker_failure();
+        // replay cost events in canonical (round, sender, emit index)
+        // order — identical to the sequential driver's charging order.
+        // Async fast nodes may already have emitted rounds past t; those
+        // events are held back for the step that reports their round
         let mut events = {
             let mut guard = self.shared.costs.lock().unwrap();
             std::mem::take(&mut *guard)
         };
-        events.sort_by_key(|e| (e.from, e.seq));
+        events.extend(self.pending_costs.drain(..));
+        let t64 = self.t as u64;
+        let (mut events, later): (Vec<CostEvent>, Vec<CostEvent>) =
+            events.into_iter().partition(|e| e.t <= t64);
+        self.pending_costs = later;
+        events.sort_by_key(|e| (e.t, e.from, e.seq));
         for e in events {
             match e.kind {
                 CostKind::Dense(len) => net.send_dense(e.from, e.to, len),
@@ -700,6 +1207,15 @@ impl Algorithm for ParallelEngine {
 
     fn name(&self) -> &'static str {
         self.kind.name()
+    }
+
+    /// `(max consumed staleness in rounds, stalled scans)` — nonzero
+    /// only under the async clock with `tau > 0`.
+    fn staleness_stats(&self) -> (u64, u64) {
+        (
+            self.shared.max_staleness.load(Ordering::Relaxed),
+            self.shared.stalls.load(Ordering::Relaxed),
+        )
     }
 
     /// Split-run metrics aggregation: flood per-node stat rows (iterate,
@@ -778,10 +1294,29 @@ impl Algorithm for ParallelEngine {
     }
 }
 
+/// A detached, cloneable observer over the engine's per-node progress
+/// watermarks — lets a monitor (or the straggler fault-injection test)
+/// sample rounds completed mid-run from another thread without borrowing
+/// the engine.
+#[derive(Clone)]
+pub struct ProgressProbe {
+    shared: Arc<Shared>,
+}
+
+impl ProgressProbe {
+    /// Rounds completed per topology node (round `t` done ⇒ `t + 1`;
+    /// nodes hosted by a peer engine stay at 0).
+    pub fn completed_rounds(&self) -> Vec<u64> {
+        self.shared.completed.iter().map(|c| c.load(Ordering::SeqCst)).collect()
+    }
+}
+
 impl Drop for ParallelEngine {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        self.barrier.wait(); // wake workers at the round-start barrier
+        if !self.mode.is_async() {
+            self.barrier.wait(); // wake workers at the round-start barrier
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -1005,5 +1540,172 @@ mod tests {
         assert_eq!(EngineKind::parse("parallel"), Some(EngineKind::Parallel));
         assert_eq!(EngineKind::parse("SEQ"), Some(EngineKind::Sequential));
         assert_eq!(EngineKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn mode_spec_parses_and_names() {
+        assert_eq!(ModeSpec::parse("sync"), Some(ModeSpec::Sync));
+        assert_eq!(ModeSpec::parse("SYNC"), Some(ModeSpec::Sync));
+        assert_eq!(ModeSpec::parse("async"), Some(ModeSpec::Async(0)));
+        assert_eq!(ModeSpec::parse("async:0"), Some(ModeSpec::Async(0)));
+        assert_eq!(ModeSpec::parse("async:3"), Some(ModeSpec::Async(3)));
+        assert_eq!(ModeSpec::parse("Async:2"), Some(ModeSpec::Async(2)));
+        assert_eq!(ModeSpec::parse("async:"), None);
+        assert_eq!(ModeSpec::parse("async:-1"), None);
+        assert_eq!(ModeSpec::parse("bogus"), None);
+        assert_eq!(ModeSpec::Sync.name(), "sync");
+        assert_eq!(ModeSpec::Async(2).name(), "async:2");
+        assert_eq!(ModeSpec::parse(&ModeSpec::Async(7).name()), Some(ModeSpec::Async(7)));
+        assert_eq!(ModeSpec::default(), ModeSpec::Sync);
+        assert!(!ModeSpec::Sync.is_async());
+        assert!(ModeSpec::Async(0).is_async());
+    }
+
+    #[test]
+    fn inject_delay_spec_parses() {
+        assert_eq!(parse_inject_delay(None), None);
+        assert_eq!(parse_inject_delay(Some("2:150")), Some((2, 150)));
+        assert_eq!(parse_inject_delay(Some(" 0 : 5 ")), Some((0, 5)));
+        for bad in ["", "3", "3:", ":5", "a:5", "3:b", "3;5"] {
+            assert_eq!(parse_inject_delay(Some(bad)), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn trace_staleness_is_deterministic_and_bounded() {
+        for tau in [0u64, 1, 2, 5] {
+            for node in 0..6 {
+                for from in 0..6 {
+                    let s = trace_staleness(node, from, tau);
+                    assert!(s <= tau, "edge {from}->{node} tau {tau} gave {s}");
+                    assert_eq!(s, trace_staleness(node, from, tau));
+                }
+            }
+        }
+        // tau >= 1 should actually exercise nonzero offsets somewhere
+        let spread: std::collections::HashSet<u64> = (0..8)
+            .flat_map(|n| (0..8).map(move |m| trace_staleness(n, m, 2)))
+            .collect();
+        assert!(spread.len() > 1, "trace schedule degenerate: {spread:?}");
+    }
+
+    #[test]
+    fn async_zero_matches_sync_bitwise_smoke() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut sync_eng =
+            ParallelEngine::new(AlgorithmKind::Dsba, p.clone(), &mix, &topo, &params, 2);
+        let mut async_eng = ParallelEngine::new_full_mode(
+            AlgorithmKind::Dsba,
+            p.clone(),
+            &mix,
+            &topo,
+            &params,
+            2,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Async(0),
+        );
+        let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+        let mut net_a = Network::new(topo.clone(), CommCostModel::default());
+        for round in 0..12 {
+            sync_eng.step(&mut net_s);
+            async_eng.step(&mut net_a);
+            for n in 0..topo.n {
+                assert_eq!(
+                    sync_eng.iterates()[n],
+                    async_eng.iterates()[n],
+                    "round {round} node {n}"
+                );
+            }
+        }
+        assert_eq!(net_s.messages(), net_a.messages());
+        assert_eq!(sync_eng.passes(), async_eng.passes());
+        let (sent, delivered) = async_eng.message_stats();
+        assert_eq!(sent, delivered, "async:0 left messages in flight");
+        assert_eq!(async_eng.staleness_stats().0, 0, "async:0 consumed stale data");
+    }
+
+    #[test]
+    fn async_drop_without_stepping_does_not_hang() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let eng = ParallelEngine::new_full_mode(
+            AlgorithmKind::Extra,
+            p,
+            &mix,
+            &topo,
+            &params,
+            3,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Async(2),
+        );
+        let probe = eng.progress_probe();
+        drop(eng);
+        // workers never got a target, so nothing should have run
+        assert!(probe.completed_rounds().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn async_worker_panic_fails_fast_instead_of_deadlocking() {
+        let program = NodeProgram {
+            kind: AlgorithmKind::Dsba,
+            nodes: vec![Box::new(PanickyNode { z: vec![0.0], boom_at: 2 })],
+            setup: Vec::new(),
+            pass_denom: 1.0,
+        };
+        let topo = Topology::from_edges(1, &[]);
+        let mut eng = ParallelEngine::from_program_full_mode(
+            program,
+            topo.clone(),
+            1,
+            Box::new(LocalTransport::new(1)),
+            CompressionSpec::None,
+            0,
+            ModeSpec::Async(1),
+        );
+        let mut net = Network::new(topo, CommCostModel::default());
+        eng.step(&mut net);
+        eng.step(&mut net);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.step(&mut net);
+        }));
+        assert!(result.is_err(), "expected fail-fast panic");
+        drop(eng); // must not hang
+    }
+
+    #[test]
+    #[should_panic(expected = "async mode requires hosting every node")]
+    fn async_rejects_partial_hosting() {
+        // a transport claiming to host only half the ring must be turned
+        // away by the async clock before any worker spawns
+        struct HalfTransport {
+            inner: LocalTransport,
+        }
+        impl Transport for HalfTransport {
+            fn hosted(&self) -> &[usize] {
+                &[0, 1]
+            }
+            fn into_ports(self: Box<Self>) -> Vec<Box<dyn NodePort>> {
+                Box::new(self.inner).into_ports().into_iter().take(2).collect()
+            }
+            fn name(&self) -> &'static str {
+                "half-local"
+            }
+        }
+        let topo = Topology::ring(4);
+        let (p, mix, _) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let program = build_node_program(AlgorithmKind::Extra, p, &mix, &topo, &params);
+        let _ = ParallelEngine::from_program_full_mode(
+            program,
+            topo,
+            1,
+            Box::new(HalfTransport { inner: LocalTransport::new(4) }),
+            CompressionSpec::None,
+            0,
+            ModeSpec::Async(1),
+        );
     }
 }

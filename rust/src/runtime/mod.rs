@@ -6,12 +6,15 @@
 //!   thread per group of nodes, a pluggable [`transport`] backend modeling
 //!   the topology's edges ([`LocalTransport`] in-process mpsc channels, or
 //!   [`TcpTransport`] per-edge loopback/host sockets carrying the framed
-//!   wire codec), barrier-synchronized rounds, and per-edge byte
-//!   accounting routed through [`crate::comm::CommCostModel`]. Drives the
-//!   per-node [`crate::algorithms::NodeState`] decomposition that the
-//!   sequential reference driver also runs, so its output is bit-for-bit
-//!   identical to the sequential oracle (pinned by
-//!   `rust/tests/engine_parity.rs`). See `rust/src/runtime/README.md`.
+//!   wire codec), watermark-paced rounds under a [`ModeSpec`]-selected
+//!   clock (barrier-synchronized `sync`, or bounded-staleness
+//!   `async:TAU`), and per-edge byte accounting routed through
+//!   [`crate::comm::CommCostModel`]. Drives the per-node
+//!   [`crate::algorithms::NodeState`] decomposition that the sequential
+//!   reference driver also runs, so sync output is bit-for-bit identical
+//!   to the sequential oracle (pinned by `rust/tests/engine_parity.rs`;
+//!   `async:0` is pinned too, by `rust/tests/async_engine.rs`). See
+//!   `rust/src/runtime/README.md`.
 //!
 //! * The **XLA/PJRT artifact runtime** — loads the AOT artifacts produced
 //!   by `python/compile/aot.py` (HLO text) and executes them on the PJRT
@@ -29,10 +32,12 @@ pub mod transport;
 
 mod registry;
 
-pub use engine::{EngineKind, ParallelEngine};
+pub use engine::{EngineKind, ModeSpec, ParallelEngine, ProgressProbe};
 pub use registry::{ArtifactEntry, Manifest};
 pub use spec::{EngineSpec, TcpSpec};
-pub use transport::{LocalTransport, NodePort, TcpTransport, Transport, TransportKind};
+pub use transport::{
+    LocalTransport, NodePort, StampedEnvelope, TcpTransport, Transport, TransportKind,
+};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

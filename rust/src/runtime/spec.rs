@@ -4,7 +4,7 @@
 //! JSON config / CLI flags through `ExperimentConfig` into `Experiment`,
 //! instead of six loose fields leaking through every layer.
 
-use super::engine::EngineKind;
+use super::engine::{EngineKind, ModeSpec};
 use super::transport::TransportKind;
 use crate::comm::CompressionSpec;
 use crate::util::json::Json;
@@ -63,6 +63,9 @@ pub struct EngineSpec {
     /// wire compression at the transport boundary (parallel engine only;
     /// the sequential oracle is always the uncompressed reference)
     pub compress: CompressionSpec,
+    /// round clock (parallel engine only): barrier-synced `sync` or
+    /// bounded-staleness `async:TAU`
+    pub mode: ModeSpec,
 }
 
 impl Default for EngineSpec {
@@ -73,6 +76,7 @@ impl Default for EngineSpec {
             transport: TransportKind::Local,
             tcp: TcpSpec::default(),
             compress: CompressionSpec::None,
+            mode: ModeSpec::Sync,
         }
     }
 }
@@ -105,6 +109,11 @@ impl EngineSpec {
         self
     }
 
+    pub fn with_mode(mut self, mode: ModeSpec) -> EngineSpec {
+        self.mode = mode;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("kind", Json::Str(self.kind.name().into())),
@@ -112,6 +121,7 @@ impl EngineSpec {
             ("transport", Json::Str(self.transport.name().into())),
             ("tcp", self.tcp.to_json()),
             ("compress", Json::Str(self.compress.name())),
+            ("mode", Json::Str(self.mode.name())),
         ])
     }
 
@@ -141,6 +151,9 @@ impl EngineSpec {
         if let Some(s) = v.get("compress").and_then(Json::as_str) {
             e.compress = CompressionSpec::parse(s)?;
         }
+        if let Some(s) = v.get("mode").and_then(Json::as_str) {
+            e.mode = ModeSpec::parse(s).ok_or(format!("bad mode {s} (sync|async:TAU)"))?;
+        }
         Ok(e)
     }
 }
@@ -162,6 +175,7 @@ mod tests {
                 hosted: "0-4".into(),
             },
             compress: CompressionSpec::TopK(7),
+            mode: ModeSpec::Async(2),
         };
         let j = spec.to_json().to_string();
         let back = EngineSpec::from_json(&parse(&j).unwrap()).unwrap();
@@ -187,6 +201,9 @@ mod tests {
         assert!(!e.tcp.is_empty());
         assert!(TcpSpec::default().is_empty());
         assert_eq!(EngineSpec::sequential(), EngineSpec::default());
+        let a = EngineSpec::parallel(2).with_mode(ModeSpec::Async(1));
+        assert_eq!(a.mode, ModeSpec::Async(1));
+        assert_eq!(EngineSpec::parallel(2).mode, ModeSpec::Sync);
     }
 
     #[test]
@@ -200,5 +217,9 @@ mod tests {
         assert!(EngineSpec::from_json(&parse("{\"compress\":\"topk:0\"}").unwrap()).is_err());
         let q = EngineSpec::from_json(&parse("{\"compress\":\"qsgd:16\"}").unwrap()).unwrap();
         assert_eq!(q.compress, CompressionSpec::Qsgd(16));
+        assert_eq!(e.mode, ModeSpec::Sync);
+        let a = EngineSpec::from_json(&parse("{\"mode\":\"async:2\"}").unwrap()).unwrap();
+        assert_eq!(a.mode, ModeSpec::Async(2));
+        assert!(EngineSpec::from_json(&parse("{\"mode\":\"warp\"}").unwrap()).is_err());
     }
 }

@@ -13,26 +13,31 @@
 //!   run through the lossless `Message::encode`/`decode` wire codec and
 //!   length-prefix-framed, so the bytes the paper's `C_n^t` accounting
 //!   prices actually cross a socket. Connections start with a small
-//!   handshake (edge endpoints, topology fingerprint, seed) and rounds
-//!   are delimited by end-of-round control frames, which is what lets two
+//!   handshake (edge endpoints, topology fingerprint, seed) and progress
+//!   is announced with WATERMARK control frames, which is what lets two
 //!   engine processes hosting disjoint node sets stay in lockstep without
-//!   any shared memory.
+//!   any shared memory — and what lets the async clock run without any
+//!   lockstep at all.
 //!
 //! ## Wire framing (little-endian, after the handshake)
 //!
 //! ```text
-//! MSG frame:   0x4D | t: u64 | seq: u32 | len: u64 | len bytes (Message::encode)
-//! END frame:   0x45 | t: u64                         (round t emissions complete)
-//! STATS frame: 0x53 | t: u64 | hop: u32 | len: u64 | len bytes (opaque payload)
+//! MSG frame:       0x4D | t: u64 | seq: u32 | len: u64 | len bytes (Message::encode)
+//! WATERMARK frame: 0x57 | len: u64 | len bytes (comm::Watermark::encode)
 //! ```
 //!
-//! STATS frames ride the end-of-round control channel between rounds:
-//! split-hosted engines exchange per-node metric rows on them
-//! (`metrics::encode_stat_rows`) so a cross-process run can report
-//! *global* series. They are flooded for `hop = 0..diameter` sub-rounds
-//! at a sample point `t`, which reaches every peer process even when
-//! two processes share no topology edge; the same socket lockstep that
-//! orders rounds orders the hops.
+//! A `WATERMARK` frame is the single versioned control frame
+//! (`node | round | kind`, see [`crate::comm::Watermark`]) that subsumes
+//! the legacy END and STATS frames of wire version 1: `RoundComplete`
+//! delimits a sender's round-`t` emissions, and `Stats` carries the
+//! split-run metric-row flood (`metrics::encode_stat_rows`) for
+//! `hop = 0..diameter` sub-rounds at a sample point `t`. Per-link reader
+//! threads additionally mirror every `RoundComplete` into a shared
+//! per-neighbor watermark table *after* queueing the frame, so a
+//! non-blocking [`NodePort::poll_watermarks`] observing `round + 1` for a
+//! neighbor is guaranteed to find all of that neighbor's messages through
+//! `round` already drainable via [`NodePort::drain_up_to`] (per-link FIFO
+//! plus the store ordering gives the happens-before edge).
 //!
 //! ## Handshake (29 bytes each way, dialer first)
 //!
@@ -51,18 +56,23 @@
 //! codec is bit-exact, so the TCP backend reproduces the sequential
 //! oracle's iterates exactly (pinned by `rust/tests/engine_parity.rs`).
 
-use crate::comm::Message;
+use crate::comm::{Message, Watermark, WatermarkKind};
 use crate::graph::Topology;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// (from, emit index, payload) crossing one edge.
 pub type Envelope = (usize, u32, Message);
+
+/// (from, round, emit index, payload) — the round-stamped envelope the
+/// staleness-aware [`NodePort::drain_up_to`] surface returns, since an
+/// async drain can hand back messages from several rounds at once.
+pub type StampedEnvelope = (usize, u64, u32, Message);
 
 /// Which edge-channel backend carries the engine's messages.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,6 +136,27 @@ pub trait NodePort: Send {
         let _ = (t, hop, from);
         Err("stats exchange unsupported on this transport".to_string())
     }
+
+    /// Non-blocking snapshot of per-neighbor progress: `(node, w)` pairs
+    /// where `w` counts the rounds the node has emitted through (`w = 0`
+    /// means nothing yet, `w = t + 1` means its round-`t` emissions are
+    /// complete and — by the watermark ordering contract — already
+    /// drainable). Backends may report more nodes than the caller's
+    /// in-neighborhood; the async clock filters. The default rejects the
+    /// call for backends without a watermark table.
+    fn poll_watermarks(&mut self) -> Result<Vec<(usize, u64)>, String> {
+        Err("watermark polling unsupported on this transport".to_string())
+    }
+
+    /// Non-blocking drain of every received envelope stamped with round
+    /// `<= t`; later-round envelopes stay buffered for a future call.
+    /// This is the async clock's inbox surface — a port is driven either
+    /// through the barrier pair `finish_round`/`drain_round` *or* through
+    /// `poll_watermarks`/`drain_up_to`, never both.
+    fn drain_up_to(&mut self, t: usize) -> Result<Vec<StampedEnvelope>, String> {
+        let _ = t;
+        Err("staleness-aware drains unsupported on this transport".to_string())
+    }
 }
 
 /// A connected communication backend for one engine instance: the set of
@@ -149,11 +180,13 @@ pub trait Transport: Send {
 // ---------------------------------------------------------------------------
 
 /// The in-process backend: one mpsc inbox per node, every port holding
-/// senders for all inboxes (workers may address any neighbor).
+/// senders for all inboxes (workers may address any neighbor), plus one
+/// shared watermark slot per node for the async clock.
 pub struct LocalTransport {
     hosted: Vec<usize>,
-    txs: Vec<Sender<Envelope>>,
-    rxs: Vec<Receiver<Envelope>>,
+    txs: Vec<Sender<StampedEnvelope>>,
+    rxs: Vec<Receiver<StampedEnvelope>>,
+    marks: Arc<Vec<AtomicU64>>,
 }
 
 impl LocalTransport {
@@ -162,11 +195,12 @@ impl LocalTransport {
         let mut txs = Vec::with_capacity(n);
         let mut rxs = Vec::with_capacity(n);
         for _ in 0..n {
-            let (tx, rx) = channel::<Envelope>();
+            let (tx, rx) = channel::<StampedEnvelope>();
             txs.push(tx);
             rxs.push(rx);
         }
-        LocalTransport { hosted: (0..n).collect(), txs, rxs }
+        let marks = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        LocalTransport { hosted: (0..n).collect(), txs, rxs, marks }
     }
 }
 
@@ -177,11 +211,18 @@ impl Transport for LocalTransport {
 
     fn into_ports(self: Box<Self>) -> Vec<Box<dyn NodePort>> {
         let txs = self.txs;
+        let marks = self.marks;
         self.rxs
             .into_iter()
             .enumerate()
             .map(|(id, rx)| {
-                Box::new(LocalPort { id, txs: txs.clone(), rx }) as Box<dyn NodePort>
+                Box::new(LocalPort {
+                    id,
+                    txs: txs.clone(),
+                    rx,
+                    marks: marks.clone(),
+                    carry: Vec::new(),
+                }) as Box<dyn NodePort>
             })
             .collect()
     }
@@ -193,24 +234,55 @@ impl Transport for LocalTransport {
 
 struct LocalPort {
     id: usize,
-    txs: Vec<Sender<Envelope>>,
-    rx: Receiver<Envelope>,
+    txs: Vec<Sender<StampedEnvelope>>,
+    rx: Receiver<StampedEnvelope>,
+    /// shared per-node "rounds emitted through" table
+    marks: Arc<Vec<AtomicU64>>,
+    /// envelopes pulled by `drain_up_to` that belong to a future round
+    carry: Vec<StampedEnvelope>,
 }
 
 impl NodePort for LocalPort {
-    fn send(&mut self, _t: usize, to: usize, seq: u32, msg: Message) -> Result<(), String> {
+    fn send(&mut self, t: usize, to: usize, seq: u32, msg: Message) -> Result<(), String> {
         self.txs[to]
-            .send((self.id, seq, msg))
+            .send((self.id, t as u64, seq, msg))
             .map_err(|_| format!("node {to}: inbox receiver dropped mid-round"))
     }
 
-    fn finish_round(&mut self, _t: usize) -> Result<(), String> {
+    fn finish_round(&mut self, t: usize) -> Result<(), String> {
+        // publish AFTER the round's sends: an observer of `t + 1` is
+        // guaranteed (mpsc FIFO + SeqCst) to find the messages drainable
+        self.marks[self.id].store(t as u64 + 1, Ordering::SeqCst);
         Ok(())
     }
 
     fn drain_round(&mut self, _t: usize) -> Result<Vec<Envelope>, String> {
         // exhaustive under the engine's phase barrier (all sends landed)
-        Ok(self.rx.try_iter().collect())
+        Ok(self.rx.try_iter().map(|(from, _, seq, msg)| (from, seq, msg)).collect())
+    }
+
+    fn poll_watermarks(&mut self) -> Result<Vec<(usize, u64)>, String> {
+        Ok(self
+            .marks
+            .iter()
+            .enumerate()
+            .map(|(node, w)| (node, w.load(Ordering::SeqCst)))
+            .collect())
+    }
+
+    fn drain_up_to(&mut self, t: usize) -> Result<Vec<StampedEnvelope>, String> {
+        let t64 = t as u64;
+        let mut out = Vec::new();
+        let mut keep = Vec::new();
+        for env in self.carry.drain(..).chain(self.rx.try_iter()) {
+            if env.1 <= t64 {
+                out.push(env);
+            } else {
+                keep.push(env);
+            }
+        }
+        self.carry = keep;
+        Ok(out)
     }
 }
 
@@ -219,10 +291,12 @@ impl NodePort for LocalPort {
 // ---------------------------------------------------------------------------
 
 const HANDSHAKE_MAGIC: [u8; 4] = *b"DSBA";
-const WIRE_VERSION: u8 = 1;
+/// v2: the END (0x45) / STATS (0x53) control frames of v1 were replaced
+/// by the single versioned WATERMARK frame; v1 peers are rejected at the
+/// handshake.
+const WIRE_VERSION: u8 = 2;
 const FRAME_MSG: u8 = 0x4D; // 'M'
-const FRAME_END: u8 = 0x45; // 'E'
-const FRAME_STATS: u8 = 0x53; // 'S'
+const FRAME_WATERMARK: u8 = 0x57; // 'W'
 /// Hard upper bound on one frame's payload; a corrupt length field fails
 /// fast instead of stalling the reader for gigabytes.
 const MAX_FRAME_BYTES: u64 = 1 << 30;
@@ -270,7 +344,7 @@ fn parse_drain_timeout(raw: Option<&str>) -> (Duration, Option<String>) {
     }
 }
 
-fn drain_timeout() -> Duration {
+pub(crate) fn drain_timeout() -> Duration {
     let var = std::env::var("DSBA_DRAIN_TIMEOUT_SECS").ok();
     let (timeout, warning) = parse_drain_timeout(var.as_deref());
     if let Some(w) = warning {
@@ -426,13 +500,15 @@ impl TcpTransport {
         }
 
         // assemble one port per hosted node: buffered writers plus one
-        // reader thread per link feeding the node's event inbox
+        // reader thread per link feeding the node's event inbox and its
+        // slot in the per-neighbor watermark table
         let mut ports = Vec::with_capacity(hosted.len());
         for &n in &hosted {
             let (inbox_tx, inbox_rx) = channel::<TcpEvent>();
             let nbrs = topo.neighbors(n).to_vec();
             let mut writers = Vec::with_capacity(nbrs.len());
             let mut shutdown = Vec::with_capacity(nbrs.len());
+            let mut marks = Vec::with_capacity(nbrs.len());
             for &m in &nbrs {
                 let stream = streams
                     .remove(&(n, m))
@@ -440,8 +516,10 @@ impl TcpTransport {
                 let clone_err = |e| format!("clone stream ({n},{m}): {e}");
                 shutdown.push(stream.try_clone().map_err(clone_err)?);
                 writers.push((m, BufWriter::new(stream.try_clone().map_err(clone_err)?)));
+                let mark = Arc::new(AtomicU64::new(0));
+                marks.push(mark.clone());
                 let tx = inbox_tx.clone();
-                std::thread::spawn(move || reader_loop(stream, m, tx));
+                std::thread::spawn(move || reader_loop(stream, m, tx, mark));
             }
             ports.push(TcpPort {
                 id: n,
@@ -449,6 +527,8 @@ impl TcpTransport {
                 writers,
                 inbox: inbox_rx,
                 carry: Vec::new(),
+                marks,
+                closed: HashMap::new(),
                 enc_cache: None,
                 comp_cache: None,
                 drain_timeout: drain_timeout(),
@@ -486,6 +566,14 @@ struct TcpPort {
     inbox: Receiver<TcpEvent>,
     /// events already pulled that belong to a future round
     carry: Vec<TcpEvent>,
+    /// per-neighbor "rounds emitted through" slots, aligned with
+    /// `neighbors`, written by the link's reader thread
+    marks: Vec<Arc<AtomicU64>>,
+    /// links whose reader reported `Closed` during a staleness-aware
+    /// drain (`drain_up_to` keeps going as long as the watermark already
+    /// covers what the caller asked for; the async clock's admission
+    /// deadline is what turns a genuinely dead peer into an error)
+    closed: HashMap<usize, String>,
     /// last dense broadcast payload and its encoding — a degree-k
     /// broadcast encodes once, not k times (the held `Arc` keeps the
     /// allocation alive, so pointer identity can never alias a recycled
@@ -543,8 +631,14 @@ impl NodePort for TcpPort {
 
     fn finish_round(&mut self, t: usize) -> Result<(), String> {
         let id = self.id;
+        let wm = Watermark {
+            node: id as u32,
+            round: t as u64,
+            kind: WatermarkKind::RoundComplete,
+        };
+        let bytes = wm.encode();
         for (to, w) in &mut self.writers {
-            write_end_frame(w, t as u64)
+            write_watermark_frame(w, &bytes)
                 .and_then(|_| w.flush())
                 .map_err(|e| format!("node {id}: end-of-round to {to} failed: {e}"))?;
         }
@@ -561,14 +655,30 @@ impl NodePort for TcpPort {
         while remaining > 0 {
             let ev = match queue.pop_front() {
                 Some(ev) => ev,
-                None => self.inbox.recv_timeout(self.drain_timeout).map_err(|_| {
-                    format!(
-                        "node {}: round {t} never completed — {remaining} \
-                         neighbor(s) missing end-of-round (remote engine dead \
-                         or stalled)",
-                        self.id
-                    )
-                })?,
+                None => match self.inbox.recv_timeout(self.drain_timeout) {
+                    Ok(ev) => ev,
+                    Err(_) => {
+                        // name every missing peer with its last-seen
+                        // watermark so straggler triage isn't guesswork
+                        let missing: Vec<String> = self
+                            .neighbors
+                            .iter()
+                            .zip(&ended)
+                            .zip(&self.marks)
+                            .filter(|((_, &done), _)| !done)
+                            .map(|((&m, _), mark)| match mark.load(Ordering::SeqCst) {
+                                0 => format!("peer {m} (no watermark yet)"),
+                                w => format!("peer {m} (last watermark: round {})", w - 1),
+                            })
+                            .collect();
+                        return Err(format!(
+                            "node {}: round {t} never completed — waiting on {} \
+                             (remote engine dead or stalled)",
+                            self.id,
+                            missing.join(", ")
+                        ));
+                    }
+                },
             };
             match ev {
                 TcpEvent::Msg { from, t: et, seq, msg } => {
@@ -652,8 +762,13 @@ impl NodePort for TcpPort {
             .writers
             .binary_search_by_key(&to, |&(m, _)| m)
             .map_err(|_| format!("node {id} has no link to {to}"))?;
+        let wm = Watermark {
+            node: id as u32,
+            round: t as u64,
+            kind: WatermarkKind::Stats { hop, payload: payload.to_vec() },
+        };
         let w = &mut self.writers[j].1;
-        write_stats_frame(w, t as u64, hop, payload)
+        write_watermark_frame(w, &wm.encode())
             .and_then(|_| w.flush())
             .map_err(|e| format!("node {id}: stats frame to {to} failed: {e}"))
     }
@@ -701,6 +816,55 @@ impl NodePort for TcpPort {
                 other => self.carry.push(other),
             }
         }
+    }
+
+    fn poll_watermarks(&mut self) -> Result<Vec<(usize, u64)>, String> {
+        Ok(self
+            .neighbors
+            .iter()
+            .zip(&self.marks)
+            .map(|(&m, mark)| (m, mark.load(Ordering::SeqCst)))
+            .collect())
+    }
+
+    fn drain_up_to(&mut self, t: usize) -> Result<Vec<StampedEnvelope>, String> {
+        let t64 = t as u64;
+        let mut out = Vec::new();
+        let mut keep = Vec::new();
+        let mut pending: VecDeque<TcpEvent> = self.carry.drain(..).collect();
+        loop {
+            let ev = match pending.pop_front() {
+                Some(ev) => ev,
+                None => match self.inbox.try_recv() {
+                    Ok(ev) => ev,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break,
+                },
+            };
+            match ev {
+                TcpEvent::Msg { from, t: et, seq, msg } => {
+                    if et <= t64 {
+                        out.push((from, et, seq, msg));
+                    } else {
+                        keep.push(TcpEvent::Msg { from, t: et, seq, msg });
+                    }
+                }
+                // the watermark table already carries round progress;
+                // the end-of-round event itself is barrier-clock only
+                TcpEvent::End { .. } => {}
+                ev @ TcpEvent::Stats { .. } => keep.push(ev),
+                TcpEvent::Closed { from, reason } => {
+                    // remember, don't fail: everything the peer sent
+                    // before closing is already queued ahead of this
+                    // event (per-link FIFO), and the async clock's
+                    // admission deadline reports a genuinely dead peer
+                    // with its last watermark
+                    self.closed.insert(from, reason);
+                }
+            }
+        }
+        self.carry = keep;
+        Ok(out)
     }
 }
 
@@ -890,22 +1054,10 @@ fn write_msg_frame(
     w.write_all(payload)
 }
 
-fn write_end_frame(w: &mut BufWriter<TcpStream>, t: u64) -> std::io::Result<()> {
-    w.write_all(&[FRAME_END])?;
-    w.write_all(&t.to_le_bytes())
-}
-
-fn write_stats_frame(
-    w: &mut BufWriter<TcpStream>,
-    t: u64,
-    hop: u32,
-    payload: &[u8],
-) -> std::io::Result<()> {
-    w.write_all(&[FRAME_STATS])?;
-    w.write_all(&t.to_le_bytes())?;
-    w.write_all(&hop.to_le_bytes())?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(payload)
+fn write_watermark_frame(w: &mut BufWriter<TcpStream>, encoded: &[u8]) -> std::io::Result<()> {
+    w.write_all(&[FRAME_WATERMARK])?;
+    w.write_all(&(encoded.len() as u64).to_le_bytes())?;
+    w.write_all(encoded)
 }
 
 fn read_u32(s: &mut TcpStream) -> Result<u32, String> {
@@ -946,23 +1098,35 @@ fn read_frame(s: &mut TcpStream, from: usize) -> Result<Option<TcpEvent>, String
                 .map_err(|e| format!("bad frame payload: {e}"))?;
             Ok(Some(TcpEvent::Msg { from, t, seq, msg }))
         }
-        FRAME_END => Ok(Some(TcpEvent::End { from, t: read_u64(s)? })),
-        FRAME_STATS => {
-            let t = read_u64(s)?;
-            let hop = read_u32(s)?;
+        FRAME_WATERMARK => {
             let len = read_u64(s)?;
             if len > MAX_FRAME_BYTES {
-                return Err(format!("oversized stats frame ({len} bytes)"));
+                return Err(format!("oversized watermark frame ({len} bytes)"));
             }
-            let mut payload = Vec::new();
+            let mut encoded = Vec::new();
             let got = (&mut *s)
                 .take(len)
-                .read_to_end(&mut payload)
+                .read_to_end(&mut encoded)
                 .map_err(|e| e.to_string())?;
             if got as u64 != len {
-                return Err("truncated stats frame".to_string());
+                return Err("truncated watermark frame".to_string());
             }
-            Ok(Some(TcpEvent::Stats { from, t, hop, payload }))
+            let wm = Watermark::decode(&encoded)
+                .map_err(|e| format!("bad watermark frame: {e}"))?;
+            // link identity check: a watermark must announce progress of
+            // the node on the far end of this very link
+            if wm.node as usize != from {
+                return Err(format!(
+                    "watermark names node {} on the link from {from}",
+                    wm.node
+                ));
+            }
+            Ok(Some(match wm.kind {
+                WatermarkKind::RoundComplete => TcpEvent::End { from, t: wm.round },
+                WatermarkKind::Stats { hop, payload } => {
+                    TcpEvent::Stats { from, t: wm.round, hop, payload }
+                }
+            }))
         }
         other => Err(format!("unknown frame tag {other:#04x}")),
     }
@@ -971,13 +1135,24 @@ fn read_frame(s: &mut TcpStream, from: usize) -> Result<Option<TcpEvent>, String
 /// Per-link reader: decode frames into the owning node's event inbox
 /// until the link closes (clean EOF and errors both surface as `Closed`;
 /// the port only treats `Closed` as fatal if it is still waiting on the
-/// link, so engine teardown stays silent).
-fn reader_loop(mut stream: TcpStream, from: usize, tx: Sender<TcpEvent>) {
+/// link, so engine teardown stays silent). Every `RoundComplete`
+/// watermark is mirrored into `mark` *after* the inbox push: an observer
+/// of `mark >= t + 1` therefore finds every round-`t` frame already
+/// queued (per-link FIFO + SeqCst store/load) — the ordering contract
+/// `poll_watermarks`/`drain_up_to` relies on.
+fn reader_loop(mut stream: TcpStream, from: usize, tx: Sender<TcpEvent>, mark: Arc<AtomicU64>) {
     loop {
         match read_frame(&mut stream, from) {
             Ok(Some(ev)) => {
+                let watermark = match &ev {
+                    TcpEvent::End { t, .. } => Some(t + 1),
+                    _ => None,
+                };
                 if tx.send(ev).is_err() {
                     return; // port dropped — engine is shutting down
+                }
+                if let Some(w) = watermark {
+                    mark.store(w, Ordering::SeqCst);
                 }
             }
             Ok(None) => {
@@ -1238,6 +1413,61 @@ mod tests {
         let r1 = ports[1].drain_round(1).unwrap();
         assert_eq!(r1.len(), 1);
         assert_eq!(r1[0].2, Message::dense(vec![2.0]));
+    }
+
+    #[test]
+    fn local_watermarks_gate_staleness_aware_drains() {
+        let t = Box::new(LocalTransport::new(2));
+        let mut ports = t.into_ports();
+        // nothing emitted yet: all watermarks zero
+        assert!(ports[1].poll_watermarks().unwrap().iter().all(|&(_, w)| w == 0));
+        ports[0].send(0, 1, 0, Message::dense(vec![1.0])).unwrap();
+        ports[0].finish_round(0).unwrap();
+        let wm = ports[1].poll_watermarks().unwrap();
+        assert!(wm.contains(&(0, 1)), "{wm:?}");
+        let got = ports[1].drain_up_to(0).unwrap();
+        assert_eq!(got, vec![(0, 0, 0, Message::dense(vec![1.0]))]);
+        assert!(ports[1].drain_up_to(0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tcp_watermarks_report_progress_out_of_order_with_drains() {
+        let topo = Topology::path(3); // 1 neighbors {0, 2}
+        let t = Box::new(TcpTransport::loopback(&topo, 9).unwrap());
+        let mut ports = t.into_ports();
+        // node 0 races three rounds ahead before node 1 drains anything:
+        // its watermarks arrive "out of order" with respect to node 1's
+        // consumption, which must still be round-bounded
+        for r in 0..3usize {
+            ports[0].send(r, 1, 0, Message::dense(vec![r as f64])).unwrap();
+            ports[0].finish_round(r).unwrap();
+        }
+        // poll until the reader thread has seen all three watermarks
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let wm = ports[1].poll_watermarks().unwrap();
+            let w0 = wm.iter().find(|&&(m, _)| m == 0).unwrap().1;
+            if w0 == 3 {
+                // node 2 never emitted: its watermark must still be 0
+                assert!(wm.contains(&(2, 0)), "{wm:?}");
+                break;
+            }
+            assert!(Instant::now() < deadline, "watermark never reached 3: {wm:?}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // watermark = 3 guarantees rounds 0..2 are already drainable,
+        // but a drain bounded at round 1 must hold round 2 back
+        let r01 = ports[1].drain_up_to(1).unwrap();
+        assert_eq!(
+            r01,
+            vec![
+                (0, 0, 0, Message::dense(vec![0.0])),
+                (0, 1, 0, Message::dense(vec![1.0])),
+            ]
+        );
+        let r2 = ports[1].drain_up_to(2).unwrap();
+        assert_eq!(r2, vec![(0, 2, 0, Message::dense(vec![2.0]))]);
+        assert!(ports[1].drain_up_to(5).unwrap().is_empty());
     }
 
     #[test]

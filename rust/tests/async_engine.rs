@@ -1,0 +1,405 @@
+//! Bounded-staleness async-clock suite for the parallel engine.
+//!
+//! Three contracts pin the `--mode async:TAU` round clock:
+//!
+//! 1. **`async:0` is sync.** With a zero staleness window the admission
+//!    rule degenerates to the barrier schedule, so every method's
+//!    iterates, message counts and per-node DOUBLE accounting must be
+//!    **bit-for-bit** equal to the sequential oracle — on both
+//!    transports, dense gossip and the sparse relay alike.
+//! 2. **Small windows still converge.** Under `tau ∈ {1, 2}` the
+//!    residual to the reference optimum keeps shrinking on logistic and
+//!    elastic-net (geometric envelope, same shape as the lossy
+//!    compression suite), and the consumed staleness never exceeds
+//!    `tau`.
+//! 3. **`DSBA_ASYNC_TRACE` makes async replayable.** The trace
+//!    scheduler pins a fixed per-edge staleness, so two identical runs
+//!    are bit-identical round by round — the debugging story for a
+//!    nondeterministic clock.
+//!
+//! Plus the straggler satellite: with `DSBA_INJECT_DELAY_MS` slowing one
+//! node, the sync clock drags everyone down to the straggler's pace
+//! (progress watermarks never spread beyond one round) while `async:2`
+//! lets the fast nodes run visibly ahead.
+//!
+//! The env knobs (`DSBA_ASYNC_TRACE`, `DSBA_INJECT_DELAY_MS`) are read
+//! once at engine construction; every test that touches them serializes
+//! on [`ENV_LOCK`] because cargo runs this binary's tests on parallel
+//! threads.
+
+use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
+use dsba::comm::CompressionSpec;
+use dsba::operators::{ProblemRegistry, ProblemSpec};
+use dsba::prelude::*;
+use dsba::runtime::transport::{LocalTransport, Transport};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ridge_world(nodes: usize, seed: u64) -> Arc<dyn Problem> {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(seed);
+    Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 3), 0.05))
+}
+
+fn logistic_world(nodes: usize) -> Arc<dyn Problem> {
+    let entry = ProblemRegistry::builtin()
+        .resolve("logistic")
+        .expect("logistic is registered");
+    let ds = SyntheticSpec::tiny().generate(31);
+    let spec = ProblemSpec::new("logistic", 0.05);
+    entry
+        .build(&spec, &ds, ds.partition_seeded(nodes, 3))
+        .expect("registry builds logistic")
+}
+
+fn elastic_world(nodes: usize) -> Arc<dyn Problem> {
+    use dsba::util::json::Json;
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(23);
+    let entry = ProblemRegistry::builtin()
+        .resolve("elastic-net")
+        .expect("elastic-net is registered");
+    let spec = ProblemSpec::new("elastic-net", 0.05)
+        .with_params(Json::from_pairs(vec![("l1", Json::Num(0.02))]));
+    entry
+        .build(&spec, &ds, ds.partition_seeded(nodes, 3))
+        .expect("registry builds elastic-net")
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Backend {
+    Local,
+    Tcp,
+}
+
+fn engine_with_mode(
+    kind: AlgorithmKind,
+    p: Arc<dyn Problem>,
+    mix: &MixingMatrix,
+    topo: &Topology,
+    params: &AlgoParams,
+    threads: usize,
+    backend: Backend,
+    mode: ModeSpec,
+) -> ParallelEngine {
+    let transport: Box<dyn Transport> = match backend {
+        Backend::Local => Box::new(LocalTransport::new(topo.n)),
+        Backend::Tcp => Box::new(
+            TcpTransport::loopback(topo, params.seed).expect("loopback transport setup"),
+        ),
+    };
+    ParallelEngine::new_full_mode(
+        kind,
+        p,
+        mix,
+        topo,
+        params,
+        threads,
+        transport,
+        &CompressionSpec::None,
+        mode,
+    )
+}
+
+/// Contract 1: `--mode async:0` is the sync schedule. Every dense-gossip
+/// method plus the sparse relay, over both transports, must match the
+/// sequential oracle bit-for-bit — iterates, message counts, per-node
+/// sent/received DOUBLEs — with zero consumed staleness.
+#[test]
+fn async_zero_matches_sequential_bit_for_bit() {
+    for backend in [Backend::Local, Backend::Tcp] {
+        for kind in [
+            AlgorithmKind::Dgd,
+            AlgorithmKind::Extra,
+            AlgorithmKind::Dsa,
+            AlgorithmKind::Dsba,
+            AlgorithmKind::Dlm,
+            AlgorithmKind::DsbaSparse,
+        ] {
+            let topo = Topology::ring(6);
+            let p = ridge_world(6, 17);
+            let mix = MixingMatrix::laplacian(&topo, 1.0);
+            let mut params = AlgoParams::new(0.25, p.dim(), 99);
+            params.inner_tol = 1e-11;
+            let mut seq = build(kind, p.clone(), &mix, &topo, &params);
+            let mut par = engine_with_mode(
+                kind,
+                p.clone(),
+                &mix,
+                &topo,
+                &params,
+                3,
+                backend,
+                ModeSpec::Async(0),
+            );
+            assert_eq!(par.mode(), ModeSpec::Async(0));
+            let mut net_s = Network::new(topo.clone(), CommCostModel::default());
+            let mut net_p = Network::new(topo.clone(), CommCostModel::default());
+            let rounds = if backend == Backend::Tcp { 12 } else { 30 };
+            for round in 0..rounds {
+                seq.step(&mut net_s);
+                par.step(&mut net_p);
+                for n in 0..topo.n {
+                    assert_eq!(
+                        seq.iterates()[n],
+                        par.iterates()[n],
+                        "{} async:0 round {round} node {n}: iterate != sequential",
+                        kind.name()
+                    );
+                }
+                assert_eq!(
+                    net_s.messages(),
+                    net_p.messages(),
+                    "{} async:0 round {round}: message counts diverged",
+                    kind.name()
+                );
+                for n in 0..topo.n {
+                    assert_eq!(net_s.sent_by(n), net_p.sent_by(n));
+                    assert_eq!(net_s.received_by(n), net_p.received_by(n));
+                }
+            }
+            assert_eq!(seq.passes(), par.passes(), "{}: passes diverged", kind.name());
+            let (sent, delivered) = par.message_stats();
+            assert_eq!(sent, delivered, "{}: engine dropped messages", kind.name());
+            let (max_staleness, _) = par.staleness_stats();
+            assert_eq!(
+                max_staleness, 0,
+                "{}: async:0 must never consume stale iterates",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Contract 2: bounded staleness still converges. Under the replayable
+/// trace scheduler, DSBA with `tau ∈ {1, 2}` keeps shrinking the
+/// residual to the reference optimum on both the smooth (logistic) and
+/// proximal (elastic-net) workloads, and the engine never consumes an
+/// iterate staler than `tau` rounds.
+#[test]
+fn async_small_tau_converges_within_envelope() {
+    let _guard = env_guard();
+    std::env::set_var("DSBA_ASYNC_TRACE", "1");
+    let worlds: [&dyn Fn(usize) -> Arc<dyn Problem>; 2] = [&elastic_world, &logistic_world];
+    for world in worlds {
+        let topo = Topology::ring(4);
+        let p = world(topo.n);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let mut params = AlgoParams::new(0.25, p.dim(), 99);
+        params.inner_tol = 1e-11;
+        let z_star = dsba::coordinator::solve_optimum(p.as_ref(), 1e-11);
+        let (rounds, early) = (240usize, 24usize);
+        for tau in [1u32, 2] {
+            let mut eng = engine_with_mode(
+                AlgorithmKind::Dsba,
+                p.clone(),
+                &mix,
+                &topo,
+                &params,
+                2,
+                Backend::Local,
+                ModeSpec::Async(tau),
+            );
+            let mut net = Network::new(topo.clone(), CommCostModel::default());
+            let mut res_early = f64::NAN;
+            for r in 0..rounds {
+                eng.step(&mut net);
+                if r + 1 == early {
+                    res_early = dsba::metrics::suboptimality(eng.iterates(), &z_star);
+                }
+            }
+            let res_final = dsba::metrics::suboptimality(eng.iterates(), &z_star);
+            assert!(
+                res_final.is_finite() && res_final <= 0.5 * res_early,
+                "async:{tau}: residual {res_early:.3e} (round {early}) -> \
+                 {res_final:.3e} (round {rounds}) did not keep decreasing"
+            );
+            let (sent, delivered) = eng.message_stats();
+            assert_eq!(sent, delivered, "async:{tau} dropped messages");
+            let (max_staleness, _) = eng.staleness_stats();
+            assert!(
+                max_staleness <= tau as u64,
+                "async:{tau} consumed staleness {max_staleness} > window"
+            );
+        }
+    }
+    std::env::remove_var("DSBA_ASYNC_TRACE");
+}
+
+/// Contract 3: with `DSBA_ASYNC_TRACE` set, the async clock is a fixed
+/// deterministic schedule — two identical runs produce bit-identical
+/// iterates every round and identical message accounting, on both
+/// transports. (Without the trace env the interleaving is real-time and
+/// run-to-run results may differ; with it, async bugs replay.)
+#[test]
+fn async_trace_mode_is_replayable() {
+    let _guard = env_guard();
+    std::env::set_var("DSBA_ASYNC_TRACE", "1");
+    for backend in [Backend::Local, Backend::Tcp] {
+        let rounds = if backend == Backend::Tcp { 16 } else { 50 };
+        let topo = Topology::erdos_renyi(5, 0.6, 7);
+        let p = ridge_world(5, 17);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let mut params = AlgoParams::new(0.25, p.dim(), 99);
+        params.inner_tol = 1e-11;
+        let run = || {
+            let mut eng = engine_with_mode(
+                AlgorithmKind::Dsba,
+                p.clone(),
+                &mix,
+                &topo,
+                &params,
+                2,
+                backend,
+                ModeSpec::Async(2),
+            );
+            let mut net = Network::new(topo.clone(), CommCostModel::default());
+            let mut trail: Vec<Vec<Vec<f64>>> = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                eng.step(&mut net);
+                trail.push(eng.iterates().to_vec());
+            }
+            (trail, net.messages(), eng.staleness_stats().0)
+        };
+        let (trail_a, msgs_a, stale_a) = run();
+        let (trail_b, msgs_b, stale_b) = run();
+        for (round, (a, b)) in trail_a.iter().zip(trail_b.iter()).enumerate() {
+            assert_eq!(
+                a, b,
+                "trace-mode async runs diverged at round {round} ({} transport)",
+                if backend == Backend::Tcp { "tcp" } else { "local" }
+            );
+        }
+        assert_eq!(msgs_a, msgs_b, "trace-mode message accounting diverged");
+        assert_eq!(stale_a, stale_b, "trace-mode staleness diverged");
+    }
+    std::env::remove_var("DSBA_ASYNC_TRACE");
+}
+
+/// Straggler satellite: run a ring with node 0 slowed by
+/// `DSBA_INJECT_DELAY_MS`, sampling the per-node progress watermarks
+/// from outside the engine while a background thread steps it. Returns
+/// the sampled watermark vectors.
+fn run_with_straggler(mode: ModeSpec, rounds: usize) -> Vec<Vec<u64>> {
+    let done = Arc::new(AtomicBool::new(false));
+    let done2 = done.clone();
+    let (ptx, prx) = std::sync::mpsc::channel();
+    let stepper = std::thread::spawn(move || {
+        let topo = Topology::ring(4);
+        let p = ridge_world(4, 17);
+        let mix = MixingMatrix::laplacian(&topo, 1.0);
+        let params = AlgoParams::new(0.25, p.dim(), 99);
+        let mut eng = engine_with_mode(
+            AlgorithmKind::Dsba,
+            p,
+            &mix,
+            &topo,
+            &params,
+            4,
+            Backend::Local,
+            mode,
+        );
+        ptx.send(eng.progress_probe()).expect("probe handoff");
+        let mut net = Network::new(topo.clone(), CommCostModel::default());
+        for _ in 0..rounds {
+            eng.step(&mut net);
+        }
+        done2.store(true, Ordering::SeqCst);
+    });
+    let probe = prx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("engine construction stalled");
+    let mut samples = Vec::new();
+    let mut spins = 0usize;
+    while !done.load(Ordering::SeqCst) {
+        samples.push(probe.completed_rounds());
+        std::thread::sleep(Duration::from_millis(10));
+        spins += 1;
+        assert!(spins < 6_000, "straggler run did not finish within 60s");
+    }
+    stepper.join().expect("stepper thread panicked");
+    samples.push(probe.completed_rounds());
+    samples
+}
+
+/// With one injected straggler, the sync barrier clock holds every node
+/// within one round of the slowest (each sample's watermark spread is at
+/// most 1), while `async:2` lets the fast nodes run ahead: some sample
+/// shows a spread of at least 2 rounds with the delayed node strictly
+/// last. The final watermarks agree in both modes — async changes the
+/// schedule, not the amount of work.
+#[test]
+fn injected_straggler_stalls_sync_but_not_async() {
+    let _guard = env_guard();
+    std::env::set_var("DSBA_INJECT_DELAY_MS", "0:150");
+    let rounds = 6usize;
+
+    let sync_samples = run_with_straggler(ModeSpec::Sync, rounds);
+    for (i, s) in sync_samples.iter().enumerate() {
+        let (min, max) = (s.iter().min().unwrap(), s.iter().max().unwrap());
+        assert!(
+            max - min <= 1,
+            "sync sample {i}: watermarks {s:?} spread beyond the barrier"
+        );
+    }
+    assert_eq!(
+        sync_samples.last().unwrap(),
+        &vec![rounds as u64; 4],
+        "sync run must finish every round on every node"
+    );
+
+    let async_samples = run_with_straggler(ModeSpec::Async(2), rounds);
+    let ran_ahead = async_samples.iter().any(|s| {
+        let (min, max) = (*s.iter().min().unwrap(), *s.iter().max().unwrap());
+        max - min >= 2 && s[0] == min && s.iter().skip(1).all(|&w| w > min)
+    });
+    assert!(
+        ran_ahead,
+        "async:2 never ran ahead of the straggler; samples: {async_samples:?}"
+    );
+    // fast nodes may legitimately sit past `rounds` (the launcher lets
+    // them run up to `tau` rounds ahead of the last sampled round), but
+    // nobody may stop short of it
+    assert!(
+        async_samples.last().unwrap().iter().all(|&w| w >= rounds as u64),
+        "async run left a node short of round {rounds}: {:?}",
+        async_samples.last().unwrap()
+    );
+    std::env::remove_var("DSBA_INJECT_DELAY_MS");
+}
+
+/// The async clock plugs into the builder/coordinator stack end to end:
+/// a parallel `async:1` experiment on the trace scheduler runs to
+/// completion, reports finite suboptimality, and surfaces the staleness
+/// metrics columns.
+#[test]
+fn builder_runs_async_end_to_end_with_metrics() {
+    let _guard = env_guard();
+    std::env::set_var("DSBA_ASYNC_TRACE", "1");
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+    let topo = Topology::ring(4);
+    let mut exp = Experiment::builder(
+        RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+        topo,
+        AlgorithmKind::Dsba,
+    )
+    .step_size(0.25)
+    .passes(6.0)
+    .record_points(6)
+    .engine(EngineSpec::parallel(2).with_mode(ModeSpec::Async(1)))
+    .build();
+    let trace = exp.try_run().expect("async experiment runs");
+    let last = trace.rows.last().expect("trace has rows");
+    assert!(last.suboptimality.is_finite());
+    assert!(
+        last.max_staleness <= 1,
+        "async:1 reported staleness {} > window",
+        last.max_staleness
+    );
+    std::env::remove_var("DSBA_ASYNC_TRACE");
+}

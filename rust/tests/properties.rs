@@ -276,6 +276,59 @@ fn prop_message_decode_total_on_corrupt_frames() {
 }
 
 #[test]
+fn prop_watermark_codec_total_on_corrupt_frames() {
+    // The WATERMARK control frames (end-of-round progress + piggybacked
+    // STATS hops) cross the same untrusted sockets as the payload frames,
+    // so their codec owes the same contract: lossless canonical
+    // roundtrip, `Err` on every truncation, and any mutated frame that
+    // still decodes must re-encode to exactly the accepted bytes.
+    use dsba::comm::{Watermark, WatermarkKind};
+    prop_check("watermark codec total on corrupt frames", 40, |rng| {
+        let wm = Watermark {
+            node: rng.below(1 << 16) as u32,
+            round: rng.below(1 << 30) as u64,
+            kind: if rng.bernoulli(0.5) {
+                WatermarkKind::RoundComplete
+            } else {
+                WatermarkKind::Stats {
+                    hop: rng.below(64) as u32,
+                    payload: (0..rng.below(80)).map(|_| rng.below(256) as u8).collect(),
+                }
+            },
+        };
+        let enc = wm.encode();
+        let back = Watermark::decode(&enc)?;
+        if back != wm {
+            return Err("roundtrip mismatch".into());
+        }
+        if back.encode() != enc {
+            return Err("re-encode not bit-identical".into());
+        }
+        for k in 0..enc.len() {
+            if Watermark::decode(&enc[..k]).is_ok() {
+                return Err(format!("prefix {k}/{} bytes decoded Ok", enc.len()));
+            }
+        }
+        for _ in 0..25 {
+            let mut mutated = enc.clone();
+            let flips = 1 + rng.below(3);
+            for _ in 0..flips {
+                let pos = rng.below(mutated.len());
+                mutated[pos] ^= 1u8 << rng.below(8);
+            }
+            if let Ok(decoded) = Watermark::decode(&mutated) {
+                if decoded.encode() != mutated {
+                    return Err(format!(
+                        "accepted a non-canonical mutated watermark ({flips} bit flips)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_registered_problems_resolvent_monotone_and_saddle() {
     // Every problem in the registry — including ones future PRs add —
     // passes the resolvent-identity, monotonicity, and saddle-capability
@@ -491,6 +544,14 @@ fn prop_experiment_config_json_roundtrip() {
                     2 => CompressionSpec::TopK(1 + rng.below(100)),
                     3 => CompressionSpec::RandK(1 + rng.below(100)),
                     _ => CompressionSpec::Qsgd(1 + rng.below(200) as u32),
+                }
+            },
+            mode: {
+                use dsba::runtime::ModeSpec;
+                if rng.bernoulli(0.5) {
+                    ModeSpec::Sync
+                } else {
+                    ModeSpec::Async(rng.below(5) as u32)
                 }
             },
         };
