@@ -3,7 +3,7 @@
 CARGO ?= cargo
 
 .PHONY: verify build test fmt lint doc bench-engine bench-transport bench-saddle \
-        smoke artifacts clean
+        smoke fuzz-list artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -64,6 +64,23 @@ smoke: build
 	echo "--- smoke: logistic + mode async:1 (tcp) ---"
 	target/release/dsba run --problem logistic --dataset tiny --nodes 4 \
 	  --passes 1 --engine parallel --threads 2 --transport tcp --mode async:1
+	# fault injection + telemetry end-to-end: drop faults on the TCP
+	# link layer must not change the result, and the emitted JSONL
+	# stream must pass the schema check
+	echo "--- smoke: logistic + fault drop:0.05 + telemetry (tcp) ---"
+	mkdir -p results && rm -f results/smoke_telemetry.jsonl*
+	target/release/dsba run --problem logistic --dataset tiny --nodes 4 \
+	  --passes 1 --engine parallel --threads 2 --transport tcp \
+	  --fault drop:0.05,dup:0.05 --telemetry results/smoke_telemetry.jsonl
+	target/release/dsba telemetry-check results/smoke_telemetry.jsonl
+
+## list the cargo-fuzz targets and how to run them (fuzzing needs
+## network + nightly, so it is documented here, not CI-gated)
+fuzz-list:
+	@echo "fuzz targets (run from fuzz/, needs cargo-fuzz + nightly):"
+	@echo "  cargo +nightly fuzz run message_decode   corpus/message_decode"
+	@echo "  cargo +nightly fuzz run watermark_decode corpus/watermark_decode"
+	@echo "seed corpora: fuzz/corpus/<target>/; details: fuzz/README.md"
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)
 artifacts:

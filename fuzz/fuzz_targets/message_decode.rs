@@ -1,0 +1,23 @@
+//! Fuzz target for the MSG payload codec.
+//!
+//! `Message::decode` promises to be *total* on arbitrary bytes: every
+//! input either parses or returns `Err` — no panic, no unbounded
+//! allocation (length prefixes are capped by the remaining buffer
+//! before any `Vec::with_capacity`). Accepted frames are additionally
+//! canonical, so re-encoding must reproduce the input bit-for-bit —
+//! the same two laws the corrupt-frame property tests in
+//! `rust/tests/properties.rs` sample, explored exhaustively here.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(msg) = dsba::comm::Message::decode(data) {
+        assert_eq!(
+            msg.encode(),
+            data,
+            "accepted MSG frame is not canonical: decode(b).encode() != b"
+        );
+    }
+});

@@ -1,0 +1,20 @@
+//! Fuzz target for the WATERMARK control-frame codec.
+//!
+//! Same contract as `message_decode`: `Watermark::decode` is total on
+//! arbitrary bytes (stats payload length bounded by the remaining
+//! buffer before allocation, trailing bytes rejected) and accepted
+//! frames are canonical under re-encode.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(wm) = dsba::comm::Watermark::decode(data) {
+        assert_eq!(
+            wm.encode(),
+            data,
+            "accepted WATERMARK frame is not canonical: decode(b).encode() != b"
+        );
+    }
+});

@@ -5,8 +5,11 @@
 //! only time changes.
 //!
 //! A second sweep compares the two round clocks (`sync` vs `async:1`,
-//! `async:2`) at 8 and 16 nodes and writes the machine-readable snapshot
-//! `results/BENCH_engine.json` (wall-clock and rounds/sec per cell).
+//! `async:2`) at 8 and 16 nodes, and a third measures the overhead of
+//! the per-round telemetry stream (writer on vs off — the wait-free
+//! `emit` should make it disappear in the noise). Both sweeps land in
+//! the machine-readable snapshot `results/BENCH_engine.json`
+//! (wall-clock and rounds/sec per cell).
 //!
 //!     cargo bench --bench engine_scaling
 
@@ -175,9 +178,79 @@ fn mode_sweep() {
         ("dim", Json::Num(8_192.0)),
         ("threads", Json::Num(threads as f64)),
         ("sweep", Json::Arr(sweep)),
+        ("telemetry_overhead", Json::Arr(telemetry_overhead())),
     ]);
     std::fs::create_dir_all("results").expect("create results dir");
     std::fs::write("results/BENCH_engine.json", doc.to_string())
         .expect("write BENCH_engine.json");
     println!("\n(snapshot written to results/BENCH_engine.json)");
+}
+
+/// Telemetry-overhead cells: the same DSBA workload with the per-round
+/// JSONL stream off vs on. Workers hand rows to the writer thread via a
+/// wait-free bounded channel, so the on-cell should sit within noise of
+/// the off-cell — this snapshot is the receipt.
+fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
+    use dsba::comm::CompressionSpec;
+    use dsba::runtime::{LocalTransport, ModeSpec};
+    use dsba::util::json::Json;
+
+    let (nodes, threads, rounds) = (8usize, 4usize, 40usize);
+    let topo = Topology::erdos_renyi(nodes, 0.4, 42);
+    let ds = SyntheticSpec::rcv1_like()
+        .with_samples(40 * nodes)
+        .with_dim(8_192)
+        .with_regression(true)
+        .generate(3);
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let problem: Arc<dyn Problem> =
+        Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 2), 0.01));
+    let params = AlgoParams::new(0.5, problem.dim(), 7);
+
+    let run = |telemetry: &TelemetrySpec| {
+        let mut eng = ParallelEngine::new_faulted(
+            AlgorithmKind::Dsba,
+            problem.clone(),
+            &mix,
+            &topo,
+            &params,
+            threads,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Sync,
+            &FaultSpec::none(),
+            telemetry,
+        )
+        .expect("bench engine builds");
+        time_rounds(&mut eng, &topo, rounds)
+    };
+    std::fs::create_dir_all("results").expect("create results dir");
+    let scratch = "results/bench_telemetry_scratch.jsonl";
+    let off = run(&TelemetrySpec::disabled());
+    let on = run(&TelemetrySpec::to_path(scratch));
+    let _ = std::fs::remove_file(scratch);
+
+    header(&format!(
+        "telemetry overhead @ N = {nodes} (dsba, d = 8192, x{threads} threads, sync)"
+    ));
+    println!("{:>10} {:>12} {:>12}", "telemetry", "per-round", "overhead");
+    println!("{:>10} {:>9.3} ms {:>12}", "off", off * 1e3, "—");
+    println!(
+        "{:>10} {:>9.3} ms {:>11.1}%",
+        "on",
+        on * 1e3,
+        (on / off - 1.0) * 100.0
+    );
+    [("off", off), ("on", on)]
+        .into_iter()
+        .map(|(label, secs)| {
+            Json::from_pairs(vec![
+                ("telemetry", Json::Str(label.into())),
+                ("nodes", Json::Num(nodes as f64)),
+                ("rounds", Json::Num(rounds as f64)),
+                ("per_round_secs", Json::Num(secs)),
+                ("overhead_pct", Json::Num((secs / off - 1.0) * 100.0)),
+            ])
+        })
+        .collect()
 }

@@ -4,10 +4,11 @@
 //! Subcommands:
 //!
 //! ```text
-//! run       --config <file.json> | inline flags     run one experiment
-//! figure    <1|2|3>                                  regenerate a figure
-//! info      --dataset <name> --nodes <n> ...         problem/method/dataset info
-//! artifacts                                          check XLA artifacts
+//! run             --config <file.json> | inline flags   run one experiment
+//! figure          <1|2|3>                                regenerate a figure
+//! info            --dataset <name> --nodes <n> ...       problem/method/dataset info
+//! artifacts                                              check XLA artifacts
+//! telemetry-check <run.jsonl>                            validate a telemetry stream
 //! help
 //! ```
 //!
@@ -44,6 +45,7 @@ fn dispatch(args: &[String]) -> i32 {
             0
         }
         Some("artifacts") => cmd_artifacts(),
+        Some("telemetry-check") => cmd_telemetry_check(&args[1..]),
         Some("help") | None => {
             print_help();
             0
@@ -95,11 +97,24 @@ USAGE:
             default hosts all nodes on loopback. --hosted \"0-4\" +
             --peers \"5=host:port,...\" splits one run across engine
             processes, each reporting metrics for its own nodes)
+           [--fault drop:P,dup:P,delay:MS[@NODE],kill:NODE@ROUND]
+           (deterministic fault injection; parallel engine only.
+            drop/dup perturb MSG frames on the wire and need
+            --transport tcp, whose link layer recovers them — runs
+            stay bit-identical to fault-free. delay stalls a node
+            per round; kill fails the run fast with a named error)
+           [--telemetry FILE.jsonl] [--telemetry-max-bytes N]
+           [--telemetry-keep N]
+           (per-round per-node JSONL telemetry: residual, DOUBLEs,
+            bytes-on-wire, staleness, stalls, link fault counters.
+            Rotates at max-bytes, keeping N rotated files)
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
   dsba info [--dataset NAME] [--nodes N]   registry capability table, methods,
                           dataset stats (saddle / l1 / resolvent per problem)
   dsba problems           canonical problem names, one per line (for scripting)
   dsba artifacts          verify the XLA artifact directory
+  dsba telemetry-check <run.jsonl>   validate every row of a telemetry stream
+                          against the versioned schema (exit 0 = well-formed)
   dsba help",
         problems = problem_list(),
         methods = method_list(),
@@ -226,6 +241,18 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     }
+    if let Some(v) = f.get("fault") {
+        match crate::runtime::FaultSpec::parse(v) {
+            Ok(s) => cfg.engine.fault = s,
+            Err(e) => {
+                eprintln!("bad --fault: {e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = f.get("telemetry") {
+        cfg.engine.telemetry = crate::telemetry::TelemetrySpec::to_path(v);
+    }
     macro_rules! num {
         ($key:expr, $field:expr, $ty:ty) => {
             if let Some(v) = f.get($key) {
@@ -247,6 +274,8 @@ fn cmd_run(args: &[String]) -> i32 {
     num!("seed", cfg.seed, u64);
     num!("lambda", cfg.lambda, f64);
     num!("threads", cfg.engine.threads, usize);
+    num!("telemetry-max-bytes", cfg.engine.telemetry.max_bytes, u64);
+    num!("telemetry-keep", cfg.engine.telemetry.keep, usize);
 
     println!("config: {}", cfg.to_json());
     let mut exp = match cfg.build() {
@@ -413,6 +442,38 @@ fn cmd_info(args: &[String]) -> i32 {
     }
 }
 
+/// `dsba telemetry-check <run.jsonl>` — validate every line of a
+/// telemetry stream against the versioned row schema.  Exit 0 means the
+/// file is well-formed JSONL and every row carries every schema field
+/// with the right type; the row count is printed so scripts can assert
+/// completeness (`rounds * nodes` rows for a fault-free run).
+fn cmd_telemetry_check(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: dsba telemetry-check <run.jsonl>");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("telemetry-check: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    match crate::telemetry::validate_jsonl(&text) {
+        Ok(rows) => {
+            println!(
+                "telemetry OK: {rows} row(s), schema v{}",
+                crate::telemetry::TELEMETRY_SCHEMA_VERSION
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("telemetry-check: {path}: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_artifacts() -> i32 {
     match crate::runtime::XlaRuntime::load_default() {
         Ok(rt) => {
@@ -456,6 +517,54 @@ mod tests {
     #[test]
     fn unknown_subcommand_fails() {
         assert_eq!(dispatch(&["bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn telemetry_check_validates_files() {
+        // no path → usage error
+        assert_eq!(dispatch(&["telemetry-check".to_string()]), 2);
+        // missing file → runtime error
+        assert_eq!(
+            dispatch(&[
+                "telemetry-check".to_string(),
+                "/nonexistent/definitely-not-here.jsonl".to_string()
+            ]),
+            1
+        );
+        // well-formed and corrupt streams round through validate_jsonl
+        let dir = std::env::temp_dir().join(format!("dsba_cli_tc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let row = crate::telemetry::TelemetryRow {
+            round: 0,
+            node: 1,
+            residual: 0.5,
+            ..crate::telemetry::TelemetryRow::default()
+        };
+        let good = dir.join("good.jsonl");
+        std::fs::write(&good, format!("{}\n", row.to_json_line())).unwrap();
+        assert_eq!(
+            dispatch(&["telemetry-check".to_string(), good.display().to_string()]),
+            0
+        );
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(&bad, "{\"round\":0}\n").unwrap();
+        assert_eq!(
+            dispatch(&["telemetry-check".to_string(), bad.display().to_string()]),
+            1
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_flags_accept_fault_and_telemetry() {
+        let args: Vec<String> = ["--fault", "drop:0.05,dup:0.1", "--telemetry", "t.jsonl"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = flags(&args);
+        assert_eq!(f.get("fault").unwrap(), "drop:0.05,dup:0.1");
+        assert_eq!(f.get("telemetry").unwrap(), "t.jsonl");
+        assert!(crate::runtime::FaultSpec::parse(f.get("fault").unwrap()).is_ok());
     }
 
     #[test]

@@ -136,6 +136,42 @@ impl Watermark {
     }
 }
 
+/// Link-layer negative acknowledgement: the receiver on one edge saw a
+/// gap in the sender's link sequence numbers and asks for the half-open
+/// range `[from_seq, to_seq)` to be retransmitted (see the reliable-link
+/// protocol in `runtime::transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Nack {
+    /// First missing link sequence number.
+    pub from_seq: u64,
+    /// One past the last missing link sequence number.
+    pub to_seq: u64,
+}
+
+impl Nack {
+    /// Serialize to the 16-byte wire layout `from_seq u64 | to_seq u64`.
+    pub fn encode(&self) -> [u8; 16] {
+        let mut b = [0u8; 16];
+        b[0..8].copy_from_slice(&self.from_seq.to_le_bytes());
+        b[8..16].copy_from_slice(&self.to_seq.to_le_bytes());
+        b
+    }
+
+    /// Bit-exact inverse of [`Nack::encode`]: exactly 16 bytes and a
+    /// non-empty range, so accepted frames are canonical.
+    pub fn decode(buf: &[u8]) -> Result<Nack, String> {
+        if buf.len() != 16 {
+            return Err(format!("nack frame is {} bytes (want 16)", buf.len()));
+        }
+        let from_seq = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let to_seq = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        if from_seq >= to_seq {
+            return Err(format!("empty nack range [{from_seq}, {to_seq})"));
+        }
+        Ok(Nack { from_seq, to_seq })
+    }
+}
+
 impl Message {
     /// Wrap an owned vector as a dense payload.
     pub fn dense(v: Vec<f64>) -> Message {
@@ -603,6 +639,26 @@ mod tests {
         let len_at = enc.len() - 4 - 8;
         enc[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Watermark::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn nack_roundtrip_and_rejections() {
+        let n = Nack { from_seq: 3, to_seq: 9 };
+        assert_eq!(Nack::decode(&n.encode()).unwrap(), n);
+        let max = Nack { from_seq: 0, to_seq: u64::MAX };
+        assert_eq!(Nack::decode(&max.encode()).unwrap(), max);
+        // every truncation errs
+        let enc = n.encode();
+        for k in 0..enc.len() {
+            assert!(Nack::decode(&enc[..k]).is_err(), "prefix {k} decoded Ok");
+        }
+        // trailing byte
+        let mut long = enc.to_vec();
+        long.push(0);
+        assert!(Nack::decode(&long).is_err());
+        // empty and inverted ranges are rejected
+        assert!(Nack::decode(&Nack { from_seq: 5, to_seq: 5 }.encode()).is_err());
+        assert!(Nack::decode(&Nack { from_seq: 9, to_seq: 2 }.encode()).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub use compressor::{
     CompressedVec, CompressionSpec, Compressor, ErrorFeedback, Identity, Qsgd, RandomK,
     TopK,
 };
-pub use message::{Message, Outgoing, Watermark, WatermarkKind};
+pub use message::{Message, Nack, Outgoing, Watermark, WatermarkKind};
 // the bounded wire reader is shared with the metrics STATS-payload codec
 // so every frame family gets the same corrupt-frame hardening
 pub(crate) use message::Reader;

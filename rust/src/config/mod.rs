@@ -87,7 +87,7 @@ impl ExperimentConfig {
     /// [`ExperimentConfig::to_json`] and the legacy flat keys
     /// (`"engine"` as a bare string plus top-level `threads` /
     /// `transport` / `listen` / `peers` / `hosted` / `compress` /
-    /// `mode`).
+    /// `mode` / `fault` / `telemetry`).
     pub fn from_json(src: &str) -> Result<ExperimentConfig, String> {
         let v = parse(src)?;
         let mut c = ExperimentConfig::default();
@@ -168,6 +168,12 @@ impl ExperimentConfig {
         if let Some(s) = v.get("mode").and_then(Json::as_str) {
             c.engine.mode = crate::runtime::ModeSpec::parse(s)
                 .ok_or(format!("bad mode {s} (sync|async:TAU)"))?;
+        }
+        if let Some(s) = v.get("fault").and_then(Json::as_str) {
+            c.engine.fault = crate::runtime::FaultSpec::parse(s)?;
+        }
+        if let Some(t) = v.get("telemetry") {
+            c.engine.telemetry = crate::telemetry::TelemetrySpec::from_json(t)?;
         }
         Ok(c)
     }
@@ -379,6 +385,13 @@ mod tests {
                 },
                 compress: crate::comm::CompressionSpec::RandK(5),
                 mode: crate::runtime::ModeSpec::Async(3),
+                fault: crate::runtime::FaultSpec::parse("drop:0.05,dup:0.05,kill:2@9")
+                    .unwrap(),
+                telemetry: crate::telemetry::TelemetrySpec {
+                    path: "results/run.jsonl".into(),
+                    max_bytes: 1 << 20,
+                    keep: 2,
+                },
             },
             ..Default::default()
         };
@@ -391,7 +404,8 @@ mod tests {
         let c = ExperimentConfig::from_json(
             "{\"engine\":\"parallel\",\"threads\":3,\"transport\":\"tcp\",\
              \"listen\":\"127.0.0.1:9100\",\"peers\":\"5=h:1\",\"hosted\":\"0-4\",\
-             \"compress\":\"qsgd:32\",\"mode\":\"async:2\"}",
+             \"compress\":\"qsgd:32\",\"mode\":\"async:2\",\
+             \"fault\":\"drop:0.1\",\"telemetry\":\"run.jsonl\"}",
         )
         .unwrap();
         assert_eq!(c.engine.kind, EngineKind::Parallel);
@@ -402,7 +416,10 @@ mod tests {
         assert_eq!(c.engine.tcp.hosted, "0-4");
         assert_eq!(c.engine.compress, crate::comm::CompressionSpec::Qsgd(32));
         assert_eq!(c.engine.mode, crate::runtime::ModeSpec::Async(2));
+        assert_eq!(c.engine.fault, crate::runtime::FaultSpec::parse("drop:0.1").unwrap());
+        assert_eq!(c.engine.telemetry.path, "run.jsonl");
         assert!(ExperimentConfig::from_json("{\"compress\":\"zip\"}").is_err());
         assert!(ExperimentConfig::from_json("{\"mode\":\"warp\"}").is_err());
+        assert!(ExperimentConfig::from_json("{\"fault\":\"warp:1\"}").is_err());
     }
 }

@@ -15,8 +15,9 @@ use crate::metrics::{auc_score, suboptimality, GlobalStats, MetricsRow};
 use crate::operators::{Problem, SaddleStat, SaddleStructure};
 use crate::runtime::transport::{tcp_from_spec, LocalTransport};
 use crate::runtime::{
-    EngineKind, EngineSpec, ModeSpec, ParallelEngine, TcpSpec, TransportKind,
+    EngineKind, EngineSpec, FaultSpec, ModeSpec, ParallelEngine, TcpSpec, TransportKind,
 };
+use crate::telemetry::TelemetrySpec;
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
@@ -144,6 +145,22 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Fault-injection plan for the parallel engine (`--fault`): link
+    /// drop/dup faults additionally require the TCP transport's reliable
+    /// link layer, and the sequential oracle — the fault-free reference
+    /// — rejects any plan outright in `try_run`.
+    pub fn fault(mut self, fault: FaultSpec) -> Self {
+        self.exp.engine.fault = fault;
+        self
+    }
+
+    /// Per-round JSONL telemetry stream for the parallel engine
+    /// (`--telemetry`); the sequential oracle rejects it in `try_run`.
+    pub fn telemetry(mut self, telemetry: TelemetrySpec) -> Self {
+        self.exp.engine.telemetry = telemetry;
+        self
+    }
+
     pub fn build(self) -> Experiment {
         self.exp
     }
@@ -228,6 +245,27 @@ impl Experiment {
                 self.engine.mode.name()
             ));
         }
+        if self.engine.kind == EngineKind::Sequential && !self.engine.fault.is_none() {
+            return Err(format!(
+                "--fault {} requires the parallel engine; the sequential \
+                 oracle is the fault-free reference",
+                self.engine.fault.name()
+            ));
+        }
+        if self.engine.kind == EngineKind::Sequential && self.engine.telemetry.enabled() {
+            return Err(
+                "--telemetry requires the parallel engine; the sequential \
+                 oracle emits no per-round telemetry"
+                    .to_string(),
+            );
+        }
+        if self.engine.fault.link_faults() && self.engine.transport != TransportKind::Tcp {
+            return Err(format!(
+                "--fault {} injects link faults (drop/dup), which need the \
+                 TCP transport's reliable link layer; add --transport tcp",
+                self.engine.fault.name()
+            ));
+        }
         self.ensure_z_star();
         let z_star = self.z_star.clone().unwrap();
         // set when a TCP transport hosts only part of the node set: the
@@ -242,7 +280,7 @@ impl Experiment {
                 &self.params,
             ),
             EngineKind::Parallel => match self.engine.transport {
-                TransportKind::Local => Box::new(ParallelEngine::new_full_mode(
+                TransportKind::Local => Box::new(ParallelEngine::new_faulted(
                     self.kind,
                     self.problem.clone(),
                     &self.mix,
@@ -252,7 +290,9 @@ impl Experiment {
                     Box::new(LocalTransport::new(self.topo.n)),
                     &self.engine.compress,
                     self.engine.mode,
-                )),
+                    &self.engine.fault,
+                    &self.engine.telemetry,
+                )?),
                 TransportKind::Tcp => {
                     use crate::runtime::Transport;
                     let transport = tcp_from_spec(
@@ -274,7 +314,7 @@ impl Experiment {
                             self.topo.n
                         ));
                     }
-                    let eng = ParallelEngine::new_full_mode(
+                    let eng = ParallelEngine::new_faulted(
                         self.kind,
                         self.problem.clone(),
                         &self.mix,
@@ -284,7 +324,9 @@ impl Experiment {
                         Box::new(transport),
                         &self.engine.compress,
                         self.engine.mode,
-                    );
+                        &self.engine.fault,
+                        &self.engine.telemetry,
+                    )?;
                     if eng.hosted().len() < self.topo.n {
                         hosted_rows = Some(eng.hosted().to_vec());
                     }
@@ -298,28 +340,47 @@ impl Experiment {
         let timer = Timer::start();
         let mut rows = Vec::new();
         let hosted = hosted_rows;
-        rows.push(self.sample(alg.as_mut(), &net, &z_star, timer.secs(), hosted.as_deref()));
-        let mut round = 0;
-        // split-hosted processes must run the exact same number of rounds
-        // (they are socket-lockstepped), so the share-local passes()
-        // early-exit — which can diverge across processes for
-        // inner-solver methods — is disabled; total_rounds is computed
-        // identically from the shared config on every process. The same
-        // lockstep makes the per-sample stats exchange safe: every
-        // process samples at identical rounds.
-        let split = hosted.is_some();
-        while round < total_rounds && (split || alg.passes() < self.passes_target) {
-            alg.step(&mut net);
-            round += 1;
-            if round % stride == 0 || round == total_rounds {
-                rows.push(self.sample(
-                    alg.as_mut(),
-                    &net,
-                    &z_star,
-                    timer.secs(),
-                    hosted.as_deref(),
-                ));
+        // the stepping loop runs under catch_unwind so engine poisoning —
+        // a transport failure or an injected kill fault surfacing through
+        // the launcher — comes back as a named Err, not a panic
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rows.push(self.sample(
+                alg.as_mut(),
+                &net,
+                &z_star,
+                timer.secs(),
+                hosted.as_deref(),
+            ));
+            let mut round = 0;
+            // split-hosted processes must run the exact same number of
+            // rounds (they are socket-lockstepped), so the share-local
+            // passes() early-exit — which can diverge across processes
+            // for inner-solver methods — is disabled; total_rounds is
+            // computed identically from the shared config on every
+            // process. The same lockstep makes the per-sample stats
+            // exchange safe: every process samples at identical rounds.
+            let split = hosted.is_some();
+            while round < total_rounds && (split || alg.passes() < self.passes_target) {
+                alg.step(&mut net);
+                round += 1;
+                if round % stride == 0 || round == total_rounds {
+                    rows.push(self.sample(
+                        alg.as_mut(),
+                        &net,
+                        &z_star,
+                        timer.secs(),
+                        hosted.as_deref(),
+                    ));
+                }
             }
+        }));
+        if let Err(payload) = stepped {
+            let why = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "a worker panicked".to_string());
+            return Err(format!("run failed: {why}"));
         }
         Ok(Trace { method: self.kind, rows, z_star })
     }
@@ -734,6 +795,53 @@ mod tests {
         .build();
         let err = bad.try_run().unwrap_err();
         assert!(err.contains("parallel"), "{err}");
+    }
+
+    #[test]
+    fn fault_and_telemetry_guardrails() {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        let topo = Topology::erdos_renyi(4, 0.6, 5);
+        let mk = |f: &str, kind: EngineKind, transport: TransportKind| {
+            let mut exp = Experiment::builder(
+                RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+                topo.clone(),
+                AlgorithmKind::Dsba,
+            )
+            .engine_kind(kind, 2)
+            .transport(transport)
+            .fault(FaultSpec::parse(f).unwrap())
+            .build();
+            exp.try_run().err()
+        };
+        // the sequential oracle is the fault-free reference
+        let e = mk("drop:0.1", EngineKind::Sequential, TransportKind::Local).unwrap();
+        assert!(e.contains("parallel"), "{e}");
+        // link faults need the TCP link layer
+        let e = mk("drop:0.1", EngineKind::Parallel, TransportKind::Local).unwrap();
+        assert!(e.contains("tcp"), "{e}");
+        // telemetry on the sequential oracle is rejected too
+        let mut exp = Experiment::builder(
+            RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+            topo.clone(),
+            AlgorithmKind::Dsba,
+        )
+        .telemetry(TelemetrySpec::to_path("unused.jsonl"))
+        .build();
+        let e = exp.try_run().unwrap_err();
+        assert!(e.contains("parallel"), "{e}");
+        // a kill fault comes back as a named Err from try_run, not a panic
+        let mut exp = Experiment::builder(
+            RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+            topo,
+            AlgorithmKind::Dsba,
+        )
+        .passes(4.0)
+        .engine_kind(EngineKind::Parallel, 2)
+        .fault(FaultSpec::parse("kill:1@2").unwrap())
+        .build();
+        let e = exp.try_run().unwrap_err();
+        assert!(e.contains("killed by fault injection"), "{e}");
+        assert!(e.contains("node 1") && e.contains("round 2"), "{e}");
     }
 
     #[test]

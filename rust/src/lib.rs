@@ -54,6 +54,7 @@ pub mod metrics;
 pub mod config;
 pub mod runtime;
 pub mod solvers;
+pub mod telemetry;
 pub mod bench_harness;
 pub mod cli;
 pub mod testing;
@@ -73,8 +74,9 @@ pub mod prelude {
         ProblemSpec, RidgeProblem, RobustLsProblem, SaddleStat, SaddleStructure,
     };
     pub use crate::runtime::{
-        EngineKind, EngineSpec, ModeSpec, ParallelEngine, ProgressProbe, TcpSpec,
-        TcpTransport, TransportKind,
+        EngineKind, EngineSpec, FaultSpec, ModeSpec, ParallelEngine, ProgressProbe,
+        TcpSpec, TcpTransport, TransportKind,
     };
+    pub use crate::telemetry::TelemetrySpec;
     pub use crate::util::rng::Rng;
 }

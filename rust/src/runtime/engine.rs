@@ -73,6 +73,7 @@
 //! Single-process runs — both transports' default — host everything and
 //! are bit-for-bit complete.
 
+use super::fault::FaultSpec;
 use crate::algorithms::{
     build_node_program, AlgoParams, Algorithm, AlgorithmKind, NodeProgram, NodeState,
 };
@@ -80,7 +81,8 @@ use crate::comm::{CompressedVec, CompressionSpec, Compressor, ErrorFeedback, Mes
 use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{decode_stat_rows, encode_stat_rows, GlobalStats, NodeStatRow};
 use crate::operators::Problem;
-use crate::runtime::transport::{LocalTransport, NodePort, Transport};
+use crate::runtime::transport::{LinkStats, LocalTransport, NodePort, Transport};
+use crate::telemetry::{TelemetryRow, TelemetrySink, TelemetrySpec, TelemetryWriter};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
@@ -178,6 +180,8 @@ struct HostedNode {
     /// wire compression at the transport boundary (`None` = uncompressed,
     /// the `--compress none` bypass)
     comp: Option<CompState>,
+    /// per-node telemetry accumulator (`None` = telemetry off)
+    telem: Option<NodeTelemetry>,
 }
 
 /// Per-hosted-node compression state: the sender-side error feedback for
@@ -245,6 +249,158 @@ fn cost_kind_of(msg: &Message) -> CostKind {
         Message::Sparse(d) => CostKind::Sparse(d.vec.nnz(), d.tail.len()),
         Message::Comp(c) => CostKind::Comp(c.nnz(), c.bytes),
     }
+}
+
+/// DOUBLEs moved and serialized bytes of one message, priced off the
+/// wire form like the cost replay: dense payloads move `len` doubles,
+/// sparse relay deltas `nnz + tail` (4-byte indices alongside the
+/// values), compressed frames their quantized support with the codec's
+/// declared byte size.
+fn doubles_and_bytes(kind: CostKind) -> (f64, u64) {
+    match kind {
+        CostKind::Dense(len) => (len as f64, 8 * len as u64),
+        CostKind::Sparse(nnz, tail) => ((nnz + tail) as f64, (12 * nnz + 8 * tail) as u64),
+        CostKind::Comp(nnz, bytes) => (nnz as f64, bytes),
+    }
+}
+
+/// Per-node telemetry accumulator: counts one round's traffic in the
+/// worker hot path and flushes one [`TelemetryRow`] right after the
+/// node's local step. All counters are per-round; the link-layer fault
+/// counters are the port's *cumulative* totals snapshot at flush time,
+/// and `stalls` is the engine-wide stalled-scan total.
+struct NodeTelemetry {
+    sink: TelemetrySink,
+    /// previous round's iterate — the row's `residual` is the l2 step
+    /// `||x_t - x_{t-1}||`
+    prev: Vec<f64>,
+    /// start of this node's current round window
+    since: std::time::Instant,
+    doubles_sent: f64,
+    doubles_recv: f64,
+    bytes_on_wire: u64,
+    queue_depth: u64,
+    staleness: u64,
+}
+
+impl NodeTelemetry {
+    fn new(sink: TelemetrySink, z0: &[f64]) -> NodeTelemetry {
+        NodeTelemetry {
+            sink,
+            prev: z0.to_vec(),
+            since: std::time::Instant::now(),
+            doubles_sent: 0.0,
+            doubles_recv: 0.0,
+            bytes_on_wire: 0,
+            queue_depth: 0,
+            staleness: 0,
+        }
+    }
+
+    fn on_send(&mut self, kind: CostKind) {
+        let (d, b) = doubles_and_bytes(kind);
+        self.doubles_sent += d;
+        self.bytes_on_wire += b;
+    }
+
+    fn on_recv(&mut self, kind: CostKind) {
+        let (d, b) = doubles_and_bytes(kind);
+        self.doubles_recv += d;
+        self.bytes_on_wire += b;
+        self.queue_depth += 1;
+    }
+
+    /// Emit the row for round `t` and reset the per-round counters.
+    fn flush_row(&mut self, t: u64, node: usize, iter: &[f64], stalls: u64, link: LinkStats) {
+        let residual = iter
+            .iter()
+            .zip(self.prev.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        self.prev.copy_from_slice(iter);
+        self.sink.emit(TelemetryRow {
+            round: t,
+            node: node as u32,
+            residual,
+            doubles_sent: self.doubles_sent,
+            doubles_recv: self.doubles_recv,
+            bytes_on_wire: self.bytes_on_wire,
+            wall_micros: self.since.elapsed().as_micros() as u64,
+            queue_depth: self.queue_depth,
+            staleness: self.staleness,
+            stalls,
+            retransmits: link.retransmits,
+            dedups: link.dedups,
+            drops_injected: link.drops_injected,
+            dups_injected: link.dups_injected,
+        });
+        self.since = std::time::Instant::now();
+        self.doubles_sent = 0.0;
+        self.doubles_recv = 0.0;
+        self.bytes_on_wire = 0;
+        self.queue_depth = 0;
+        self.staleness = 0;
+    }
+}
+
+/// The per-worker slice of a [`FaultSpec`]: the delay and kill clauses
+/// workers act on directly. The drop/dup link faults live in the
+/// transport's link layer ([`Transport::configure_faults`]), not here.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerFaults {
+    /// `(node, ms)` — a `None` node delays every hosted node
+    delay: Option<(Option<usize>, u64)>,
+    /// fail node `.0` at the start of round `.1`
+    kill: Option<(usize, u64)>,
+}
+
+impl WorkerFaults {
+    /// Merge the spec's delay/kill clauses with the deprecated
+    /// `DSBA_INJECT_DELAY_MS` env alias (the spec wins when both name a
+    /// delay).
+    fn from_spec(fault: &FaultSpec) -> WorkerFaults {
+        let delay = if fault.delay_ms > 0 {
+            Some((fault.delay_node.map(|n| n as usize), fault.delay_ms))
+        } else {
+            inject_delay().map(|(node, ms)| (Some(node), ms))
+        };
+        WorkerFaults { delay, kill: fault.kill.map(|(node, round)| (node as usize, round)) }
+    }
+
+    fn delay_ms_for(&self, node: usize) -> Option<u64> {
+        match self.delay {
+            Some((None, ms)) => Some(ms),
+            Some((Some(n), ms)) if n == node => Some(ms),
+            _ => None,
+        }
+    }
+}
+
+/// `kill:NODE@ROUND` trips here, at the start of the node's round
+/// emission: a fail-fast transport failure naming the node, the round,
+/// and the last watermark seen from each in-neighbor.
+fn check_kill(hn: &mut HostedNode, t: u64, faults: &WorkerFaults, shared: &Shared) {
+    let Some((node, round)) = faults.kill else { return };
+    if hn.idx != node || t != round {
+        return;
+    }
+    let wms = hn.port.poll_watermarks().unwrap_or_default();
+    let seen = if wms.is_empty() {
+        "none".to_string()
+    } else {
+        wms.iter()
+            .map(|&(m, w)| match w {
+                0 => format!("peer {m}: none"),
+                w => format!("peer {m}: round {}", w - 1),
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    shared.transport_failure(format!(
+        "node {node} killed by fault injection at round {round} \
+         (last-seen watermarks: {seen})"
+    ));
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -315,10 +471,13 @@ impl Shared {
     }
 }
 
-/// Test-only straggler injection: `DSBA_INJECT_DELAY_MS=<node>:<ms>`
+/// Straggler-injection env alias: `DSBA_INJECT_DELAY_MS=<node>:<ms>`
 /// sleeps the named node for `ms` milliseconds at the start of every
-/// round emission, on both clocks. Invalid specs are ignored with a
-/// warning rather than failing a run.
+/// round emission, on both clocks. Deprecated in favor of the
+/// `--fault delay:MS@NODE` clause ([`FaultSpec`]), which also takes
+/// precedence when both are set; the alias warns once per process but
+/// keeps working. Invalid specs are ignored with a warning rather than
+/// failing a run.
 fn parse_inject_delay(raw: Option<&str>) -> Option<(usize, u64)> {
     let (node, ms) = raw?.trim().split_once(':')?;
     Some((node.trim().parse().ok()?, ms.trim().parse().ok()?))
@@ -327,10 +486,13 @@ fn parse_inject_delay(raw: Option<&str>) -> Option<(usize, u64)> {
 fn inject_delay() -> Option<(usize, u64)> {
     let var = std::env::var("DSBA_INJECT_DELAY_MS").ok();
     let parsed = parse_inject_delay(var.as_deref());
-    if var.is_some() && parsed.is_none() {
+    if var.is_some() {
         static WARNED: std::sync::Once = std::sync::Once::new();
-        WARNED.call_once(|| {
-            eprintln!("warning: DSBA_INJECT_DELAY_MS must be <node>:<ms>; ignoring")
+        WARNED.call_once(|| match parsed {
+            None => eprintln!("warning: DSBA_INJECT_DELAY_MS must be <node>:<ms>; ignoring"),
+            Some(_) => eprintln!(
+                "warning: DSBA_INJECT_DELAY_MS is deprecated; use --fault delay:MS@NODE"
+            ),
         });
     }
     parsed
@@ -371,13 +533,11 @@ fn emit_round(hn: &mut HostedNode, t: usize, shared: &Shared) {
             (Message::Dense(v), Some(cs)) => cs.outbound(&v),
             (m, _) => m,
         };
-        batch.push(CostEvent {
-            t: t as u64,
-            from: hn.idx,
-            seq: seq as u32,
-            to: out.to,
-            kind: cost_kind_of(&msg),
-        });
+        let kind = cost_kind_of(&msg);
+        if let Some(tm) = hn.telem.as_mut() {
+            tm.on_send(kind);
+        }
+        batch.push(CostEvent { t: t as u64, from: hn.idx, seq: seq as u32, to: out.to, kind });
         shared.sent.fetch_add(1, Ordering::Relaxed);
         if let Err(e) = hn.port.send(t, out.to, seq as u32, msg) {
             shared.transport_failure(e);
@@ -398,7 +558,7 @@ fn round_clock_loop(
     shared: Arc<Shared>,
     barrier: Arc<Barrier>,
     stop: Arc<AtomicBool>,
-    delay: Option<(usize, u64)>,
+    faults: WorkerFaults,
 ) {
     let mut t = 0usize;
     loop {
@@ -453,10 +613,9 @@ fn round_clock_loop(
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_a = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 for hn in nodes.iter_mut() {
-                    if let Some((node, ms)) = delay {
-                        if hn.idx == node {
-                            std::thread::sleep(std::time::Duration::from_millis(ms));
-                        }
+                    check_kill(hn, t as u64, &faults, &shared);
+                    if let Some(ms) = faults.delay_ms_for(hn.idx) {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
                     }
                     emit_round(hn, t, &shared);
                 }
@@ -478,6 +637,10 @@ fn round_clock_loop(
                     msgs.sort_by_key(|&(from, seq, _)| (from, seq));
                     for (from, seq, msg) in msgs {
                         shared.delivered.fetch_add(1, Ordering::Relaxed);
+                        let kind = cost_kind_of(&msg);
+                        if let Some(tm) = hn.telem.as_mut() {
+                            tm.on_recv(kind);
+                        }
                         // inflow from a remote engine: the sender's side
                         // can't charge it into OUR network, so log the
                         // receive-side event — merged into the same
@@ -486,13 +649,7 @@ fn round_clock_loop(
                         // are charged on the wire form, before it is
                         // reconstructed below
                         if !shared.hosted_mask[from] {
-                            recv_batch.push(CostEvent {
-                                t: t as u64,
-                                from,
-                                seq,
-                                to: hn.idx,
-                                kind: cost_kind_of(&msg),
-                            });
+                            recv_batch.push(CostEvent { t: t as u64, from, seq, to: hn.idx, kind });
                         }
                         // COMP frames update this node's per-sender x_hat
                         // replica; the node state sees the reconstructed
@@ -517,6 +674,11 @@ fn round_clock_loop(
                         .copy_from_slice(hn.state.iterate());
                     shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
                     shared.completed[hn.idx].store(t as u64 + 1, Ordering::SeqCst);
+                    if let Some(tm) = hn.telem.as_mut() {
+                        let stalls = shared.stalls.load(Ordering::Relaxed);
+                        let link = hn.port.link_stats();
+                        tm.flush_row(t as u64, hn.idx, hn.state.iterate(), stalls, link);
+                    }
                 }
                 if !recv_batch.is_empty() {
                     shared.costs.lock().unwrap().extend(recv_batch);
@@ -622,6 +784,9 @@ fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shar
     };
     for (from, rt, seq, msg) in drained {
         shared.delivered.fetch_add(1, Ordering::Relaxed);
+        if let Some(tm) = hn.telem.as_mut() {
+            tm.on_recv(cost_kind_of(&msg));
+        }
         ctl.pending.entry(from).or_default().entry(rt).or_default().push((seq, msg));
     }
     for k in 0..ctl.in_nbrs.len() {
@@ -666,12 +831,18 @@ fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shar
                     if Some((rt, seq)) == comp_last {
                         hn.state.on_receive(m, Message::Dense(Arc::new(v)));
                         shared.max_staleness.fetch_max(r - rt, Ordering::Relaxed);
+                        if let Some(tm) = hn.telem.as_mut() {
+                            tm.staleness = tm.staleness.max(r - rt);
+                        }
                     }
                 }
                 Message::Dense(_) => {
                     if Some((rt, seq)) == dense_last {
                         hn.state.on_receive(m, msg);
                         shared.max_staleness.fetch_max(r - rt, Ordering::Relaxed);
+                        if let Some(tm) = hn.telem.as_mut() {
+                            tm.staleness = tm.staleness.max(r - rt);
+                        }
                     }
                 }
             }
@@ -681,6 +852,11 @@ fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shar
     shared.slots[hn.idx].lock().unwrap().copy_from_slice(hn.state.iterate());
     shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
     shared.completed[hn.idx].store(r + 1, Ordering::SeqCst);
+    if let Some(tm) = hn.telem.as_mut() {
+        let stalls = shared.stalls.load(Ordering::Relaxed);
+        let link = hn.port.link_stats();
+        tm.flush_row(r, hn.idx, hn.state.iterate(), stalls, link);
+    }
     ctl.r += 1;
     ctl.emitted = false;
 }
@@ -697,7 +873,7 @@ fn async_clock_loop(
     stop: Arc<AtomicBool>,
     tau: u64,
     trace: bool,
-    delay: Option<(usize, u64)>,
+    faults: WorkerFaults,
     deadline: std::time::Duration,
 ) {
     loop {
@@ -715,10 +891,9 @@ fn async_clock_loop(
         let scan = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             for (hn, ctl) in nodes.iter_mut().zip(ctls.iter_mut()) {
                 if !ctl.emitted && ctl.r < target {
-                    if let Some((node, ms)) = delay {
-                        if hn.idx == node {
-                            std::thread::sleep(std::time::Duration::from_millis(ms));
-                        }
+                    check_kill(hn, ctl.r, &faults, &shared);
+                    if let Some(ms) = faults.delay_ms_for(hn.idx) {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
                     }
                     emit_round(hn, ctl.r as usize, &shared);
                     ctl.emitted = true;
@@ -773,6 +948,9 @@ pub struct ParallelEngine {
     workers: Vec<JoinHandle<()>>,
     barrier: Arc<Barrier>,
     stop: Arc<AtomicBool>,
+    /// telemetry writer thread — declared after `workers` so it drops
+    /// (drains and joins) only once every sink-holding worker is gone
+    telemetry: Option<TelemetryWriter>,
 }
 
 impl ParallelEngine {
@@ -919,8 +1097,88 @@ impl ParallelEngine {
         seed: u64,
         mode: ModeSpec,
     ) -> ParallelEngine {
+        Self::from_program_faulted(
+            program,
+            topo,
+            threads,
+            transport,
+            compress,
+            seed,
+            mode,
+            &FaultSpec::none(),
+            &TelemetrySpec::disabled(),
+        )
+        .expect("fault-free, telemetry-free engine construction cannot fail")
+    }
+
+    /// [`ParallelEngine::new_full_mode`] plus the fault-injection plan
+    /// and the telemetry stream — the constructor the coordinator uses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_faulted(
+        kind: AlgorithmKind,
+        problem: Arc<dyn Problem>,
+        mix: &MixingMatrix,
+        topo: &Topology,
+        params: &AlgoParams,
+        threads: usize,
+        transport: Box<dyn Transport>,
+        compress: &CompressionSpec,
+        mode: ModeSpec,
+        fault: &FaultSpec,
+        telemetry: &TelemetrySpec,
+    ) -> Result<ParallelEngine, String> {
+        let program = build_node_program(kind, problem, mix, topo, params);
+        Self::from_program_faulted(
+            program,
+            topo.clone(),
+            threads,
+            transport,
+            compress.clone(),
+            params.seed,
+            mode,
+            fault,
+            telemetry,
+        )
+    }
+
+    /// The superset constructor behind every other one: explicit
+    /// transport, wire compression, round clock, fault-injection plan,
+    /// and telemetry stream. Fallible because faults and telemetry can
+    /// be rejected up front — link faults (drop/dup) on a transport
+    /// without a link layer, a kill target outside the topology, or an
+    /// unwritable telemetry path all come back as `Err` before any
+    /// worker spawns.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_program_faulted(
+        program: NodeProgram,
+        topo: Topology,
+        threads: usize,
+        mut transport: Box<dyn Transport>,
+        compress: CompressionSpec,
+        seed: u64,
+        mode: ModeSpec,
+        fault: &FaultSpec,
+        telemetry: &TelemetrySpec,
+    ) -> Result<ParallelEngine, String> {
         let n = program.nodes.len();
         assert!(n > 0, "engine needs at least one node");
+        if let Some((node, round)) = fault.kill {
+            if node as usize >= n {
+                return Err(format!(
+                    "fault kill:{node}@{round} names node {node}, but the topology \
+                     has only {n} nodes"
+                ));
+            }
+        }
+        // link faults need the transport's reliable link layer; transports
+        // without one reject them here, before any socket traffic
+        transport.configure_faults(fault, seed)?;
+        if let ModeSpec::Async(tau) = mode {
+            // async senders may run up to tau rounds ahead of a receiver's
+            // watermark, so retransmit buffers must retain that much more
+            transport.set_retain_grace(tau as u64);
+        }
+        let writer = telemetry.spawn_writer()?;
         let hosted = transport.hosted().to_vec();
         assert!(
             !hosted.is_empty()
@@ -984,13 +1242,15 @@ impl ParallelEngine {
                 replicas: std::collections::HashMap::new(),
                 cache: None,
             });
-            buckets[k * threads / h].push(HostedNode { idx, state: node, port, cross, comp });
+            let telem = writer.as_ref().map(|w| NodeTelemetry::new(w.sink(), &z[idx]));
+            buckets[k * threads / h]
+                .push(HostedNode { idx, state: node, port, cross, comp, telem });
             k += 1;
         }
         // both env knobs are read once, at construction, so a run's
         // behavior can't change mid-flight
         let trace = std::env::var("DSBA_ASYNC_TRACE").is_ok();
-        let delay = inject_delay();
+        let faults = WorkerFaults::from_spec(fault);
         let mut workers = Vec::with_capacity(threads);
         for bucket in buckets {
             let shared = shared.clone();
@@ -999,7 +1259,7 @@ impl ParallelEngine {
                 ModeSpec::Sync => {
                     let barrier = barrier.clone();
                     workers.push(std::thread::spawn(move || {
-                        round_clock_loop(bucket, shared, barrier, stop, delay)
+                        round_clock_loop(bucket, shared, barrier, stop, faults)
                     }));
                 }
                 ModeSpec::Async(tau) => {
@@ -1032,7 +1292,7 @@ impl ParallelEngine {
                     let deadline = crate::runtime::transport::drain_timeout();
                     workers.push(std::thread::spawn(move || {
                         async_clock_loop(
-                            bucket, ctls, shared, stop, tau, trace, delay, deadline,
+                            bucket, ctls, shared, stop, tau, trace, faults, deadline,
                         )
                     }));
                 }
@@ -1052,7 +1312,7 @@ impl ParallelEngine {
         } else {
             program.pass_denom * h as f64 / n as f64
         };
-        ParallelEngine {
+        Ok(ParallelEngine {
             kind: program.kind,
             mode,
             topo,
@@ -1068,7 +1328,8 @@ impl ParallelEngine {
             workers,
             barrier,
             stop,
-        }
+            telemetry: writer,
+        })
     }
 
     pub fn threads(&self) -> usize {
@@ -1117,6 +1378,12 @@ impl ParallelEngine {
     /// the topology across processes).
     pub fn hosted(&self) -> &[usize] {
         &self.hosted
+    }
+
+    /// Rows the non-blocking telemetry channel has dropped so far
+    /// (`None` when telemetry is off).
+    pub fn telemetry_dropped(&self) -> Option<u64> {
+        self.telemetry.as_ref().map(|w| w.sink().dropped())
     }
 
     /// (messages sent, messages delivered) so far — equal unless a
@@ -1559,6 +1826,113 @@ mod tests {
         assert_eq!(ModeSpec::default(), ModeSpec::Sync);
         assert!(!ModeSpec::Sync.is_async());
         assert!(ModeSpec::Async(0).is_async());
+    }
+
+    #[test]
+    fn worker_faults_delay_matcher() {
+        let all = WorkerFaults { delay: Some((None, 7)), kill: None };
+        assert_eq!(all.delay_ms_for(0), Some(7));
+        assert_eq!(all.delay_ms_for(3), Some(7));
+        let one = WorkerFaults { delay: Some((Some(2), 9)), kill: None };
+        assert_eq!(one.delay_ms_for(2), Some(9));
+        assert_eq!(one.delay_ms_for(0), None);
+        assert_eq!(WorkerFaults::default().delay_ms_for(0), None);
+        let spec = FaultSpec::parse("delay:5@1,kill:2@8").unwrap();
+        let wf = WorkerFaults::from_spec(&spec);
+        assert_eq!(wf.delay_ms_for(1), Some(5));
+        assert_eq!(wf.delay_ms_for(2), None);
+        assert_eq!(wf.kill, Some((2, 8)));
+    }
+
+    #[test]
+    fn kill_target_out_of_range_is_rejected_at_construction() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let err = ParallelEngine::new_faulted(
+            AlgorithmKind::Extra,
+            p,
+            &mix,
+            &topo,
+            &params,
+            2,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Sync,
+            &FaultSpec::parse("kill:9@1").unwrap(),
+            &TelemetrySpec::disabled(),
+        )
+        .err()
+        .expect("kill target past the node count must be rejected");
+        assert!(err.contains("only 4 nodes"), "{err}");
+    }
+
+    #[test]
+    fn kill_fault_fails_fast_with_named_diagnostic() {
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut eng = ParallelEngine::new_faulted(
+            AlgorithmKind::Extra,
+            p,
+            &mix,
+            &topo,
+            &params,
+            2,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Sync,
+            &FaultSpec::parse("kill:1@2").unwrap(),
+            &TelemetrySpec::disabled(),
+        )
+        .unwrap();
+        let mut net = Network::new(topo, CommCostModel::default());
+        eng.step(&mut net);
+        eng.step(&mut net);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.step(&mut net);
+        }));
+        let payload = result.err().expect("kill must fail the round");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("killed by fault injection"), "{msg}");
+        assert!(msg.contains("node 1") && msg.contains("round 2"), "{msg}");
+        drop(eng); // must not hang
+    }
+
+    #[test]
+    fn telemetry_rows_cover_every_node_round() {
+        let dir = std::env::temp_dir()
+            .join(format!("dsba_engine_telem_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let (p, mix, topo) = tiny_world(4);
+        let params = AlgoParams::new(0.4, p.dim(), 5);
+        let mut eng = ParallelEngine::new_faulted(
+            AlgorithmKind::Dsba,
+            p,
+            &mix,
+            &topo,
+            &params,
+            2,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
+            ModeSpec::Sync,
+            &FaultSpec::none(),
+            &TelemetrySpec::to_path(path.to_str().unwrap()),
+        )
+        .unwrap();
+        let mut net = Network::new(topo.clone(), CommCostModel::default());
+        for _ in 0..6 {
+            eng.step(&mut net);
+        }
+        assert_eq!(eng.telemetry_dropped(), Some(0));
+        drop(eng); // joins the writer, flushing every emitted row
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows = crate::telemetry::validate_jsonl(&text).unwrap();
+        assert_eq!(rows, 6 * topo.n);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

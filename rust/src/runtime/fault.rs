@@ -1,0 +1,236 @@
+//! Fault-injection configuration: `--fault drop:P,dup:P,delay:MS[@NODE],kill:NODE@ROUND`.
+//!
+//! [`FaultSpec`] is a parse/name inverse pair (same contract as
+//! `CompressionSpec` and `ModeSpec`) describing four independent faults:
+//!
+//! - `drop:P` — each outgoing MSG frame is dropped on the wire with
+//!   probability `P` (the reliable link layer recovers it via
+//!   NACK/retransmit, so runs stay bit-identical; see
+//!   `runtime::transport`).
+//! - `dup:P` — each outgoing MSG frame is duplicated with probability
+//!   `P` (receivers dedup by link sequence number).
+//! - `delay:MS[@NODE]` — node `NODE` (or every node when omitted) sleeps
+//!   `MS` milliseconds before emitting each round: a deterministic
+//!   straggler that exercises the async admission path. Subsumes the
+//!   legacy `DSBA_INJECT_DELAY_MS` env knob.
+//! - `kill:NODE@ROUND` — node `NODE` halts at the start of round
+//!   `ROUND`; the run fails fast with an error naming the node, the
+//!   round, and the last-seen peer watermarks.
+//!
+//! Drop/dup draws use a per-edge seeded RNG ([`FaultSpec::edge_rng`]),
+//! so a given `(seed, from, to)` stream injects the same fault sequence
+//! on every run — fault tests are deterministic.
+
+use crate::util::rng::Rng;
+
+/// Transport/engine fault-injection plan. `FaultSpec::default()` is the
+/// fault-free configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Per-frame drop probability on outgoing MSG frames, in [0, 1).
+    pub drop: f64,
+    /// Per-frame duplication probability on outgoing MSG frames, in [0, 1).
+    pub dup: f64,
+    /// Per-round emit delay in milliseconds (0 = off).
+    pub delay_ms: u64,
+    /// Node the delay applies to (`None` = every node).
+    pub delay_node: Option<u32>,
+    /// Halt `(node, round)`: the node fails fast at that round.
+    pub kill: Option<(u32, u64)>,
+}
+
+fn parse_prob(what: &str, raw: &str) -> Result<f64, String> {
+    let p: f64 = raw
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad {what} probability {raw:?}"))?;
+    if !(0.0..1.0).contains(&p) {
+        return Err(format!("{what} probability {p} outside [0, 1)"));
+    }
+    Ok(p)
+}
+
+fn parse_u64(what: &str, raw: &str) -> Result<u64, String> {
+    raw.trim().parse().map_err(|_| format!("bad {what} {raw:?}"))
+}
+
+impl FaultSpec {
+    /// No faults (the default).
+    pub fn none() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    /// True when the spec injects link-layer faults (drop or dup).
+    pub fn link_faults(&self) -> bool {
+        self.drop > 0.0 || self.dup > 0.0
+    }
+
+    /// Emit delay (ms) for `node`, if any.
+    pub fn delay_for(&self, node: usize) -> Option<u64> {
+        if self.delay_ms == 0 {
+            return None;
+        }
+        match self.delay_node {
+            Some(n) if n as usize != node => None,
+            _ => Some(self.delay_ms),
+        }
+    }
+
+    /// Parse `drop:P,dup:P,delay:MS[@NODE],kill:NODE@ROUND` (clauses in
+    /// any order, each at most once). `""` and `"none"` are fault-free.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(FaultSpec::none());
+        }
+        let mut f = FaultSpec::none();
+        let mut seen: Vec<String> = Vec::new();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            let (key, val) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("bad fault clause {clause:?} (expected key:value)"))?;
+            let key = key.trim().to_ascii_lowercase();
+            if seen.contains(&key) {
+                return Err(format!("duplicate fault clause {key:?}"));
+            }
+            match key.as_str() {
+                "drop" => f.drop = parse_prob("drop", val)?,
+                "dup" => f.dup = parse_prob("dup", val)?,
+                "delay" => match val.split_once('@') {
+                    Some((ms, node)) => {
+                        f.delay_ms = parse_u64("delay ms", ms)?;
+                        f.delay_node = Some(parse_u64("delay node", node)? as u32);
+                    }
+                    None => {
+                        f.delay_ms = parse_u64("delay ms", val)?;
+                        f.delay_node = None;
+                    }
+                },
+                "kill" => {
+                    let (node, round) = val.split_once('@').ok_or_else(|| {
+                        format!("bad kill clause {val:?} (expected NODE@ROUND)")
+                    })?;
+                    f.kill = Some((
+                        parse_u64("kill node", node)? as u32,
+                        parse_u64("kill round", round)?,
+                    ));
+                }
+                other => return Err(format!("unknown fault {other:?}")),
+            }
+            seen.push(key);
+        }
+        Ok(f)
+    }
+
+    /// Canonical name; `FaultSpec::parse(&f.name()) == Ok(f)`.
+    pub fn name(&self) -> String {
+        if self.is_none() {
+            return "none".into();
+        }
+        let mut clauses = Vec::new();
+        if self.drop > 0.0 {
+            clauses.push(format!("drop:{}", self.drop));
+        }
+        if self.dup > 0.0 {
+            clauses.push(format!("dup:{}", self.dup));
+        }
+        if self.delay_ms > 0 {
+            match self.delay_node {
+                Some(n) => clauses.push(format!("delay:{}@{n}", self.delay_ms)),
+                None => clauses.push(format!("delay:{}", self.delay_ms)),
+            }
+        }
+        if let Some((node, round)) = self.kill {
+            clauses.push(format!("kill:{node}@{round}"));
+        }
+        clauses.join(",")
+    }
+
+    /// Deterministic per-edge fault stream: the draws made on directed
+    /// edge `from -> to` depend only on `(seed, from, to)`.
+    pub fn edge_rng(seed: u64, from: usize, to: usize) -> Rng {
+        let tag = (from as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((to as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+        Rng::new(seed ^ tag.rotate_left(17))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_is_an_inverse_pair() {
+        for s in [
+            "none",
+            "drop:0.05",
+            "dup:0.1",
+            "drop:0.05,dup:0.05",
+            "delay:150",
+            "delay:150@2",
+            "kill:3@10",
+            "drop:0.01,dup:0.02,delay:5@1,kill:0@7",
+        ] {
+            let f = FaultSpec::parse(s).unwrap();
+            assert_eq!(FaultSpec::parse(&f.name()).unwrap(), f, "{s}");
+        }
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::none());
+        assert_eq!(FaultSpec::none().name(), "none");
+        // canonical clause order regardless of input order
+        let f = FaultSpec::parse("kill:1@2,drop:0.5").unwrap();
+        assert_eq!(f.name(), "drop:0.5,kill:1@2");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "drop",            // no value
+            "drop:",           // empty value
+            "drop:1.0",        // out of [0, 1)
+            "drop:-0.1",       // negative
+            "dup:x",           // not a number
+            "delay:",          // empty
+            "delay:5@",        // empty node
+            "kill:3",          // missing @ROUND
+            "kill:@4",         // missing node
+            "warp:0.5",        // unknown key
+            "drop:0.1,drop:0.2", // duplicate clause
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn accessors_reflect_the_spec() {
+        let f = FaultSpec::parse("drop:0.05,delay:100@2,kill:1@9").unwrap();
+        assert!(f.link_faults());
+        assert!(!f.is_none());
+        assert_eq!(f.delay_for(2), Some(100));
+        assert_eq!(f.delay_for(0), None);
+        assert_eq!(f.kill, Some((1, 9)));
+        let all = FaultSpec::parse("delay:50").unwrap();
+        assert!(!all.link_faults());
+        assert_eq!(all.delay_for(0), Some(50));
+        assert_eq!(all.delay_for(7), Some(50));
+        assert_eq!(FaultSpec::none().delay_for(0), None);
+    }
+
+    #[test]
+    fn edge_rng_is_deterministic_and_directed() {
+        let mut a1 = FaultSpec::edge_rng(42, 0, 1);
+        let mut a2 = FaultSpec::edge_rng(42, 0, 1);
+        let mut b = FaultSpec::edge_rng(42, 1, 0);
+        let same_dir: Vec<u64> = (0..16).map(|_| a1.next_u64()).collect();
+        assert_eq!(same_dir, (0..16).map(|_| a2.next_u64()).collect::<Vec<_>>());
+        assert!(
+            (0..16).any(|i| b.next_u64() != same_dir[i]),
+            "reverse edge reuses the forward stream"
+        );
+    }
+}

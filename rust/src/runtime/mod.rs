@@ -27,16 +27,19 @@
 //!   absent.
 
 pub mod engine;
+pub mod fault;
 pub mod spec;
 pub mod transport;
 
 mod registry;
 
 pub use engine::{EngineKind, ModeSpec, ParallelEngine, ProgressProbe};
+pub use fault::FaultSpec;
 pub use registry::{ArtifactEntry, Manifest};
 pub use spec::{EngineSpec, TcpSpec};
 pub use transport::{
-    LocalTransport, NodePort, StampedEnvelope, TcpTransport, Transport, TransportKind,
+    LinkCounters, LinkStats, LocalTransport, NodePort, StampedEnvelope, TcpTransport,
+    Transport, TransportKind,
 };
 
 #[cfg(feature = "pjrt")]

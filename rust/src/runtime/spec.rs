@@ -5,8 +5,10 @@
 //! instead of six loose fields leaking through every layer.
 
 use super::engine::{EngineKind, ModeSpec};
+use super::fault::FaultSpec;
 use super::transport::TransportKind;
 use crate::comm::CompressionSpec;
+use crate::telemetry::TelemetrySpec;
 use crate::util::json::Json;
 
 /// TCP endpoint configuration for [`TransportKind::Tcp`].
@@ -50,7 +52,8 @@ impl TcpSpec {
 }
 
 /// Execution engine selection: round driver + transport + endpoints.
-#[derive(Clone, Debug, PartialEq, Eq)]
+// not `Eq`: `FaultSpec` carries f64 probabilities
+#[derive(Clone, Debug, PartialEq)]
 pub struct EngineSpec {
     /// round driver: sequential reference oracle or parallel engine
     pub kind: EngineKind,
@@ -66,6 +69,11 @@ pub struct EngineSpec {
     /// round clock (parallel engine only): barrier-synced `sync` or
     /// bounded-staleness `async:TAU`
     pub mode: ModeSpec,
+    /// fault-injection plan (parallel engine only; link faults
+    /// additionally require the TCP transport)
+    pub fault: FaultSpec,
+    /// per-round JSONL telemetry stream (parallel engine only)
+    pub telemetry: TelemetrySpec,
 }
 
 impl Default for EngineSpec {
@@ -77,6 +85,8 @@ impl Default for EngineSpec {
             tcp: TcpSpec::default(),
             compress: CompressionSpec::None,
             mode: ModeSpec::Sync,
+            fault: FaultSpec::default(),
+            telemetry: TelemetrySpec::default(),
         }
     }
 }
@@ -114,6 +124,16 @@ impl EngineSpec {
         self
     }
 
+    pub fn with_fault(mut self, fault: FaultSpec) -> EngineSpec {
+        self.fault = fault;
+        self
+    }
+
+    pub fn with_telemetry(mut self, telemetry: TelemetrySpec) -> EngineSpec {
+        self.telemetry = telemetry;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("kind", Json::Str(self.kind.name().into())),
@@ -122,6 +142,8 @@ impl EngineSpec {
             ("tcp", self.tcp.to_json()),
             ("compress", Json::Str(self.compress.name())),
             ("mode", Json::Str(self.mode.name())),
+            ("fault", Json::Str(self.fault.name())),
+            ("telemetry", self.telemetry.to_json()),
         ])
     }
 
@@ -154,6 +176,12 @@ impl EngineSpec {
         if let Some(s) = v.get("mode").and_then(Json::as_str) {
             e.mode = ModeSpec::parse(s).ok_or(format!("bad mode {s} (sync|async:TAU)"))?;
         }
+        if let Some(f) = v.get("fault").and_then(Json::as_str) {
+            e.fault = FaultSpec::parse(f)?;
+        }
+        if let Some(t) = v.get("telemetry") {
+            e.telemetry = TelemetrySpec::from_json(t)?;
+        }
         Ok(e)
     }
 }
@@ -176,6 +204,8 @@ mod tests {
             },
             compress: CompressionSpec::TopK(7),
             mode: ModeSpec::Async(2),
+            fault: FaultSpec::parse("drop:0.05,dup:0.1,kill:1@4").unwrap(),
+            telemetry: TelemetrySpec { path: "results/t.jsonl".into(), max_bytes: 4096, keep: 2 },
         };
         let j = spec.to_json().to_string();
         let back = EngineSpec::from_json(&parse(&j).unwrap()).unwrap();
@@ -221,5 +251,13 @@ mod tests {
         let a = EngineSpec::from_json(&parse("{\"mode\":\"async:2\"}").unwrap()).unwrap();
         assert_eq!(a.mode, ModeSpec::Async(2));
         assert!(EngineSpec::from_json(&parse("{\"mode\":\"warp\"}").unwrap()).is_err());
+        assert!(e.fault.is_none());
+        assert!(!e.telemetry.enabled());
+        let f = EngineSpec::from_json(&parse("{\"fault\":\"drop:0.1\"}").unwrap()).unwrap();
+        assert_eq!(f.fault, FaultSpec::parse("drop:0.1").unwrap());
+        assert!(EngineSpec::from_json(&parse("{\"fault\":\"warp:1\"}").unwrap()).is_err());
+        // telemetry accepts the bare-path shorthand
+        let t = EngineSpec::from_json(&parse("{\"telemetry\":\"run.jsonl\"}").unwrap()).unwrap();
+        assert_eq!(t.telemetry, TelemetrySpec::to_path("run.jsonl"));
     }
 }

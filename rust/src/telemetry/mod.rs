@@ -1,0 +1,141 @@
+//! Run telemetry: a versioned per-round, per-node JSONL evidence stream.
+//!
+//! Three layers, split by concern:
+//!
+//! - [`schema`] — the versioned [`TelemetryRow`] record and the
+//!   [`validate_jsonl`] stream check (`dsba telemetry-check`).
+//! - [`writer`] — the non-blocking producer/consumer pair: workers
+//!   [`TelemetrySink::emit`] into a bounded channel (drop-with-counter on
+//!   overflow, never blocking the round hot path); one dedicated thread
+//!   serializes and appends.
+//! - [`retention`] — size-based rotation of the JSONL file
+//!   (`telemetry.max_bytes` / `telemetry.keep`).
+//!
+//! [`TelemetrySpec`] is the configuration value that travels through
+//! `EngineSpec` / config JSON / `--telemetry`, exactly like
+//! `CompressionSpec` and `ModeSpec` before it.
+
+pub mod retention;
+pub mod schema;
+pub mod writer;
+
+pub use retention::RotatingFile;
+pub use schema::{validate_jsonl, TelemetryRow, TELEMETRY_SCHEMA_VERSION};
+pub use writer::{TelemetrySink, TelemetryWriter};
+
+use crate::util::json::Json;
+
+/// Default live-file size cap before rotation (64 MiB).
+pub const DEFAULT_MAX_BYTES: u64 = 64 * 1024 * 1024;
+/// Default number of rotated generations retained.
+pub const DEFAULT_KEEP: usize = 3;
+
+/// Telemetry configuration: where the JSONL stream goes and how much of
+/// it is retained. An empty `path` disables telemetry entirely.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TelemetrySpec {
+    /// JSONL output path ("" = telemetry off).
+    pub path: String,
+    /// Rotate when the live file would exceed this many bytes
+    /// (0 = never rotate).
+    pub max_bytes: u64,
+    /// Rotated generations kept beyond the live file.
+    pub keep: usize,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec { path: String::new(), max_bytes: DEFAULT_MAX_BYTES, keep: DEFAULT_KEEP }
+    }
+}
+
+impl TelemetrySpec {
+    /// Telemetry off (the default).
+    pub fn disabled() -> TelemetrySpec {
+        TelemetrySpec::default()
+    }
+
+    /// Telemetry on, writing to `path` with default retention.
+    pub fn to_path(path: &str) -> TelemetrySpec {
+        TelemetrySpec { path: path.to_string(), ..TelemetrySpec::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.path.is_empty()
+    }
+
+    /// Start the writer thread for this spec (`None` when disabled).
+    pub fn spawn_writer(&self) -> Result<Option<TelemetryWriter>, String> {
+        if !self.enabled() {
+            return Ok(None);
+        }
+        TelemetryWriter::spawn(std::path::Path::new(&self.path), self.max_bytes, self.keep)
+            .map(Some)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("path", Json::Str(self.path.clone())),
+            ("max_bytes", Json::Num(self.max_bytes as f64)),
+            ("keep", Json::Num(self.keep as f64)),
+        ])
+    }
+
+    /// Parse from JSON: the nested object form emitted by
+    /// [`TelemetrySpec::to_json`], or a bare string naming just the path.
+    pub fn from_json(v: &Json) -> Result<TelemetrySpec, String> {
+        if let Some(s) = v.as_str() {
+            return Ok(TelemetrySpec::to_path(s));
+        }
+        let mut t = TelemetrySpec::default();
+        if let Some(s) = v.get("path").and_then(Json::as_str) {
+            t.path = s.to_string();
+        }
+        if let Some(n) = v.get("max_bytes").and_then(Json::as_f64) {
+            if n < 0.0 || n != n.trunc() {
+                return Err(format!("telemetry.max_bytes must be a non-negative integer, got {n}"));
+            }
+            t.max_bytes = n as u64;
+        }
+        if let Some(n) = v.get("keep").and_then(Json::as_usize) {
+            t.keep = n;
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn spec_defaults_are_disabled() {
+        let t = TelemetrySpec::default();
+        assert!(!t.enabled());
+        assert_eq!(t.max_bytes, DEFAULT_MAX_BYTES);
+        assert_eq!(t.keep, DEFAULT_KEEP);
+        assert!(t.spawn_writer().unwrap().is_none());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let t = TelemetrySpec { path: "results/t.jsonl".into(), max_bytes: 1024, keep: 5 };
+        let back = TelemetrySpec::from_json(&parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn spec_accepts_bare_path_string() {
+        let t = TelemetrySpec::from_json(&Json::Str("run.jsonl".into())).unwrap();
+        assert_eq!(t.path, "run.jsonl");
+        assert_eq!(t.max_bytes, DEFAULT_MAX_BYTES);
+        assert!(t.enabled());
+    }
+
+    #[test]
+    fn spec_rejects_bad_max_bytes() {
+        assert!(TelemetrySpec::from_json(&parse("{\"max_bytes\":-1}").unwrap()).is_err());
+        assert!(TelemetrySpec::from_json(&parse("{\"max_bytes\":1.5}").unwrap()).is_err());
+    }
+}

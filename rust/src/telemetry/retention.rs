@@ -1,0 +1,186 @@
+//! Size-based rotation and retention for the telemetry JSONL stream.
+//!
+//! A [`RotatingFile`] appends lines to `path` until the next line would
+//! push the file past `max_bytes`, then shifts the retention chain
+//! (`path` → `path.1` → `path.2` → …, discarding `path.keep`) and starts
+//! a fresh file. Rotation happens on whole-line boundaries only, so
+//! every generation is independently valid JSONL.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// An append-only line writer with size-based rotation.
+pub struct RotatingFile {
+    path: PathBuf,
+    max_bytes: u64,
+    keep: usize,
+    file: File,
+    written: u64,
+}
+
+fn generation(path: &Path, i: usize) -> PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(format!(".{i}"));
+    PathBuf::from(name)
+}
+
+fn open_append(path: &Path) -> Result<(File, u64), String> {
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| format!("telemetry: cannot open {}: {e}", path.display()))?;
+    let len = file
+        .metadata()
+        .map_err(|e| format!("telemetry: cannot stat {}: {e}", path.display()))?
+        .len();
+    Ok((file, len))
+}
+
+impl RotatingFile {
+    /// Open (or continue) the live file at `path`. `max_bytes = 0`
+    /// disables rotation; `keep` is the number of rotated generations
+    /// retained beyond the live file.
+    pub fn create(path: &Path, max_bytes: u64, keep: usize) -> Result<RotatingFile, String> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("telemetry: cannot create {}: {e}", dir.display()))?;
+            }
+        }
+        let (file, written) = open_append(path)?;
+        Ok(RotatingFile { path: path.to_path_buf(), max_bytes, keep, file, written })
+    }
+
+    /// Append one line (a newline is added). Rotates first when the
+    /// line would push a non-empty live file past `max_bytes`.
+    pub fn append_line(&mut self, line: &str) -> Result<(), String> {
+        let need = line.len() as u64 + 1;
+        if self.max_bytes > 0 && self.written > 0 && self.written + need > self.max_bytes {
+            self.rotate()?;
+        }
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.write_all(b"\n"))
+            .map_err(|e| format!("telemetry: write to {} failed: {e}", self.path.display()))?;
+        self.written += need;
+        Ok(())
+    }
+
+    /// Bytes written to the current live generation.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    pub fn flush(&mut self) -> Result<(), String> {
+        self.file
+            .flush()
+            .map_err(|e| format!("telemetry: flush of {} failed: {e}", self.path.display()))
+    }
+
+    fn rotate(&mut self) -> Result<(), String> {
+        self.flush()?;
+        if self.keep == 0 {
+            // no retained generations: truncate the live file in place
+            self.file = File::create(&self.path)
+                .map_err(|e| format!("telemetry: cannot truncate {}: {e}", self.path.display()))?;
+            self.written = 0;
+            return Ok(());
+        }
+        let _ = std::fs::remove_file(generation(&self.path, self.keep));
+        for i in (1..self.keep).rev() {
+            let from = generation(&self.path, i);
+            if from.exists() {
+                std::fs::rename(&from, generation(&self.path, i + 1)).map_err(|e| {
+                    format!("telemetry: rotate {} failed: {e}", from.display())
+                })?;
+            }
+        }
+        std::fs::rename(&self.path, generation(&self.path, 1))
+            .map_err(|e| format!("telemetry: rotate {} failed: {e}", self.path.display()))?;
+        let (file, written) = open_append(&self.path)?;
+        self.file = file;
+        self.written = written;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dsba_retention_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn appends_accumulate_without_rotation() {
+        let dir = tmp_dir("plain");
+        let path = dir.join("t.jsonl");
+        let mut f = RotatingFile::create(&path, 0, 3).unwrap();
+        f.append_line("alpha").unwrap();
+        f.append_line("beta").unwrap();
+        f.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "alpha\nbeta\n");
+        assert_eq!(f.written(), text.len() as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_shifts_generations_and_respects_keep() {
+        let dir = tmp_dir("rotate");
+        let path = dir.join("t.jsonl");
+        // every line is 6 bytes ("lineN\n"); cap at 14 => 2 lines per file
+        let mut f = RotatingFile::create(&path, 14, 2).unwrap();
+        for i in 0..7 {
+            f.append_line(&format!("line{i}")).unwrap();
+        }
+        f.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "line6\n");
+        assert_eq!(
+            std::fs::read_to_string(generation(&path, 1)).unwrap(),
+            "line4\nline5\n"
+        );
+        assert_eq!(
+            std::fs::read_to_string(generation(&path, 2)).unwrap(),
+            "line2\nline3\n"
+        );
+        // generation 3 (lines 0..2) fell off the end of the chain
+        assert!(!generation(&path, 3).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keep_zero_truncates_in_place() {
+        let dir = tmp_dir("keep0");
+        let path = dir.join("t.jsonl");
+        let mut f = RotatingFile::create(&path, 8, 0).unwrap();
+        f.append_line("0123456").unwrap(); // 8 bytes: at cap
+        f.append_line("abc").unwrap(); // forces truncation first
+        f.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "abc\n");
+        assert!(!generation(&path, 1).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_single_line_still_lands() {
+        let dir = tmp_dir("oversize");
+        let path = dir.join("t.jsonl");
+        let mut f = RotatingFile::create(&path, 4, 1).unwrap();
+        f.append_line("this line alone exceeds max_bytes").unwrap();
+        f.flush().unwrap();
+        assert!(std::fs::read_to_string(&path)
+            .unwrap()
+            .contains("exceeds max_bytes"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

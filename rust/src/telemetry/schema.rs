@@ -1,0 +1,194 @@
+//! Versioned per-round, per-node telemetry row schema.
+//!
+//! One [`TelemetryRow`] is one JSONL line in the run's telemetry stream:
+//! which node finished which round, how far its iterate moved, what it
+//! paid in communication, how long the step took, and what the reliable
+//! link layer had to do to keep the round lossless (retransmits, dedups,
+//! injected faults). The schema is versioned through the `v` key so
+//! downstream consumers can reject rows they do not understand;
+//! [`validate_jsonl`] is the machine check behind `dsba telemetry-check`
+//! and `make smoke`.
+
+use crate::util::json::{parse, Json};
+
+/// Schema version stamped into every row's `v` key.
+pub const TELEMETRY_SCHEMA_VERSION: u64 = 1;
+
+/// One per-round, per-node telemetry record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryRow {
+    /// Round the node just completed.
+    pub round: u64,
+    /// Global topology index of the reporting node.
+    pub node: u32,
+    /// `||x_t - x_{t-1}||_2` of the node's local iterate.
+    pub residual: f64,
+    /// DOUBLE-equivalents emitted by this node this round (paper `C_n^t`).
+    pub doubles_sent: f64,
+    /// DOUBLE-equivalents delivered to this node this round.
+    pub doubles_recv: f64,
+    /// Encoded payload bytes this node put on the wire this round.
+    pub bytes_on_wire: u64,
+    /// Wall-clock duration of the node's round, in microseconds.
+    pub wall_micros: u64,
+    /// Messages drained from the node's inbox this round.
+    pub queue_depth: u64,
+    /// Staleness (rounds) of the oldest neighbor data consumed this
+    /// round; always 0 under the sync clock.
+    pub staleness: u64,
+    /// Admission-poll stalls this node has accumulated (async clock).
+    pub stalls: u64,
+    /// Link-layer frames this node's ports re-sent after a NACK.
+    pub retransmits: u64,
+    /// Duplicate link-layer frames this node's ports discarded.
+    pub dedups: u64,
+    /// Frames the fault injector dropped on this node's outgoing links.
+    pub drops_injected: u64,
+    /// Frames the fault injector duplicated on this node's outgoing links.
+    pub dups_injected: u64,
+}
+
+impl TelemetryRow {
+    /// Serialize as one compact JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        Json::from_pairs(vec![
+            ("v", Json::Num(TELEMETRY_SCHEMA_VERSION as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("node", Json::Num(self.node as f64)),
+            ("residual", Json::Num(self.residual)),
+            ("doubles_sent", Json::Num(self.doubles_sent)),
+            ("doubles_recv", Json::Num(self.doubles_recv)),
+            ("bytes_on_wire", Json::Num(self.bytes_on_wire as f64)),
+            ("wall_micros", Json::Num(self.wall_micros as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("staleness", Json::Num(self.staleness as f64)),
+            ("stalls", Json::Num(self.stalls as f64)),
+            ("retransmits", Json::Num(self.retransmits as f64)),
+            ("dedups", Json::Num(self.dedups as f64)),
+            ("drops_injected", Json::Num(self.drops_injected as f64)),
+            ("dups_injected", Json::Num(self.dups_injected as f64)),
+        ])
+        .to_string()
+    }
+
+    /// Parse and validate one JSONL line (inverse of [`to_json_line`]
+    /// on well-formed rows; strict about version and required keys).
+    ///
+    /// [`to_json_line`]: TelemetryRow::to_json_line
+    pub fn from_json_line(line: &str) -> Result<TelemetryRow, String> {
+        let v = parse(line.trim())?;
+        let version = req_u64(&v, "v")?;
+        if version != TELEMETRY_SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported telemetry schema v{version} (expected v{TELEMETRY_SCHEMA_VERSION})"
+            ));
+        }
+        let node = req_u64(&v, "node")?;
+        if node > u32::MAX as u64 {
+            return Err(format!("node {node} out of range"));
+        }
+        Ok(TelemetryRow {
+            round: req_u64(&v, "round")?,
+            node: node as u32,
+            residual: req_f64(&v, "residual")?,
+            doubles_sent: req_f64(&v, "doubles_sent")?,
+            doubles_recv: req_f64(&v, "doubles_recv")?,
+            bytes_on_wire: req_u64(&v, "bytes_on_wire")?,
+            wall_micros: req_u64(&v, "wall_micros")?,
+            queue_depth: req_u64(&v, "queue_depth")?,
+            staleness: req_u64(&v, "staleness")?,
+            stalls: req_u64(&v, "stalls")?,
+            retransmits: req_u64(&v, "retransmits")?,
+            dedups: req_u64(&v, "dedups")?,
+            drops_injected: req_u64(&v, "drops_injected")?,
+            dups_injected: req_u64(&v, "dups_injected")?,
+        })
+    }
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing or non-numeric key {key:?}"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
+    let n = req_f64(v, key)?;
+    if n < 0.0 || n != n.trunc() {
+        return Err(format!("key {key:?} must be a non-negative integer, got {n}"));
+    }
+    Ok(n as u64)
+}
+
+/// Validate a whole telemetry stream: every non-empty line must parse
+/// as a schema-v1 row. Returns the number of rows on success, or the
+/// first offending line (1-based) and its error.
+pub fn validate_jsonl(text: &str) -> Result<usize, String> {
+    let mut rows = 0;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        TelemetryRow::from_json_line(line)
+            .map_err(|e| format!("line {}: {e}", i + 1))?;
+        rows += 1;
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TelemetryRow {
+        TelemetryRow {
+            round: 12,
+            node: 3,
+            residual: 0.125,
+            doubles_sent: 40.0,
+            doubles_recv: 80.5,
+            bytes_on_wire: 356,
+            wall_micros: 1812,
+            queue_depth: 2,
+            staleness: 1,
+            stalls: 4,
+            retransmits: 1,
+            dedups: 2,
+            drops_injected: 1,
+            dups_injected: 2,
+        }
+    }
+
+    #[test]
+    fn row_roundtrips_through_jsonl() {
+        let row = sample();
+        let line = row.to_json_line();
+        assert!(!line.contains('\n'), "a row must be a single line");
+        assert_eq!(TelemetryRow::from_json_line(&line).unwrap(), row);
+    }
+
+    #[test]
+    fn parse_rejects_bad_rows() {
+        assert!(TelemetryRow::from_json_line("not json").is_err());
+        assert!(TelemetryRow::from_json_line("{}").is_err(), "missing keys");
+        // wrong version
+        let line = sample().to_json_line().replace("\"v\":1", "\"v\":99");
+        assert!(TelemetryRow::from_json_line(&line).is_err());
+        // non-integer integer field
+        let line = sample().to_json_line().replace("\"round\":12", "\"round\":1.5");
+        assert!(TelemetryRow::from_json_line(&line).is_err());
+        // negative counter
+        let line = sample().to_json_line().replace("\"dedups\":2", "\"dedups\":-2");
+        assert!(TelemetryRow::from_json_line(&line).is_err());
+    }
+
+    #[test]
+    fn validate_jsonl_counts_rows_and_names_bad_lines() {
+        let good = format!("{}\n\n{}\n", sample().to_json_line(), sample().to_json_line());
+        assert_eq!(validate_jsonl(&good), Ok(2));
+        assert_eq!(validate_jsonl(""), Ok(0));
+        let bad = format!("{}\ngarbage\n", sample().to_json_line());
+        let err = validate_jsonl(&bad).unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
+}

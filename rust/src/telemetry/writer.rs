@@ -1,0 +1,204 @@
+//! Non-blocking telemetry writer: engine workers hand rows to a bounded
+//! channel; one dedicated thread serializes them and appends to the
+//! rotating JSONL file. The hot path never blocks — when the channel is
+//! full the row is dropped and counted, and the drop count is reported
+//! when the writer is finished.
+
+use super::retention::RotatingFile;
+use super::schema::TelemetryRow;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Rows buffered between the workers and the writer thread. Deep enough
+/// to absorb a rotation hiccup at thousand-node scale, small enough to
+/// bound memory.
+pub(crate) const CHANNEL_DEPTH: usize = 4096;
+
+/// Cloneable producer handle. `emit` is wait-free: a full channel drops
+/// the row and bumps the shared drop counter instead of blocking.
+#[derive(Clone)]
+pub struct TelemetrySink {
+    tx: SyncSender<TelemetryRow>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl TelemetrySink {
+    /// Offer a row to the writer; never blocks.
+    pub fn emit(&self, row: TelemetryRow) {
+        if self.tx.try_send(row).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Rows dropped because the channel was full (or the writer gone).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Owns the writer thread. Rows flow until [`TelemetryWriter::finish`]
+/// (or drop) signals shutdown; the thread then drains what is already
+/// queued and closes the file.
+pub struct TelemetryWriter {
+    tx: SyncSender<TelemetryRow>,
+    dropped: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<Result<u64, String>>>,
+}
+
+fn writer_loop(
+    rx: Receiver<TelemetryRow>,
+    mut file: RotatingFile,
+    shutdown: Arc<AtomicBool>,
+) -> Result<u64, String> {
+    let mut rows = 0u64;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(row) => {
+                file.append_line(&row.to_json_line())?;
+                rows += 1;
+            }
+            Err(_) => {
+                // timeout or all senders gone: exit only when asked, so
+                // sinks cloned later in the run still have a live thread
+                if shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+        }
+    }
+    // drain anything that raced the shutdown flag
+    loop {
+        match rx.try_recv() {
+            Ok(row) => {
+                file.append_line(&row.to_json_line())?;
+                rows += 1;
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    file.flush()?;
+    Ok(rows)
+}
+
+impl TelemetryWriter {
+    /// Open the rotating file and start the writer thread.
+    pub fn spawn(path: &Path, max_bytes: u64, keep: usize) -> Result<TelemetryWriter, String> {
+        let file = RotatingFile::create(path, max_bytes, keep)?;
+        let (tx, rx) = sync_channel(CHANNEL_DEPTH);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("telemetry-writer".into())
+            .spawn(move || writer_loop(rx, file, flag))
+            .map_err(|e| format!("telemetry: cannot spawn writer thread: {e}"))?;
+        Ok(TelemetryWriter {
+            tx,
+            dropped: Arc::new(AtomicU64::new(0)),
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    /// A new producer handle for one worker thread.
+    pub fn sink(&self) -> TelemetrySink {
+        TelemetrySink { tx: self.tx.clone(), dropped: Arc::clone(&self.dropped) }
+    }
+
+    /// Stop the writer thread, drain queued rows, and report
+    /// `(rows_written, rows_dropped)`.
+    pub fn finish(mut self) -> Result<(u64, u64), String> {
+        let written = self.join()?;
+        Ok((written, self.dropped.load(Ordering::Relaxed)))
+    }
+
+    fn join(&mut self) -> Result<u64, String> {
+        self.shutdown.store(true, Ordering::Release);
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| "telemetry: writer thread panicked".to_string())?,
+            None => Ok(0),
+        }
+    }
+}
+
+impl Drop for TelemetryWriter {
+    fn drop(&mut self) {
+        let _ = self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::schema::validate_jsonl;
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dsba_telemetry_writer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn row(round: u64, node: u32) -> TelemetryRow {
+        TelemetryRow { round, node, ..TelemetryRow::default() }
+    }
+
+    #[test]
+    fn writer_persists_all_rows_through_finish() {
+        let dir = tmp_dir("basic");
+        let path = dir.join("t.jsonl");
+        let w = TelemetryWriter::spawn(&path, 0, 0).unwrap();
+        let sink = w.sink();
+        for r in 0..100 {
+            sink.emit(row(r, (r % 4) as u32));
+        }
+        let (written, dropped) = w.finish().unwrap();
+        assert_eq!(written, 100);
+        assert_eq!(dropped, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_jsonl(&text), Ok(100));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overflow_drops_with_counter_instead_of_blocking() {
+        let dir = tmp_dir("overflow");
+        let path = dir.join("t.jsonl");
+        let w = TelemetryWriter::spawn(&path, 0, 0).unwrap();
+        let sink = w.sink();
+        // far more rows than the channel holds, emitted as fast as
+        // possible; emit must never block, so this terminates even if
+        // the writer thread cannot keep up
+        let total = 4 * CHANNEL_DEPTH as u64;
+        for r in 0..total {
+            sink.emit(row(r, 0));
+        }
+        let (written, dropped) = w.finish().unwrap();
+        assert_eq!(written + dropped, total, "every row written or counted");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_jsonl(&text), Ok(written as usize));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sinks_cloned_after_spawn_share_the_drop_counter() {
+        let dir = tmp_dir("clone");
+        let path = dir.join("t.jsonl");
+        let w = TelemetryWriter::spawn(&path, 0, 0).unwrap();
+        let a = w.sink();
+        let b = a.clone();
+        a.emit(row(0, 0));
+        b.emit(row(0, 1));
+        assert_eq!(a.dropped(), b.dropped());
+        let (written, _) = w.finish().unwrap();
+        assert_eq!(written, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

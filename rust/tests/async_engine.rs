@@ -17,15 +17,16 @@
 //!    are bit-identical round by round — the debugging story for a
 //!    nondeterministic clock.
 //!
-//! Plus the straggler satellite: with `DSBA_INJECT_DELAY_MS` slowing one
-//! node, the sync clock drags everyone down to the straggler's pace
-//! (progress watermarks never spread beyond one round) while `async:2`
-//! lets the fast nodes run visibly ahead.
+//! Plus the straggler satellite: with `--fault delay:150@0` slowing one
+//! node (the typed successor of the deprecated `DSBA_INJECT_DELAY_MS`
+//! env alias), the sync clock drags everyone down to the straggler's
+//! pace (progress watermarks never spread beyond one round) while
+//! `async:2` lets the fast nodes run visibly ahead.
 //!
-//! The env knobs (`DSBA_ASYNC_TRACE`, `DSBA_INJECT_DELAY_MS`) are read
-//! once at engine construction; every test that touches them serializes
-//! on [`ENV_LOCK`] because cargo runs this binary's tests on parallel
-//! threads.
+//! The `DSBA_ASYNC_TRACE` env knob is read once at engine construction;
+//! every test that touches it — or whose engine construction must NOT
+//! see it — serializes on [`ENV_LOCK`] because cargo runs this binary's
+//! tests on parallel threads.
 
 use dsba::algorithms::{build, AlgoParams, AlgorithmKind};
 use dsba::comm::CompressionSpec;
@@ -282,7 +283,7 @@ fn async_trace_mode_is_replayable() {
 }
 
 /// Straggler satellite: run a ring with node 0 slowed by
-/// `DSBA_INJECT_DELAY_MS`, sampling the per-node progress watermarks
+/// `--fault delay:150@0`, sampling the per-node progress watermarks
 /// from outside the engine while a background thread steps it. Returns
 /// the sampled watermark vectors.
 fn run_with_straggler(mode: ModeSpec, rounds: usize) -> Vec<Vec<u64>> {
@@ -294,16 +295,20 @@ fn run_with_straggler(mode: ModeSpec, rounds: usize) -> Vec<Vec<u64>> {
         let p = ridge_world(4, 17);
         let mix = MixingMatrix::laplacian(&topo, 1.0);
         let params = AlgoParams::new(0.25, p.dim(), 99);
-        let mut eng = engine_with_mode(
+        let mut eng = ParallelEngine::new_faulted(
             AlgorithmKind::Dsba,
             p,
             &mix,
             &topo,
             &params,
             4,
-            Backend::Local,
+            Box::new(LocalTransport::new(topo.n)),
+            &CompressionSpec::None,
             mode,
-        );
+            &FaultSpec::parse("delay:150@0").expect("valid delay fault"),
+            &dsba::telemetry::TelemetrySpec::disabled(),
+        )
+        .expect("delay-faulted engine builds");
         ptx.send(eng.progress_probe()).expect("probe handoff");
         let mut net = Network::new(topo.clone(), CommCostModel::default());
         for _ in 0..rounds {
@@ -332,11 +337,11 @@ fn run_with_straggler(mode: ModeSpec, rounds: usize) -> Vec<Vec<u64>> {
 /// most 1), while `async:2` lets the fast nodes run ahead: some sample
 /// shows a spread of at least 2 rounds with the delayed node strictly
 /// last. The final watermarks agree in both modes — async changes the
-/// schedule, not the amount of work.
+/// schedule, not the amount of work. (The guard keeps concurrent tests
+/// from flipping `DSBA_ASYNC_TRACE` under this timing-sensitive run.)
 #[test]
 fn injected_straggler_stalls_sync_but_not_async() {
     let _guard = env_guard();
-    std::env::set_var("DSBA_INJECT_DELAY_MS", "0:150");
     let rounds = 6usize;
 
     let sync_samples = run_with_straggler(ModeSpec::Sync, rounds);
@@ -370,7 +375,6 @@ fn injected_straggler_stalls_sync_but_not_async() {
         "async run left a node short of round {rounds}: {:?}",
         async_samples.last().unwrap()
     );
-    std::env::remove_var("DSBA_INJECT_DELAY_MS");
 }
 
 /// The async clock plugs into the builder/coordinator stack end to end:

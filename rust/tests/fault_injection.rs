@@ -1,0 +1,279 @@
+//! Fault-injection suite: the reliable link layer must make injected
+//! wire faults *invisible* to the algorithm.
+//!
+//! The headline contract: under `--fault drop:0.05,dup:0.05` on loopback
+//! TCP sockets, both the sync and the (trace-scheduled) async engines
+//! converge **bit-identical** to their fault-free twins — every iterate,
+//! every round — while the run's telemetry rows record nonzero
+//! retransmit/dedup/injected-fault counters proving the faults actually
+//! fired and were recovered, not silently skipped.
+//!
+//! Around it: the pinned `--fault` parse/name matrix, the
+//! `kill:NODE@ROUND` fail-fast diagnostic surfaced through
+//! `Experiment::try_run`, the coordinator guardrails (link faults need
+//! TCP; any fault needs the parallel engine), and an end-to-end
+//! experiment mixing drop/dup faults with a telemetry stream.
+
+use dsba::algorithms::{AlgoParams, AlgorithmKind};
+use dsba::comm::{CommCostModel, CompressionSpec, Network};
+use dsba::graph::MixingMatrix;
+use dsba::prelude::*;
+use dsba::telemetry::{validate_jsonl, TelemetryRow};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Serializes tests whose engine construction must (or must not) see
+/// `DSBA_ASYNC_TRACE` — cargo runs tests in this binary on parallel
+/// threads.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ridge_world(nodes: usize, seed: u64) -> Arc<dyn Problem> {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(seed);
+    Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 3), 0.05))
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dsba_fault_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+/// The pinned fault matrix: input spec -> canonical name, plus the
+/// parse/name inverse-pair law and the rejection set. Extending
+/// `FaultSpec` means extending this table.
+#[test]
+fn fault_matrix_is_pinned() {
+    let matrix: &[(&str, &str)] = &[
+        ("none", "none"),
+        ("", "none"),
+        ("drop:0.05", "drop:0.05"),
+        ("dup:0.05", "dup:0.05"),
+        ("drop:0.05,dup:0.05", "drop:0.05,dup:0.05"),
+        // clause order canonicalizes
+        ("dup:0.1,drop:0.2", "drop:0.2,dup:0.1"),
+        ("delay:150", "delay:150"),
+        ("delay:150@2", "delay:150@2"),
+        ("kill:3@10", "kill:3@10"),
+        (
+            "kill:1@4,delay:5@0,dup:0.02,drop:0.01",
+            "drop:0.01,dup:0.02,delay:5@0,kill:1@4",
+        ),
+    ];
+    for (input, canonical) in matrix {
+        let f = FaultSpec::parse(input).unwrap_or_else(|e| panic!("{input:?}: {e}"));
+        assert_eq!(&f.name(), canonical, "canonical name of {input:?}");
+        assert_eq!(FaultSpec::parse(&f.name()).unwrap(), f, "{input:?} not an inverse pair");
+    }
+    for bad in ["drop:1.0", "dup:-0.1", "kill:3", "delay:5@", "warp:1", "drop:0.1,drop:0.2"] {
+        assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+    }
+}
+
+/// Core of the headline test: step a fault-free and a drop/dup-faulted
+/// engine (same seed, same loopback-TCP transport class, same `mode`)
+/// side by side, assert bit-identical iterates every round, then mine
+/// the faulted run's telemetry for proof the faults fired.
+fn assert_faulted_run_bit_identical(mode: ModeSpec, rounds: usize, tag: &str) {
+    let topo = Topology::ring(6);
+    let p = ridge_world(6, 17);
+    let mix = MixingMatrix::laplacian(&topo, 1.0);
+    let mut params = AlgoParams::new(0.25, p.dim(), 99);
+    params.inner_tol = 1e-11;
+    let fault = FaultSpec::parse("drop:0.05,dup:0.05").unwrap();
+    let dir = scratch_dir(tag);
+    let path = dir.join("run.jsonl");
+
+    let build = |fault: &FaultSpec, telemetry: &TelemetrySpec| {
+        let transport =
+            TcpTransport::loopback(&topo, params.seed).expect("loopback transport setup");
+        ParallelEngine::new_faulted(
+            AlgorithmKind::Dsba,
+            p.clone(),
+            &mix,
+            &topo,
+            &params,
+            3,
+            Box::new(transport),
+            &CompressionSpec::None,
+            mode,
+            fault,
+            telemetry,
+        )
+        .expect("faulted engine builds")
+    };
+    let mut clean = build(&FaultSpec::none(), &TelemetrySpec::disabled());
+    let mut faulty = build(&fault, &TelemetrySpec::to_path(path.to_str().unwrap()));
+
+    let mut net_c = Network::new(topo.clone(), CommCostModel::default());
+    let mut net_f = Network::new(topo.clone(), CommCostModel::default());
+    for round in 0..rounds {
+        clean.step(&mut net_c);
+        faulty.step(&mut net_f);
+        for n in 0..topo.n {
+            assert_eq!(
+                clean.iterates()[n],
+                faulty.iterates()[n],
+                "{tag} round {round} node {n}: faulted iterate != fault-free"
+            );
+        }
+        assert_eq!(
+            net_c.messages(),
+            net_f.messages(),
+            "{tag} round {round}: message counts diverged under faults"
+        );
+    }
+    let (sent, delivered) = faulty.message_stats();
+    assert_eq!(sent, delivered, "{tag}: engine-level messages were lost under faults");
+    assert_eq!(
+        faulty.telemetry_dropped(),
+        Some(0),
+        "{tag}: telemetry writer dropped rows"
+    );
+
+    // dropping the engine drains and joins the telemetry writer
+    drop(faulty);
+    let text = std::fs::read_to_string(&path).expect("telemetry stream exists");
+    let n_rows = validate_jsonl(&text).expect("telemetry stream is schema-valid");
+    assert!(
+        n_rows >= rounds * topo.n,
+        "{tag}: {n_rows} telemetry rows < {} (rounds x nodes)",
+        rounds * topo.n
+    );
+    // link counters in a row are cumulative per node: keep each node's
+    // latest row, then sum across nodes
+    let mut last: HashMap<u32, TelemetryRow> = HashMap::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let row = TelemetryRow::from_json_line(line).unwrap();
+        let keep = last.get(&row.node).map_or(true, |prev| prev.round < row.round);
+        if keep {
+            last.insert(row.node, row);
+        }
+    }
+    assert_eq!(last.len(), topo.n, "{tag}: telemetry must cover every node");
+    let total = |f: fn(&TelemetryRow) -> u64| last.values().map(f).sum::<u64>();
+    assert!(
+        total(|r| r.drops_injected) > 0,
+        "{tag}: injector never dropped a frame — fault did not fire"
+    );
+    assert!(
+        total(|r| r.dups_injected) > 0,
+        "{tag}: injector never duplicated a frame — fault did not fire"
+    );
+    assert!(
+        total(|r| r.retransmits) > 0,
+        "{tag}: no NACK/retransmit recovered a dropped frame"
+    );
+    assert!(
+        total(|r| r.dedups) > 0,
+        "{tag}: no receiver deduplicated an injected duplicate"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Headline, sync clock: drop/dup on loopback TCP is bit-identical to
+/// the fault-free run, and the telemetry counters prove the faults fired.
+#[test]
+fn drop_dup_tcp_bit_identical_sync() {
+    let _guard = env_guard();
+    assert_faulted_run_bit_identical(ModeSpec::Sync, 20, "sync");
+}
+
+/// Headline, async clock: same contract under `async:1` on the
+/// replayable trace schedule (both runs follow the identical pinned
+/// admission plan, so recovery must not perturb a single bit).
+#[test]
+fn drop_dup_tcp_bit_identical_async() {
+    let _guard = env_guard();
+    std::env::set_var("DSBA_ASYNC_TRACE", "1");
+    assert_faulted_run_bit_identical(ModeSpec::Async(1), 16, "async");
+    std::env::remove_var("DSBA_ASYNC_TRACE");
+}
+
+/// `kill:NODE@ROUND` through the full coordinator stack: `try_run`
+/// fails fast with an error naming the node, the round, and the
+/// last-seen peer watermarks — never a bare panic.
+#[test]
+fn kill_fault_fails_fast_with_named_diagnostic() {
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+    let topo = Topology::ring(4);
+    let mut exp = Experiment::builder(
+        RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+        topo,
+        AlgorithmKind::Dsba,
+    )
+    .step_size(0.25)
+    .passes(6.0)
+    .engine(EngineSpec::parallel(2))
+    .fault(FaultSpec::parse("kill:1@2").unwrap())
+    .build();
+    let err = exp.try_run().expect_err("killed run must fail");
+    assert!(err.contains("killed by fault injection"), "diagnostic: {err}");
+    assert!(err.contains("node 1"), "diagnostic must name the node: {err}");
+    assert!(err.contains("round 2"), "diagnostic must name the round: {err}");
+    assert!(err.contains("watermark"), "diagnostic must carry watermarks: {err}");
+}
+
+/// Coordinator guardrails: faults need the parallel engine, and
+/// drop/dup link faults additionally need the TCP transport's reliable
+/// link layer — both misconfigurations fail at `try_run` with an error
+/// naming the fix.
+#[test]
+fn fault_guardrails_name_their_fix() {
+    let build = |engine: EngineSpec, fault: &str| {
+        let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+        Experiment::builder(
+            RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+            Topology::ring(4),
+            AlgorithmKind::Dsba,
+        )
+        .step_size(0.25)
+        .passes(2.0)
+        .engine(engine)
+        .fault(FaultSpec::parse(fault).unwrap())
+        .build()
+    };
+    let err = build(EngineSpec::sequential(), "drop:0.1").try_run().unwrap_err();
+    assert!(err.contains("parallel"), "sequential + fault: {err}");
+    let err = build(EngineSpec::parallel(2), "drop:0.1").try_run().unwrap_err();
+    assert!(err.contains("tcp"), "local transport + link fault: {err}");
+    // delay alone is transport-agnostic: a delayed local run still works
+    let trace = build(EngineSpec::parallel(2), "delay:1@0")
+        .try_run()
+        .expect("delay fault runs on the local transport");
+    assert!(trace.rows.last().unwrap().suboptimality.is_finite());
+}
+
+/// End-to-end: a TCP experiment with drop/dup faults AND a telemetry
+/// stream runs through `Experiment::try_run`, reports finite metrics,
+/// and leaves a schema-valid JSONL file behind — the `make smoke`
+/// scenario as an in-process test.
+#[test]
+fn experiment_with_faults_and_telemetry_end_to_end() {
+    let dir = scratch_dir("e2e");
+    let path = dir.join("run.jsonl");
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+    let mut exp = Experiment::builder(
+        RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+        Topology::ring(4),
+        AlgorithmKind::Dsba,
+    )
+    .step_size(0.25)
+    .passes(4.0)
+    .record_points(4)
+    .engine(EngineSpec::parallel(2).with_transport(TransportKind::Tcp))
+    .fault(FaultSpec::parse("drop:0.05,dup:0.05").unwrap())
+    .telemetry(TelemetrySpec::to_path(path.to_str().unwrap()))
+    .build();
+    let trace = exp.try_run().expect("faulted telemetry experiment runs");
+    assert!(trace.rows.last().unwrap().suboptimality.is_finite());
+    drop(exp); // joins the engine's telemetry writer
+    let text = std::fs::read_to_string(&path).expect("telemetry stream exists");
+    let rows = validate_jsonl(&text).expect("telemetry stream is schema-valid");
+    assert!(rows > 0, "telemetry stream is empty");
+    let _ = std::fs::remove_dir_all(&dir);
+}
