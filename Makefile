@@ -3,7 +3,7 @@
 CARGO ?= cargo
 
 .PHONY: verify build test fmt lint doc bench-engine bench-transport bench-saddle \
-        smoke fuzz-list artifacts clean
+        smoke report bench-compare fuzz-list artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -73,6 +73,33 @@ smoke: build
 	  --passes 1 --engine parallel --threads 2 --transport tcp \
 	  --fault drop:0.05,dup:0.05 --telemetry results/smoke_telemetry.jsonl
 	target/release/dsba telemetry-check results/smoke_telemetry.jsonl
+	# ...and the analysis layer must be able to read what the run wrote:
+	# fitted convergence rate, phase breakdown, straggler attribution
+	target/release/dsba report results/smoke_telemetry.jsonl
+
+## analyze a telemetry stream (default: the one `make smoke` leaves
+## behind). RUN=path/to/stream.jsonl overrides; add JSON=1 for the
+## machine-readable form
+RUN ?= results/smoke_telemetry.jsonl
+report: build
+	target/release/dsba report $(RUN) $(if $(JSON),--json)
+
+## perf trajectory gate (the CI regression job): stash the committed
+## snapshots, re-run the bench sweeps (which overwrite
+## results/BENCH_*.json), then diff fresh vs committed. TOL is generous
+## while the committed snapshots are hand-seeded bootstrap values —
+## tighten it after regenerating on pinned hardware (run the two bench
+## targets and commit the refreshed results/BENCH_*.json)
+TOL ?= 300
+bench-compare: build
+	cp results/BENCH_engine.json results/BENCH_engine.committed.json
+	cp results/BENCH_transport.json results/BENCH_transport.committed.json
+	$(MAKE) bench-engine bench-transport
+	target/release/dsba bench-compare results/BENCH_engine.committed.json \
+	  results/BENCH_engine.json --tol $(TOL)
+	target/release/dsba bench-compare results/BENCH_transport.committed.json \
+	  results/BENCH_transport.json --tol $(TOL)
+	rm -f results/BENCH_engine.committed.json results/BENCH_transport.committed.json
 
 ## list the cargo-fuzz targets and how to run them (fuzzing needs
 ## network + nightly, so it is documented here, not CI-gated)

@@ -241,6 +241,17 @@ fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
         on * 1e3,
         (on / off - 1.0) * 100.0
     );
+    // pin the phase-span recording cost: with telemetry on, every round
+    // additionally runs the span timers (a handful of Instant reads per
+    // node) plus the wait-free emit. 3x + 2ms absolute slack sits far
+    // above scheduler noise yet catches a hot-path regression — and span
+    // code leaking into the telemetry-off path would instead inflate the
+    // off cell against the committed snapshot via bench-compare.
+    assert!(
+        on <= off * 3.0 + 0.002,
+        "telemetry + phase-span overhead out of bounds: \
+         off {off:.6}s, on {on:.6}s per round"
+    );
     [("off", off), ("on", on)]
         .into_iter()
         .map(|(label, secs)| {

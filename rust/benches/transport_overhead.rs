@@ -191,6 +191,7 @@ fn compression_sweep() {
             ("doubles", Json::Num(doubles)),
             ("bytes_on_wire", Json::Num(bytes)),
             ("secs", Json::Num(secs)),
+            ("rounds_per_sec", Json::Num(rounds as f64 / secs)),
         ]));
     }
 

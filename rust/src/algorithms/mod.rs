@@ -105,6 +105,15 @@ pub trait Algorithm {
     fn staleness_stats(&self) -> (u64, u64) {
         (0, 0)
     }
+
+    /// Rows the telemetry writer's wait-free channel has dropped so far.
+    /// `None` — the default — means this driver carries no telemetry
+    /// writer at all; only the parallel engine (with `--telemetry`)
+    /// overrides it, so the coordinator can surface silent row loss in
+    /// the run's final summary.
+    fn telemetry_dropped(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// One node's slice of a decentralized method: the unit both the

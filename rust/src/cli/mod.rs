@@ -8,7 +8,9 @@
 //! figure          <1|2|3>                                regenerate a figure
 //! info            --dataset <name> --nodes <n> ...       problem/method/dataset info
 //! artifacts                                              check XLA artifacts
-//! telemetry-check <run.jsonl>                            validate a telemetry stream
+//! telemetry-check <run.jsonl>                            validate + summarize a stream
+//! report          <run.jsonl> [--json]                   analyze a telemetry stream
+//! bench-compare   <old.json> <new.json> [--tol PCT]      diff two bench snapshots
 //! help
 //! ```
 //!
@@ -46,6 +48,8 @@ fn dispatch(args: &[String]) -> i32 {
         }
         Some("artifacts") => cmd_artifacts(),
         Some("telemetry-check") => cmd_telemetry_check(&args[1..]),
+        Some("report") => cmd_report(&args[1..]),
+        Some("bench-compare") => cmd_bench_compare(&args[1..]),
         Some("help") | None => {
             print_help();
             0
@@ -106,15 +110,26 @@ USAGE:
            [--telemetry FILE.jsonl] [--telemetry-max-bytes N]
            [--telemetry-keep N]
            (per-round per-node JSONL telemetry: residual, DOUBLEs,
-            bytes-on-wire, staleness, stalls, link fault counters.
-            Rotates at max-bytes, keeping N rotated files)
+            bytes-on-wire, staleness, stalls, link fault counters,
+            and schema-v2 phase spans — wait/drain/compute/encode/send
+            microseconds per round. Rotates at max-bytes, keeping N
+            rotated files)
   dsba figure <1|2|3>     regenerate Figure 1 (ridge) / 2 (logistic) / 3 (AUC)
   dsba info [--dataset NAME] [--nodes N]   registry capability table, methods,
                           dataset stats (saddle / l1 / resolvent per problem)
   dsba problems           canonical problem names, one per line (for scripting)
   dsba artifacts          verify the XLA artifact directory
-  dsba telemetry-check <run.jsonl>   validate every row of a telemetry stream
-                          against the versioned schema (exit 0 = well-formed)
+  dsba telemetry-check <run.jsonl>   validate a telemetry stream against the
+                          versioned schema and print a summary (rows, nodes,
+                          rounds, fault totals, writer drops). Exit 0 =
+                          well-formed with no round gaps
+  dsba report <run.jsonl> [--json]   analyze a stream: fitted geometric
+                          convergence rate, per-node phase breakdown,
+                          straggler attribution, bytes-vs-DOUBLEs budget
+  dsba bench-compare <old.json> <new.json> [--tol PCT]   diff two bench
+                          snapshots (results/BENCH_*.json); exit 1 when a
+                          metric regressed beyond PCT (default 10) or a
+                          sweep cell disappeared
   dsba help",
         problems = problem_list(),
         methods = method_list(),
@@ -337,8 +352,14 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     };
     println!("{}", format_table(&trace.rows));
+    // surface writer drops on the same final line scripts already scrape:
+    // a nonzero count means the JSONL stream under-reports the run
+    let telem = match trace.telemetry_dropped {
+        Some(d) => format!(", telemetry dropped {d} row(s)"),
+        None => String::new(),
+    };
     println!(
-        "final: suboptimality {:.3e}, comm {:.3e} doubles, {:.3e} wire bytes",
+        "final: suboptimality {:.3e}, comm {:.3e} doubles, {:.3e} wire bytes{telem}",
         trace.last_suboptimality(),
         trace.final_comm(),
         trace.final_comm_bytes()
@@ -443,10 +464,12 @@ fn cmd_info(args: &[String]) -> i32 {
 }
 
 /// `dsba telemetry-check <run.jsonl>` — validate every line of a
-/// telemetry stream against the versioned row schema.  Exit 0 means the
-/// file is well-formed JSONL and every row carries every schema field
-/// with the right type; the row count is printed so scripts can assert
-/// completeness (`rounds * nodes` rows for a fault-free run).
+/// telemetry stream against the versioned row schema, then print a
+/// summary: row/node/round counts, cumulative fault-counter totals, and
+/// the writer's written/dropped accounting.  Exit 0 means the file is
+/// well-formed AND the round range has no gaps; a gap (rotation ate the
+/// middle of the retained window, or a node went silent) exits 1 so CI
+/// catches incomplete evidence.
 fn cmd_telemetry_check(args: &[String]) -> i32 {
     let Some(path) = args.first() else {
         eprintln!("usage: dsba telemetry-check <run.jsonl>");
@@ -459,18 +482,139 @@ fn cmd_telemetry_check(args: &[String]) -> i32 {
             return 1;
         }
     };
-    match crate::telemetry::validate_jsonl(&text) {
-        Ok(rows) => {
+    match crate::telemetry::StreamSummary::from_stream(&text) {
+        Ok(s) => {
             println!(
-                "telemetry OK: {rows} row(s), schema v{}",
+                "telemetry OK: {} row(s) from {} node(s), rounds {}..={} \
+                 ({} seen), schema v{}",
+                s.rows,
+                s.nodes.len(),
+                s.round_min,
+                s.round_max,
+                s.rounds_seen,
                 crate::telemetry::TELEMETRY_SCHEMA_VERSION
             );
+            println!(
+                "  faults: {} stalls, {} retransmits, {} dedups, \
+                 {} drops injected, {} dups injected",
+                s.stalls, s.retransmits, s.dedups, s.drops_injected, s.dups_injected
+            );
+            match &s.writer {
+                Some(w) => println!(
+                    "  writer: {} row(s) written, {} dropped",
+                    w.rows_written, w.rows_dropped
+                ),
+                None => println!("  writer: no summary line (stream truncated or pre-v2)"),
+            }
+            if !s.missing_rounds.is_empty() {
+                eprintln!(
+                    "telemetry-check: {path}: {} round(s) missing in \
+                     {}..={} (first gap: round {})",
+                    s.missing_rounds.len(),
+                    s.round_min,
+                    s.round_max,
+                    s.missing_rounds[0]
+                );
+                return 1;
+            }
             0
         }
         Err(e) => {
             eprintln!("telemetry-check: {path}: {e}");
             1
         }
+    }
+}
+
+/// `dsba report <run.jsonl> [--json]` — full run analysis of a
+/// telemetry stream: fitted geometric convergence rate, per-node phase
+/// breakdown, straggler attribution, and the per-round
+/// bytes-vs-DOUBLEs budget.
+fn cmd_report(args: &[String]) -> i32 {
+    let f = flags(args);
+    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!("usage: dsba report <run.jsonl> [--json]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("report: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    match crate::telemetry::RunReport::from_stream(&text) {
+        Ok(rep) => {
+            if f.contains_key("json") {
+                println!("{}", rep.to_json());
+            } else {
+                print!("{}", rep.render_text());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("report: {path}: {e}");
+            1
+        }
+    }
+}
+
+/// `dsba bench-compare <old.json> <new.json> [--tol PCT]` — diff two
+/// bench snapshots and exit 1 on any metric regression beyond the
+/// tolerance (or a sweep cell that disappeared). The perf-trajectory
+/// gate: CI runs it with `results/BENCH_*.json` as the old side.
+fn cmd_bench_compare(args: &[String]) -> i32 {
+    let usage = "usage: dsba bench-compare <old.json> <new.json> [--tol PCT]";
+    let mut pos = Vec::new();
+    let mut tol = 10.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tol" {
+            let Some(v) = args.get(i + 1) else {
+                eprintln!("{usage}");
+                return 2;
+            };
+            match v.parse::<f64>() {
+                Ok(t) if t >= 0.0 => tol = t,
+                _ => {
+                    eprintln!("bad --tol {v} (want a non-negative percentage)");
+                    return 2;
+                }
+            }
+            i += 2;
+        } else if args[i].starts_with("--") {
+            eprintln!("unknown flag {}\n{usage}", args[i]);
+            return 2;
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let [old_path, new_path] = pos.as_slice() else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let load = |path: &str| -> Result<json::Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        json::parse(&text)
+    };
+    let (old, new) = match (load(old_path), load(new_path)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) => {
+            eprintln!("bench-compare: {old_path}: {e}");
+            return 1;
+        }
+        (_, Err(e)) => {
+            eprintln!("bench-compare: {new_path}: {e}");
+            return 1;
+        }
+    };
+    let cmp = crate::telemetry::bench_compare(&old, &new, tol);
+    print!("{}", cmp.render_text(tol));
+    if cmp.regressed() {
+        1
+    } else {
+        0
     }
 }
 
@@ -613,5 +757,97 @@ mod tests {
         for k in AlgorithmKind::all() {
             assert!(methods.contains(k.name()), "{} missing from help text", k.name());
         }
+    }
+
+    #[test]
+    fn report_analyzes_a_stream() {
+        // no path → usage error; missing file → runtime error
+        assert_eq!(dispatch(&["report".to_string()]), 2);
+        assert_eq!(
+            dispatch(&["report".to_string(), "/nonexistent/r.jsonl".to_string()]),
+            1
+        );
+        let dir = std::env::temp_dir().join(format!("dsba_cli_rep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut stream = String::new();
+        for (round, residual) in [(0u64, 0.8f64), (1, 0.4)] {
+            let row = crate::telemetry::TelemetryRow {
+                round,
+                node: 0,
+                residual,
+                doubles_sent: 8.0,
+                doubles_recv: 8.0,
+                bytes_on_wire: 128,
+                wall_micros: 1000,
+                wait_micros: 300,
+                drain_micros: 100,
+                compute_micros: 500,
+                encode_micros: 50,
+                send_micros: 50,
+                ..crate::telemetry::TelemetryRow::default()
+            };
+            stream.push_str(&row.to_json_line());
+            stream.push('\n');
+        }
+        let path = dir.join("run.jsonl");
+        std::fs::write(&path, &stream).unwrap();
+        assert_eq!(dispatch(&["report".to_string(), path.display().to_string()]), 0);
+        assert_eq!(
+            dispatch(&[
+                "report".to_string(),
+                path.display().to_string(),
+                "--json".to_string()
+            ]),
+            0
+        );
+        // an empty stream has nothing to report
+        let empty = dir.join("empty.jsonl");
+        std::fs::write(&empty, "").unwrap();
+        assert_eq!(dispatch(&["report".to_string(), empty.display().to_string()]), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_compare_gates_regressions() {
+        assert_eq!(dispatch(&["bench-compare".to_string()]), 2);
+        let dir = std::env::temp_dir().join(format!("dsba_cli_bc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("old.json");
+        let ok_new = dir.join("ok.json");
+        let bad_new = dir.join("bad.json");
+        let snap = |secs: f64| {
+            format!(
+                "{{\"bench\":\"engine\",\"sweep\":[{{\"mode\":\"sync\",\
+                 \"nodes\":4,\"secs\":{secs},\"rounds_per_sec\":{}}}]}}",
+                1.0 / secs
+            )
+        };
+        std::fs::write(&old, snap(0.010)).unwrap();
+        std::fs::write(&ok_new, snap(0.0105)).unwrap();
+        std::fs::write(&bad_new, snap(0.050)).unwrap();
+        let run = |new: &std::path::Path, tol: &str| {
+            dispatch(&[
+                "bench-compare".to_string(),
+                old.display().to_string(),
+                new.display().to_string(),
+                "--tol".to_string(),
+                tol.to_string(),
+            ])
+        };
+        assert_eq!(run(&ok_new, "10"), 0, "5% drift within 10% tolerance");
+        assert_eq!(run(&bad_new, "10"), 1, "5x slowdown must fail the gate");
+        assert_eq!(run(&bad_new, "10000"), 0, "huge tolerance passes anything");
+        // bad tolerance / unknown flag → usage errors
+        assert_eq!(run(&ok_new, "-3"), 2);
+        assert_eq!(
+            dispatch(&[
+                "bench-compare".to_string(),
+                old.display().to_string(),
+                ok_new.display().to_string(),
+                "--bogus".to_string()
+            ]),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

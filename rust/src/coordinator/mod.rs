@@ -382,7 +382,9 @@ impl Experiment {
                 .unwrap_or_else(|| "a worker panicked".to_string());
             return Err(format!("run failed: {why}"));
         }
-        Ok(Trace { method: self.kind, rows, z_star })
+        // read before the engine drops (dropping joins the writer thread)
+        let telemetry_dropped = alg.telemetry_dropped();
+        Ok(Trace { method: self.kind, rows, z_star, telemetry_dropped })
     }
 
     fn sample(
@@ -567,6 +569,10 @@ pub struct Trace {
     pub method: AlgorithmKind,
     pub rows: Vec<MetricsRow>,
     pub z_star: Vec<f64>,
+    /// Rows the telemetry writer's wait-free channel dropped during the
+    /// run (`None` when the run carried no telemetry). Nonzero means the
+    /// JSONL stream under-reports the run and must be read accordingly.
+    pub telemetry_dropped: Option<u64>,
 }
 
 impl Trace {

@@ -82,6 +82,7 @@ use crate::graph::{MixingMatrix, Topology};
 use crate::metrics::{decode_stat_rows, encode_stat_rows, GlobalStats, NodeStatRow};
 use crate::operators::Problem;
 use crate::runtime::transport::{LinkStats, LocalTransport, NodePort, Transport};
+use crate::telemetry::trace::{Phase, PhaseSpans, SpanTimer};
 use crate::telemetry::{TelemetryRow, TelemetrySink, TelemetrySpec, TelemetryWriter};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -269,6 +270,10 @@ fn doubles_and_bytes(kind: CostKind) -> (f64, u64) {
 /// node's local step. All counters are per-round; the link-layer fault
 /// counters are the port's *cumulative* totals snapshot at flush time,
 /// and `stalls` is the engine-wide stalled-scan total.
+///
+/// The accumulator only exists when telemetry is enabled (it lives in
+/// `HostedNode::telem: Option<_>`), so every span clock read below is
+/// behind that `Option` — an uninstrumented run pays nothing.
 struct NodeTelemetry {
     sink: TelemetrySink,
     /// previous round's iterate — the row's `residual` is the l2 step
@@ -281,6 +286,8 @@ struct NodeTelemetry {
     bytes_on_wire: u64,
     queue_depth: u64,
     staleness: u64,
+    /// per-phase monotonic-clock spans for the current round window
+    spans: PhaseSpans,
 }
 
 impl NodeTelemetry {
@@ -294,6 +301,7 @@ impl NodeTelemetry {
             bytes_on_wire: 0,
             queue_depth: 0,
             staleness: 0,
+            spans: PhaseSpans::new(),
         }
     }
 
@@ -319,6 +327,7 @@ impl NodeTelemetry {
             .sum::<f64>()
             .sqrt();
         self.prev.copy_from_slice(iter);
+        let spans = self.spans.take();
         self.sink.emit(TelemetryRow {
             round: t,
             node: node as u32,
@@ -334,6 +343,11 @@ impl NodeTelemetry {
             dedups: link.dedups,
             drops_injected: link.drops_injected,
             dups_injected: link.dups_injected,
+            wait_micros: spans.get(Phase::Wait),
+            drain_micros: spans.get(Phase::Drain),
+            compute_micros: spans.get(Phase::Compute),
+            encode_micros: spans.get(Phase::Encode),
+            send_micros: spans.get(Phase::Send),
         });
         self.since = std::time::Instant::now();
         self.doubles_sent = 0.0;
@@ -523,7 +537,13 @@ fn emit_round(hn: &mut HostedNode, t: usize, shared: &Shared) {
     if let Some(cs) = hn.comp.as_mut() {
         cs.cache = None; // the cache is per-round
     }
+    // span clock only when this node is telemetered — hot path stays
+    // clock-free otherwise
+    let mut timer = hn.telem.as_ref().map(|_| SpanTimer::start());
     let outs = hn.state.outgoing(t);
+    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+        tmr.lap(&mut tm.spans, Phase::Encode);
+    }
     let mut batch: Vec<CostEvent> = Vec::with_capacity(outs.len());
     for (seq, out) in outs.into_iter().enumerate() {
         // compression happens here, at the transport boundary: dense
@@ -534,20 +554,45 @@ fn emit_round(hn: &mut HostedNode, t: usize, shared: &Shared) {
             (m, _) => m,
         };
         let kind = cost_kind_of(&msg);
-        if let Some(tm) = hn.telem.as_mut() {
+        if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
             tm.on_send(kind);
+            tmr.lap(&mut tm.spans, Phase::Encode);
         }
         batch.push(CostEvent { t: t as u64, from: hn.idx, seq: seq as u32, to: out.to, kind });
         shared.sent.fetch_add(1, Ordering::Relaxed);
         if let Err(e) = hn.port.send(t, out.to, seq as u32, msg) {
             shared.transport_failure(e);
         }
+        if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+            tmr.lap(&mut tm.spans, Phase::Send);
+        }
     }
     if let Err(e) = hn.port.finish_round(t) {
         shared.transport_failure(e);
     }
+    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+        tmr.lap(&mut tm.spans, Phase::Send);
+    }
     if !batch.is_empty() {
         shared.costs.lock().unwrap().extend(batch);
+    }
+}
+
+/// Barrier wait with the blocked time attributed to every hosted
+/// node's `wait` span. Telemetry-off workers take the plain wait — no
+/// clock reads on the uninstrumented path.
+fn barrier_wait_timed(barrier: &Barrier, nodes: &mut [HostedNode], telem_on: bool) {
+    if !telem_on {
+        barrier.wait();
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    barrier.wait();
+    let waited = t0.elapsed();
+    for hn in nodes.iter_mut() {
+        if let Some(tm) = hn.telem.as_mut() {
+            tm.spans.record(Phase::Wait, waited);
+        }
     }
 }
 
@@ -560,9 +605,10 @@ fn round_clock_loop(
     stop: Arc<AtomicBool>,
     faults: WorkerFaults,
 ) {
+    let telem_on = nodes.iter().any(|hn| hn.telem.is_some());
     let mut t = 0usize;
     loop {
-        barrier.wait(); // round (or stats hop) start
+        barrier_wait_timed(&barrier, &mut nodes, telem_on); // round (or stats hop) start
         if stop.load(Ordering::SeqCst) {
             break;
         }
@@ -624,16 +670,24 @@ fn round_clock_loop(
                 shared.panicked.store(true, Ordering::SeqCst);
             }
         }
-        barrier.wait(); // all sends complete
+        barrier_wait_timed(&barrier, &mut nodes, telem_on); // all sends complete
         // phase B: drain inboxes (canonical order), run local steps
         if !shared.panicked.load(Ordering::SeqCst) {
             let phase_b = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut recv_batch: Vec<CostEvent> = Vec::new();
                 for hn in nodes.iter_mut() {
+                    let mut timer = hn.telem.as_ref().map(|_| SpanTimer::start());
                     let mut msgs = match hn.port.drain_round(t) {
                         Ok(m) => m,
                         Err(e) => shared.transport_failure(e),
                     };
+                    // a TCP port blocks on peer watermarks inside the
+                    // drain call — that share of the lap is wait, not
+                    // drain
+                    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+                        let blocked = hn.port.take_blocked_micros();
+                        tmr.lap_split(&mut tm.spans, Phase::Drain, blocked);
+                    }
                     msgs.sort_by_key(|&(from, seq, _)| (from, seq));
                     for (from, seq, msg) in msgs {
                         shared.delivered.fetch_add(1, Ordering::Relaxed);
@@ -667,7 +721,13 @@ fn round_clock_loop(
                         };
                         hn.state.on_receive(from, msg);
                     }
+                    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+                        tmr.lap(&mut tm.spans, Phase::Drain);
+                    }
                     hn.state.local_step(t);
+                    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+                        tmr.lap(&mut tm.spans, Phase::Compute);
+                    }
                     shared.slots[hn.idx]
                         .lock()
                         .unwrap()
@@ -688,7 +748,7 @@ fn round_clock_loop(
                 shared.panicked.store(true, Ordering::SeqCst);
             }
         }
-        barrier.wait(); // round end
+        barrier_wait_timed(&barrier, &mut nodes, telem_on); // round end
         t += 1;
     }
 }
@@ -740,6 +800,11 @@ fn async_admit(
         }
     };
     if ctl.in_nbrs.iter().enumerate().all(|(k, &m)| wm_of(m) >= need(k)) {
+        // attribute the admission block (first refusal to now) to the
+        // node's wait span before clearing it
+        if let (Some(tm), Some(since)) = (hn.telem.as_mut(), ctl.wait_since.take()) {
+            tm.spans.record(Phase::Wait, since.elapsed());
+        }
         ctl.wait_since = None;
         return true;
     }
@@ -778,6 +843,7 @@ fn async_admit(
 /// left untouched, exactly like a quiet neighbor under the sync clock.
 fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shared) {
     let r = ctl.r;
+    let mut timer = hn.telem.as_ref().map(|_| SpanTimer::start());
     let drained = match hn.port.drain_up_to(r as usize) {
         Ok(d) => d,
         Err(e) => shared.transport_failure(e),
@@ -848,7 +914,14 @@ fn async_deliver_and_step(hn: &mut HostedNode, ctl: &mut AsyncCtl, shared: &Shar
             }
         }
     }
+    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+        let blocked = hn.port.take_blocked_micros();
+        tmr.lap_split(&mut tm.spans, Phase::Drain, blocked);
+    }
     hn.state.local_step(r as usize);
+    if let (Some(tm), Some(tmr)) = (hn.telem.as_mut(), timer.as_mut()) {
+        tmr.lap(&mut tm.spans, Phase::Compute);
+    }
     shared.slots[hn.idx].lock().unwrap().copy_from_slice(hn.state.iterate());
     shared.evals[hn.idx].store(hn.state.evals(), Ordering::Relaxed);
     shared.completed[hn.idx].store(r + 1, Ordering::SeqCst);
@@ -1228,7 +1301,7 @@ impl ParallelEngine {
             if !is_hosted[idx] {
                 continue; // built for RNG parity, stepped by a peer engine
             }
-            let port = port_iter.next().unwrap();
+            let mut port = port_iter.next().unwrap();
             let cross: Vec<usize> = topo
                 .neighbors(idx)
                 .iter()
@@ -1243,6 +1316,12 @@ impl ParallelEngine {
                 cache: None,
             });
             let telem = writer.as_ref().map(|w| NodeTelemetry::new(w.sink(), &z[idx]));
+            // blocked-time tracking inside the port's drain path exists
+            // only for telemetered runs (it costs two clock reads per
+            // blocking receive)
+            if telem.is_some() {
+                port.set_wait_tracking(true);
+            }
             buckets[k * threads / h]
                 .push(HostedNode { idx, state: node, port, cross, comp, telem });
             k += 1;
@@ -1474,6 +1553,12 @@ impl Algorithm for ParallelEngine {
 
     fn name(&self) -> &'static str {
         self.kind.name()
+    }
+
+    /// Surface the inherent accessor through the trait so the
+    /// coordinator can report writer drops without downcasting.
+    fn telemetry_dropped(&self) -> Option<u64> {
+        ParallelEngine::telemetry_dropped(self)
     }
 
     /// `(max consumed staleness in rounds, stalled scans)` — nonzero

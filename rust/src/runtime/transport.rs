@@ -241,6 +241,22 @@ pub trait NodePort: Send {
     fn counters_handle(&self) -> Option<Arc<LinkCounters>> {
         None
     }
+
+    /// Enable blocked-time tracking inside the port's drain path, so the
+    /// engine's phase spans can attribute time the port spends parked on
+    /// peer watermarks to `wait` rather than `drain`. Off by default —
+    /// it costs two clock reads per blocking receive — and a no-op on
+    /// backends whose drains never block (the in-process transport).
+    fn set_wait_tracking(&mut self, on: bool) {
+        let _ = on;
+    }
+
+    /// Microseconds the port spent blocked on peers inside drain calls
+    /// since the last take (resets to zero). Always 0 unless
+    /// [`NodePort::set_wait_tracking`] enabled tracking.
+    fn take_blocked_micros(&mut self) -> u64 {
+        0
+    }
 }
 
 /// A connected communication backend for one engine instance: the set of
@@ -827,6 +843,8 @@ impl TcpTransport {
                 drain_timeout: drain_timeout(),
                 shutdown,
                 counters,
+                track_wait: false,
+                blocked_micros: 0,
             });
         }
         debug_assert!(streams.is_empty(), "unassigned streams after port assembly");
@@ -912,6 +930,11 @@ struct TcpPort {
     shutdown: Vec<TcpStream>,
     /// reliable-link counters shared across this port's links
     counters: Arc<LinkCounters>,
+    /// measure time parked in `drain_round`'s blocking receive (set by
+    /// the engine for telemetered nodes only)
+    track_wait: bool,
+    /// accumulated blocked receive time, drained by `take_blocked_micros`
+    blocked_micros: u64,
 }
 
 impl NodePort for TcpPort {
@@ -984,30 +1007,39 @@ impl NodePort for TcpPort {
         while remaining > 0 {
             let ev = match queue.pop_front() {
                 Some(ev) => ev,
-                None => match self.inbox.recv_timeout(self.drain_timeout) {
-                    Ok(ev) => ev,
-                    Err(_) => {
-                        // name every missing peer with its last-seen
-                        // watermark so straggler triage isn't guesswork
-                        let missing: Vec<String> = self
-                            .neighbors
-                            .iter()
-                            .zip(&ended)
-                            .zip(&self.marks)
-                            .filter(|((_, &done), _)| !done)
-                            .map(|((&m, _), mark)| match mark.load(Ordering::SeqCst) {
-                                0 => format!("peer {m} (no watermark yet)"),
-                                w => format!("peer {m} (last watermark: round {})", w - 1),
-                            })
-                            .collect();
-                        return Err(format!(
-                            "node {}: round {t} never completed — waiting on {} \
-                             (remote engine dead or stalled)",
-                            self.id,
-                            missing.join(", ")
-                        ));
+                None => {
+                    let t0 = self.track_wait.then(std::time::Instant::now);
+                    let recv = self.inbox.recv_timeout(self.drain_timeout);
+                    if let Some(t0) = t0 {
+                        self.blocked_micros = self
+                            .blocked_micros
+                            .saturating_add(t0.elapsed().as_micros() as u64);
                     }
-                },
+                    match recv {
+                        Ok(ev) => ev,
+                        Err(_) => {
+                            // name every missing peer with its last-seen
+                            // watermark so straggler triage isn't guesswork
+                            let missing: Vec<String> = self
+                                .neighbors
+                                .iter()
+                                .zip(&ended)
+                                .zip(&self.marks)
+                                .filter(|((_, &done), _)| !done)
+                                .map(|((&m, _), mark)| match mark.load(Ordering::SeqCst) {
+                                    0 => format!("peer {m} (no watermark yet)"),
+                                    w => format!("peer {m} (last watermark: round {})", w - 1),
+                                })
+                                .collect();
+                            return Err(format!(
+                                "node {}: round {t} never completed — waiting on {} \
+                                 (remote engine dead or stalled)",
+                                self.id,
+                                missing.join(", ")
+                            ));
+                        }
+                    }
+                }
             };
             match ev {
                 TcpEvent::Msg { from, t: et, seq, msg } => {
@@ -1205,6 +1237,14 @@ impl NodePort for TcpPort {
 
     fn counters_handle(&self) -> Option<Arc<LinkCounters>> {
         Some(self.counters.clone())
+    }
+
+    fn set_wait_tracking(&mut self, on: bool) {
+        self.track_wait = on;
+    }
+
+    fn take_blocked_micros(&mut self) -> u64 {
+        std::mem::take(&mut self.blocked_micros)
     }
 }
 

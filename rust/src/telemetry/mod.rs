@@ -1,26 +1,40 @@
-//! Run telemetry: a versioned per-round, per-node JSONL evidence stream.
+//! Run telemetry: a versioned per-round, per-node JSONL evidence stream,
+//! plus the interpretation layer that turns a stream into answers.
 //!
-//! Three layers, split by concern:
+//! Five layers, split by concern:
 //!
-//! - [`schema`] — the versioned [`TelemetryRow`] record and the
-//!   [`validate_jsonl`] stream check (`dsba telemetry-check`).
+//! - [`schema`] — the versioned [`TelemetryRow`] record (v2 adds the
+//!   per-round phase spans and the trailing [`TelemetrySummary`] line)
+//!   and the [`validate_jsonl`] stream check (`dsba telemetry-check`).
+//! - [`trace`] — the phase-span recorder the engine worker loops use to
+//!   attribute each round's time to `wait` / `drain` / `compute` /
+//!   `encode` / `send` (only active when telemetry is enabled).
 //! - [`writer`] — the non-blocking producer/consumer pair: workers
 //!   [`TelemetrySink::emit`] into a bounded channel (drop-with-counter on
 //!   overflow, never blocking the round hot path); one dedicated thread
-//!   serializes and appends.
+//!   serializes and appends, closing the stream with a summary line.
 //! - [`retention`] — size-based rotation of the JSONL file
 //!   (`telemetry.max_bytes` / `telemetry.keep`).
+//! - [`report`] — stream analysis (`dsba report`): fitted convergence
+//!   rate, per-node phase breakdown, straggler attribution, and the
+//!   bytes-vs-DOUBLEs budget — plus the bench snapshot diff behind
+//!   `dsba bench-compare`.
 //!
 //! [`TelemetrySpec`] is the configuration value that travels through
 //! `EngineSpec` / config JSON / `--telemetry`, exactly like
 //! `CompressionSpec` and `ModeSpec` before it.
 
+pub mod report;
 pub mod retention;
 pub mod schema;
+pub mod trace;
 pub mod writer;
 
+pub use report::{bench_compare, BenchComparison, RunReport, StreamSummary};
 pub use retention::RotatingFile;
-pub use schema::{validate_jsonl, TelemetryRow, TELEMETRY_SCHEMA_VERSION};
+pub use schema::{
+    validate_jsonl, TelemetryLine, TelemetryRow, TelemetrySummary, TELEMETRY_SCHEMA_VERSION,
+};
 pub use writer::{TelemetrySink, TelemetryWriter};
 
 use crate::util::json::Json;

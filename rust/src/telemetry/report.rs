@@ -1,0 +1,859 @@
+//! Run analysis over a telemetry stream, and bench snapshot diffing.
+//!
+//! Two consumers live here:
+//!
+//! - [`RunReport`] (`dsba report <run.jsonl>`) turns a JSONL stream into
+//!   answers: a fitted geometric convergence rate from the residual
+//!   series, a per-node phase breakdown (where each node's round time
+//!   went), straggler attribution (whose `wait` dominated, cross-
+//!   referenced with staleness and link-fault counters), and the
+//!   bytes-vs-DOUBLEs communication budget per round.
+//! - [`bench_compare`] (`dsba bench-compare <old> <new> --tol PCT`)
+//!   diffs two `results/BENCH_*.json` snapshots cell by cell and flags
+//!   metric regressions beyond a tolerance — the perf-trajectory gate CI
+//!   runs against the committed snapshots.
+//!
+//! Both read the hand-rolled [`Json`] value type, so they work on any
+//! stream or snapshot this crate (or a prior schema version of it)
+//! wrote. Accounting caveat worth knowing when reading budgets: a row's
+//! `bytes_on_wire` counts both the node's sends and its receives, so
+//! fleet byte totals count each intra-engine message twice — the
+//! per-round budget reports it as-is and prices bytes against
+//! sent + received DOUBLEs to keep the ratio honest.
+
+use super::schema::{TelemetryLine, TelemetryRow, TelemetrySummary};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Stream-level accounting for `dsba telemetry-check`: row/node/round
+/// counts, round gaps (rotation ate the middle of a run), cumulative
+/// fault-counter totals, and the writer's trailing summary when present.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StreamSummary {
+    /// Data rows in the stream.
+    pub rows: usize,
+    /// Distinct reporting nodes, ascending.
+    pub nodes: Vec<u32>,
+    /// Smallest round seen (0 when the stream is empty).
+    pub round_min: u64,
+    /// Largest round seen (0 when the stream is empty).
+    pub round_max: u64,
+    /// Distinct rounds seen.
+    pub rounds_seen: usize,
+    /// Rounds in `round_min..=round_max` with no row at all (listing
+    /// capped at 10 000 entries so a corrupt round number cannot make
+    /// summarization unbounded).
+    pub missing_rounds: Vec<u64>,
+    /// Fleet totals of the cumulative per-node counters, summed over
+    /// each node's last row.
+    pub stalls: u64,
+    pub retransmits: u64,
+    pub dedups: u64,
+    pub drops_injected: u64,
+    pub dups_injected: u64,
+    /// The writer's trailing summary line, when the stream has one.
+    pub writer: Option<TelemetrySummary>,
+}
+
+impl StreamSummary {
+    /// Parse and summarize a whole stream (strict: any malformed line
+    /// fails, naming the line).
+    pub fn from_stream(text: &str) -> Result<StreamSummary, String> {
+        let (rows, writer) = parse_stream(text)?;
+        Ok(StreamSummary::from_rows(&rows, writer))
+    }
+
+    fn from_rows(rows: &[TelemetryRow], writer: Option<TelemetrySummary>) -> StreamSummary {
+        let mut s = StreamSummary { rows: rows.len(), writer, ..StreamSummary::default() };
+        if rows.is_empty() {
+            return s;
+        }
+        let mut rounds: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+        // the link/stall counters are cumulative per node: the node's
+        // last row carries its total
+        let mut last: BTreeMap<u32, &TelemetryRow> = BTreeMap::new();
+        for r in rows {
+            rounds.insert(r.round);
+            match last.entry(r.node) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(r);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    if r.round >= e.get().round {
+                        e.insert(r);
+                    }
+                }
+            }
+        }
+        s.nodes = last.keys().copied().collect();
+        s.round_min = *rounds.iter().next().unwrap();
+        s.round_max = *rounds.iter().next_back().unwrap();
+        s.rounds_seen = rounds.len();
+        // walk gaps between consecutive seen rounds, capped so a corrupt
+        // round number cannot make the scan unbounded
+        const MISSING_CAP: usize = 10_000;
+        let seen: Vec<u64> = rounds.iter().copied().collect();
+        'gaps: for w in seen.windows(2) {
+            let mut t = w[0] + 1;
+            while t < w[1] {
+                s.missing_rounds.push(t);
+                if s.missing_rounds.len() >= MISSING_CAP {
+                    break 'gaps;
+                }
+                t += 1;
+            }
+        }
+        for r in last.values() {
+            s.stalls += r.stalls;
+            s.retransmits += r.retransmits;
+            s.dedups += r.dedups;
+            s.drops_injected += r.drops_injected;
+            s.dups_injected += r.dups_injected;
+        }
+        s
+    }
+}
+
+/// Parse every line of a stream into data rows plus the optional
+/// trailing writer summary (last one wins if rotation left several).
+pub fn parse_stream(
+    text: &str,
+) -> Result<(Vec<TelemetryRow>, Option<TelemetrySummary>), String> {
+    let mut rows = Vec::new();
+    let mut writer = None;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match TelemetryLine::parse(line).map_err(|e| format!("line {}: {e}", i + 1))? {
+            TelemetryLine::Row(r) => rows.push(r),
+            TelemetryLine::Summary(s) => writer = Some(s),
+        }
+    }
+    Ok((rows, writer))
+}
+
+/// Least-squares geometric fit of the round-mean residual series:
+/// `residual(t) ~ c * rate^t`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvergenceFit {
+    /// Fitted per-round contraction factor (`< 1` means converging).
+    pub rate: f64,
+    /// Rounds for the residual to halve (infinite when `rate >= 1`).
+    pub half_life: f64,
+    /// Rounds with a positive mean residual used in the fit.
+    pub points: usize,
+}
+
+/// One node's totals over the stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NodeBreakdown {
+    pub node: u32,
+    /// Rows (= reported rounds) from this node.
+    pub rounds: u64,
+    /// Phase-span totals in microseconds (all zero on a v1 stream).
+    pub wait_micros: u64,
+    pub drain_micros: u64,
+    pub compute_micros: u64,
+    pub encode_micros: u64,
+    pub send_micros: u64,
+    /// Total reported wall time in microseconds.
+    pub wall_micros: u64,
+    /// Worst staleness this node consumed.
+    pub max_staleness: u64,
+    /// Cumulative counters from the node's last row.
+    pub stalls: u64,
+    pub retransmits: u64,
+    pub dedups: u64,
+    pub drops_injected: u64,
+    pub dups_injected: u64,
+}
+
+impl NodeBreakdown {
+    /// Sum of the five attributed phase spans.
+    pub fn attributed_micros(&self) -> u64 {
+        self.wait_micros
+            + self.drain_micros
+            + self.compute_micros
+            + self.encode_micros
+            + self.send_micros
+    }
+}
+
+/// Straggler/stall attribution: whose `wait` dominated, and what the
+/// counters say about why.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Straggler {
+    /// Node with the largest total `wait` span.
+    pub wait_node: u32,
+    /// That node's share of the fleet's total wait, in percent.
+    pub wait_share_pct: f64,
+    /// Node with the largest total `compute` span — the likely cause
+    /// everyone else waited on.
+    pub slow_node: u32,
+}
+
+/// The full `dsba report` analysis of one telemetry stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    pub summary: StreamSummary,
+    pub convergence: Option<ConvergenceFit>,
+    /// Per-node breakdowns, ascending by node id.
+    pub per_node: Vec<NodeBreakdown>,
+    /// `None` when the stream has no wait spans at all (v1 rows).
+    pub straggler: Option<Straggler>,
+    /// Per-round communication budget, averaged over seen rounds.
+    pub doubles_sent_per_round: f64,
+    pub doubles_recv_per_round: f64,
+    pub bytes_per_round: f64,
+    /// Wire bytes per moved DOUBLE (sent + received); 8.0 means dense
+    /// uncompressed doubles.
+    pub bytes_per_double: f64,
+}
+
+impl RunReport {
+    /// Analyze a whole stream. Fails on malformed lines or an empty
+    /// stream (an empty run has nothing to report).
+    pub fn from_stream(text: &str) -> Result<RunReport, String> {
+        let (rows, writer) = parse_stream(text)?;
+        if rows.is_empty() {
+            return Err("telemetry stream has no data rows".to_string());
+        }
+        let summary = StreamSummary::from_rows(&rows, writer);
+        let convergence = fit_rate(&rows);
+
+        let mut by_node: BTreeMap<u32, NodeBreakdown> = BTreeMap::new();
+        let mut last_round: BTreeMap<u32, u64> = BTreeMap::new();
+        for r in &rows {
+            let b = by_node.entry(r.node).or_insert(NodeBreakdown {
+                node: r.node,
+                ..NodeBreakdown::default()
+            });
+            b.rounds += 1;
+            b.wait_micros += r.wait_micros;
+            b.drain_micros += r.drain_micros;
+            b.compute_micros += r.compute_micros;
+            b.encode_micros += r.encode_micros;
+            b.send_micros += r.send_micros;
+            b.wall_micros += r.wall_micros;
+            b.max_staleness = b.max_staleness.max(r.staleness);
+            let lr = last_round.entry(r.node).or_insert(0);
+            if r.round >= *lr {
+                *lr = r.round;
+                b.stalls = r.stalls;
+                b.retransmits = r.retransmits;
+                b.dedups = r.dedups;
+                b.drops_injected = r.drops_injected;
+                b.dups_injected = r.dups_injected;
+            }
+        }
+        let per_node: Vec<NodeBreakdown> = by_node.into_values().collect();
+
+        let fleet_wait: u64 = per_node.iter().map(|b| b.wait_micros).sum();
+        let straggler = if fleet_wait == 0 {
+            None
+        } else {
+            let wait_top = per_node.iter().max_by_key(|b| b.wait_micros).unwrap();
+            let slow_top = per_node.iter().max_by_key(|b| b.compute_micros).unwrap();
+            Some(Straggler {
+                wait_node: wait_top.node,
+                wait_share_pct: wait_top.wait_micros as f64 / fleet_wait as f64 * 100.0,
+                slow_node: slow_top.node,
+            })
+        };
+
+        let rounds = summary.rounds_seen.max(1) as f64;
+        let sent: f64 = rows.iter().map(|r| r.doubles_sent).sum();
+        let recv: f64 = rows.iter().map(|r| r.doubles_recv).sum();
+        let bytes: f64 = rows.iter().map(|r| r.bytes_on_wire as f64).sum();
+        let moved = sent + recv;
+        Ok(RunReport {
+            summary,
+            convergence,
+            per_node,
+            straggler,
+            doubles_sent_per_round: sent / rounds,
+            doubles_recv_per_round: recv / rounds,
+            bytes_per_round: bytes / rounds,
+            bytes_per_double: if moved > 0.0 { bytes / moved } else { 0.0 },
+        })
+    }
+
+    /// Human-readable report (the default `dsba report` output).
+    pub fn render_text(&self) -> String {
+        let s = &self.summary;
+        let mut out = String::new();
+        out.push_str("run report\n");
+        out.push_str(&format!(
+            "  rows: {} over {} node(s), rounds {}..={} ({} seen, {} missing)\n",
+            s.rows,
+            s.nodes.len(),
+            s.round_min,
+            s.round_max,
+            s.rounds_seen,
+            s.missing_rounds.len()
+        ));
+        match &s.writer {
+            Some(w) => out.push_str(&format!(
+                "  writer: {} rows written, {} dropped\n",
+                w.rows_written, w.rows_dropped
+            )),
+            None => out.push_str("  writer: no summary line (stream truncated or pre-v2)\n"),
+        }
+        match &self.convergence {
+            Some(f) if f.rate < 1.0 => out.push_str(&format!(
+                "  convergence: residual contracts {:.4}x/round \
+                 (half-life {:.1} rounds, {}-point fit)\n",
+                f.rate, f.half_life, f.points
+            )),
+            Some(f) => out.push_str(&format!(
+                "  convergence: no contraction (fitted rate {:.4}/round, {}-point fit)\n",
+                f.rate, f.points
+            )),
+            None => out.push_str(
+                "  convergence: no fit (fewer than 2 rounds with positive residual)\n",
+            ),
+        }
+        out.push_str(&format!(
+            "  comm budget per round: {:.1} DOUBLEs sent, {:.1} received, \
+             {:.1} wire bytes ({:.2} bytes/DOUBLE)\n",
+            self.doubles_sent_per_round,
+            self.doubles_recv_per_round,
+            self.bytes_per_round,
+            self.bytes_per_double
+        ));
+
+        let attributed: u64 = self.per_node.iter().map(|b| b.attributed_micros()).sum();
+        if attributed == 0 {
+            out.push_str(
+                "phase breakdown: stream carries no phase spans (v1 rows)\n",
+            );
+            return out;
+        }
+        out.push_str("phase breakdown (per-node totals, % of attributed time)\n");
+        out.push_str(&format!(
+            "{:>6} {:>7} {:>7} {:>7} {:>8} {:>7} {:>7} {:>9}\n",
+            "node", "rounds", "wait", "drain", "compute", "encode", "send", "wall(ms)"
+        ));
+        for b in &self.per_node {
+            let total = b.attributed_micros().max(1) as f64;
+            let pct = |v: u64| v as f64 / total * 100.0;
+            out.push_str(&format!(
+                "{:>6} {:>7} {:>6.1}% {:>6.1}% {:>7.1}% {:>6.1}% {:>6.1}% {:>9.2}\n",
+                b.node,
+                b.rounds,
+                pct(b.wait_micros),
+                pct(b.drain_micros),
+                pct(b.compute_micros),
+                pct(b.encode_micros),
+                pct(b.send_micros),
+                b.wall_micros as f64 / 1e3
+            ));
+        }
+        match &self.straggler {
+            None => out.push_str("straggler attribution: unavailable (no wait spans)\n"),
+            Some(st) => {
+                out.push_str("straggler attribution\n");
+                out.push_str(&format!(
+                    "  wait dominated by node {} ({:.1}% of fleet wait); \
+                     slowest compute: node {}\n",
+                    st.wait_node, st.wait_share_pct, st.slow_node
+                ));
+                if let Some(b) = self.per_node.iter().find(|b| b.node == st.wait_node) {
+                    out.push_str(&format!(
+                        "  node {} counters: max staleness {}, {} stalls, \
+                         {} retransmits, {} dedups, {} drops injected, \
+                         {} dups injected\n",
+                        b.node,
+                        b.max_staleness,
+                        b.stalls,
+                        b.retransmits,
+                        b.dedups,
+                        b.drops_injected,
+                        b.dups_injected
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Machine-readable form (`dsba report --json`).
+    pub fn to_json(&self) -> Json {
+        let s = &self.summary;
+        let writer = match &s.writer {
+            Some(w) => Json::from_pairs(vec![
+                ("rows_written", Json::Num(w.rows_written as f64)),
+                ("rows_dropped", Json::Num(w.rows_dropped as f64)),
+            ]),
+            None => Json::Null,
+        };
+        let convergence = match &self.convergence {
+            Some(f) => {
+                let mut pairs = vec![
+                    ("rate", Json::Num(f.rate)),
+                    ("points", Json::Num(f.points as f64)),
+                ];
+                if f.half_life.is_finite() {
+                    pairs.push(("half_life_rounds", Json::Num(f.half_life)));
+                }
+                Json::from_pairs(pairs)
+            }
+            None => Json::Null,
+        };
+        let per_node: Vec<Json> = self
+            .per_node
+            .iter()
+            .map(|b| {
+                Json::from_pairs(vec![
+                    ("node", Json::Num(b.node as f64)),
+                    ("rounds", Json::Num(b.rounds as f64)),
+                    ("wait_micros", Json::Num(b.wait_micros as f64)),
+                    ("drain_micros", Json::Num(b.drain_micros as f64)),
+                    ("compute_micros", Json::Num(b.compute_micros as f64)),
+                    ("encode_micros", Json::Num(b.encode_micros as f64)),
+                    ("send_micros", Json::Num(b.send_micros as f64)),
+                    ("wall_micros", Json::Num(b.wall_micros as f64)),
+                    ("max_staleness", Json::Num(b.max_staleness as f64)),
+                    ("stalls", Json::Num(b.stalls as f64)),
+                    ("retransmits", Json::Num(b.retransmits as f64)),
+                    ("dedups", Json::Num(b.dedups as f64)),
+                    ("drops_injected", Json::Num(b.drops_injected as f64)),
+                    ("dups_injected", Json::Num(b.dups_injected as f64)),
+                ])
+            })
+            .collect();
+        let straggler = match &self.straggler {
+            Some(st) => Json::from_pairs(vec![
+                ("wait_node", Json::Num(st.wait_node as f64)),
+                ("wait_share_pct", Json::Num(st.wait_share_pct)),
+                ("slow_node", Json::Num(st.slow_node as f64)),
+            ]),
+            None => Json::Null,
+        };
+        Json::from_pairs(vec![
+            ("rows", Json::Num(s.rows as f64)),
+            (
+                "nodes",
+                Json::Arr(s.nodes.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("round_min", Json::Num(s.round_min as f64)),
+            ("round_max", Json::Num(s.round_max as f64)),
+            ("rounds_seen", Json::Num(s.rounds_seen as f64)),
+            (
+                "missing_rounds",
+                Json::Arr(s.missing_rounds.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("writer", writer),
+            ("convergence", convergence),
+            (
+                "budget",
+                Json::from_pairs(vec![
+                    ("doubles_sent_per_round", Json::Num(self.doubles_sent_per_round)),
+                    ("doubles_recv_per_round", Json::Num(self.doubles_recv_per_round)),
+                    ("bytes_per_round", Json::Num(self.bytes_per_round)),
+                    ("bytes_per_double", Json::Num(self.bytes_per_double)),
+                ]),
+            ),
+            ("per_node", Json::Arr(per_node)),
+            ("straggler", straggler),
+        ])
+    }
+}
+
+/// Least-squares fit of `ln(mean residual)` against the round index over
+/// rounds with a positive mean residual. Needs at least two such rounds.
+fn fit_rate(rows: &[TelemetryRow]) -> Option<ConvergenceFit> {
+    let mut by_round: BTreeMap<u64, (f64, u64)> = BTreeMap::new();
+    for r in rows {
+        let e = by_round.entry(r.round).or_insert((0.0, 0));
+        e.0 += r.residual;
+        e.1 += 1;
+    }
+    let pts: Vec<(f64, f64)> = by_round
+        .iter()
+        .filter_map(|(&t, &(sum, n))| {
+            let mean = sum / n as f64;
+            (mean > 0.0).then(|| (t as f64, mean.ln()))
+        })
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom == 0.0 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    Some(ConvergenceFit {
+        rate: slope.exp(),
+        half_life: if slope < 0.0 { (0.5f64).ln() / slope } else { f64::INFINITY },
+        points: pts.len(),
+    })
+}
+
+// --- bench snapshot diffing ------------------------------------------------
+
+/// Metrics where a larger value is a regression.
+const HIGHER_WORSE: [&str; 4] = ["secs", "per_round_secs", "bytes_on_wire", "doubles"];
+/// Metrics where a smaller value is a regression.
+const LOWER_WORSE: [&str; 1] = ["rounds_per_sec"];
+/// Non-metric numeric fields that identify a cell (alongside every
+/// string-valued field).
+const IDENTITY_NUM: [&str; 4] = ["nodes", "rounds", "dim", "threads"];
+
+/// One metric that moved in the regression direction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDelta {
+    /// `array[identity].metric`, e.g. `sweep[mode=sync,nodes=8].secs`.
+    pub path: String,
+    pub old: f64,
+    pub new: f64,
+    /// Percent worse in the metric's regression direction.
+    pub worse_pct: f64,
+}
+
+/// Outcome of diffing two bench snapshots.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchComparison {
+    /// Metric cells compared.
+    pub compared: usize,
+    /// Cells worse than the tolerance, sorted worst-first.
+    pub regressions: Vec<BenchDelta>,
+    /// Old cells with no matching cell in the new snapshot (coverage
+    /// loss counts as a regression).
+    pub missing: Vec<String>,
+}
+
+impl BenchComparison {
+    /// True when the new snapshot regressed (metric beyond tolerance or
+    /// a cell disappeared).
+    pub fn regressed(&self) -> bool {
+        !self.regressions.is_empty() || !self.missing.is_empty()
+    }
+
+    /// Human-readable diff, worst regressions first.
+    pub fn render_text(&self, tol_pct: f64) -> String {
+        let mut out = format!(
+            "bench-compare: {} metric cell(s) compared, tolerance {}%\n",
+            self.compared, tol_pct
+        );
+        for d in &self.regressions {
+            out.push_str(&format!(
+                "  REGRESSION {}: {} -> {} ({:+.1}% worse)\n",
+                d.path,
+                fmt_metric(d.old),
+                fmt_metric(d.new),
+                d.worse_pct
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("  MISSING {} (cell absent from new snapshot)\n", m));
+        }
+        if self.regressed() {
+            out.push_str(&format!(
+                "result: {} regression(s), {} missing cell(s)\n",
+                self.regressions.len(),
+                self.missing.len()
+            ));
+        } else {
+            out.push_str("result: ok (within tolerance)\n");
+        }
+        out
+    }
+}
+
+fn fmt_metric(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// Identity of one sweep cell: every string field plus the config-shaped
+/// numeric fields, `key=value` pairs in key order.
+fn record_key(obj: &BTreeMap<String, Json>) -> String {
+    let mut parts = Vec::new();
+    for (k, v) in obj {
+        if let Some(s) = v.as_str() {
+            parts.push(format!("{k}={s}"));
+        } else if IDENTITY_NUM.contains(&k.as_str()) {
+            if let Some(n) = v.as_f64() {
+                parts.push(format!("{k}={}", fmt_metric(n)));
+            }
+        }
+    }
+    parts.join(",")
+}
+
+/// Percent worse of `new` vs `old` in `metric`'s regression direction;
+/// `None` when the metric is unknown or both sides are zero.
+fn worse_pct(metric: &str, old: f64, new: f64) -> Option<f64> {
+    if HIGHER_WORSE.contains(&metric) {
+        if old <= 0.0 {
+            return (new > 0.0).then_some(f64::INFINITY);
+        }
+        Some((new - old) / old * 100.0)
+    } else if LOWER_WORSE.contains(&metric) {
+        if new <= 0.0 {
+            return (old > 0.0).then_some(f64::INFINITY);
+        }
+        Some((old - new) / new * 100.0)
+    } else {
+        None
+    }
+}
+
+/// Diff two bench snapshot documents (`results/BENCH_*.json`): walk
+/// every top-level array of cells in `old`, match cells in `new` by
+/// [`record_key`] identity, and compare the known metric fields. A cell
+/// in `old` with no counterpart in `new` is reported as missing; extra
+/// cells in `new` are fine (coverage can grow freely).
+pub fn bench_compare(old: &Json, new: &Json, tol_pct: f64) -> BenchComparison {
+    let mut cmp = BenchComparison::default();
+    let Some(old_obj) = old.as_obj() else { return cmp };
+    for (arr_key, old_val) in old_obj {
+        let Some(old_arr) = old_val.as_arr() else { continue };
+        let new_cells: BTreeMap<String, &BTreeMap<String, Json>> = new
+            .get(arr_key)
+            .and_then(Json::as_arr)
+            .map(|cells| {
+                cells
+                    .iter()
+                    .filter_map(Json::as_obj)
+                    .map(|o| (record_key(o), o))
+                    .collect()
+            })
+            .unwrap_or_default();
+        for cell in old_arr.iter().filter_map(Json::as_obj) {
+            let key = record_key(cell);
+            let Some(new_cell) = new_cells.get(&key) else {
+                cmp.missing.push(format!("{arr_key}[{key}]"));
+                continue;
+            };
+            for (metric, old_v) in cell {
+                let (Some(o), Some(n)) = (
+                    old_v.as_f64(),
+                    new_cell.get(metric).and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                let Some(pct) = worse_pct(metric, o, n) else { continue };
+                cmp.compared += 1;
+                if pct > tol_pct {
+                    cmp.regressions.push(BenchDelta {
+                        path: format!("{arr_key}[{key}].{metric}"),
+                        old: o,
+                        new: n,
+                        worse_pct: pct,
+                    });
+                }
+            }
+        }
+    }
+    cmp.regressions
+        .sort_by(|a, b| b.worse_pct.partial_cmp(&a.worse_pct).unwrap_or(std::cmp::Ordering::Equal));
+    cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn row(round: u64, node: u32, residual: f64) -> TelemetryRow {
+        TelemetryRow {
+            round,
+            node,
+            residual,
+            doubles_sent: 16.0,
+            doubles_recv: 16.0,
+            bytes_on_wire: 256,
+            wall_micros: 1200,
+            wait_micros: 400,
+            drain_micros: 100,
+            compute_micros: 400,
+            encode_micros: 50,
+            send_micros: 50,
+            ..TelemetryRow::default()
+        }
+    }
+
+    fn stream(rows: &[TelemetryRow]) -> String {
+        let mut s: String =
+            rows.iter().map(|r| r.to_json_line() + "\n").collect();
+        s.push_str(
+            &TelemetrySummary {
+                rows_written: rows.len() as u64,
+                rows_dropped: 0,
+            }
+            .to_json_line(),
+        );
+        s.push('\n');
+        s
+    }
+
+    #[test]
+    fn geometric_residuals_fit_their_rate() {
+        // residual halves every round, identically on both nodes
+        let mut rows = Vec::new();
+        for (t, r) in [(0u64, 0.8f64), (1, 0.4), (2, 0.2), (3, 0.1)] {
+            rows.push(row(t, 0, r));
+            rows.push(row(t, 1, r));
+        }
+        let rep = RunReport::from_stream(&stream(&rows)).unwrap();
+        let fit = rep.convergence.expect("4 positive points fit");
+        assert!((fit.rate - 0.5).abs() < 1e-12, "rate {}", fit.rate);
+        assert!((fit.half_life - 1.0).abs() < 1e-9, "half-life {}", fit.half_life);
+        assert_eq!(fit.points, 4);
+        // budget: 2 rows/round, 16 sent + 16 recv + 256 bytes each
+        assert_eq!(rep.doubles_sent_per_round, 32.0);
+        assert_eq!(rep.doubles_recv_per_round, 32.0);
+        assert_eq!(rep.bytes_per_round, 512.0);
+        assert_eq!(rep.bytes_per_double, 8.0);
+    }
+
+    #[test]
+    fn summary_counts_nodes_rounds_and_gaps() {
+        // rounds 0,1,4 present: 2 and 3 are the gap rotation ate
+        let rows = vec![row(0, 0, 0.5), row(1, 0, 0.4), row(4, 0, 0.1)];
+        let s = StreamSummary::from_stream(&stream(&rows)).unwrap();
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.nodes, vec![0]);
+        assert_eq!((s.round_min, s.round_max, s.rounds_seen), (0, 4, 3));
+        assert_eq!(s.missing_rounds, vec![2, 3]);
+        assert_eq!(s.writer, Some(TelemetrySummary { rows_written: 3, rows_dropped: 0 }));
+    }
+
+    #[test]
+    fn fault_counters_sum_last_row_per_node_not_all_rows() {
+        // cumulative counters: node 0 ends at 5 retransmits, node 1 at 2
+        let mut a0 = row(0, 0, 0.5);
+        a0.retransmits = 3;
+        let mut a1 = row(1, 0, 0.4);
+        a1.retransmits = 5;
+        let mut b0 = row(0, 1, 0.5);
+        b0.retransmits = 2;
+        let s = StreamSummary::from_stream(&stream(&[a0, a1, b0])).unwrap();
+        assert_eq!(s.retransmits, 7, "5 (node 0 last) + 2 (node 1 last)");
+    }
+
+    #[test]
+    fn straggler_is_the_dominant_waiter() {
+        let mut rows = Vec::new();
+        for t in 0..4u64 {
+            let mut a = row(t, 0, 0.5);
+            a.wait_micros = 100;
+            a.compute_micros = 900; // slowest compute
+            let mut b = row(t, 1, 0.5);
+            b.wait_micros = 700; // dominant waiter
+            b.compute_micros = 200;
+            b.staleness = 2;
+            rows.push(a);
+            rows.push(b);
+        }
+        let rep = RunReport::from_stream(&stream(&rows)).unwrap();
+        let st = rep.straggler.expect("wait spans present");
+        assert_eq!(st.wait_node, 1);
+        assert_eq!(st.slow_node, 0);
+        assert!((st.wait_share_pct - 87.5).abs() < 1e-9, "{}", st.wait_share_pct);
+        let b1 = rep.per_node.iter().find(|b| b.node == 1).unwrap();
+        assert_eq!(b1.max_staleness, 2);
+        let text = rep.render_text();
+        assert!(text.contains("wait dominated by node 1"), "{text}");
+        assert!(text.contains("slowest compute: node 0"), "{text}");
+    }
+
+    #[test]
+    fn v1_stream_reports_without_phase_table() {
+        let v1 = "{\"v\":1,\"round\":0,\"node\":0,\"residual\":0.5,\
+                  \"doubles_sent\":4,\"doubles_recv\":4,\"bytes_on_wire\":64,\
+                  \"wall_micros\":100,\"queue_depth\":1,\"staleness\":0,\
+                  \"stalls\":0,\"retransmits\":0,\"dedups\":0,\
+                  \"drops_injected\":0,\"dups_injected\":0}\n\
+                  {\"v\":1,\"round\":1,\"node\":0,\"residual\":0.25,\
+                  \"doubles_sent\":4,\"doubles_recv\":4,\"bytes_on_wire\":64,\
+                  \"wall_micros\":100,\"queue_depth\":1,\"staleness\":0,\
+                  \"stalls\":0,\"retransmits\":0,\"dedups\":0,\
+                  \"drops_injected\":0,\"dups_injected\":0}\n";
+        let rep = RunReport::from_stream(v1).unwrap();
+        assert!(rep.straggler.is_none(), "no wait spans in v1 rows");
+        let text = rep.render_text();
+        assert!(text.contains("no phase spans"), "{text}");
+        assert!(rep.convergence.is_some());
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let rows = vec![row(0, 0, 0.5), row(1, 0, 0.25)];
+        let rep = RunReport::from_stream(&stream(&rows)).unwrap();
+        let j = parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("rows").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("rounds_seen").and_then(Json::as_usize), Some(2));
+        assert!(j.get("convergence").unwrap().get("rate").is_some());
+        assert_eq!(
+            j.get("per_node").and_then(Json::as_arr).map(|a| a.len()),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("writer").unwrap().get("rows_written").and_then(Json::as_usize),
+            Some(2)
+        );
+    }
+
+    fn snapshot(secs: f64, rps: f64, bytes: f64) -> Json {
+        parse(&format!(
+            "{{\"bench\":\"engine\",\"sweep\":[\
+              {{\"mode\":\"sync\",\"nodes\":8,\"secs\":{secs},\
+               \"rounds_per_sec\":{rps},\"bytes_on_wire\":{bytes}}}]}}"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn bench_compare_passes_within_tolerance() {
+        let old = snapshot(0.010, 100.0, 4096.0);
+        let new = snapshot(0.011, 95.0, 4096.0);
+        let cmp = bench_compare(&old, &new, 25.0);
+        assert!(!cmp.regressed(), "{:?}", cmp);
+        assert_eq!(cmp.compared, 3);
+    }
+
+    #[test]
+    fn bench_compare_flags_fabricated_regressions() {
+        let old = snapshot(0.010, 100.0, 4096.0);
+        // 3x slower, throughput collapsed, bytes doubled
+        let new = snapshot(0.030, 33.0, 8192.0);
+        let cmp = bench_compare(&old, &new, 25.0);
+        assert!(cmp.regressed());
+        assert_eq!(cmp.regressions.len(), 3, "{:?}", cmp.regressions);
+        // sorted worst-first
+        assert!(cmp.regressions[0].worse_pct >= cmp.regressions[1].worse_pct);
+        assert!(cmp.regressions.iter().any(|d| d.path.contains(".rounds_per_sec")));
+        let text = cmp.render_text(25.0);
+        assert!(text.contains("REGRESSION"), "{text}");
+    }
+
+    #[test]
+    fn bench_compare_improvements_are_not_regressions() {
+        let old = snapshot(0.030, 33.0, 8192.0);
+        let new = snapshot(0.010, 100.0, 4096.0);
+        let cmp = bench_compare(&old, &new, 5.0);
+        assert!(!cmp.regressed(), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn bench_compare_reports_missing_cells() {
+        let old = snapshot(0.010, 100.0, 4096.0);
+        let new = parse("{\"bench\":\"engine\",\"sweep\":[]}").unwrap();
+        let cmp = bench_compare(&old, &new, 25.0);
+        assert!(cmp.regressed());
+        assert_eq!(cmp.missing, vec!["sweep[mode=sync,nodes=8]".to_string()]);
+    }
+}

@@ -2,17 +2,34 @@
 //!
 //! One [`TelemetryRow`] is one JSONL line in the run's telemetry stream:
 //! which node finished which round, how far its iterate moved, what it
-//! paid in communication, how long the step took, and what the reliable
-//! link layer had to do to keep the round lossless (retransmits, dedups,
-//! injected faults). The schema is versioned through the `v` key so
-//! downstream consumers can reject rows they do not understand;
-//! [`validate_jsonl`] is the machine check behind `dsba telemetry-check`
-//! and `make smoke`.
+//! paid in communication, how long the step took and where that time
+//! went (the v2 phase spans), and what the reliable link layer had to do
+//! to keep the round lossless (retransmits, dedups, injected faults).
+//! The schema is versioned through the `v` key so downstream consumers
+//! can reject rows they do not understand; [`validate_jsonl`] is the
+//! machine check behind `dsba telemetry-check` and `make smoke`.
+//!
+//! # Versions
+//!
+//! - **v1** (PR 8): the base row — residual, communication cost, wall
+//!   time, queue depth, staleness, and link counters.
+//! - **v2** (this schema): adds five monotonic-clock **phase spans** in
+//!   microseconds (`wait`, `drain`, `compute`, `encode`, `send` — see
+//!   [`TelemetryRow::wait_micros`] and friends) and a trailing
+//!   [`TelemetrySummary`] line carrying the writer's written/dropped row
+//!   counts, so silent row loss is visible after the process exits.
+//!
+//! v1 rows still parse (their phase spans read as zero). Versions this
+//! build does not understand are rejected with a named error, never a
+//! panic.
 
 use crate::util::json::{parse, Json};
 
 /// Schema version stamped into every row's `v` key.
-pub const TELEMETRY_SCHEMA_VERSION: u64 = 1;
+pub const TELEMETRY_SCHEMA_VERSION: u64 = 2;
+
+/// Oldest schema version this build still parses.
+pub const TELEMETRY_SCHEMA_MIN_VERSION: u64 = 1;
 
 /// One per-round, per-node telemetry record.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -46,6 +63,22 @@ pub struct TelemetryRow {
     pub drops_injected: u64,
     /// Frames the fault injector duplicated on this node's outgoing links.
     pub dups_injected: u64,
+    /// Microseconds blocked waiting on peers this round: barrier waits
+    /// under the sync clock, admission stalls under the async clock, and
+    /// TCP watermark waits inside the port drain (v2; 0 in v1 rows).
+    pub wait_micros: u64,
+    /// Microseconds draining the inbox and decoding neighbor payloads
+    /// (v2; 0 in v1 rows).
+    pub drain_micros: u64,
+    /// Microseconds in the node's local step / resolvent evaluation
+    /// (v2; 0 in v1 rows).
+    pub compute_micros: u64,
+    /// Microseconds encoding the outgoing state and compressing it for
+    /// the wire (v2; 0 in v1 rows).
+    pub encode_micros: u64,
+    /// Microseconds handing frames to the transport, including the
+    /// end-of-round watermark (v2; 0 in v1 rows).
+    pub send_micros: u64,
 }
 
 impl TelemetryRow {
@@ -67,43 +100,126 @@ impl TelemetryRow {
             ("dedups", Json::Num(self.dedups as f64)),
             ("drops_injected", Json::Num(self.drops_injected as f64)),
             ("dups_injected", Json::Num(self.dups_injected as f64)),
+            ("wait_micros", Json::Num(self.wait_micros as f64)),
+            ("drain_micros", Json::Num(self.drain_micros as f64)),
+            ("compute_micros", Json::Num(self.compute_micros as f64)),
+            ("encode_micros", Json::Num(self.encode_micros as f64)),
+            ("send_micros", Json::Num(self.send_micros as f64)),
         ])
         .to_string()
     }
 
     /// Parse and validate one JSONL line (inverse of [`to_json_line`]
     /// on well-formed rows; strict about version and required keys).
+    /// Accepts v1 rows — their phase spans read as zero.
     ///
     /// [`to_json_line`]: TelemetryRow::to_json_line
     pub fn from_json_line(line: &str) -> Result<TelemetryRow, String> {
         let v = parse(line.trim())?;
-        let version = req_u64(&v, "v")?;
-        if version != TELEMETRY_SCHEMA_VERSION {
-            return Err(format!(
-                "unsupported telemetry schema v{version} (expected v{TELEMETRY_SCHEMA_VERSION})"
-            ));
-        }
-        let node = req_u64(&v, "node")?;
+        TelemetryRow::from_json(&v)
+    }
+
+    fn from_json(v: &Json) -> Result<TelemetryRow, String> {
+        let version = check_version(v)?;
+        let node = req_u64(v, "node")?;
         if node > u32::MAX as u64 {
             return Err(format!("node {node} out of range"));
         }
+        // v2 rows must carry the phase spans; v1 rows predate them
+        let phase = |key: &str| -> Result<u64, String> {
+            if version >= 2 {
+                req_u64(v, key)
+            } else {
+                Ok(0)
+            }
+        };
         Ok(TelemetryRow {
-            round: req_u64(&v, "round")?,
+            round: req_u64(v, "round")?,
             node: node as u32,
-            residual: req_f64(&v, "residual")?,
-            doubles_sent: req_f64(&v, "doubles_sent")?,
-            doubles_recv: req_f64(&v, "doubles_recv")?,
-            bytes_on_wire: req_u64(&v, "bytes_on_wire")?,
-            wall_micros: req_u64(&v, "wall_micros")?,
-            queue_depth: req_u64(&v, "queue_depth")?,
-            staleness: req_u64(&v, "staleness")?,
-            stalls: req_u64(&v, "stalls")?,
-            retransmits: req_u64(&v, "retransmits")?,
-            dedups: req_u64(&v, "dedups")?,
-            drops_injected: req_u64(&v, "drops_injected")?,
-            dups_injected: req_u64(&v, "dups_injected")?,
+            residual: req_f64(v, "residual")?,
+            doubles_sent: req_f64(v, "doubles_sent")?,
+            doubles_recv: req_f64(v, "doubles_recv")?,
+            bytes_on_wire: req_u64(v, "bytes_on_wire")?,
+            wall_micros: req_u64(v, "wall_micros")?,
+            queue_depth: req_u64(v, "queue_depth")?,
+            staleness: req_u64(v, "staleness")?,
+            stalls: req_u64(v, "stalls")?,
+            retransmits: req_u64(v, "retransmits")?,
+            dedups: req_u64(v, "dedups")?,
+            drops_injected: req_u64(v, "drops_injected")?,
+            dups_injected: req_u64(v, "dups_injected")?,
+            wait_micros: phase("wait_micros")?,
+            drain_micros: phase("drain_micros")?,
+            compute_micros: phase("compute_micros")?,
+            encode_micros: phase("encode_micros")?,
+            send_micros: phase("send_micros")?,
         })
     }
+}
+
+/// The trailing stream-summary line the writer appends at shutdown
+/// (v2): how many rows made it to disk and how many the wait-free
+/// channel had to drop. Lets `telemetry-check` and `report` expose
+/// silent row loss after the process is gone.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TelemetrySummary {
+    /// Data rows the writer thread persisted.
+    pub rows_written: u64,
+    /// Rows dropped because the channel was full.
+    pub rows_dropped: u64,
+}
+
+impl TelemetrySummary {
+    /// Serialize as one compact JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        Json::from_pairs(vec![
+            ("v", Json::Num(TELEMETRY_SCHEMA_VERSION as f64)),
+            ("kind", Json::Str("summary".into())),
+            ("rows_written", Json::Num(self.rows_written as f64)),
+            ("rows_dropped", Json::Num(self.rows_dropped as f64)),
+        ])
+        .to_string()
+    }
+
+    fn from_json(v: &Json) -> Result<TelemetrySummary, String> {
+        check_version(v)?;
+        Ok(TelemetrySummary {
+            rows_written: req_u64(v, "rows_written")?,
+            rows_dropped: req_u64(v, "rows_dropped")?,
+        })
+    }
+}
+
+/// One parsed line of a telemetry stream: either a per-round data row
+/// or the trailing writer summary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TelemetryLine {
+    Row(TelemetryRow),
+    Summary(TelemetrySummary),
+}
+
+impl TelemetryLine {
+    /// Parse one JSONL line, dispatching on the `kind` key (absent on
+    /// data rows, `"summary"` on the trailing summary).
+    pub fn parse(line: &str) -> Result<TelemetryLine, String> {
+        let v = parse(line.trim())?;
+        match v.get("kind").and_then(Json::as_str) {
+            None => Ok(TelemetryLine::Row(TelemetryRow::from_json(&v)?)),
+            Some("summary") => Ok(TelemetryLine::Summary(TelemetrySummary::from_json(&v)?)),
+            Some(other) => Err(format!("unknown telemetry line kind {other:?}")),
+        }
+    }
+}
+
+fn check_version(v: &Json) -> Result<u64, String> {
+    let version = req_u64(v, "v")?;
+    if !(TELEMETRY_SCHEMA_MIN_VERSION..=TELEMETRY_SCHEMA_VERSION).contains(&version) {
+        return Err(format!(
+            "unsupported telemetry schema v{version} (this build reads \
+             v{TELEMETRY_SCHEMA_MIN_VERSION}..=v{TELEMETRY_SCHEMA_VERSION})"
+        ));
+    }
+    Ok(version)
 }
 
 fn req_f64(v: &Json, key: &str) -> Result<f64, String> {
@@ -121,17 +237,19 @@ fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
 }
 
 /// Validate a whole telemetry stream: every non-empty line must parse
-/// as a schema-v1 row. Returns the number of rows on success, or the
-/// first offending line (1-based) and its error.
+/// as a schema v1/v2 row or a summary line. Returns the number of
+/// *data* rows on success (summary lines validate but do not count), or
+/// the first offending line (1-based) and its error.
 pub fn validate_jsonl(text: &str) -> Result<usize, String> {
     let mut rows = 0;
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
-        TelemetryRow::from_json_line(line)
-            .map_err(|e| format!("line {}: {e}", i + 1))?;
-        rows += 1;
+        match TelemetryLine::parse(line).map_err(|e| format!("line {}: {e}", i + 1))? {
+            TelemetryLine::Row(_) => rows += 1,
+            TelemetryLine::Summary(_) => {}
+        }
     }
     Ok(rows)
 }
@@ -156,7 +274,21 @@ mod tests {
             dedups: 2,
             drops_injected: 1,
             dups_injected: 2,
+            wait_micros: 311,
+            drain_micros: 44,
+            compute_micros: 1200,
+            encode_micros: 180,
+            send_micros: 77,
         }
+    }
+
+    /// A hand-written v1 line (no phase spans), as PR 8 wrote them.
+    fn v1_line() -> String {
+        "{\"v\":1,\"round\":12,\"node\":3,\"residual\":0.125,\"doubles_sent\":40,\
+         \"doubles_recv\":80.5,\"bytes_on_wire\":356,\"wall_micros\":1812,\
+         \"queue_depth\":2,\"staleness\":1,\"stalls\":4,\"retransmits\":1,\
+         \"dedups\":2,\"drops_injected\":1,\"dups_injected\":2}"
+            .to_string()
     }
 
     #[test]
@@ -168,11 +300,42 @@ mod tests {
     }
 
     #[test]
+    fn v1_rows_still_parse_with_zero_phase_spans() {
+        let row = TelemetryRow::from_json_line(&v1_line()).unwrap();
+        assert_eq!(row.round, 12);
+        assert_eq!(row.node, 3);
+        assert_eq!(row.residual, 0.125);
+        assert_eq!(
+            (row.wait_micros, row.drain_micros, row.compute_micros,
+             row.encode_micros, row.send_micros),
+            (0, 0, 0, 0, 0),
+            "v1 rows predate phase spans"
+        );
+    }
+
+    #[test]
+    fn future_versions_fail_with_a_named_error_not_a_panic() {
+        let line = sample().to_json_line().replace("\"v\":2", "\"v\":3");
+        let err = TelemetryRow::from_json_line(&line).unwrap_err();
+        assert!(err.contains("unsupported telemetry schema v3"), "{err}");
+        let err = TelemetryLine::parse(&line).unwrap_err();
+        assert!(err.contains("unsupported telemetry schema v3"), "{err}");
+    }
+
+    #[test]
+    fn v2_rows_require_phase_spans() {
+        // a v2 row missing its phase keys is malformed, not defaulted
+        let line = v1_line().replace("\"v\":1", "\"v\":2");
+        let err = TelemetryRow::from_json_line(&line).unwrap_err();
+        assert!(err.contains("wait_micros"), "{err}");
+    }
+
+    #[test]
     fn parse_rejects_bad_rows() {
         assert!(TelemetryRow::from_json_line("not json").is_err());
         assert!(TelemetryRow::from_json_line("{}").is_err(), "missing keys");
         // wrong version
-        let line = sample().to_json_line().replace("\"v\":1", "\"v\":99");
+        let line = sample().to_json_line().replace("\"v\":2", "\"v\":99");
         assert!(TelemetryRow::from_json_line(&line).is_err());
         // non-integer integer field
         let line = sample().to_json_line().replace("\"round\":12", "\"round\":1.5");
@@ -183,6 +346,22 @@ mod tests {
     }
 
     #[test]
+    fn summary_line_roundtrips_and_is_distinguished() {
+        let s = TelemetrySummary { rows_written: 240, rows_dropped: 3 };
+        let line = s.to_json_line();
+        assert!(!line.contains('\n'));
+        match TelemetryLine::parse(&line).unwrap() {
+            TelemetryLine::Summary(back) => assert_eq!(back, s),
+            other => panic!("expected summary, got {other:?}"),
+        }
+        match TelemetryLine::parse(&sample().to_json_line()).unwrap() {
+            TelemetryLine::Row(back) => assert_eq!(back, sample()),
+            other => panic!("expected row, got {other:?}"),
+        }
+        assert!(TelemetryLine::parse("{\"v\":2,\"kind\":\"mystery\"}").is_err());
+    }
+
+    #[test]
     fn validate_jsonl_counts_rows_and_names_bad_lines() {
         let good = format!("{}\n\n{}\n", sample().to_json_line(), sample().to_json_line());
         assert_eq!(validate_jsonl(&good), Ok(2));
@@ -190,5 +369,15 @@ mod tests {
         let bad = format!("{}\ngarbage\n", sample().to_json_line());
         let err = validate_jsonl(&bad).unwrap_err();
         assert!(err.starts_with("line 2:"), "{err}");
+        // the trailing writer summary validates but is not a data row
+        let with_summary = format!(
+            "{}\n{}\n",
+            sample().to_json_line(),
+            TelemetrySummary { rows_written: 1, rows_dropped: 0 }.to_json_line()
+        );
+        assert_eq!(validate_jsonl(&with_summary), Ok(1));
+        // a mixed v1 + v2 stream (schema upgrade mid-rotation) validates
+        let mixed = format!("{}\n{}\n", v1_line(), sample().to_json_line());
+        assert_eq!(validate_jsonl(&mixed), Ok(2));
     }
 }

@@ -1,0 +1,182 @@
+//! Phase-span recording: where a node's round actually went.
+//!
+//! The engine worker loops carve each round into five monotonic-clock
+//! spans — [`Phase::Wait`] (barrier / admission / TCP watermark
+//! blocking), [`Phase::Drain`] (inbox drain + payload decode),
+//! [`Phase::Compute`] (local step / resolvent), [`Phase::Encode`]
+//! (outgoing state + wire compression), and [`Phase::Send`] (handing
+//! frames to the transport). A [`PhaseSpans`] accumulator collects
+//! microseconds per phase between telemetry flushes; the engine folds
+//! the totals into the schema-v2 [`TelemetryRow`] phase fields.
+//!
+//! The recorder only exists when telemetry is enabled (it lives inside
+//! the engine's per-node `Option<NodeTelemetry>`), so span recording
+//! costs nothing on the hot path of an uninstrumented run. The five
+//! spans deliberately do not have to sum to `wall_micros`: engine
+//! bookkeeping between spans (cost accounting, row flushing) is left
+//! unattributed rather than misattributed.
+//!
+//! [`TelemetryRow`]: super::schema::TelemetryRow
+
+use std::time::{Duration, Instant};
+
+/// One of the five per-round phases a worker attributes time to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Blocked on peers: sync barriers, async admission, TCP watermark
+    /// waits inside the port drain.
+    Wait,
+    /// Draining the inbox and decoding neighbor payloads.
+    Drain,
+    /// The node's local step / resolvent evaluation.
+    Compute,
+    /// Encoding outgoing state and compressing it for the wire.
+    Encode,
+    /// Handing frames (and the end-of-round watermark) to the transport.
+    Send,
+}
+
+const PHASES: usize = 5;
+
+impl Phase {
+    fn idx(self) -> usize {
+        match self {
+            Phase::Wait => 0,
+            Phase::Drain => 1,
+            Phase::Compute => 2,
+            Phase::Encode => 3,
+            Phase::Send => 4,
+        }
+    }
+}
+
+/// Per-phase microsecond accumulator for one node, reset at every
+/// telemetry flush (i.e. once per reported round).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PhaseSpans {
+    micros: [u64; PHASES],
+}
+
+impl PhaseSpans {
+    pub fn new() -> PhaseSpans {
+        PhaseSpans::default()
+    }
+
+    /// Attribute `d` to `phase`.
+    pub fn record(&mut self, phase: Phase, d: Duration) {
+        self.add_micros(phase, d.as_micros() as u64);
+    }
+
+    /// Attribute raw microseconds to `phase` (saturating).
+    pub fn add_micros(&mut self, phase: Phase, micros: u64) {
+        let slot = &mut self.micros[phase.idx()];
+        *slot = slot.saturating_add(micros);
+    }
+
+    /// Microseconds accumulated in `phase` since the last [`take`].
+    ///
+    /// [`take`]: PhaseSpans::take
+    pub fn get(&self, phase: Phase) -> u64 {
+        self.micros[phase.idx()]
+    }
+
+    /// Return the accumulated spans and reset to zero.
+    pub fn take(&mut self) -> PhaseSpans {
+        std::mem::take(self)
+    }
+}
+
+/// A restartable stopwatch for carving a worker loop into phase spans:
+/// each [`lap`] attributes the time since the previous lap (or start)
+/// and restarts the clock.
+///
+/// [`lap`]: SpanTimer::lap
+#[derive(Debug)]
+pub struct SpanTimer {
+    t0: Instant,
+}
+
+impl SpanTimer {
+    pub fn start() -> SpanTimer {
+        SpanTimer { t0: Instant::now() }
+    }
+
+    /// Restart the clock without attributing the elapsed time (used
+    /// when the preceding region is deliberately unattributed).
+    pub fn reset(&mut self) {
+        self.t0 = Instant::now();
+    }
+
+    /// Attribute the time since the last lap to `phase` and restart.
+    pub fn lap(&mut self, spans: &mut PhaseSpans, phase: Phase) {
+        let now = Instant::now();
+        spans.record(phase, now.duration_since(self.t0));
+        self.t0 = now;
+    }
+
+    /// Like [`lap`], but `blocked_micros` of the elapsed time is
+    /// attributed to [`Phase::Wait`] and only the remainder to `phase`.
+    /// Used for TCP drains, where the port reports how long it sat
+    /// blocked on peer watermarks inside the drain call.
+    ///
+    /// [`lap`]: SpanTimer::lap
+    pub fn lap_split(&mut self, spans: &mut PhaseSpans, phase: Phase, blocked_micros: u64) {
+        let now = Instant::now();
+        let total = now.duration_since(self.t0).as_micros() as u64;
+        let blocked = blocked_micros.min(total);
+        spans.add_micros(Phase::Wait, blocked);
+        spans.add_micros(phase, total - blocked);
+        self.t0 = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_and_take_resets() {
+        let mut s = PhaseSpans::new();
+        s.add_micros(Phase::Compute, 100);
+        s.add_micros(Phase::Compute, 50);
+        s.record(Phase::Wait, Duration::from_micros(7));
+        assert_eq!(s.get(Phase::Compute), 150);
+        assert_eq!(s.get(Phase::Wait), 7);
+        assert_eq!(s.get(Phase::Send), 0);
+        let taken = s.take();
+        assert_eq!(taken.get(Phase::Compute), 150);
+        assert_eq!(s, PhaseSpans::new(), "take resets the accumulator");
+    }
+
+    #[test]
+    fn add_saturates_instead_of_wrapping() {
+        let mut s = PhaseSpans::new();
+        s.add_micros(Phase::Drain, u64::MAX - 1);
+        s.add_micros(Phase::Drain, 10);
+        assert_eq!(s.get(Phase::Drain), u64::MAX);
+    }
+
+    #[test]
+    fn timer_laps_attribute_nonnegative_time() {
+        let mut s = PhaseSpans::new();
+        let mut t = SpanTimer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        t.lap(&mut s, Phase::Compute);
+        t.lap(&mut s, Phase::Send);
+        assert!(s.get(Phase::Compute) >= 1_000, "slept ~2ms: {:?}", s);
+        // the second lap measures only time since the first
+        assert!(s.get(Phase::Send) < s.get(Phase::Compute));
+    }
+
+    #[test]
+    fn lap_split_clamps_blocked_time_to_the_lap() {
+        let mut s = PhaseSpans::new();
+        let mut t = SpanTimer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        // port claims to have blocked longer than the whole lap — the
+        // split clamps, so drain never goes negative (it lands at 0)
+        t.lap_split(&mut s, Phase::Drain, u64::MAX);
+        assert!(s.get(Phase::Wait) >= 1_000);
+        assert_eq!(s.get(Phase::Wait) + s.get(Phase::Drain), s.get(Phase::Wait));
+    }
+}

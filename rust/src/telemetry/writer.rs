@@ -2,10 +2,13 @@
 //! channel; one dedicated thread serializes them and appends to the
 //! rotating JSONL file. The hot path never blocks — when the channel is
 //! full the row is dropped and counted, and the drop count is reported
-//! when the writer is finished.
+//! when the writer is finished — both in-process (the return value of
+//! [`TelemetryWriter::finish`]) and durably, as a trailing
+//! [`TelemetrySummary`](super::schema::TelemetrySummary) line appended
+//! to the stream at shutdown.
 
 use super::retention::RotatingFile;
-use super::schema::TelemetryRow;
+use super::schema::{TelemetryRow, TelemetrySummary};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
@@ -53,6 +56,7 @@ fn writer_loop(
     rx: Receiver<TelemetryRow>,
     mut file: RotatingFile,
     shutdown: Arc<AtomicBool>,
+    dropped: Arc<AtomicU64>,
 ) -> Result<u64, String> {
     let mut rows = 0u64;
     loop {
@@ -80,6 +84,13 @@ fn writer_loop(
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
         }
     }
+    // trailing summary line: make silent row loss visible in the stream
+    // itself, after the process (and its in-memory counters) is gone
+    let summary = TelemetrySummary {
+        rows_written: rows,
+        rows_dropped: dropped.load(Ordering::Relaxed),
+    };
+    file.append_line(&summary.to_json_line())?;
     file.flush()?;
     Ok(rows)
 }
@@ -90,17 +101,14 @@ impl TelemetryWriter {
         let file = RotatingFile::create(path, max_bytes, keep)?;
         let (tx, rx) = sync_channel(CHANNEL_DEPTH);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let dropped = Arc::new(AtomicU64::new(0));
         let flag = Arc::clone(&shutdown);
+        let drop_count = Arc::clone(&dropped);
         let handle = std::thread::Builder::new()
             .name("telemetry-writer".into())
-            .spawn(move || writer_loop(rx, file, flag))
+            .spawn(move || writer_loop(rx, file, flag, drop_count))
             .map_err(|e| format!("telemetry: cannot spawn writer thread: {e}"))?;
-        Ok(TelemetryWriter {
-            tx,
-            dropped: Arc::new(AtomicU64::new(0)),
-            shutdown,
-            handle: Some(handle),
-        })
+        Ok(TelemetryWriter { tx, dropped, shutdown, handle: Some(handle) })
     }
 
     /// A new producer handle for one worker thread.
@@ -108,8 +116,8 @@ impl TelemetryWriter {
         TelemetrySink { tx: self.tx.clone(), dropped: Arc::clone(&self.dropped) }
     }
 
-    /// Stop the writer thread, drain queued rows, and report
-    /// `(rows_written, rows_dropped)`.
+    /// Stop the writer thread, drain queued rows, append the trailing
+    /// summary line, and report `(rows_written, rows_dropped)`.
     pub fn finish(mut self) -> Result<(u64, u64), String> {
         let written = self.join()?;
         Ok((written, self.dropped.load(Ordering::Relaxed)))
@@ -134,7 +142,7 @@ impl Drop for TelemetryWriter {
 
 #[cfg(test)]
 mod tests {
-    use super::super::schema::validate_jsonl;
+    use super::super::schema::{validate_jsonl, TelemetryLine};
     use super::*;
     use std::path::PathBuf;
 
@@ -184,6 +192,15 @@ mod tests {
         assert_eq!(written + dropped, total, "every row written or counted");
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(validate_jsonl(&text), Ok(written as usize));
+        // the trailing summary line carries the same accounting
+        let last = text.lines().rev().find(|l| !l.trim().is_empty()).unwrap();
+        match TelemetryLine::parse(last).unwrap() {
+            TelemetryLine::Summary(s) => {
+                assert_eq!(s.rows_written, written);
+                assert_eq!(s.rows_dropped, dropped);
+            }
+            other => panic!("stream must end with a summary line, got {other:?}"),
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -18,7 +18,7 @@ use dsba::algorithms::{AlgoParams, AlgorithmKind};
 use dsba::comm::{CommCostModel, CompressionSpec, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
-use dsba::telemetry::{validate_jsonl, TelemetryRow};
+use dsba::telemetry::{validate_jsonl, TelemetryLine, TelemetryRow};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -148,7 +148,10 @@ fn assert_faulted_run_bit_identical(mode: ModeSpec, rounds: usize, tag: &str) {
     // latest row, then sum across nodes
     let mut last: HashMap<u32, TelemetryRow> = HashMap::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
-        let row = TelemetryRow::from_json_line(line).unwrap();
+        let row = match TelemetryLine::parse(line).unwrap() {
+            TelemetryLine::Row(row) => row,
+            TelemetryLine::Summary(_) => continue,
+        };
         let keep = last.get(&row.node).map_or(true, |prev| prev.round < row.round);
         if keep {
             last.insert(row.node, row);

@@ -1,0 +1,64 @@
+//! Golden-file contract for `dsba report`: the canned telemetry stream
+//! under `tests/data/` must render to exactly the committed text.
+//!
+//! The canned stream is built from clean numbers so the render is
+//! platform-stable: residuals halve every round (the least-squares fit
+//! lands on rate 0.5000 / half-life 1.0 to well past the printed
+//! precision), and every phase span is an exact integer so no percentage
+//! sits on a rounding midpoint. All rendered numbers use fixed-precision
+//! formatting, never float `Display`.
+//!
+//! If a deliberate format change breaks this test, regenerate the
+//! expectation by running `dsba report tests/data/report_canned.jsonl`
+//! and committing the new output — the diff IS the review surface.
+
+use dsba::telemetry::RunReport;
+use dsba::util::json::{parse, Json};
+
+const CANNED: &str = include_str!("data/report_canned.jsonl");
+const EXPECTED: &str = include_str!("data/report_expected.txt");
+
+#[test]
+fn report_text_matches_the_golden_file() {
+    let rep = RunReport::from_stream(CANNED).expect("canned stream parses");
+    assert_eq!(
+        rep.render_text(),
+        EXPECTED,
+        "report render drifted from tests/data/report_expected.txt — if \
+         deliberate, regenerate the golden file and commit the diff"
+    );
+}
+
+#[test]
+fn canned_analysis_is_what_the_golden_text_claims() {
+    // independent numeric checks, so a matched-but-wrong pair of data
+    // files cannot silently agree with each other
+    let rep = RunReport::from_stream(CANNED).unwrap();
+    let fit = rep.convergence.expect("4 positive residual points");
+    assert!((fit.rate - 0.5).abs() < 1e-12, "rate {}", fit.rate);
+    assert!((fit.half_life - 1.0).abs() < 1e-9);
+    assert_eq!(fit.points, 4);
+    assert_eq!(rep.summary.rows, 8);
+    assert_eq!(rep.summary.nodes, vec![0, 1]);
+    assert!(rep.summary.missing_rounds.is_empty());
+    assert_eq!(rep.bytes_per_double, 8.0);
+    let st = rep.straggler.expect("wait spans present");
+    assert_eq!((st.wait_node, st.slow_node), (1, 0));
+    assert!((st.wait_share_pct - 87.5).abs() < 1e-9);
+}
+
+#[test]
+fn canned_report_json_roundtrips_through_the_parser() {
+    let rep = RunReport::from_stream(CANNED).unwrap();
+    let j = parse(&rep.to_json().to_string()).expect("--json output is valid JSON");
+    assert_eq!(j.get("rows").and_then(Json::as_usize), Some(8));
+    assert_eq!(
+        j.get("straggler").unwrap().get("wait_node").and_then(Json::as_usize),
+        Some(1)
+    );
+    assert_eq!(
+        j.get("writer").unwrap().get("rows_dropped").and_then(Json::as_usize),
+        Some(0)
+    );
+    assert!(j.get("convergence").unwrap().get("rate").is_some());
+}

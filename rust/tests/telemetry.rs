@@ -22,7 +22,7 @@ use dsba::comm::{CommCostModel, CompressionSpec, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
 use dsba::runtime::transport::LocalTransport;
-use dsba::telemetry::{validate_jsonl, TelemetryRow};
+use dsba::telemetry::{validate_jsonl, TelemetryLine, TelemetryRow};
 use dsba::testing::prop_check;
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -99,7 +99,13 @@ fn thousand_node_ring_smoke() {
     );
     let mut seen = HashSet::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
-        let row = TelemetryRow::from_json_line(line).unwrap();
+        let row = match TelemetryLine::parse(line).unwrap() {
+            TelemetryLine::Row(row) => row,
+            TelemetryLine::Summary(s) => {
+                assert_eq!(s.rows_dropped, 0, "summary disagrees with telemetry_dropped()");
+                continue;
+            }
+        };
         assert!(row.round < rounds as u64, "row for unfinished round {}", row.round);
         assert!((row.node as usize) < nodes, "row for unknown node {}", row.node);
         assert!(
@@ -166,7 +172,18 @@ fn prop_concurrent_writers_emit_wellformed_complete_rows() {
         }
         let mut seen = HashSet::new();
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            let row = TelemetryRow::from_json_line(line)?;
+            let row = match TelemetryLine::parse(line)? {
+                TelemetryLine::Row(row) => row,
+                TelemetryLine::Summary(s) => {
+                    if (s.rows_written, s.rows_dropped) != (written, dropped) {
+                        return Err(format!(
+                            "summary line says {}/{} but writer reported {written}/{dropped}",
+                            s.rows_written, s.rows_dropped
+                        ));
+                    }
+                    continue;
+                }
+            };
             let expect = (row.node as usize * 100_000 + row.round as usize) as f64;
             if row.residual != expect {
                 return Err(format!(
@@ -183,6 +200,90 @@ fn prop_concurrent_writers_emit_wellformed_complete_rows() {
         }
         let _ = std::fs::remove_dir_all(&dir);
         Ok(())
+    });
+}
+
+/// Contract 4 (property): any v2 row roundtrips bit-for-bit through its
+/// JSONL line, and a hand-written v1 line carrying the same base fields
+/// (no phase spans — what PR 8 builds wrote) still parses, with the
+/// spans reading as zero. Forward compatibility stays a named error:
+/// bumping the same row to v3 must fail, not panic.
+#[test]
+fn prop_v2_rows_roundtrip_and_v1_rows_still_parse() {
+    prop_check("telemetry schema v2 roundtrip + v1 back-compat", 64, |rng| {
+        let mut u = |bound: usize| rng.below(bound) as u64;
+        let row = TelemetryRow {
+            round: u(1 << 20),
+            node: u(10_000) as u32,
+            residual: 0.0,
+            doubles_sent: u(1 << 20) as f64,
+            doubles_recv: u(1 << 20) as f64 + 0.5,
+            bytes_on_wire: u(1 << 30),
+            wall_micros: u(1 << 30),
+            queue_depth: u(64),
+            staleness: u(8),
+            stalls: u(1000),
+            retransmits: u(1000),
+            dedups: u(1000),
+            drops_injected: u(1000),
+            dups_injected: u(1000),
+            wait_micros: u(1 << 30),
+            drain_micros: u(1 << 30),
+            compute_micros: u(1 << 30),
+            encode_micros: u(1 << 30),
+            send_micros: u(1 << 30),
+        };
+        // a residual with a full mantissa must survive the text form:
+        // f64 Display prints the shortest roundtripping representation
+        let row = TelemetryRow { residual: rng.uniform() * 10.0, ..row };
+        let line = row.to_json_line();
+        let back = TelemetryRow::from_json_line(&line)
+            .map_err(|e| format!("v2 roundtrip parse failed: {e}"))?;
+        if back != row {
+            return Err(format!("v2 roundtrip drifted:\n  {row:?}\n  {back:?}"));
+        }
+        // the same record as a v1 producer would have written it
+        let v1_line = format!(
+            "{{\"v\":1,\"round\":{},\"node\":{},\"residual\":{},\
+             \"doubles_sent\":{},\"doubles_recv\":{},\"bytes_on_wire\":{},\
+             \"wall_micros\":{},\"queue_depth\":{},\"staleness\":{},\
+             \"stalls\":{},\"retransmits\":{},\"dedups\":{},\
+             \"drops_injected\":{},\"dups_injected\":{}}}",
+            row.round,
+            row.node,
+            row.residual,
+            row.doubles_sent,
+            row.doubles_recv,
+            row.bytes_on_wire,
+            row.wall_micros,
+            row.queue_depth,
+            row.staleness,
+            row.stalls,
+            row.retransmits,
+            row.dedups,
+            row.drops_injected,
+            row.dups_injected,
+        );
+        let old = TelemetryRow::from_json_line(&v1_line)
+            .map_err(|e| format!("v1 back-compat parse failed: {e}"))?;
+        let expect_v1 = TelemetryRow {
+            wait_micros: 0,
+            drain_micros: 0,
+            compute_micros: 0,
+            encode_micros: 0,
+            send_micros: 0,
+            ..row.clone()
+        };
+        if old != expect_v1 {
+            return Err("v1 row did not parse to zero phase spans".to_string());
+        }
+        // unknown future schema: named rejection, never a panic
+        let v3_line = line.replace("\"v\":2", "\"v\":3");
+        match TelemetryRow::from_json_line(&v3_line) {
+            Err(e) if e.contains("unsupported telemetry schema v3") => Ok(()),
+            Err(e) => Err(format!("v3 rejected with the wrong error: {e}")),
+            Ok(_) => Err("a v3 row must not parse".to_string()),
+        }
     });
 }
 
@@ -223,12 +324,15 @@ fn rotation_keeps_generations_of_valid_jsonl() {
             .unwrap_or_else(|e| panic!("{} not valid JSONL: {e}", file.display()));
         assert!(n > 0, "{} is empty", file.display());
         assert!(
-            text.len() as u64 <= 2048 + 256,
-            "{} overshot max_bytes by more than one row",
+            text.len() as u64 <= 2048 + 512,
+            "{} overshot max_bytes by more than one v2 row + summary",
             file.display()
         );
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            let row = TelemetryRow::from_json_line(line).unwrap();
+            let row = match TelemetryLine::parse(line).unwrap() {
+                TelemetryLine::Row(row) => row,
+                TelemetryLine::Summary(_) => continue,
+            };
             if let Some(prev) = last_round {
                 assert!(row.round > prev, "round {} after {prev} across the chain", row.round);
             }
