@@ -3,7 +3,7 @@
 CARGO ?= cargo
 
 .PHONY: verify build test fmt lint doc bench-engine bench-transport bench-saddle \
-        smoke report bench-compare fuzz-list artifacts clean
+        smoke report trace bench-compare fuzz-list artifacts clean
 
 ## tier-1: release build + full test suite
 verify:
@@ -76,6 +76,10 @@ smoke: build
 	# ...and the analysis layer must be able to read what the run wrote:
 	# fitted convergence rate, phase breakdown, straggler attribution
 	target/release/dsba report results/smoke_telemetry.jsonl
+	# ...and the faulted run's stream must export as a Chrome/Perfetto
+	# trace (uploaded as a CI artifact for eyeball debugging)
+	target/release/dsba trace export results/smoke_telemetry.jsonl \
+	  --format chrome --out results/smoke_trace.json
 
 ## analyze a telemetry stream (default: the one `make smoke` leaves
 ## behind). RUN=path/to/stream.jsonl overrides; add JSON=1 for the
@@ -83,6 +87,14 @@ smoke: build
 RUN ?= results/smoke_telemetry.jsonl
 report: build
 	target/release/dsba report $(RUN) $(if $(JSON),--json)
+
+## export a telemetry stream as Chrome trace-event JSON (default: the
+## one `make smoke` leaves behind). RUN=path/to/stream.jsonl overrides;
+## OUT=path/to/trace.json redirects (default: results/smoke_trace.json).
+## Load the output in https://ui.perfetto.dev or chrome://tracing
+OUT ?= results/smoke_trace.json
+trace: build
+	target/release/dsba trace export $(RUN) --format chrome --out $(OUT)
 
 ## perf trajectory gate (the CI regression job): stash the committed
 ## snapshots, re-run the bench sweeps (which overwrite
@@ -105,8 +117,9 @@ bench-compare: build
 ## network + nightly, so it is documented here, not CI-gated)
 fuzz-list:
 	@echo "fuzz targets (run from fuzz/, needs cargo-fuzz + nightly):"
-	@echo "  cargo +nightly fuzz run message_decode   corpus/message_decode"
-	@echo "  cargo +nightly fuzz run watermark_decode corpus/watermark_decode"
+	@echo "  cargo +nightly fuzz run message_decode       corpus/message_decode"
+	@echo "  cargo +nightly fuzz run watermark_decode     corpus/watermark_decode"
+	@echo "  cargo +nightly fuzz run telemetry_line_parse corpus/telemetry_line_parse"
 	@echo "seed corpora: fuzz/corpus/<target>/; details: fuzz/README.md"
 
 ## AOT-compile the XLA artifacts (needs the python/ toolchain: jax + pallas)

@@ -1,0 +1,31 @@
+//! Fuzz target for the telemetry JSONL line parser.
+//!
+//! `TelemetryLine::parse` promises to be *total* on arbitrary text:
+//! every input either parses as a row / summary / event line or returns
+//! `Err` — no panic. Accepted lines are additionally canonicalizable:
+//! `to_json_line()` must reparse to the same value, and its render must
+//! be a fixed point (canonical form renders to itself). The input line
+//! itself need not be canonical — key order, whitespace, and float
+//! spellings are free — which is exactly why the law is stated on the
+//! re-render, not the raw bytes.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    if let Ok(line) = dsba::telemetry::TelemetryLine::parse(text) {
+        let canonical = line.to_json_line();
+        let back = dsba::telemetry::TelemetryLine::parse(&canonical)
+            .expect("canonical render of an accepted line must reparse");
+        assert_eq!(back, line, "reparse of the canonical render changed the value");
+        assert_eq!(
+            back.to_json_line(),
+            canonical,
+            "canonical render is not a fixed point"
+        );
+    }
+});

@@ -187,9 +187,12 @@ fn mode_sweep() {
 }
 
 /// Telemetry-overhead cells: the same DSBA workload with the per-round
-/// JSONL stream off vs on. Workers hand rows to the writer thread via a
-/// wait-free bounded channel, so the on-cell should sit within noise of
-/// the off-cell — this snapshot is the receipt.
+/// JSONL stream off vs on, under both round clocks. Workers hand rows to
+/// the writer thread via a wait-free bounded channel; the async clock
+/// additionally emits a round-admitted control-plane event per node per
+/// round when telemetry is on, so its on-cell prices event emission on
+/// top of the phase spans. Every on-cell should sit within noise of its
+/// off-cell — this snapshot is the receipt.
 fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
     use dsba::comm::CompressionSpec;
     use dsba::runtime::{LocalTransport, ModeSpec};
@@ -207,7 +210,7 @@ fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
         Arc::new(RidgeProblem::new(ds.partition_seeded(nodes, 2), 0.01));
     let params = AlgoParams::new(0.5, problem.dim(), 7);
 
-    let run = |telemetry: &TelemetrySpec| {
+    let run = |mode: ModeSpec, telemetry: &TelemetrySpec| {
         let mut eng = ParallelEngine::new_faulted(
             AlgorithmKind::Dsba,
             problem.clone(),
@@ -217,7 +220,7 @@ fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
             threads,
             Box::new(LocalTransport::new(topo.n)),
             &CompressionSpec::None,
-            ModeSpec::Sync,
+            mode,
             &FaultSpec::none(),
             telemetry,
         )
@@ -226,42 +229,51 @@ fn telemetry_overhead() -> Vec<dsba::util::json::Json> {
     };
     std::fs::create_dir_all("results").expect("create results dir");
     let scratch = "results/bench_telemetry_scratch.jsonl";
-    let off = run(&TelemetrySpec::disabled());
-    let on = run(&TelemetrySpec::to_path(scratch));
-    let _ = std::fs::remove_file(scratch);
+    let mut cells = Vec::new();
+    // async:0 paces rounds identically to sync but goes through the
+    // admission path, whose on-cell emits a round-admitted event per
+    // node per round — the events-on overhead measurement
+    for mode in [ModeSpec::Sync, ModeSpec::Async(0)] {
+        let off = run(mode, &TelemetrySpec::disabled());
+        let on = run(mode, &TelemetrySpec::to_path(scratch));
+        let _ = std::fs::remove_file(scratch);
 
-    header(&format!(
-        "telemetry overhead @ N = {nodes} (dsba, d = 8192, x{threads} threads, sync)"
-    ));
-    println!("{:>10} {:>12} {:>12}", "telemetry", "per-round", "overhead");
-    println!("{:>10} {:>9.3} ms {:>12}", "off", off * 1e3, "—");
-    println!(
-        "{:>10} {:>9.3} ms {:>11.1}%",
-        "on",
-        on * 1e3,
-        (on / off - 1.0) * 100.0
-    );
-    // pin the phase-span recording cost: with telemetry on, every round
-    // additionally runs the span timers (a handful of Instant reads per
-    // node) plus the wait-free emit. 3x + 2ms absolute slack sits far
-    // above scheduler noise yet catches a hot-path regression — and span
-    // code leaking into the telemetry-off path would instead inflate the
-    // off cell against the committed snapshot via bench-compare.
-    assert!(
-        on <= off * 3.0 + 0.002,
-        "telemetry + phase-span overhead out of bounds: \
-         off {off:.6}s, on {on:.6}s per round"
-    );
-    [("off", off), ("on", on)]
-        .into_iter()
-        .map(|(label, secs)| {
+        header(&format!(
+            "telemetry overhead @ N = {nodes} (dsba, d = 8192, x{threads} threads, {})",
+            mode.name()
+        ));
+        println!("{:>10} {:>12} {:>12}", "telemetry", "per-round", "overhead");
+        println!("{:>10} {:>9.3} ms {:>12}", "off", off * 1e3, "—");
+        println!(
+            "{:>10} {:>9.3} ms {:>11.1}%",
+            "on",
+            on * 1e3,
+            (on / off - 1.0) * 100.0
+        );
+        // pin the recording cost: with telemetry on, every round
+        // additionally runs the span timers (a handful of Instant reads
+        // per node), the wait-free row emit, and — under the async clock
+        // — one control-plane event per admission. 3x + 2ms absolute
+        // slack sits far above scheduler noise yet catches a hot-path
+        // regression — and span/event code leaking into the
+        // telemetry-off path would instead inflate the off cell against
+        // the committed snapshot via bench-compare.
+        assert!(
+            on <= off * 3.0 + 0.002,
+            "telemetry + span/event overhead out of bounds ({}): \
+             off {off:.6}s, on {on:.6}s per round",
+            mode.name()
+        );
+        cells.extend([("off", off), ("on", on)].into_iter().map(|(label, secs)| {
             Json::from_pairs(vec![
+                ("mode", Json::Str(mode.name())),
                 ("telemetry", Json::Str(label.into())),
                 ("nodes", Json::Num(nodes as f64)),
                 ("rounds", Json::Num(rounds as f64)),
                 ("per_round_secs", Json::Num(secs)),
                 ("overhead_pct", Json::Num((secs / off - 1.0) * 100.0)),
             ])
-        })
-        .collect()
+        }));
+    }
+    cells
 }

@@ -10,6 +10,8 @@
 //! artifacts                                              check XLA artifacts
 //! telemetry-check <run.jsonl>                            validate + summarize a stream
 //! report          <run.jsonl> [--json]                   analyze a telemetry stream
+//! trace export    <run.jsonl> [--format chrome]          export a Chrome/Perfetto trace
+//! watch           <run.jsonl> [--once]                   tail a growing stream live
 //! bench-compare   <old.json> <new.json> [--tol PCT]      diff two bench snapshots
 //! help
 //! ```
@@ -49,6 +51,8 @@ fn dispatch(args: &[String]) -> i32 {
         Some("artifacts") => cmd_artifacts(),
         Some("telemetry-check") => cmd_telemetry_check(&args[1..]),
         Some("report") => cmd_report(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("watch") => cmd_watch(&args[1..]),
         Some("bench-compare") => cmd_bench_compare(&args[1..]),
         Some("help") | None => {
             print_help();
@@ -126,6 +130,17 @@ USAGE:
   dsba report <run.jsonl> [--json]   analyze a stream: fitted geometric
                           convergence rate, per-node phase breakdown,
                           straggler attribution, bytes-vs-DOUBLEs budget
+  dsba trace export <run.jsonl> [--format chrome] [--out FILE]   export a
+                          stream as Chrome trace-event JSON (load in
+                          Perfetto / chrome://tracing): phase spans as
+                          per-node complete events, control-plane events
+                          as instants. Writes stdout unless --out
+  dsba watch <run.jsonl> [--interval-ms MS] [--once]   tail a growing
+                          stream: one refreshing line with front round,
+                          mean residual, staleness, and stall detection
+                          naming the lagging node. Exits when the
+                          writer's trailing summary arrives (--once
+                          prints a single snapshot)
   dsba bench-compare <old.json> <new.json> [--tol PCT]   diff two bench
                           snapshots (results/BENCH_*.json); exit 1 when a
                           metric regressed beyond PCT (default 10) or a
@@ -499,12 +514,18 @@ fn cmd_telemetry_check(args: &[String]) -> i32 {
                  {} drops injected, {} dups injected",
                 s.stalls, s.retransmits, s.dedups, s.drops_injected, s.dups_injected
             );
+            if s.events > 0 {
+                println!("  events: {} control-plane event line(s)", s.events);
+            }
             match &s.writer {
                 Some(w) => println!(
                     "  writer: {} row(s) written, {} dropped",
                     w.rows_written, w.rows_dropped
                 ),
                 None => println!("  writer: no summary line (stream truncated or pre-v2)"),
+            }
+            if s.truncated_tail {
+                println!("  note: truncated final line tolerated (crashed run?)");
             }
             if !s.missing_rounds.is_empty() {
                 eprintln!(
@@ -556,6 +577,172 @@ fn cmd_report(args: &[String]) -> i32 {
             eprintln!("report: {path}: {e}");
             1
         }
+    }
+}
+
+/// `dsba trace export <run.jsonl> [--format chrome] [--out FILE]` —
+/// export a telemetry stream as Chrome trace-event JSON: every row's
+/// phase spans become per-node complete events on a cumulative
+/// timeline, and control-plane event lines become instants. The output
+/// loads directly in Perfetto or chrome://tracing.
+fn cmd_trace(args: &[String]) -> i32 {
+    let usage = "usage: dsba trace export <run.jsonl> [--format chrome] [--out FILE]";
+    if args.first().map(String::as_str) != Some("export") {
+        eprintln!("{usage}");
+        return 2;
+    }
+    let mut pos = Vec::new();
+    let mut format = "chrome".to_string();
+    let mut out: Option<String> = None;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--format" | "--out" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("{usage}");
+                    return 2;
+                };
+                if args[i] == "--format" {
+                    format = v.clone();
+                } else {
+                    out = Some(v.clone());
+                }
+                i += 2;
+            }
+            a if a.starts_with("--") => {
+                eprintln!("unknown flag {a}\n{usage}");
+                return 2;
+            }
+            _ => {
+                pos.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    if format != "chrome" {
+        eprintln!("bad --format {format} (only chrome is supported)");
+        return 2;
+    }
+    let [path] = pos.as_slice() else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    match crate::telemetry::chrome_trace(&text) {
+        Ok(trace) => {
+            let n = trace.as_arr().map_or(0, |a| a.len());
+            match &out {
+                Some(dest) => {
+                    if let Err(e) = std::fs::write(dest, format!("{trace}\n")) {
+                        eprintln!("trace: cannot write {dest}: {e}");
+                        return 1;
+                    }
+                    println!("trace: {n} event(s) -> {dest}");
+                }
+                None => println!("{trace}"),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("trace: {path}: {e}");
+            1
+        }
+    }
+}
+
+/// Read whatever `path` holds past `offset`; returns the new bytes as
+/// text plus the new offset. A file shorter than `offset` (rotation
+/// swapped it out underneath us) reports offset 0 so the caller can
+/// restart the tail.
+fn read_new_bytes(path: &str, offset: u64) -> std::io::Result<(String, u64)> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut file = std::fs::File::open(path)?;
+    if file.metadata()?.len() < offset {
+        return Ok((String::new(), 0));
+    }
+    file.seek(SeekFrom::Start(offset))?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    Ok((String::from_utf8_lossy(&buf).into_owned(), offset + buf.len() as u64))
+}
+
+/// `dsba watch <run.jsonl> [--interval-ms MS] [--once]` — tail a
+/// growing telemetry stream and keep one refreshing status line (front
+/// round, mean residual, staleness, stall detection naming the lagging
+/// node). Exits when the writer's trailing summary line arrives; with
+/// `--once`, prints a single snapshot of the stream as it stands.
+fn cmd_watch(args: &[String]) -> i32 {
+    let usage = "usage: dsba watch <run.jsonl> [--interval-ms MS] [--once]";
+    let mut pos = Vec::new();
+    let mut interval_ms = 500u64;
+    let mut once = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--interval-ms" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("{usage}");
+                    return 2;
+                };
+                match v.parse::<u64>() {
+                    Ok(ms) if ms > 0 => interval_ms = ms,
+                    _ => {
+                        eprintln!("bad --interval-ms {v} (want a positive integer)");
+                        return 2;
+                    }
+                }
+                i += 2;
+            }
+            "--once" => {
+                once = true;
+                i += 1;
+            }
+            a if a.starts_with("--") => {
+                eprintln!("unknown flag {a}\n{usage}");
+                return 2;
+            }
+            _ => {
+                pos.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let [path] = pos.as_slice() else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let mut w = crate::telemetry::WatchState::new();
+    let mut offset = 0u64;
+    loop {
+        match read_new_bytes(path, offset) {
+            Ok((chunk, new_off)) => {
+                if new_off < offset {
+                    // the file shrank underneath us: restart the tail
+                    offset = 0;
+                    w = crate::telemetry::WatchState::new();
+                } else {
+                    offset = new_off;
+                    w.ingest(&chunk);
+                }
+            }
+            Err(e) => {
+                eprintln!("watch: cannot read {path}: {e}");
+                return 1;
+            }
+        }
+        print!("\r{}", w.status_line());
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+        if w.finished() || once {
+            println!();
+            return 0;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
     }
 }
 
@@ -804,6 +991,120 @@ mod tests {
         let empty = dir.join("empty.jsonl");
         std::fs::write(&empty, "").unwrap();
         assert_eq!(dispatch(&["report".to_string(), empty.display().to_string()]), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_exports_chrome_json() {
+        // missing "export" subcommand / missing path → usage errors
+        assert_eq!(dispatch(&["trace".to_string()]), 2);
+        assert_eq!(dispatch(&["trace".to_string(), "export".to_string()]), 2);
+        let dir = std::env::temp_dir().join(format!("dsba_cli_tr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let row = crate::telemetry::TelemetryRow {
+            round: 0,
+            node: 0,
+            residual: 0.5,
+            wall_micros: 1000,
+            compute_micros: 800,
+            ..crate::telemetry::TelemetryRow::default()
+        };
+        let ev = crate::telemetry::RunEvent::new(crate::telemetry::EventKind::Handshake)
+            .node(0)
+            .peer(1)
+            .detail("link up");
+        let stream = format!("{}\n{}\n", row.to_json_line(), ev.to_json_line());
+        let path = dir.join("run.jsonl");
+        std::fs::write(&path, &stream).unwrap();
+        let out = dir.join("trace.json");
+        assert_eq!(
+            dispatch(&[
+                "trace".to_string(),
+                "export".to_string(),
+                path.display().to_string(),
+                "--format".to_string(),
+                "chrome".to_string(),
+                "--out".to_string(),
+                out.display().to_string(),
+            ]),
+            0
+        );
+        let trace = json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = trace.as_arr().expect("chrome trace is a JSON array");
+        assert!(!events.is_empty());
+        for e in events {
+            assert!(e.get("ph").is_some(), "every trace event carries a phase: {e}");
+        }
+        // unsupported format / unknown flag → usage errors; missing file → 1
+        assert_eq!(
+            dispatch(&[
+                "trace".to_string(),
+                "export".to_string(),
+                path.display().to_string(),
+                "--format".to_string(),
+                "svg".to_string(),
+            ]),
+            2
+        );
+        assert_eq!(
+            dispatch(&[
+                "trace".to_string(),
+                "export".to_string(),
+                "/nonexistent/t.jsonl".to_string(),
+            ]),
+            1
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn watch_once_snapshots_a_stream() {
+        // no path → usage error; missing file → runtime error
+        assert_eq!(dispatch(&["watch".to_string()]), 2);
+        assert_eq!(
+            dispatch(&[
+                "watch".to_string(),
+                "/nonexistent/w.jsonl".to_string(),
+                "--once".to_string()
+            ]),
+            1
+        );
+        let dir = std::env::temp_dir().join(format!("dsba_cli_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut stream = String::new();
+        for (round, node) in [(0u64, 0u32), (0, 1), (1, 0), (1, 1)] {
+            let row = crate::telemetry::TelemetryRow {
+                round,
+                node,
+                residual: 0.5,
+                ..crate::telemetry::TelemetryRow::default()
+            };
+            stream.push_str(&row.to_json_line());
+            stream.push('\n');
+        }
+        let live = dir.join("live.jsonl");
+        std::fs::write(&live, &stream).unwrap();
+        assert_eq!(
+            dispatch(&["watch".to_string(), live.display().to_string(), "--once".to_string()]),
+            0
+        );
+        // a finished stream (trailing summary) exits without --once
+        let sum = crate::telemetry::TelemetrySummary { rows_written: 4, rows_dropped: 0 };
+        stream.push_str(&sum.to_json_line());
+        stream.push('\n');
+        let done = dir.join("done.jsonl");
+        std::fs::write(&done, &stream).unwrap();
+        assert_eq!(dispatch(&["watch".to_string(), done.display().to_string()]), 0);
+        // bad interval → usage error
+        assert_eq!(
+            dispatch(&[
+                "watch".to_string(),
+                done.display().to_string(),
+                "--interval-ms".to_string(),
+                "0".to_string()
+            ]),
+            2
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -83,7 +83,9 @@ use crate::metrics::{decode_stat_rows, encode_stat_rows, GlobalStats, NodeStatRo
 use crate::operators::Problem;
 use crate::runtime::transport::{LinkStats, LocalTransport, NodePort, Transport};
 use crate::telemetry::trace::{Phase, PhaseSpans, SpanTimer};
-use crate::telemetry::{TelemetryRow, TelemetrySink, TelemetrySpec, TelemetryWriter};
+use crate::telemetry::{
+    EventKind, EventSink, RunEvent, TelemetryRow, TelemetrySink, TelemetrySpec, TelemetryWriter,
+};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
@@ -276,6 +278,10 @@ fn doubles_and_bytes(kind: CostKind) -> (f64, u64) {
 /// behind that `Option` — an uninstrumented run pays nothing.
 struct NodeTelemetry {
     sink: TelemetrySink,
+    /// control-plane event sink (shares the writer channel with rows)
+    events: Option<EventSink>,
+    /// cumulative row drops already reported via a `writer-drop` event
+    drops_reported: u64,
     /// previous round's iterate — the row's `residual` is the l2 step
     /// `||x_t - x_{t-1}||`
     prev: Vec<f64>,
@@ -291,9 +297,11 @@ struct NodeTelemetry {
 }
 
 impl NodeTelemetry {
-    fn new(sink: TelemetrySink, z0: &[f64]) -> NodeTelemetry {
+    fn new(sink: TelemetrySink, events: Option<EventSink>, z0: &[f64]) -> NodeTelemetry {
         NodeTelemetry {
             sink,
+            events,
+            drops_reported: 0,
             prev: z0.to_vec(),
             since: std::time::Instant::now(),
             doubles_sent: 0.0,
@@ -355,6 +363,20 @@ impl NodeTelemetry {
         self.bytes_on_wire = 0;
         self.queue_depth = 0;
         self.staleness = 0;
+        // surface silent row loss as a control event the moment it grows,
+        // not only in the trailing summary line
+        let dropped = self.sink.dropped();
+        if dropped > self.drops_reported {
+            self.drops_reported = dropped;
+            if let Some(es) = &self.events {
+                es.emit(
+                    RunEvent::new(EventKind::WriterDrop)
+                        .node(node as u32)
+                        .round(t)
+                        .detail(format!("{dropped} row(s) dropped so far")),
+                );
+            }
+        }
     }
 }
 
@@ -411,6 +433,14 @@ fn check_kill(hn: &mut HostedNode, t: u64, faults: &WorkerFaults, shared: &Share
             .collect::<Vec<_>>()
             .join(", ")
     };
+    if let Some(es) = &shared.events {
+        es.emit(
+            RunEvent::new(EventKind::NodeKill)
+                .node(node as u32)
+                .round(round)
+                .detail(format!("fault injection (last-seen watermarks: {seen})")),
+        );
+    }
     shared.transport_failure(format!(
         "node {node} killed by fault injection at round {round} \
          (last-seen watermarks: {seen})"
@@ -470,17 +500,28 @@ struct Shared {
     /// async clock only: max rounds-behind of any consumed neighbor
     /// iterate (0 under the sync clock and `async:0` by construction)
     max_staleness: AtomicU64,
+    /// control-plane event sink (`None` = telemetry off)
+    events: Option<EventSink>,
 }
 
 impl Shared {
     /// Record a transport failure (first one wins) and poison the engine
-    /// via the normal panic path so the barrier protocol stays sound.
+    /// via the normal panic path so the barrier protocol stays sound. The
+    /// first failure also dumps the flight recorder: the crash sidecar is
+    /// written *before* the panic unwinds, so the forensics survive even
+    /// when the telemetry writer never drains its queue.
     fn transport_failure(&self, msg: String) -> ! {
         let mut slot = self.failure.lock().unwrap();
-        if slot.is_none() {
+        let first = slot.is_none();
+        if first {
             *slot = Some(msg.clone());
         }
         drop(slot);
+        if first {
+            if let Some(es) = &self.events {
+                let _ = es.crash_dump(&msg);
+            }
+        }
         panic!("{msg}");
     }
 }
@@ -806,7 +847,30 @@ fn async_admit(
             tm.spans.record(Phase::Wait, since.elapsed());
         }
         ctl.wait_since = None;
+        if let Some(es) = &shared.events {
+            es.emit(RunEvent::new(EventKind::RoundAdmitted).node(hn.idx as u32).round(ctl.r));
+        }
         return true;
+    }
+    if ctl.wait_since.is_none() {
+        // first refusal for this round: record who we are waiting on
+        if let Some(es) = &shared.events {
+            if let Some((_, &m)) =
+                ctl.in_nbrs.iter().enumerate().find(|&(k, &m)| wm_of(m) < need(k))
+            {
+                let d = match wm_of(m) {
+                    0 => format!("peer {m} (no watermark yet)"),
+                    w => format!("peer {m} (last watermark: round {})", w - 1),
+                };
+                es.emit(
+                    RunEvent::new(EventKind::AdmissionStall)
+                        .node(hn.idx as u32)
+                        .peer(m as u32)
+                        .round(ctl.r)
+                        .detail(d),
+                );
+            }
+        }
     }
     let since = *ctl.wait_since.get_or_insert_with(std::time::Instant::now);
     if since.elapsed() > deadline {
@@ -1252,6 +1316,16 @@ impl ParallelEngine {
             transport.set_retain_grace(tau as u64);
         }
         let writer = telemetry.spawn_writer()?;
+        // one event sink per run: shared flight recorder, writer-epoch
+        // timestamps, and the `<path>.crash` sidecar for fail-fast dumps.
+        // Installed into the transport before the ports are taken, so the
+        // link layer's reader threads see it from the first frame on.
+        let events = writer
+            .as_ref()
+            .map(|w| EventSink::new(w.sink(), w.epoch(), telemetry.crash_path()));
+        if let Some(es) = &events {
+            transport.set_event_sink(es.clone());
+        }
         let hosted = transport.hosted().to_vec();
         assert!(
             !hosted.is_empty()
@@ -1288,6 +1362,7 @@ impl ParallelEngine {
             target: AtomicU64::new(0),
             stalls: AtomicU64::new(0),
             max_staleness: AtomicU64::new(0),
+            events: events.clone(),
         });
         let barrier = Arc::new(Barrier::new(threads + 1));
         let stop = Arc::new(AtomicBool::new(false));
@@ -1315,7 +1390,9 @@ impl ParallelEngine {
                 replicas: std::collections::HashMap::new(),
                 cache: None,
             });
-            let telem = writer.as_ref().map(|w| NodeTelemetry::new(w.sink(), &z[idx]));
+            let telem = writer
+                .as_ref()
+                .map(|w| NodeTelemetry::new(w.sink(), events.clone(), &z[idx]));
             // blocked-time tracking inside the port's drain path exists
             // only for telemetered runs (it costs two clock reads per
             // blocking receive)

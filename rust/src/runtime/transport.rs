@@ -90,6 +90,7 @@
 use super::fault::FaultSpec;
 use crate::comm::{Message, Nack, Watermark, WatermarkKind};
 use crate::graph::Topology;
+use crate::telemetry::{EventHub, EventKind, EventSink, RunEvent};
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{BufWriter, Read, Write};
@@ -295,6 +296,15 @@ pub trait Transport: Send {
     /// rule. No-op on backends without a retention buffer.
     fn set_retain_grace(&mut self, rounds: u64) {
         let _ = rounds;
+    }
+
+    /// Install the control-plane [`EventSink`] so the transport's link
+    /// layer can emit `RunEvent`s (handshake, nack, retransmit, dedup,
+    /// watermark-advance, link-closed). No-op default: backends without
+    /// a link layer have nothing to report, and every backend stays
+    /// zero-cost when telemetry never installs a sink.
+    fn set_event_sink(&mut self, events: EventSink) {
+        let _ = events;
     }
 }
 
@@ -548,6 +558,10 @@ struct LinkWriter {
     grace: u64,
     fault: Option<FaultInjector>,
     counters: Arc<LinkCounters>,
+    /// Control-plane event hub shared across the transport; inert (one
+    /// relaxed atomic load per emit point) until telemetry installs a
+    /// sink via [`Transport::set_event_sink`].
+    hub: Arc<EventHub>,
 }
 
 impl LinkWriter {
@@ -613,6 +627,15 @@ impl LinkWriter {
     /// peer NACK. A request naming an unsent or already-pruned frame is
     /// a protocol violation and fails the link with a diagnostic.
     fn retransmit(&mut self, from_seq: u64, to_seq: u64) -> Result<(), String> {
+        self.hub.with(|es| {
+            es.emit(
+                RunEvent::new(EventKind::NackReceived)
+                    .node(self.id as u32)
+                    .peer(self.peer as u32)
+                    .seq(from_seq)
+                    .detail(format!("range [{from_seq}, {to_seq})")),
+            );
+        });
         if to_seq > self.next_seq {
             return Err(format!(
                 "node {}: peer {} nacked unsent frame (range [{from_seq}, \
@@ -643,6 +666,18 @@ impl LinkWriter {
                 })?;
             self.counters.retransmits.fetch_add(1, Ordering::Relaxed);
         }
+        self.hub.with(|es| {
+            es.emit(
+                RunEvent::new(EventKind::Retransmit)
+                    .node(self.id as u32)
+                    .peer(self.peer as u32)
+                    .seq(from_seq)
+                    .detail(format!(
+                        "{} frame(s) [{from_seq}, {to_seq})",
+                        to_seq - from_seq
+                    )),
+            );
+        });
         self.flush()
     }
 
@@ -674,6 +709,9 @@ fn lock_writer(w: &Arc<Mutex<LinkWriter>>) -> Result<std::sync::MutexGuard<'_, L
 pub struct TcpTransport {
     hosted: Vec<usize>,
     ports: Vec<TcpPort>,
+    /// Shared with every link writer and reader thread; see
+    /// [`Transport::set_event_sink`].
+    hub: Arc<EventHub>,
 }
 
 impl TcpTransport {
@@ -797,6 +835,7 @@ impl TcpTransport {
         // in the per-neighbor watermark table, and the link layer (the
         // reader also services NACKs against the link's writer)
         let mut ports = Vec::with_capacity(hosted.len());
+        let hub = Arc::new(EventHub::new());
         for &n in &hosted {
             let (inbox_tx, inbox_rx) = channel::<TcpEvent>();
             let nbrs = topo.neighbors(n).to_vec();
@@ -822,12 +861,14 @@ impl TcpTransport {
                     grace: 0,
                     fault: None,
                     counters: counters.clone(),
+                    hub: hub.clone(),
                 }));
                 writers.push((m, writer.clone()));
                 let tx = inbox_tx.clone();
                 let link_counters = counters.clone();
+                let side = ReaderSide { me: n, hub: hub.clone() };
                 std::thread::spawn(move || {
-                    reader_loop(stream, m, tx, mark, writer, link_counters)
+                    reader_loop(stream, m, tx, mark, writer, link_counters, side)
                 });
             }
             ports.push(TcpPort {
@@ -848,7 +889,7 @@ impl TcpTransport {
             });
         }
         debug_assert!(streams.is_empty(), "unassigned streams after port assembly");
-        Ok(TcpTransport { hosted, ports })
+        Ok(TcpTransport { hosted, ports, hub })
     }
 }
 
@@ -893,6 +934,23 @@ impl Transport for TcpTransport {
                 }
             }
         }
+    }
+
+    fn set_event_sink(&mut self, events: EventSink) {
+        // replay the already-completed link bring-up as handshake events
+        // (establish ran before telemetry wiring), then open the hub so
+        // the link layer's live emit points start firing
+        for p in &self.ports {
+            for (m, _) in &p.writers {
+                events.emit(
+                    RunEvent::new(EventKind::Handshake)
+                        .node(p.id as u32)
+                        .peer(*m as u32)
+                        .detail("link up"),
+                );
+            }
+        }
+        self.hub.install(events);
     }
 }
 
@@ -1505,10 +1563,7 @@ fn read_frame(s: &mut TcpStream, from: usize) -> Result<Option<RawFrame>, String
 /// `poll_watermarks`/`drain_up_to` relies on. Returns `false` when the
 /// port is gone (engine shutdown).
 fn deliver(ev: TcpEvent, tx: &Sender<TcpEvent>, mark: &AtomicU64) -> bool {
-    let watermark = match &ev {
-        TcpEvent::End { t, .. } => Some(t + 1),
-        _ => None,
-    };
+    let watermark = watermark_of(&ev);
     if tx.send(ev).is_err() {
         return false;
     }
@@ -1516,6 +1571,33 @@ fn deliver(ev: TcpEvent, tx: &Sender<TcpEvent>, mark: &AtomicU64) -> bool {
         mark.store(w, Ordering::SeqCst);
     }
     true
+}
+
+/// The per-neighbor watermark a delivered event advances to, if any —
+/// shared between [`deliver`]'s mark store and the reader loop's
+/// `watermark-advance` control event.
+fn watermark_of(ev: &TcpEvent) -> Option<u64> {
+    match ev {
+        TcpEvent::End { t, .. } => Some(t + 1),
+        _ => None,
+    }
+}
+
+/// A reader thread's identity and event plumbing: which node it reads
+/// for, plus the transport-wide control-plane event hub (inert until
+/// telemetry installs a sink).
+struct ReaderSide {
+    me: usize,
+    hub: Arc<EventHub>,
+}
+
+impl ReaderSide {
+    /// Emit one control-plane event stamped with this link's endpoints.
+    fn emit(&self, kind: EventKind, from: usize, f: impl FnOnce(RunEvent) -> RunEvent) {
+        self.hub.with(|es| {
+            es.emit(f(RunEvent::new(kind).node(self.me as u32).peer(from as u32)));
+        });
+    }
 }
 
 /// Per-link reader: decode frames, run the receive side of the reliable
@@ -1537,6 +1619,7 @@ fn reader_loop(
     mark: Arc<AtomicU64>,
     writer: Arc<Mutex<LinkWriter>>,
     counters: Arc<LinkCounters>,
+    side: ReaderSide,
 ) {
     let mut next_expected: u64 = 0;
     let mut nacked_up_to: u64 = 0;
@@ -1545,13 +1628,13 @@ fn reader_loop(
         let raw = match read_frame(&mut stream, from) {
             Ok(Some(raw)) => raw,
             Ok(None) => {
-                let _ = tx.send(TcpEvent::Closed {
-                    from,
-                    reason: "connection closed".to_string(),
-                });
+                let reason = "connection closed".to_string();
+                side.emit(EventKind::LinkClosed, from, |e| e.detail(reason.clone()));
+                let _ = tx.send(TcpEvent::Closed { from, reason });
                 return;
             }
             Err(reason) => {
+                side.emit(EventKind::LinkClosed, from, |e| e.detail(reason.clone()));
                 let _ = tx.send(TcpEvent::Closed { from, reason });
                 return;
             }
@@ -1561,6 +1644,7 @@ fn reader_loop(
                 let res =
                     lock_writer(&writer).and_then(|mut w| w.retransmit(from_seq, to_seq));
                 if let Err(reason) = res {
+                    side.emit(EventKind::LinkClosed, from, |e| e.detail(reason.clone()));
                     let _ = tx.send(TcpEvent::Closed { from, reason });
                     return;
                 }
@@ -1568,6 +1652,7 @@ fn reader_loop(
             RawFrame::Seq { link_seq, ev } => {
                 if link_seq < next_expected || ooo.contains_key(&link_seq) {
                     counters.dedups.fetch_add(1, Ordering::Relaxed);
+                    side.emit(EventKind::Dedup, from, |e| e.seq(link_seq));
                     continue;
                 }
                 if link_seq > next_expected {
@@ -1579,22 +1664,36 @@ fn reader_loop(
                         let res =
                             lock_writer(&writer).and_then(|mut w| w.write_nack(lo, link_seq));
                         if let Err(reason) = res {
+                            side.emit(EventKind::LinkClosed, from, |e| {
+                                e.detail(reason.clone())
+                            });
                             let _ = tx.send(TcpEvent::Closed { from, reason });
                             return;
                         }
+                        side.emit(EventKind::NackSent, from, |e| {
+                            e.seq(lo).detail(format!("gap [{lo}, {link_seq})"))
+                        });
                         nacked_up_to = link_seq;
                     }
                     ooo.insert(link_seq, ev);
                     continue;
                 }
                 // in-order: deliver, then drain buffered successors
+                let adv = watermark_of(&ev);
                 if !deliver(ev, &tx, &mark) {
                     return;
                 }
+                if let Some(w) = adv {
+                    side.emit(EventKind::WatermarkAdvance, from, |e| e.round(w));
+                }
                 next_expected += 1;
                 while let Some(ev) = ooo.remove(&next_expected) {
+                    let adv = watermark_of(&ev);
                     if !deliver(ev, &tx, &mark) {
                         return;
+                    }
+                    if let Some(w) = adv {
+                        side.emit(EventKind::WatermarkAdvance, from, |e| e.round(w));
                     }
                     next_expected += 1;
                 }

@@ -1,0 +1,201 @@
+//! Chrome trace-event export (`dsba trace export --format chrome`).
+//!
+//! Turns a telemetry JSONL stream into the Trace Event Format JSON that
+//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) load: an
+//! array of event objects. Each node becomes one "process" (`pid` =
+//! topology index); its v2 phase spans become back-to-back complete
+//! (`"ph":"X"`) events per round, and every control-plane event line
+//! becomes an instant (`"ph":"i"`) event.
+//!
+//! Two clocks meet here. Rows carry per-phase *durations*, not start
+//! times, so each node's spans are laid out on a cumulative per-node
+//! cursor starting at zero — faithful to where a node's time went,
+//! not to fleet-wide simultaneity. Control events carry real monotonic
+//! timestamps from the writer epoch and are exported as-is.
+
+use super::events::RunEvent;
+use super::report::parse_stream_lenient;
+use super::schema::TelemetryRow;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One complete ("X") trace event: a named span on a node's timeline.
+fn complete_event(name: &str, node: u32, ts: u64, dur: u64, round: u64) -> Json {
+    Json::from_pairs(vec![
+        ("ph", Json::Str("X".into())),
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str("phase".into())),
+        ("pid", Json::Num(node as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", Json::Num(ts as f64)),
+        ("dur", Json::Num(dur as f64)),
+        ("args", Json::from_pairs(vec![("round", Json::Num(round as f64))])),
+    ])
+}
+
+/// One instant ("i") trace event for a control-plane event line.
+fn instant_event(ev: &RunEvent) -> Json {
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if let Some(p) = ev.peer {
+        args.push(("peer", Json::Num(p as f64)));
+    }
+    if let Some(r) = ev.round {
+        args.push(("round", Json::Num(r as f64)));
+    }
+    if let Some(s) = ev.seq {
+        args.push(("seq", Json::Num(s as f64)));
+    }
+    if !ev.detail.is_empty() {
+        args.push(("detail", Json::Str(ev.detail.clone())));
+    }
+    Json::from_pairs(vec![
+        ("ph", Json::Str("i".into())),
+        ("name", Json::Str(ev.kind.name().into())),
+        ("cat", Json::Str("control".into())),
+        ("pid", Json::Num(ev.node.unwrap_or(0) as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", Json::Num(ev.ts_micros as f64)),
+        // process scope when the event names a node, global otherwise
+        ("s", Json::Str(if ev.node.is_some() { "p" } else { "g" }.into())),
+        ("args", Json::from_pairs(args)),
+    ])
+}
+
+/// The five phase spans of one row, in timeline order.
+fn phase_spans(r: &TelemetryRow) -> [(&'static str, u64); 5] {
+    [
+        ("wait", r.wait_micros),
+        ("drain", r.drain_micros),
+        ("compute", r.compute_micros),
+        ("encode", r.encode_micros),
+        ("send", r.send_micros),
+    ]
+}
+
+/// Export a telemetry stream as a Chrome trace-event JSON array.
+///
+/// Tolerant like `dsba report`: unknown `kind` lines are skipped and a
+/// truncated final line is ignored. Fails only on a malformed stream or
+/// one with nothing to draw.
+pub fn chrome_trace(text: &str) -> Result<Json, String> {
+    let ps = parse_stream_lenient(text)?;
+    if ps.rows.is_empty() && ps.events.is_empty() {
+        return Err("telemetry stream has no rows or events to trace".to_string());
+    }
+    let mut out: Vec<Json> = Vec::new();
+    let mut cursor: BTreeMap<u32, u64> = BTreeMap::new();
+    for r in &ps.rows {
+        let start = cursor.entry(r.node).or_insert(0);
+        let mut t = *start;
+        for (name, dur) in phase_spans(r) {
+            if dur == 0 {
+                continue;
+            }
+            out.push(complete_event(name, r.node, t, dur, r.round));
+            t += dur;
+        }
+        // advance by at least the row's wall time so successive rounds
+        // never overlap, even when the spans under-attribute
+        let attributed = t - *start;
+        *start += r.wall_micros.max(attributed);
+    }
+    for ev in &ps.events {
+        out.push(instant_event(ev));
+    }
+    Ok(Json::Arr(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::{EventKind, RunEvent};
+    use super::super::schema::{TelemetryRow, TelemetrySummary};
+    use super::*;
+    use crate::util::json::parse;
+
+    fn row(round: u64, node: u32) -> TelemetryRow {
+        TelemetryRow {
+            round,
+            node,
+            residual: 0.5,
+            wall_micros: 1000,
+            wait_micros: 300,
+            drain_micros: 100,
+            compute_micros: 500,
+            encode_micros: 50,
+            send_micros: 50,
+            ..TelemetryRow::default()
+        }
+    }
+
+    #[test]
+    fn export_is_a_valid_trace_event_array() {
+        let text = format!(
+            "{}\n{}\n{}\n{}\n",
+            row(0, 0).to_json_line(),
+            row(0, 1).to_json_line(),
+            RunEvent::new(EventKind::NackSent).node(0).peer(1).seq(3).to_json_line(),
+            TelemetrySummary { rows_written: 2, rows_dropped: 0 }.to_json_line(),
+        );
+        let trace = chrome_trace(&text).unwrap();
+        // the document is an array, and reparses from its serialization
+        let doc = parse(&trace.to_string()).unwrap();
+        let events = doc.as_arr().expect("trace-event JSON is an array");
+        // 5 phases x 2 rows + 1 instant
+        assert_eq!(events.len(), 11);
+        for ev in events {
+            let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+            assert!(ph == "X" || ph == "i", "unexpected ph {ph:?}");
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("pid").and_then(Json::as_f64).is_some());
+            if ph == "X" {
+                assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            }
+        }
+        let instants: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 1);
+        assert_eq!(instants[0].get("name").and_then(Json::as_str), Some("nack-sent"));
+        assert_eq!(
+            instants[0].get("args").unwrap().get("peer").and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn rounds_lay_out_back_to_back_per_node() {
+        let text = format!("{}\n{}\n", row(0, 0).to_json_line(), row(1, 0).to_json_line());
+        let trace = chrome_trace(&text).unwrap();
+        let events = trace.as_arr().unwrap();
+        // round 0 spans start at 0; round 1's first span starts at
+        // wall_micros (1000), not at the 1000-μs attributed sum's end
+        let first_round1 = events
+            .iter()
+            .find(|e| {
+                e.get("args").and_then(|a| a.get("round")).and_then(Json::as_usize)
+                    == Some(1)
+            })
+            .unwrap();
+        assert_eq!(first_round1.get("ts").and_then(Json::as_usize), Some(1000));
+    }
+
+    #[test]
+    fn zero_span_rows_still_export_their_events() {
+        // v1-shaped rows (no spans) plus one control event: instants only
+        let mut r = row(0, 0);
+        r.wait_micros = 0;
+        r.drain_micros = 0;
+        r.compute_micros = 0;
+        r.encode_micros = 0;
+        r.send_micros = 0;
+        let text = format!(
+            "{}\n{}\n",
+            r.to_json_line(),
+            RunEvent::new(EventKind::NodeKill).node(0).round(2).to_json_line()
+        );
+        let trace = chrome_trace(&text).unwrap();
+        assert_eq!(trace.as_arr().unwrap().len(), 1, "no spans, one instant");
+        assert!(chrome_trace("").is_err(), "nothing to draw is an error");
+    }
+}

@@ -1,0 +1,496 @@
+//! Control-plane event tracing: the typed [`RunEvent`] taxonomy, the
+//! bounded wait-free [`FlightRecorder`] ring, and the [`EventSink`]
+//! that fans each event out to both.
+//!
+//! Telemetry v2 rows aggregate what a round *cost*; events record what
+//! the control plane *did* — which link NACKed, which frame was deduped,
+//! which peer a stalled admission was waiting on — each stamped with a
+//! monotonic microsecond timestamp taken from the telemetry writer's
+//! epoch. Events travel two paths at once:
+//!
+//! 1. **The stream**: every event is offered to the non-blocking
+//!    [`TelemetryWriter`](super::writer::TelemetryWriter) channel and
+//!    lands as a `{"kind":"event",...}` JSONL line interleaved with the
+//!    data rows. No row-schema bump: v1/v2 streams stay valid, and
+//!    [`TelemetryLine::parse`](super::schema::TelemetryLine::parse)
+//!    dispatches on the `kind` key.
+//! 2. **The flight recorder**: a bounded ring of the last N events kept
+//!    in memory. On any fail-fast path (kill fault, admission timeout,
+//!    NACK-for-pruned link close) [`EventSink::crash_dump`] writes the
+//!    ring to a `<stream>.crash` sidecar as black-box forensics, even
+//!    when the writer thread never got to flush.
+//!
+//! Both paths are wait-free on the producer side: a full channel drops
+//! the event (counted separately from row drops), and a contended ring
+//! slot loses the event rather than block a worker or reader thread.
+
+use super::schema::{check_version, req_u64, TELEMETRY_SCHEMA_VERSION};
+use super::writer::TelemetrySink;
+use crate::util::json::{parse, Json};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Events retained by the in-memory flight recorder ring.
+pub const FLIGHT_RECORDER_CAPACITY: usize = 256;
+
+/// The control-plane event taxonomy. Wire names are kebab-case and
+/// stable; [`EventKind::parse`] is the inverse of [`EventKind::name`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A TCP link completed its handshake (emitted once per directed
+    /// link when the event sink attaches to an established transport).
+    Handshake,
+    /// The async clock admitted a round on a node (bounded staleness
+    /// satisfied); `detail` carries the staleness consumed.
+    RoundAdmitted,
+    /// A node's async admission first blocked on a lagging peer;
+    /// `detail` names the peer's last-seen watermark.
+    AdmissionStall,
+    /// A peer's end-of-round watermark advanced on a link.
+    WatermarkAdvance,
+    /// The link layer detected a sequence gap and sent a NACK; `seq` is
+    /// the first missing frame.
+    NackSent,
+    /// A NACK arrived from a peer; `seq` is the first requested frame.
+    NackReceived,
+    /// Retained frames were re-sent to service a NACK; `detail` carries
+    /// the frame range.
+    Retransmit,
+    /// A duplicate link frame was discarded; `seq` is its link sequence.
+    Dedup,
+    /// A link was closed (clean shutdown, read error, or NACK failure);
+    /// `detail` carries the reason.
+    LinkClosed,
+    /// A node was killed by fault injection; `round` is the kill round.
+    NodeKill,
+    /// The telemetry channel dropped rows on the floor since this node's
+    /// previous round; `detail` carries the cumulative drop count.
+    WriterDrop,
+    /// The telemetry file rotated; written by the writer thread at the
+    /// head of the new generation.
+    Rotation,
+}
+
+impl EventKind {
+    /// Every kind, in taxonomy order.
+    pub const ALL: [EventKind; 12] = [
+        EventKind::Handshake,
+        EventKind::RoundAdmitted,
+        EventKind::AdmissionStall,
+        EventKind::WatermarkAdvance,
+        EventKind::NackSent,
+        EventKind::NackReceived,
+        EventKind::Retransmit,
+        EventKind::Dedup,
+        EventKind::LinkClosed,
+        EventKind::NodeKill,
+        EventKind::WriterDrop,
+        EventKind::Rotation,
+    ];
+
+    /// Stable wire name (the `event` key of the JSONL line).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Handshake => "handshake",
+            EventKind::RoundAdmitted => "round-admitted",
+            EventKind::AdmissionStall => "admission-stall",
+            EventKind::WatermarkAdvance => "watermark-advance",
+            EventKind::NackSent => "nack-sent",
+            EventKind::NackReceived => "nack-received",
+            EventKind::Retransmit => "retransmit",
+            EventKind::Dedup => "dedup",
+            EventKind::LinkClosed => "link-closed",
+            EventKind::NodeKill => "node-kill",
+            EventKind::WriterDrop => "writer-drop",
+            EventKind::Rotation => "rotation",
+        }
+    }
+
+    /// Inverse of [`EventKind::name`].
+    pub fn parse(name: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+}
+
+impl Default for EventKind {
+    fn default() -> EventKind {
+        EventKind::Handshake
+    }
+}
+
+/// One control-plane event: what happened, when (microseconds since the
+/// telemetry writer's epoch, monotonic within a run), and to whom.
+/// Optional keys are omitted from the JSONL line when absent.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunEvent {
+    /// Monotonic microseconds since the writer epoch.
+    pub ts_micros: u64,
+    /// What happened.
+    pub kind: EventKind,
+    /// Topology index of the node the event happened on.
+    pub node: Option<u32>,
+    /// The peer on the other end of the link, when the event is
+    /// link-scoped — this is the per-link attribution.
+    pub peer: Option<u32>,
+    /// Round the event is tied to, when round-scoped.
+    pub round: Option<u64>,
+    /// Link-layer frame sequence, when frame-scoped.
+    pub seq: Option<u64>,
+    /// Free-form context (lagging peer watermarks, close reasons, …).
+    pub detail: String,
+}
+
+impl RunEvent {
+    /// Start a builder-style event of the given kind.
+    pub fn new(kind: EventKind) -> RunEvent {
+        RunEvent { kind, ..RunEvent::default() }
+    }
+
+    /// Attach the owning node.
+    pub fn node(mut self, node: u32) -> RunEvent {
+        self.node = Some(node);
+        self
+    }
+
+    /// Attach the link peer.
+    pub fn peer(mut self, peer: u32) -> RunEvent {
+        self.peer = Some(peer);
+        self
+    }
+
+    /// Attach the round.
+    pub fn round(mut self, round: u64) -> RunEvent {
+        self.round = Some(round);
+        self
+    }
+
+    /// Attach the frame sequence.
+    pub fn seq(mut self, seq: u64) -> RunEvent {
+        self.seq = Some(seq);
+        self
+    }
+
+    /// Attach free-form detail.
+    pub fn detail(mut self, detail: impl Into<String>) -> RunEvent {
+        self.detail = detail.into();
+        self
+    }
+
+    /// Serialize as one compact JSONL line (no trailing newline).
+    /// Optional keys are omitted when unset; an empty `detail` is
+    /// omitted too, so rendering is a fixed point of parsing.
+    pub fn to_json_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("v", Json::Num(TELEMETRY_SCHEMA_VERSION as f64)),
+            ("kind", Json::Str("event".into())),
+            ("event", Json::Str(self.kind.name().into())),
+            ("ts_micros", Json::Num(self.ts_micros as f64)),
+        ];
+        if let Some(n) = self.node {
+            pairs.push(("node", Json::Num(n as f64)));
+        }
+        if let Some(p) = self.peer {
+            pairs.push(("peer", Json::Num(p as f64)));
+        }
+        if let Some(r) = self.round {
+            pairs.push(("round", Json::Num(r as f64)));
+        }
+        if let Some(s) = self.seq {
+            pairs.push(("seq", Json::Num(s as f64)));
+        }
+        if !self.detail.is_empty() {
+            pairs.push(("detail", Json::Str(self.detail.clone())));
+        }
+        Json::from_pairs(pairs).to_string()
+    }
+
+    /// Parse one event line (inverse of [`to_json_line`]).
+    ///
+    /// [`to_json_line`]: RunEvent::to_json_line
+    pub fn from_json_line(line: &str) -> Result<RunEvent, String> {
+        let v = parse(line.trim())?;
+        RunEvent::from_json(&v)
+    }
+
+    pub(crate) fn from_json(v: &Json) -> Result<RunEvent, String> {
+        check_version(v)?;
+        let name = v
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "event line missing string key \"event\"".to_string())?;
+        let kind = EventKind::parse(name)
+            .ok_or_else(|| format!("unknown event kind {name:?}"))?;
+        let opt = |key: &str| -> Result<Option<u64>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(_) => req_u64(v, key).map(Some),
+            }
+        };
+        let node = match opt("node")? {
+            Some(n) if n > u32::MAX as u64 => {
+                return Err(format!("node {n} out of range"));
+            }
+            other => other.map(|n| n as u32),
+        };
+        let peer = match opt("peer")? {
+            Some(p) if p > u32::MAX as u64 => {
+                return Err(format!("peer {p} out of range"));
+            }
+            other => other.map(|p| p as u32),
+        };
+        let detail = match v.get("detail") {
+            None => String::new(),
+            Some(Json::Str(s)) => s.clone(),
+            Some(_) => return Err("key \"detail\" must be a string".to_string()),
+        };
+        Ok(RunEvent {
+            ts_micros: req_u64(v, "ts_micros")?,
+            kind,
+            node,
+            peer,
+            round: opt("round")?,
+            seq: opt("seq")?,
+            detail,
+        })
+    }
+}
+
+/// A bounded wait-free ring of the most recent events — the black box.
+///
+/// Producers never block: each push claims a slot with one atomic
+/// fetch-add and a `try_lock`; a slot contended at that instant loses
+/// the event instead of stalling an engine worker or a socket reader.
+/// [`FlightRecorder::dump`] returns the retained events in push order.
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<(u64, RunEvent)>>>,
+    head: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A ring retaining up to `capacity` events (at least one).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(1);
+        FlightRecorder {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Record an event; wait-free, may drop under slot contention.
+    pub fn push(&self, ev: RunEvent) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        if let Ok(mut g) = slot.try_lock() {
+            *g = Some((n, ev));
+        }
+    }
+
+    /// Total events ever pushed (including any that wrapped or dropped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// The retained events, oldest first.
+    pub fn dump(&self) -> Vec<RunEvent> {
+        let mut kept: Vec<(u64, RunEvent)> = Vec::new();
+        for slot in &self.slots {
+            if let Ok(g) = slot.lock() {
+                if let Some((n, ev)) = g.as_ref() {
+                    kept.push((*n, ev.clone()));
+                }
+            }
+        }
+        kept.sort_by_key(|&(n, _)| n);
+        kept.into_iter().map(|(_, ev)| ev).collect()
+    }
+}
+
+/// Cloneable producer handle: stamps each event with the monotonic
+/// writer-epoch timestamp, records it in the shared [`FlightRecorder`],
+/// and offers it to the writer channel. Both halves are wait-free.
+#[derive(Clone)]
+pub struct EventSink {
+    sink: TelemetrySink,
+    recorder: Arc<FlightRecorder>,
+    epoch: Instant,
+    crash_path: Option<PathBuf>,
+}
+
+impl EventSink {
+    /// A sink feeding `sink`'s writer, timestamping against `epoch`
+    /// (normally the writer's own epoch so event and row ordering
+    /// agree). `crash_path` is where [`EventSink::crash_dump`] writes
+    /// the black box; `None` disables the sidecar.
+    pub fn new(sink: TelemetrySink, epoch: Instant, crash_path: Option<PathBuf>) -> EventSink {
+        EventSink {
+            sink,
+            recorder: Arc::new(FlightRecorder::new(FLIGHT_RECORDER_CAPACITY)),
+            epoch,
+            crash_path,
+        }
+    }
+
+    /// Monotonic microseconds since the epoch.
+    pub fn now_micros(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Stamp and emit one event to the ring and the stream.
+    pub fn emit(&self, mut ev: RunEvent) {
+        ev.ts_micros = self.now_micros();
+        self.recorder.push(ev.clone());
+        self.sink.emit_event(ev);
+    }
+
+    /// The shared flight-recorder ring.
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// Synchronously write the ring's retained events to the crash
+    /// sidecar (one JSONL event line each) and return its path. Called
+    /// on fail-fast paths *before* the panic unwinds, so the forensics
+    /// survive even if the writer thread never drains its queue.
+    pub fn crash_dump(&self, reason: &str) -> Option<PathBuf> {
+        let path = self.crash_path.as_ref()?;
+        let events = self.recorder.dump();
+        let mut out = String::with_capacity(events.len() * 128);
+        for ev in &events {
+            out.push_str(&ev.to_json_line());
+            out.push('\n');
+        }
+        match std::fs::write(path, out) {
+            Ok(()) => {
+                eprintln!(
+                    "flight recorder: {} event(s) dumped to {} ({reason})",
+                    events.len(),
+                    path.display()
+                );
+                Some(path.clone())
+            }
+            Err(e) => {
+                eprintln!("flight recorder: dump to {} failed: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
+/// A late-binding slot for an [`EventSink`], shared with threads that
+/// outlive or predate the engine (TCP socket readers spawn at link
+/// establishment, before telemetry exists). When nothing is installed,
+/// [`EventHub::with`] is one relaxed atomic load — the zero-cost-off
+/// guarantee for the transport hot path.
+pub struct EventHub {
+    active: AtomicBool,
+    slot: Mutex<Option<EventSink>>,
+}
+
+impl EventHub {
+    pub fn new() -> EventHub {
+        EventHub { active: AtomicBool::new(false), slot: Mutex::new(None) }
+    }
+
+    /// Install the sink; subsequent [`EventHub::with`] calls see it.
+    pub fn install(&self, events: EventSink) {
+        if let Ok(mut g) = self.slot.lock() {
+            *g = Some(events);
+            self.active.store(true, Ordering::Release);
+        }
+    }
+
+    /// Run `f` against the installed sink, if any.
+    pub fn with(&self, f: impl FnOnce(&EventSink)) {
+        if !self.active.load(Ordering::Acquire) {
+            return;
+        }
+        if let Ok(g) = self.slot.lock() {
+            if let Some(es) = g.as_ref() {
+                f(es);
+            }
+        }
+    }
+}
+
+impl Default for EventHub {
+    fn default() -> EventHub {
+        EventHub::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunEvent {
+        RunEvent {
+            ts_micros: 1234,
+            kind: EventKind::NackSent,
+            node: Some(2),
+            peer: Some(5),
+            round: Some(7),
+            seq: Some(41),
+            detail: "gap [41, 43)".into(),
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in EventKind::ALL {
+            assert!(seen.insert(k.name()), "duplicate wire name {}", k.name());
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("no-such-event"), None);
+    }
+
+    #[test]
+    fn event_lines_roundtrip() {
+        let ev = sample();
+        let line = ev.to_json_line();
+        assert!(!line.contains('\n'), "an event must be a single line");
+        assert!(line.contains("\"kind\":\"event\""), "{line}");
+        assert_eq!(RunEvent::from_json_line(&line).unwrap(), ev);
+        // sparse events omit their unset keys and still roundtrip
+        let sparse = RunEvent::new(EventKind::Rotation);
+        let line = sparse.to_json_line();
+        assert!(!line.contains("\"node\""), "{line}");
+        assert!(!line.contains("\"detail\""), "{line}");
+        assert_eq!(RunEvent::from_json_line(&line).unwrap(), sparse);
+    }
+
+    #[test]
+    fn event_parse_rejects_malformed_lines() {
+        assert!(RunEvent::from_json_line("not json").is_err());
+        let missing = "{\"v\":2,\"kind\":\"event\",\"ts_micros\":0}";
+        assert!(RunEvent::from_json_line(missing).is_err(), "missing event key");
+        let unknown = "{\"v\":2,\"kind\":\"event\",\"event\":\"warp\",\"ts_micros\":0}";
+        let err = RunEvent::from_json_line(unknown).unwrap_err();
+        assert!(err.contains("unknown event kind"), "{err}");
+        let bad_node = sample().to_json_line().replace("\"node\":2", "\"node\":-1");
+        assert!(RunEvent::from_json_line(&bad_node).is_err());
+    }
+
+    #[test]
+    fn flight_recorder_keeps_the_last_n_in_order() {
+        let ring = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            ring.push(RunEvent::new(EventKind::Dedup).seq(i));
+        }
+        assert_eq!(ring.recorded(), 10);
+        let kept = ring.dump();
+        assert_eq!(kept.len(), 4);
+        let seqs: Vec<u64> = kept.iter().filter_map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest first, last N retained");
+    }
+
+    #[test]
+    fn event_hub_is_inert_until_installed() {
+        let hub = EventHub::new();
+        let mut fired = false;
+        hub.with(|_| fired = true);
+        assert!(!fired, "no sink installed yet");
+    }
+}

@@ -1,11 +1,15 @@
 //! Run telemetry: a versioned per-round, per-node JSONL evidence stream,
 //! plus the interpretation layer that turns a stream into answers.
 //!
-//! Five layers, split by concern:
+//! Split by concern:
 //!
 //! - [`schema`] — the versioned [`TelemetryRow`] record (v2 adds the
 //!   per-round phase spans and the trailing [`TelemetrySummary`] line)
 //!   and the [`validate_jsonl`] stream check (`dsba telemetry-check`).
+//! - [`events`] — the control-plane [`RunEvent`] taxonomy, the bounded
+//!   wait-free [`FlightRecorder`] ring ("flight recorder"), and the
+//!   [`EventSink`] / [`EventHub`] plumbing that fans each event out to
+//!   the ring and the stream as `{"kind":"event",...}` lines.
 //! - [`trace`] — the phase-span recorder the engine worker loops use to
 //!   attribute each round's time to `wait` / `drain` / `compute` /
 //!   `encode` / `send` (only active when telemetry is enabled).
@@ -16,25 +20,40 @@
 //! - [`retention`] — size-based rotation of the JSONL file
 //!   (`telemetry.max_bytes` / `telemetry.keep`).
 //! - [`report`] — stream analysis (`dsba report`): fitted convergence
-//!   rate, per-node phase breakdown, straggler attribution, and the
+//!   rate, per-node phase breakdown, straggler attribution (with
+//!   per-link event counts when the stream carries events), and the
 //!   bytes-vs-DOUBLEs budget — plus the bench snapshot diff behind
 //!   `dsba bench-compare`.
+//! - [`chrome`] — `dsba trace export --format chrome`: the stream as
+//!   Chrome trace-event JSON (Perfetto-loadable).
+//! - [`watch`] — `dsba watch`: tail a growing stream into one
+//!   refreshing status line with stall detection.
 //!
 //! [`TelemetrySpec`] is the configuration value that travels through
 //! `EngineSpec` / config JSON / `--telemetry`, exactly like
 //! `CompressionSpec` and `ModeSpec` before it.
 
+pub mod chrome;
+pub mod events;
 pub mod report;
 pub mod retention;
 pub mod schema;
 pub mod trace;
+pub mod watch;
 pub mod writer;
 
-pub use report::{bench_compare, BenchComparison, RunReport, StreamSummary};
+pub use chrome::chrome_trace;
+pub use events::{EventHub, EventKind, EventSink, FlightRecorder, RunEvent};
+pub use report::{
+    bench_compare, parse_stream_lenient, BenchComparison, LinkEventCount, ParsedStream,
+    RunReport, StreamSummary,
+};
 pub use retention::RotatingFile;
 pub use schema::{
-    validate_jsonl, TelemetryLine, TelemetryRow, TelemetrySummary, TELEMETRY_SCHEMA_VERSION,
+    validate_jsonl, validate_jsonl_detailed, TelemetryLine, TelemetryRow, TelemetrySummary,
+    TELEMETRY_SCHEMA_VERSION,
 };
+pub use watch::WatchState;
 pub use writer::{TelemetrySink, TelemetryWriter};
 
 use crate::util::json::Json;
@@ -76,6 +95,15 @@ impl TelemetrySpec {
 
     pub fn enabled(&self) -> bool {
         !self.path.is_empty()
+    }
+
+    /// Sidecar path for flight-recorder crash dumps (`<path>.crash`);
+    /// `None` when telemetry is off.
+    pub fn crash_path(&self) -> Option<std::path::PathBuf> {
+        if !self.enabled() {
+            return None;
+        }
+        Some(std::path::PathBuf::from(format!("{}.crash", self.path)))
     }
 
     /// Start the writer thread for this spec (`None` when disabled).

@@ -21,6 +21,7 @@
 //! per-round budget reports it as-is and prices bytes against
 //! sent + received DOUBLEs to keep the ratio honest.
 
+use super::events::{EventKind, RunEvent};
 use super::schema::{TelemetryLine, TelemetryRow, TelemetrySummary};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -51,20 +52,33 @@ pub struct StreamSummary {
     pub dedups: u64,
     pub drops_injected: u64,
     pub dups_injected: u64,
+    /// Control-plane event lines interleaved with the rows.
+    pub events: usize,
+    /// True when the stream ends in a partial line (the tail a crashed
+    /// run leaves behind); tolerated, not fatal.
+    pub truncated_tail: bool,
     /// The writer's trailing summary line, when the stream has one.
     pub writer: Option<TelemetrySummary>,
 }
 
 impl StreamSummary {
-    /// Parse and summarize a whole stream (strict: any malformed line
-    /// fails, naming the line).
+    /// Parse and summarize a whole stream. Malformed lines fail, naming
+    /// the line — except a truncated final line, which is tolerated and
+    /// reported through [`StreamSummary::truncated_tail`]; lines with a
+    /// `kind` this build does not know are skipped (forward compat).
     pub fn from_stream(text: &str) -> Result<StreamSummary, String> {
-        let (rows, writer) = parse_stream(text)?;
-        Ok(StreamSummary::from_rows(&rows, writer))
+        Ok(StreamSummary::from_parsed(&parse_stream_lenient(text)?))
     }
 
-    fn from_rows(rows: &[TelemetryRow], writer: Option<TelemetrySummary>) -> StreamSummary {
-        let mut s = StreamSummary { rows: rows.len(), writer, ..StreamSummary::default() };
+    fn from_parsed(ps: &ParsedStream) -> StreamSummary {
+        let rows = &ps.rows;
+        let mut s = StreamSummary {
+            rows: rows.len(),
+            events: ps.events.len(),
+            truncated_tail: ps.truncated_tail,
+            writer: ps.writer.clone(),
+            ..StreamSummary::default()
+        };
         if rows.is_empty() {
             return s;
         }
@@ -114,23 +128,63 @@ impl StreamSummary {
     }
 }
 
-/// Parse every line of a stream into data rows plus the optional
-/// trailing writer summary (last one wins if rotation left several).
-pub fn parse_stream(
-    text: &str,
-) -> Result<(Vec<TelemetryRow>, Option<TelemetrySummary>), String> {
-    let mut rows = Vec::new();
-    let mut writer = None;
-    for (i, line) in text.lines().enumerate() {
+/// Everything a lenient pass over a stream yields: the data rows, the
+/// control-plane events, the trailing writer summary, plus what had to
+/// be tolerated to get there.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParsedStream {
+    pub rows: Vec<TelemetryRow>,
+    pub events: Vec<RunEvent>,
+    /// Last writer summary wins if rotation left several.
+    pub writer: Option<TelemetrySummary>,
+    /// The final line was partial (no trailing newline) and unparsable.
+    pub truncated_tail: bool,
+    /// Well-formed lines whose `kind` this build does not know.
+    pub skipped_unknown: usize,
+}
+
+/// Parse every line of a stream, tolerating a truncated final line and
+/// skipping unknown `kind` lines so event-bearing (or newer) streams
+/// replay through older consumers. Any other malformed line fails,
+/// naming the line (1-based).
+pub fn parse_stream_lenient(text: &str) -> Result<ParsedStream, String> {
+    let mut ps = ParsedStream::default();
+    let lines: Vec<(usize, &str)> = text.lines().enumerate().collect();
+    let last_idx = lines
+        .iter()
+        .rev()
+        .find(|(_, l)| !l.trim().is_empty())
+        .map(|(i, _)| *i);
+    for (i, line) in lines {
         if line.trim().is_empty() {
             continue;
         }
-        match TelemetryLine::parse(line).map_err(|e| format!("line {}: {e}", i + 1))? {
-            TelemetryLine::Row(r) => rows.push(r),
-            TelemetryLine::Summary(s) => writer = Some(s),
+        match TelemetryLine::parse_lenient(line) {
+            Ok(Some(TelemetryLine::Row(r))) => ps.rows.push(r),
+            Ok(Some(TelemetryLine::Summary(s))) => ps.writer = Some(s),
+            Ok(Some(TelemetryLine::Event(e))) => ps.events.push(e),
+            Ok(None) => ps.skipped_unknown += 1,
+            Err(e) => {
+                if Some(i) == last_idx && !text.ends_with('\n') {
+                    ps.truncated_tail = true;
+                } else {
+                    return Err(format!("line {}: {e}", i + 1));
+                }
+            }
         }
     }
-    Ok((rows, writer))
+    Ok(ps)
+}
+
+/// Parse every line of a stream into data rows plus the optional
+/// trailing writer summary (last one wins if rotation left several).
+/// Event and unknown-kind lines are skipped; see
+/// [`parse_stream_lenient`] for the full picture.
+pub fn parse_stream(
+    text: &str,
+) -> Result<(Vec<TelemetryRow>, Option<TelemetrySummary>), String> {
+    let ps = parse_stream_lenient(text)?;
+    Ok((ps.rows, ps.writer))
 }
 
 /// Least-squares geometric fit of the round-mean residual series:
@@ -193,6 +247,19 @@ pub struct Straggler {
     pub slow_node: u32,
 }
 
+/// Control-plane event counts for one directed link `node -> peer`,
+/// mined from the stream's event lines. This is the causal side of
+/// straggler attribution: the row counters say *how many* retransmits a
+/// node's ports performed, the link events say *which link*.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkEventCount {
+    pub node: u32,
+    pub peer: u32,
+    pub retransmits: u64,
+    pub dedups: u64,
+    pub nacks_sent: u64,
+}
+
 /// The full `dsba report` analysis of one telemetry stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunReport {
@@ -202,6 +269,9 @@ pub struct RunReport {
     pub per_node: Vec<NodeBreakdown>,
     /// `None` when the stream has no wait spans at all (v1 rows).
     pub straggler: Option<Straggler>,
+    /// Per-link retransmit/dedup/NACK counts, ascending by (node, peer);
+    /// empty when the stream carries no link-scoped events.
+    pub link_events: Vec<LinkEventCount>,
     /// Per-round communication budget, averaged over seen rounds.
     pub doubles_sent_per_round: f64,
     pub doubles_recv_per_round: f64,
@@ -213,18 +283,20 @@ pub struct RunReport {
 
 impl RunReport {
     /// Analyze a whole stream. Fails on malformed lines or an empty
-    /// stream (an empty run has nothing to report).
+    /// stream (an empty run has nothing to report); a truncated final
+    /// line and unknown `kind` lines are tolerated.
     pub fn from_stream(text: &str) -> Result<RunReport, String> {
-        let (rows, writer) = parse_stream(text)?;
+        let ps = parse_stream_lenient(text)?;
+        let rows = &ps.rows;
         if rows.is_empty() {
             return Err("telemetry stream has no data rows".to_string());
         }
-        let summary = StreamSummary::from_rows(&rows, writer);
-        let convergence = fit_rate(&rows);
+        let summary = StreamSummary::from_parsed(&ps);
+        let convergence = fit_rate(rows);
 
         let mut by_node: BTreeMap<u32, NodeBreakdown> = BTreeMap::new();
         let mut last_round: BTreeMap<u32, u64> = BTreeMap::new();
-        for r in &rows {
+        for r in rows.iter() {
             let b = by_node.entry(r.node).or_insert(NodeBreakdown {
                 node: r.node,
                 ..NodeBreakdown::default()
@@ -272,6 +344,7 @@ impl RunReport {
             convergence,
             per_node,
             straggler,
+            link_events: fold_link_events(&ps.events),
             doubles_sent_per_round: sent / rounds,
             doubles_recv_per_round: recv / rounds,
             bytes_per_round: bytes / rounds,
@@ -299,6 +372,9 @@ impl RunReport {
                 w.rows_written, w.rows_dropped
             )),
             None => out.push_str("  writer: no summary line (stream truncated or pre-v2)\n"),
+        }
+        if s.truncated_tail {
+            out.push_str("  stream: truncated final line tolerated (crashed run?)\n");
         }
         match &self.convergence {
             Some(f) if f.rate < 1.0 => out.push_str(&format!(
@@ -373,6 +449,15 @@ impl RunReport {
                         b.dups_injected
                     ));
                 }
+                // events make the attribution causal: not just how many
+                // retransmits a node performed, but on which link
+                for le in &self.link_events {
+                    out.push_str(&format!(
+                        "  link {}->{}: {} retransmits, {} dedups, \
+                         {} nacks sent\n",
+                        le.node, le.peer, le.retransmits, le.dedups, le.nacks_sent
+                    ));
+                }
             }
         }
         out
@@ -431,6 +516,19 @@ impl RunReport {
             ]),
             None => Json::Null,
         };
+        let link_events: Vec<Json> = self
+            .link_events
+            .iter()
+            .map(|le| {
+                Json::from_pairs(vec![
+                    ("node", Json::Num(le.node as f64)),
+                    ("peer", Json::Num(le.peer as f64)),
+                    ("retransmits", Json::Num(le.retransmits as f64)),
+                    ("dedups", Json::Num(le.dedups as f64)),
+                    ("nacks_sent", Json::Num(le.nacks_sent as f64)),
+                ])
+            })
+            .collect();
         Json::from_pairs(vec![
             ("rows", Json::Num(s.rows as f64)),
             (
@@ -457,8 +555,36 @@ impl RunReport {
             ),
             ("per_node", Json::Arr(per_node)),
             ("straggler", straggler),
+            ("link_events", Json::Arr(link_events)),
+            ("events", Json::Num(s.events as f64)),
+            ("truncated_tail", Json::Bool(s.truncated_tail)),
         ])
     }
+}
+
+/// Fold link-scoped events into per-directed-link counts. Only events
+/// carrying both a node and a peer count; everything else (kills,
+/// rotations, admissions) is node- or stream-scoped.
+fn fold_link_events(events: &[RunEvent]) -> Vec<LinkEventCount> {
+    let mut by_link: BTreeMap<(u32, u32), LinkEventCount> = BTreeMap::new();
+    for ev in events {
+        let (Some(node), Some(peer)) = (ev.node, ev.peer) else { continue };
+        let slot = by_link
+            .entry((node, peer))
+            .or_insert(LinkEventCount { node, peer, ..LinkEventCount::default() });
+        match ev.kind {
+            EventKind::Retransmit => slot.retransmits += 1,
+            EventKind::Dedup => slot.dedups += 1,
+            EventKind::NackSent => slot.nacks_sent += 1,
+            _ => {}
+        }
+    }
+    // keep only links that actually counted something, so handshakes
+    // alone do not clutter the attribution
+    by_link
+        .into_values()
+        .filter(|le| le.retransmits + le.dedups + le.nacks_sent > 0)
+        .collect()
 }
 
 /// Least-squares fit of `ln(mean residual)` against the round index over
@@ -805,6 +931,63 @@ mod tests {
             j.get("writer").unwrap().get("rows_written").and_then(Json::as_usize),
             Some(2)
         );
+    }
+
+    #[test]
+    fn report_skips_unknown_kinds_and_tolerates_a_truncated_tail() {
+        let rows = vec![row(0, 0, 0.5), row(1, 0, 0.25)];
+        let mut text = stream(&rows);
+        text.push_str("{\"v\":2,\"kind\":\"from-the-future\",\"x\":1}\n");
+        text.push_str("{\"v\":2,\"round\":"); // partial line, no newline
+        let ps = parse_stream_lenient(&text).unwrap();
+        assert_eq!(ps.rows.len(), 2);
+        assert_eq!(ps.skipped_unknown, 1);
+        assert!(ps.truncated_tail);
+        let rep = RunReport::from_stream(&text).unwrap();
+        assert!(rep.summary.truncated_tail);
+        assert!(rep.render_text().contains("truncated final line"), "{}", rep.render_text());
+        // the same junk mid-stream still fails, naming the line
+        let bad = format!("garbage\n{}", stream(&rows));
+        assert!(RunReport::from_stream(&bad).unwrap_err().starts_with("line 1:"));
+    }
+
+    #[test]
+    fn link_events_fold_into_straggler_attribution() {
+        use super::super::events::{EventKind, RunEvent};
+        let rows = vec![row(0, 0, 0.5), row(0, 1, 0.5), row(1, 0, 0.25), row(1, 1, 0.25)];
+        let mut text = stream(&rows);
+        for _ in 0..3 {
+            text.push_str(&RunEvent::new(EventKind::Retransmit).node(0).peer(1).to_json_line());
+            text.push('\n');
+        }
+        text.push_str(&RunEvent::new(EventKind::Dedup).node(1).peer(0).seq(4).to_json_line());
+        text.push('\n');
+        text.push_str(&RunEvent::new(EventKind::NackSent).node(1).peer(0).seq(4).to_json_line());
+        text.push('\n');
+        // handshakes carry a link but count nothing: they must not clutter
+        text.push_str(&RunEvent::new(EventKind::Handshake).node(0).peer(1).to_json_line());
+        text.push('\n');
+        // a node-scoped kill has no peer: ignored by the fold
+        text.push_str(&RunEvent::new(EventKind::NodeKill).node(0).round(1).to_json_line());
+        text.push('\n');
+        let rep = RunReport::from_stream(&text).unwrap();
+        assert_eq!(rep.summary.events, 7);
+        assert_eq!(
+            rep.link_events,
+            vec![
+                LinkEventCount { node: 0, peer: 1, retransmits: 3, dedups: 0, nacks_sent: 0 },
+                LinkEventCount { node: 1, peer: 0, retransmits: 0, dedups: 1, nacks_sent: 1 },
+            ]
+        );
+        let textual = rep.render_text();
+        assert!(textual.contains("link 0->1: 3 retransmits"), "{textual}");
+        assert!(textual.contains("link 1->0: 0 retransmits, 1 dedups, 1 nacks sent"), "{textual}");
+        let j = parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.get("link_events").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+        assert_eq!(j.get("events").and_then(Json::as_usize), Some(7));
     }
 
     fn snapshot(secs: f64, rps: f64, bytes: f64) -> Json {

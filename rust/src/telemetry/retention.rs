@@ -17,6 +17,7 @@ pub struct RotatingFile {
     keep: usize,
     file: File,
     written: u64,
+    rotations: u64,
 }
 
 fn generation(path: &Path, i: usize) -> PathBuf {
@@ -50,7 +51,14 @@ impl RotatingFile {
             }
         }
         let (file, written) = open_append(path)?;
-        Ok(RotatingFile { path: path.to_path_buf(), max_bytes, keep, file, written })
+        Ok(RotatingFile {
+            path: path.to_path_buf(),
+            max_bytes,
+            keep,
+            file,
+            written,
+            rotations: 0,
+        })
     }
 
     /// Append one line (a newline is added). Rotates first when the
@@ -73,6 +81,11 @@ impl RotatingFile {
         self.written
     }
 
+    /// Rotations performed since this writer opened the file.
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+
     pub fn flush(&mut self) -> Result<(), String> {
         self.file
             .flush()
@@ -81,6 +94,7 @@ impl RotatingFile {
 
     fn rotate(&mut self) -> Result<(), String> {
         self.flush()?;
+        self.rotations += 1;
         if self.keep == 0 {
             // no retained generations: truncate the live file in place
             self.file = File::create(&self.path)
@@ -155,6 +169,7 @@ mod tests {
         );
         // generation 3 (lines 0..2) fell off the end of the chain
         assert!(!generation(&path, 3).exists());
+        assert_eq!(f.rotations(), 3, "one rotation per filled generation");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -23,6 +23,7 @@
 //! build does not understand are rejected with a named error, never a
 //! panic.
 
+use super::events::RunEvent;
 use crate::util::json::{parse, Json};
 
 /// Schema version stamped into every row's `v` key.
@@ -190,28 +191,58 @@ impl TelemetrySummary {
     }
 }
 
-/// One parsed line of a telemetry stream: either a per-round data row
-/// or the trailing writer summary.
+/// One parsed line of a telemetry stream: a per-round data row, the
+/// trailing writer summary, or a control-plane event.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TelemetryLine {
     Row(TelemetryRow),
     Summary(TelemetrySummary),
+    Event(RunEvent),
 }
 
 impl TelemetryLine {
     /// Parse one JSONL line, dispatching on the `kind` key (absent on
-    /// data rows, `"summary"` on the trailing summary).
+    /// data rows, `"summary"` on the trailing summary, `"event"` on
+    /// control-plane events). Unknown kinds are an error; readers that
+    /// must survive newer streams use [`TelemetryLine::parse_lenient`].
     pub fn parse(line: &str) -> Result<TelemetryLine, String> {
+        match TelemetryLine::parse_lenient(line)? {
+            Some(parsed) => Ok(parsed),
+            None => {
+                let v = parse(line.trim())?;
+                let kind = v.get("kind").and_then(Json::as_str).unwrap_or("?");
+                Err(format!("unknown telemetry line kind {kind:?}"))
+            }
+        }
+    }
+
+    /// Like [`TelemetryLine::parse`], but a well-formed JSON object
+    /// whose `kind` this build does not know returns `Ok(None)` instead
+    /// of an error, so older readers replay newer streams (forward
+    /// compatibility). Malformed lines still fail.
+    pub fn parse_lenient(line: &str) -> Result<Option<TelemetryLine>, String> {
         let v = parse(line.trim())?;
         match v.get("kind").and_then(Json::as_str) {
-            None => Ok(TelemetryLine::Row(TelemetryRow::from_json(&v)?)),
-            Some("summary") => Ok(TelemetryLine::Summary(TelemetrySummary::from_json(&v)?)),
-            Some(other) => Err(format!("unknown telemetry line kind {other:?}")),
+            None => Ok(Some(TelemetryLine::Row(TelemetryRow::from_json(&v)?))),
+            Some("summary") => {
+                Ok(Some(TelemetryLine::Summary(TelemetrySummary::from_json(&v)?)))
+            }
+            Some("event") => Ok(Some(TelemetryLine::Event(RunEvent::from_json(&v)?))),
+            Some(_) => Ok(None),
+        }
+    }
+
+    /// Serialize back to the canonical JSONL line for this variant.
+    pub fn to_json_line(&self) -> String {
+        match self {
+            TelemetryLine::Row(r) => r.to_json_line(),
+            TelemetryLine::Summary(s) => s.to_json_line(),
+            TelemetryLine::Event(e) => e.to_json_line(),
         }
     }
 }
 
-fn check_version(v: &Json) -> Result<u64, String> {
+pub(crate) fn check_version(v: &Json) -> Result<u64, String> {
     let version = req_u64(v, "v")?;
     if !(TELEMETRY_SCHEMA_MIN_VERSION..=TELEMETRY_SCHEMA_VERSION).contains(&version) {
         return Err(format!(
@@ -223,12 +254,19 @@ fn check_version(v: &Json) -> Result<u64, String> {
 }
 
 fn req_f64(v: &Json, key: &str) -> Result<f64, String> {
-    v.get(key)
+    let n = v
+        .get(key)
         .and_then(Json::as_f64)
-        .ok_or_else(|| format!("missing or non-numeric key {key:?}"))
+        .ok_or_else(|| format!("missing or non-numeric key {key:?}"))?;
+    // JSON has no Inf/NaN: a non-finite value would serialize as null
+    // and could never roundtrip, so reject it at the door
+    if !n.is_finite() {
+        return Err(format!("key {key:?} must be finite, got {n}"));
+    }
+    Ok(n)
 }
 
-fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
+pub(crate) fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
     let n = req_f64(v, key)?;
     if n < 0.0 || n != n.trunc() {
         return Err(format!("key {key:?} must be a non-negative integer, got {n}"));
@@ -237,21 +275,48 @@ fn req_u64(v: &Json, key: &str) -> Result<u64, String> {
 }
 
 /// Validate a whole telemetry stream: every non-empty line must parse
-/// as a schema v1/v2 row or a summary line. Returns the number of
-/// *data* rows on success (summary lines validate but do not count), or
-/// the first offending line (1-based) and its error.
+/// as a schema v1/v2 row, a summary, or an event line. Returns the
+/// number of *data* rows on success (summary and event lines validate
+/// but do not count), or the first offending line (1-based) and its
+/// error. A truncated final line is tolerated — see
+/// [`validate_jsonl_detailed`].
 pub fn validate_jsonl(text: &str) -> Result<usize, String> {
+    validate_jsonl_detailed(text).map(|(rows, _, _)| rows)
+}
+
+/// Full stream validation: `(data_rows, event_lines, truncated_tail)`.
+///
+/// A final line that fails to parse **and** is not newline-terminated
+/// is a truncated tail — the partial row a crashed run leaves behind —
+/// and is reported through the third field instead of failing the
+/// stream. A bad line anywhere else (or a newline-terminated bad final
+/// line) is still an error.
+pub fn validate_jsonl_detailed(text: &str) -> Result<(usize, usize, bool), String> {
     let mut rows = 0;
-    for (i, line) in text.lines().enumerate() {
+    let mut events = 0;
+    let lines: Vec<(usize, &str)> = text.lines().enumerate().collect();
+    let last_idx = lines
+        .iter()
+        .rev()
+        .find(|(_, l)| !l.trim().is_empty())
+        .map(|(i, _)| *i);
+    for (i, line) in lines {
         if line.trim().is_empty() {
             continue;
         }
-        match TelemetryLine::parse(line).map_err(|e| format!("line {}: {e}", i + 1))? {
-            TelemetryLine::Row(_) => rows += 1,
-            TelemetryLine::Summary(_) => {}
+        match TelemetryLine::parse(line) {
+            Ok(TelemetryLine::Row(_)) => rows += 1,
+            Ok(TelemetryLine::Summary(_)) => {}
+            Ok(TelemetryLine::Event(_)) => events += 1,
+            Err(e) => {
+                if Some(i) == last_idx && !text.ends_with('\n') {
+                    return Ok((rows, events, true));
+                }
+                return Err(format!("line {}: {e}", i + 1));
+            }
         }
     }
-    Ok(rows)
+    Ok((rows, events, false))
 }
 
 #[cfg(test)]
@@ -359,6 +424,65 @@ mod tests {
             other => panic!("expected row, got {other:?}"),
         }
         assert!(TelemetryLine::parse("{\"v\":2,\"kind\":\"mystery\"}").is_err());
+    }
+
+    #[test]
+    fn event_lines_dispatch_and_roundtrip_through_the_stream_parser() {
+        use super::super::events::{EventKind, RunEvent};
+        let ev = RunEvent::new(EventKind::Retransmit)
+            .node(1)
+            .peer(2)
+            .round(5)
+            .seq(9)
+            .detail("2 frame(s) [9, 11)");
+        let line = ev.to_json_line();
+        match TelemetryLine::parse(&line).unwrap() {
+            TelemetryLine::Event(back) => assert_eq!(back, ev),
+            other => panic!("expected event, got {other:?}"),
+        }
+        assert_eq!(TelemetryLine::parse(&line).unwrap().to_json_line(), line);
+    }
+
+    #[test]
+    fn parse_lenient_skips_unknown_kinds_but_not_malformed_lines() {
+        assert_eq!(
+            TelemetryLine::parse_lenient("{\"v\":99,\"kind\":\"hologram\"}"),
+            Ok(None),
+            "future kinds are skippable, whatever their version"
+        );
+        assert!(TelemetryLine::parse_lenient("not json").is_err());
+        assert!(
+            TelemetryLine::parse_lenient("{\"v\":2,\"round\":0}").is_err(),
+            "a kind-less line is a row and rows stay strict"
+        );
+    }
+
+    #[test]
+    fn validate_tolerates_a_truncated_final_line_only() {
+        let row = sample().to_json_line();
+        // a partial last line without its newline: a crashed run's tail
+        let truncated = format!("{row}\n{{\"v\":2,\"round\":");
+        assert_eq!(validate_jsonl(&truncated), Ok(1));
+        assert_eq!(validate_jsonl_detailed(&truncated), Ok((1, 0, true)));
+        // the same junk, newline-terminated, is a corrupt stream
+        let terminated = format!("{row}\n{{\"v\":2,\"round\":\n");
+        assert!(validate_jsonl(&terminated).is_err());
+        // junk in the middle always fails, trailing newline or not
+        let middle = format!("garbage\n{row}");
+        assert!(validate_jsonl(&middle).is_err());
+    }
+
+    #[test]
+    fn validate_counts_events_separately_from_rows() {
+        use super::super::events::{EventKind, RunEvent};
+        let stream = format!(
+            "{}\n{}\n{}\n",
+            RunEvent::new(EventKind::Handshake).node(0).peer(1).to_json_line(),
+            sample().to_json_line(),
+            RunEvent::new(EventKind::Dedup).node(0).peer(1).seq(3).to_json_line(),
+        );
+        assert_eq!(validate_jsonl(&stream), Ok(1), "events are not data rows");
+        assert_eq!(validate_jsonl_detailed(&stream), Ok((1, 2, false)));
     }
 
     #[test]

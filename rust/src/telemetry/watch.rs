@@ -1,0 +1,189 @@
+//! Live run watching (`dsba watch <run.jsonl>`): tail a growing
+//! telemetry stream and keep one refreshing status line.
+//!
+//! The CLI loop (re-reading the file and sleeping) lives in `cli`;
+//! everything observable is in [`WatchState`], which is fed raw chunks
+//! — split at arbitrary byte boundaries — and tracks each node's last
+//! row. The status line reports the fleet's front round, residual, and
+//! staleness, and flags a stall by naming the lagging node from the
+//! last per-node rounds (the stream-side view of the watermarks),
+//! enriched with the most recent `admission-stall` event's detail when
+//! one has been seen.
+//!
+//! A live stream is allowed to be imperfect: unparsable or unknown
+//! lines are counted, never fatal — the next refresh gets another
+//! chance.
+
+use super::events::{EventKind, RunEvent};
+use super::schema::{TelemetryLine, TelemetryRow, TelemetrySummary};
+use std::collections::BTreeMap;
+
+/// Incremental state of one watched stream.
+#[derive(Default)]
+pub struct WatchState {
+    carry: String,
+    last: BTreeMap<u32, TelemetryRow>,
+    rows: u64,
+    events: u64,
+    skipped: u64,
+    last_stall: Option<RunEvent>,
+    summary: Option<TelemetrySummary>,
+}
+
+impl WatchState {
+    pub fn new() -> WatchState {
+        WatchState::default()
+    }
+
+    /// Feed the next chunk of the file. Chunks may split lines at any
+    /// byte; the partial tail is carried until its newline arrives.
+    pub fn ingest(&mut self, chunk: &str) {
+        self.carry.push_str(chunk);
+        while let Some(pos) = self.carry.find('\n') {
+            let line: String = self.carry[..pos].to_string();
+            self.carry.drain(..=pos);
+            self.take_line(&line);
+        }
+    }
+
+    fn take_line(&mut self, line: &str) {
+        if line.trim().is_empty() {
+            return;
+        }
+        match TelemetryLine::parse_lenient(line) {
+            Ok(Some(TelemetryLine::Row(r))) => {
+                self.rows += 1;
+                self.last.insert(r.node, r);
+            }
+            Ok(Some(TelemetryLine::Summary(s))) => self.summary = Some(s),
+            Ok(Some(TelemetryLine::Event(e))) => {
+                self.events += 1;
+                if e.kind == EventKind::AdmissionStall {
+                    self.last_stall = Some(e);
+                }
+            }
+            // a live stream may hold lines this build cannot read;
+            // count and keep tailing
+            Ok(None) | Err(_) => self.skipped += 1,
+        }
+    }
+
+    /// Data rows consumed so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// True once the trailing writer summary has been seen — the run is
+    /// over and the stream will not grow.
+    pub fn finished(&self) -> bool {
+        self.summary.is_some()
+    }
+
+    /// The single refreshing status line.
+    pub fn status_line(&self) -> String {
+        if let Some(s) = &self.summary {
+            return format!(
+                "run complete: {} row(s) written, {} dropped, {} event(s) seen",
+                s.rows_written, s.rows_dropped, self.events
+            );
+        }
+        if self.last.is_empty() {
+            return "waiting for telemetry rows...".to_string();
+        }
+        let front = self.last.values().map(|r| r.round).max().unwrap_or(0);
+        let staleness = self.last.values().map(|r| r.staleness).max().unwrap_or(0);
+        let residual = self.last.values().map(|r| r.residual).sum::<f64>()
+            / self.last.len() as f64;
+        let mut s = format!(
+            "round {front} | residual {residual:.3e} | staleness {staleness} \
+             | {} node(s) | {} event(s)",
+            self.last.len(),
+            self.events
+        );
+        // stall: a node whose last reported round trails the front by
+        // 2+ — the same per-node watermarks the async clock admits on
+        if let Some((lag_round, lag_node)) =
+            self.last.values().map(|r| (r.round, r.node)).min()
+        {
+            if front >= lag_round + 2 {
+                s.push_str(&format!(
+                    " | STALL: node {lag_node} lagging at round {lag_round} \
+                     ({} behind)",
+                    front - lag_round
+                ));
+                if let Some(ev) = &self.last_stall {
+                    if !ev.detail.is_empty() {
+                        s.push_str(&format!(" — {}", ev.detail));
+                    }
+                }
+            }
+        }
+        if self.skipped > 0 {
+            s.push_str(&format!(" | {} unreadable line(s)", self.skipped));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, node: u32, residual: f64) -> TelemetryRow {
+        TelemetryRow { round, node, residual, ..TelemetryRow::default() }
+    }
+
+    #[test]
+    fn chunks_split_mid_line_reassemble() {
+        let mut w = WatchState::new();
+        let line = row(0, 0, 0.5).to_json_line() + "\n";
+        let (a, b) = line.split_at(line.len() / 2);
+        w.ingest(a);
+        assert_eq!(w.rows(), 0, "half a line is not a row yet");
+        w.ingest(b);
+        assert_eq!(w.rows(), 1);
+        assert!(w.status_line().starts_with("round 0"), "{}", w.status_line());
+    }
+
+    #[test]
+    fn status_tracks_front_round_and_mean_residual() {
+        let mut w = WatchState::new();
+        for (t, n, r) in [(0u64, 0u32, 0.8f64), (0, 1, 0.8), (1, 0, 0.4), (1, 1, 0.4)] {
+            w.ingest(&(row(t, n, r).to_json_line() + "\n"));
+        }
+        let s = w.status_line();
+        assert!(s.starts_with("round 1"), "{s}");
+        assert!(s.contains("2 node(s)"), "{s}");
+        assert!(s.contains("4.000e-1"), "mean residual 0.4: {s}");
+        assert!(!s.contains("STALL"), "1-round spread is not a stall: {s}");
+    }
+
+    #[test]
+    fn stall_names_the_lagging_node() {
+        let mut w = WatchState::new();
+        w.ingest(&(row(0, 1, 0.5).to_json_line() + "\n"));
+        for t in 0..5u64 {
+            w.ingest(&(row(t, 0, 0.5).to_json_line() + "\n"));
+        }
+        let stall_ev = RunEvent::new(EventKind::AdmissionStall)
+            .node(0)
+            .round(5)
+            .detail("peer 1 (last watermark: round 0)");
+        w.ingest(&(stall_ev.to_json_line() + "\n"));
+        let s = w.status_line();
+        assert!(s.contains("STALL: node 1 lagging at round 0 (4 behind)"), "{s}");
+        assert!(s.contains("peer 1 (last watermark: round 0)"), "{s}");
+    }
+
+    #[test]
+    fn summary_finishes_the_watch_and_junk_is_tolerated() {
+        let mut w = WatchState::new();
+        w.ingest("not json at all\n");
+        w.ingest(&(row(0, 0, 0.5).to_json_line() + "\n"));
+        assert!(!w.finished());
+        let sum = TelemetrySummary { rows_written: 1, rows_dropped: 0 };
+        w.ingest(&(sum.to_json_line() + "\n"));
+        assert!(w.finished());
+        assert!(w.status_line().starts_with("run complete: 1 row(s)"), "{}", w.status_line());
+    }
+}

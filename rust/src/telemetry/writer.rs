@@ -7,32 +7,51 @@
 //! [`TelemetrySummary`](super::schema::TelemetrySummary) line appended
 //! to the stream at shutdown.
 
+use super::events::{EventKind, RunEvent};
 use super::retention::RotatingFile;
 use super::schema::{TelemetryRow, TelemetrySummary};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Rows buffered between the workers and the writer thread. Deep enough
-/// to absorb a rotation hiccup at thousand-node scale, small enough to
-/// bound memory.
+/// Items buffered between the workers and the writer thread. Deep
+/// enough to absorb a rotation hiccup at thousand-node scale, small
+/// enough to bound memory.
 pub(crate) const CHANNEL_DEPTH: usize = 4096;
 
+/// One unit of work for the writer thread: a data row or a
+/// control-plane event, both serialized to the same JSONL stream.
+pub(crate) enum TelemetryItem {
+    Row(TelemetryRow),
+    Event(RunEvent),
+}
+
 /// Cloneable producer handle. `emit` is wait-free: a full channel drops
-/// the row and bumps the shared drop counter instead of blocking.
+/// the item and bumps the matching drop counter instead of blocking.
+/// Row and event drops are counted separately so the row accounting in
+/// the trailing summary line stays exact.
 #[derive(Clone)]
 pub struct TelemetrySink {
-    tx: SyncSender<TelemetryRow>,
+    tx: SyncSender<TelemetryItem>,
     dropped: Arc<AtomicU64>,
+    events_dropped: Arc<AtomicU64>,
 }
 
 impl TelemetrySink {
     /// Offer a row to the writer; never blocks.
     pub fn emit(&self, row: TelemetryRow) {
-        if self.tx.try_send(row).is_err() {
+        if self.tx.try_send(TelemetryItem::Row(row)).is_err() {
             self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Offer a control-plane event to the writer; never blocks. A
+    /// dropped event still survives in the flight recorder ring.
+    pub fn emit_event(&self, ev: RunEvent) {
+        if self.tx.try_send(TelemetryItem::Event(ev)).is_err() {
+            self.events_dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -40,31 +59,69 @@ impl TelemetrySink {
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
+
+    /// Events dropped because the channel was full.
+    pub fn events_dropped(&self) -> u64 {
+        self.events_dropped.load(Ordering::Relaxed)
+    }
 }
 
-/// Owns the writer thread. Rows flow until [`TelemetryWriter::finish`]
+/// Owns the writer thread. Items flow until [`TelemetryWriter::finish`]
 /// (or drop) signals shutdown; the thread then drains what is already
 /// queued and closes the file.
 pub struct TelemetryWriter {
-    tx: SyncSender<TelemetryRow>,
+    tx: SyncSender<TelemetryItem>,
     dropped: Arc<AtomicU64>,
+    events_dropped: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
+    epoch: Instant,
     handle: Option<std::thread::JoinHandle<Result<u64, String>>>,
 }
 
+/// Serialize one item; when the append just rotated the file, stamp a
+/// `rotation` event at the head of the new generation so the stream
+/// records its own retention history.
+fn write_item(
+    file: &mut RotatingFile,
+    item: &TelemetryItem,
+    rows: &mut u64,
+    rotations: &mut u64,
+    epoch: Instant,
+) -> Result<(), String> {
+    match item {
+        TelemetryItem::Row(row) => {
+            file.append_line(&row.to_json_line())?;
+            *rows += 1;
+        }
+        TelemetryItem::Event(ev) => {
+            file.append_line(&ev.to_json_line())?;
+        }
+    }
+    while file.rotations() > *rotations {
+        *rotations += 1;
+        let ev = RunEvent {
+            ts_micros: epoch.elapsed().as_micros() as u64,
+            kind: EventKind::Rotation,
+            detail: format!("rotation #{} after {} row(s)", *rotations, *rows),
+            ..RunEvent::default()
+        };
+        file.append_line(&ev.to_json_line())?;
+    }
+    Ok(())
+}
+
 fn writer_loop(
-    rx: Receiver<TelemetryRow>,
+    rx: Receiver<TelemetryItem>,
     mut file: RotatingFile,
     shutdown: Arc<AtomicBool>,
     dropped: Arc<AtomicU64>,
+    epoch: Instant,
 ) -> Result<u64, String> {
     let mut rows = 0u64;
+    let mut rotations = file.rotations();
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(row) => {
-                file.append_line(&row.to_json_line())?;
-                rows += 1;
-            }
+            Ok(item) => write_item(&mut file, &item, &mut rows, &mut rotations, epoch)?,
             Err(_) => {
                 // timeout or all senders gone: exit only when asked, so
                 // sinks cloned later in the run still have a live thread
@@ -77,10 +134,7 @@ fn writer_loop(
     // drain anything that raced the shutdown flag
     loop {
         match rx.try_recv() {
-            Ok(row) => {
-                file.append_line(&row.to_json_line())?;
-                rows += 1;
-            }
+            Ok(item) => write_item(&mut file, &item, &mut rows, &mut rotations, epoch)?,
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
         }
     }
@@ -102,18 +156,36 @@ impl TelemetryWriter {
         let (tx, rx) = sync_channel(CHANNEL_DEPTH);
         let shutdown = Arc::new(AtomicBool::new(false));
         let dropped = Arc::new(AtomicU64::new(0));
+        let events_dropped = Arc::new(AtomicU64::new(0));
+        let epoch = Instant::now();
         let flag = Arc::clone(&shutdown);
         let drop_count = Arc::clone(&dropped);
         let handle = std::thread::Builder::new()
             .name("telemetry-writer".into())
-            .spawn(move || writer_loop(rx, file, flag, drop_count))
+            .spawn(move || writer_loop(rx, file, flag, drop_count, epoch))
             .map_err(|e| format!("telemetry: cannot spawn writer thread: {e}"))?;
-        Ok(TelemetryWriter { tx, dropped, shutdown, handle: Some(handle) })
+        Ok(TelemetryWriter {
+            tx,
+            dropped,
+            events_dropped,
+            shutdown,
+            epoch,
+            handle: Some(handle),
+        })
     }
 
     /// A new producer handle for one worker thread.
     pub fn sink(&self) -> TelemetrySink {
-        TelemetrySink { tx: self.tx.clone(), dropped: Arc::clone(&self.dropped) }
+        TelemetrySink {
+            tx: self.tx.clone(),
+            dropped: Arc::clone(&self.dropped),
+            events_dropped: Arc::clone(&self.events_dropped),
+        }
+    }
+
+    /// The monotonic instant event timestamps are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
     }
 
     /// Stop the writer thread, drain queued rows, append the trailing
@@ -216,6 +288,29 @@ mod tests {
         assert_eq!(a.dropped(), b.dropped());
         let (written, _) = w.finish().unwrap();
         assert_eq!(written, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn events_interleave_with_rows_but_do_not_count_as_rows() {
+        use super::super::events::{EventKind, RunEvent};
+        let dir = tmp_dir("events");
+        let path = dir.join("t.jsonl");
+        let w = TelemetryWriter::spawn(&path, 0, 0).unwrap();
+        let sink = w.sink();
+        for r in 0..10 {
+            sink.emit(row(r, 0));
+            sink.emit_event(RunEvent::new(EventKind::Dedup).node(0).peer(1).seq(r));
+        }
+        let (written, dropped) = w.finish().unwrap();
+        assert_eq!((written, dropped), (10, 0), "events are not rows");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_jsonl(&text), Ok(10));
+        let events = text
+            .lines()
+            .filter(|l| matches!(TelemetryLine::parse(l), Ok(TelemetryLine::Event(_))))
+            .count();
+        assert_eq!(events, 10, "every event landed in the stream");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,7 +18,9 @@ use dsba::algorithms::{AlgoParams, AlgorithmKind};
 use dsba::comm::{CommCostModel, CompressionSpec, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
-use dsba::telemetry::{validate_jsonl, TelemetryLine, TelemetryRow};
+use dsba::telemetry::{
+    chrome_trace, validate_jsonl, EventKind, RunEvent, TelemetryLine, TelemetryRow,
+};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -145,12 +147,18 @@ fn assert_faulted_run_bit_identical(mode: ModeSpec, rounds: usize, tag: &str) {
         rounds * topo.n
     );
     // link counters in a row are cumulative per node: keep each node's
-    // latest row, then sum across nodes
+    // latest row, then sum across nodes; control-plane event lines are
+    // collected on the side for the attribution checks below
     let mut last: HashMap<u32, TelemetryRow> = HashMap::new();
+    let mut events: Vec<RunEvent> = Vec::new();
     for line in text.lines().filter(|l| !l.trim().is_empty()) {
         let row = match TelemetryLine::parse(line).unwrap() {
             TelemetryLine::Row(row) => row,
             TelemetryLine::Summary(_) => continue,
+            TelemetryLine::Event(e) => {
+                events.push(e);
+                continue;
+            }
         };
         let keep = last.get(&row.node).map_or(true, |prev| prev.round < row.round);
         if keep {
@@ -174,6 +182,34 @@ fn assert_faulted_run_bit_identical(mode: ModeSpec, rounds: usize, tag: &str) {
     assert!(
         total(|r| r.dedups) > 0,
         "{tag}: no receiver deduplicated an injected duplicate"
+    );
+    // the event lines tell the same recovery story with per-link
+    // attribution: every nack/retransmit/dedup event names both ends
+    for kind in [EventKind::NackSent, EventKind::Retransmit, EventKind::Dedup] {
+        let of_kind: Vec<&RunEvent> = events.iter().filter(|e| e.kind == kind).collect();
+        assert!(
+            !of_kind.is_empty(),
+            "{tag}: counters fired but no {} event line landed",
+            kind.name()
+        );
+        assert!(
+            of_kind.iter().all(|e| e.node.is_some() && e.peer.is_some()),
+            "{tag}: {} events must carry per-link (node, peer) attribution",
+            kind.name()
+        );
+    }
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::Handshake),
+        "{tag}: link bring-up left no handshake events"
+    );
+    // the same stream exports as a loadable Chrome trace: an array of
+    // complete/instant events, every entry with a ph and a ts
+    let trace = chrome_trace(&text).expect("chrome export from the faulted stream");
+    let arr = trace.as_arr().expect("trace-event JSON is an array");
+    assert!(!arr.is_empty(), "{tag}: chrome trace drew nothing");
+    assert!(
+        arr.iter().all(|e| e.get("ph").is_some() && e.get("ts").is_some()),
+        "{tag}: malformed trace-event entry"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -219,6 +255,44 @@ fn kill_fault_fails_fast_with_named_diagnostic() {
     assert!(err.contains("node 1"), "diagnostic must name the node: {err}");
     assert!(err.contains("round 2"), "diagnostic must name the round: {err}");
     assert!(err.contains("watermark"), "diagnostic must carry watermarks: {err}");
+}
+
+/// A killed TCP run with telemetry leaves the flight recorder's black
+/// box behind: the `<stream>.crash` sidecar is written on the fail-fast
+/// path (before the panic unwinds) and contains the `node-kill` event
+/// naming the killed node and round.
+#[test]
+fn kill_fault_dumps_the_flight_recorder() {
+    let dir = scratch_dir("kill_dump");
+    let path = dir.join("run.jsonl");
+    let ds = SyntheticSpec::tiny().with_regression(true).generate(61);
+    let mut exp = Experiment::builder(
+        RidgeProblem::new(ds.partition_seeded(4, 3), 0.05),
+        Topology::ring(4),
+        AlgorithmKind::Dsba,
+    )
+    .step_size(0.25)
+    .passes(6.0)
+    .engine(EngineSpec::parallel(2).with_transport(TransportKind::Tcp))
+    .fault(FaultSpec::parse("kill:1@2").unwrap())
+    .telemetry(TelemetrySpec::to_path(path.to_str().unwrap()))
+    .build();
+    let err = exp.try_run().expect_err("killed run must fail");
+    assert!(err.contains("killed by fault injection"), "diagnostic: {err}");
+    drop(exp); // joins the engine's telemetry writer
+
+    let crash = PathBuf::from(format!("{}.crash", path.display()));
+    let text = std::fs::read_to_string(&crash).expect("crash sidecar written on kill");
+    let kills: Vec<RunEvent> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| RunEvent::from_json_line(l).expect("crash sidecar line parses"))
+        .filter(|e| e.kind == EventKind::NodeKill)
+        .collect();
+    assert_eq!(kills.len(), 1, "exactly one node-kill event in the black box");
+    assert_eq!(kills[0].node, Some(1), "dump must name the killed node");
+    assert_eq!(kills[0].round, Some(2), "dump must name the kill round");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Coordinator guardrails: faults need the parallel engine, and

@@ -12,11 +12,13 @@
 //! expectation by running `dsba report tests/data/report_canned.jsonl`
 //! and committing the new output — the diff IS the review surface.
 
-use dsba::telemetry::RunReport;
+use dsba::telemetry::{chrome_trace, RunReport};
 use dsba::util::json::{parse, Json};
 
 const CANNED: &str = include_str!("data/report_canned.jsonl");
 const EXPECTED: &str = include_str!("data/report_expected.txt");
+const TRACE_CANNED: &str = include_str!("data/trace_canned.jsonl");
+const TRACE_EXPECTED: &str = include_str!("data/trace_expected.json");
 
 #[test]
 fn report_text_matches_the_golden_file() {
@@ -45,6 +47,46 @@ fn canned_analysis_is_what_the_golden_text_claims() {
     let st = rep.straggler.expect("wait spans present");
     assert_eq!((st.wait_node, st.slow_node), (1, 0));
     assert!((st.wait_share_pct - 87.5).abs() < 1e-9);
+}
+
+#[test]
+fn chrome_export_matches_the_golden_file() {
+    // `dsba trace export --format chrome` writes the trace plus a
+    // trailing newline; the golden file pins that byte-for-byte
+    let trace = chrome_trace(TRACE_CANNED).expect("canned trace stream parses");
+    assert_eq!(
+        format!("{trace}\n"),
+        TRACE_EXPECTED,
+        "chrome export drifted from tests/data/trace_expected.json — if \
+         deliberate, regenerate via `dsba trace export \
+         tests/data/trace_canned.jsonl` and commit the diff"
+    );
+}
+
+#[test]
+fn canned_trace_is_what_the_golden_json_claims() {
+    // independent structural checks, so a matched-but-wrong pair of
+    // data files cannot silently agree with each other
+    let trace = chrome_trace(TRACE_CANNED).unwrap();
+    let doc = parse(&trace.to_string()).expect("export is valid JSON");
+    let events = doc.as_arr().expect("trace-event JSON is an array");
+    // 5 phase spans x 2 rows + 1 instant; the summary line draws nothing
+    assert_eq!(events.len(), 11);
+    let instants: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+        .collect();
+    assert_eq!(instants.len(), 1);
+    assert_eq!(instants[0].get("name").and_then(Json::as_str), Some("node-kill"));
+    assert_eq!(instants[0].get("ts").and_then(Json::as_usize), Some(2500));
+    // round 1's first span starts where round 0's wall time ended
+    let first_round1 = events
+        .iter()
+        .find(|e| {
+            e.get("args").and_then(|a| a.get("round")).and_then(Json::as_usize) == Some(1)
+        })
+        .unwrap();
+    assert_eq!(first_round1.get("ts").and_then(Json::as_usize), Some(1000));
 }
 
 #[test]

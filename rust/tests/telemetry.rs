@@ -22,7 +22,9 @@ use dsba::comm::{CommCostModel, CompressionSpec, Network};
 use dsba::graph::MixingMatrix;
 use dsba::prelude::*;
 use dsba::runtime::transport::LocalTransport;
-use dsba::telemetry::{validate_jsonl, TelemetryLine, TelemetryRow};
+use dsba::telemetry::{
+    validate_jsonl, validate_jsonl_detailed, EventKind, RunEvent, TelemetryLine, TelemetryRow,
+};
 use dsba::testing::prop_check;
 use std::collections::HashSet;
 use std::path::PathBuf;
@@ -105,6 +107,7 @@ fn thousand_node_ring_smoke() {
                 assert_eq!(s.rows_dropped, 0, "summary disagrees with telemetry_dropped()");
                 continue;
             }
+            TelemetryLine::Event(_) => continue,
         };
         assert!(row.round < rounds as u64, "row for unfinished round {}", row.round);
         assert!((row.node as usize) < nodes, "row for unknown node {}", row.node);
@@ -183,6 +186,7 @@ fn prop_concurrent_writers_emit_wellformed_complete_rows() {
                     }
                     continue;
                 }
+                TelemetryLine::Event(_) => continue,
             };
             let expect = (row.node as usize * 100_000 + row.round as usize) as f64;
             if row.residual != expect {
@@ -287,6 +291,82 @@ fn prop_v2_rows_roundtrip_and_v1_rows_still_parse() {
     });
 }
 
+/// Contract 5 (property): arbitrary control-plane event lines roundtrip
+/// bit-for-bit, and interleaving them with v1 and v2 rows at random
+/// positions leaves the stream valid — `validate_jsonl` still counts
+/// exactly the data rows, with events tallied separately.
+#[test]
+fn prop_event_lines_roundtrip_and_interleave_with_rows() {
+    prop_check("event line roundtrip + interleave", 64, |rng| {
+        let kind = EventKind::ALL[rng.below(EventKind::ALL.len())];
+        let mut ev = RunEvent::new(kind);
+        ev.ts_micros = rng.below(1 << 40) as u64;
+        if rng.below(2) == 1 {
+            ev = ev.node(rng.below(10_000) as u32);
+        }
+        if rng.below(2) == 1 {
+            ev = ev.peer(rng.below(10_000) as u32);
+        }
+        if rng.below(2) == 1 {
+            ev = ev.round(rng.below(1 << 20) as u64);
+        }
+        if rng.below(2) == 1 {
+            ev = ev.seq(rng.below(1 << 30) as u64);
+        }
+        if rng.below(2) == 1 {
+            ev = ev.detail(format!("ctx \"{}\" / gap", rng.below(100)));
+        }
+        let line = ev.to_json_line();
+        let back = RunEvent::from_json_line(&line)
+            .map_err(|e| format!("event roundtrip parse failed: {e}"))?;
+        if back != ev {
+            return Err(format!("event roundtrip drifted:\n  {ev:?}\n  {back:?}"));
+        }
+        match TelemetryLine::parse(&line)? {
+            TelemetryLine::Event(e) if e == ev => {}
+            other => return Err(format!("stream parser misread the event: {other:?}")),
+        }
+
+        // splice events between v1 and v2 rows at random positions
+        let rows = 1 + rng.below(6);
+        let mut stream = String::new();
+        let mut expect_rows = 0usize;
+        let mut expect_events = 0usize;
+        for r in 0..rows {
+            if rng.below(2) == 1 {
+                stream.push_str(&line);
+                stream.push('\n');
+                expect_events += 1;
+            }
+            let row = TelemetryRow { round: r as u64, node: 7, ..TelemetryRow::default() };
+            let mut row_line = row.to_json_line();
+            if rng.below(2) == 1 {
+                // what a v1 producer wrote: no spans, version 1
+                row_line = format!(
+                    "{{\"v\":1,\"round\":{r},\"node\":7,\"residual\":0,\
+                     \"doubles_sent\":0,\"doubles_recv\":0,\"bytes_on_wire\":0,\
+                     \"wall_micros\":0,\"queue_depth\":0,\"staleness\":0,\
+                     \"stalls\":0,\"retransmits\":0,\"dedups\":0,\
+                     \"drops_injected\":0,\"dups_injected\":0}}"
+                );
+            }
+            stream.push_str(&row_line);
+            stream.push('\n');
+            expect_rows += 1;
+        }
+        if validate_jsonl(&stream)? != expect_rows {
+            return Err("validate_jsonl no longer counts exactly the rows".into());
+        }
+        match validate_jsonl_detailed(&stream)? {
+            (r, e, false) if r == expect_rows && e == expect_events => Ok(()),
+            other => Err(format!(
+                "detailed validation saw {other:?}, expected ({expect_rows}, \
+                 {expect_events}, false)"
+            )),
+        }
+    });
+}
+
 /// Contract 3: max_bytes/keep drive rotation through the spec layer.
 /// The retention chain holds exactly `keep` rotated generations, each
 /// one — and the live file — independently valid JSONL, with no row
@@ -331,7 +411,7 @@ fn rotation_keeps_generations_of_valid_jsonl() {
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let row = match TelemetryLine::parse(line).unwrap() {
                 TelemetryLine::Row(row) => row,
-                TelemetryLine::Summary(_) => continue,
+                TelemetryLine::Summary(_) | TelemetryLine::Event(_) => continue,
             };
             if let Some(prev) = last_round {
                 assert!(row.round > prev, "round {} after {prev} across the chain", row.round);
